@@ -1,0 +1,49 @@
+//! Bench: per-layer forward/backward costs (paper Table 1 / Table 5 on
+//! this host). One sample's fwd+bwd per architecture, plus the per-layer
+//! split, measured with the in-crate harness.
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::config::ArchSpec;
+use chaos_phi::nn::Network;
+use chaos_phi::util::timer::{LayerClass, LayerTimes};
+use chaos_phi::util::Pcg32;
+
+fn main() {
+    let mut report = Report::new("layer_times — per-sample costs per architecture");
+    for name in ["tiny", "small", "medium", "large"] {
+        let net = Network::new(ArchSpec::by_name(name).unwrap());
+        let mut params = net.init_params(1);
+        let mut scratch = net.scratch();
+        let side = match net.arch.layers[0] {
+            chaos_phi::config::LayerSpec::Input { side } => side,
+            _ => unreachable!(),
+        };
+        let mut rng = Pcg32::seeded(2);
+        let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        let iters = if name == "large" { 8 } else { 40 };
+        report.add(
+            Bench::new(format!("{name}/sgd_step"))
+                .warmup(2)
+                .iters(iters)
+                .run(|| net.sgd_step(&mut params, &img, 3, 1e-4, &mut scratch, None)),
+        );
+
+        // Layer-class split over a fixed batch of steps.
+        let timers = LayerTimes::new();
+        for _ in 0..iters {
+            net.sgd_step(&mut params, &img, 3, 1e-4, &mut scratch, Some(&timers));
+        }
+        let total = timers.total_secs();
+        let conv =
+            timers.get_secs(LayerClass::ConvForward) + timers.get_secs(LayerClass::ConvBackward);
+        report.note(format!(
+            "{name}: conv {:.1}% of layer time (fwd {:.3}s bwd {:.3}s of {:.3}s total) — paper Table 1: 93.7% (small)",
+            100.0 * conv / total,
+            timers.get_secs(LayerClass::ConvForward),
+            timers.get_secs(LayerClass::ConvBackward),
+            total,
+        ));
+    }
+    report.print();
+}

@@ -1,0 +1,43 @@
+//! Bench: the Xeon Phi simulator itself — cost of a full paper-scale
+//! sweep, plus the regenerated Table 5/6 summaries (shape checks that
+//! `cargo bench` prints alongside timings).
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::phisim::{simulate, SimConfig, PAPER_THREAD_COUNTS};
+
+fn main() {
+    let mut report = Report::new("phisim_sweep — simulator cost + Table 5/6 summaries");
+
+    for arch in ["small", "medium", "large"] {
+        report.add(
+            Bench::new(format!("simulate/{arch}/244t"))
+                .warmup(2)
+                .iters(10)
+                .run(|| simulate(&SimConfig::paper(arch, 244)).unwrap()),
+        );
+    }
+    report.add(
+        Bench::new("simulate/large/full_sweep")
+            .warmup(1)
+            .iters(3)
+            .run(|| {
+                for &p in &PAPER_THREAD_COUNTS {
+                    simulate(&SimConfig::paper("large", p)).unwrap();
+                }
+            }),
+    );
+
+    // Table-5 style summary at 244 threads.
+    let r = simulate(&SimConfig::paper("large", 244)).unwrap();
+    let c = r.layer_class_secs();
+    report.note(format!(
+        "large@244T layer classes: BPC {:.0}s ({:.1}%), FPC {:.0}s ({:.1}%), BPF {:.1}s, FPF {:.2}s — paper: 506s/88.5%, 55s/9.6%, 7.8s, 0.23s",
+        c.bpc,
+        100.0 * c.bpc / c.total(),
+        c.fpc,
+        100.0 * c.fpc / c.total(),
+        c.bpf,
+        c.fpf,
+    ));
+    report.print();
+}

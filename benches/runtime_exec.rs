@@ -1,0 +1,64 @@
+//! Bench: PJRT execution of the AOT artifacts — single-image forward,
+//! train-step (fwd+bwd+grads), and batched forward throughput.
+//! Skips gracefully when `make artifacts` has not run.
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::nn::Network;
+use chaos_phi::runtime::{
+    artifacts_available, BatchForwardEngine, ForwardEngine, Manifest, Runtime, TrainEngine,
+    ARTIFACT_DIR,
+};
+use chaos_phi::util::Pcg32;
+
+fn main() {
+    if !artifacts_available(ARTIFACT_DIR) {
+        println!("runtime_exec: artifacts not built (run `make artifacts`) — skipping");
+        return;
+    }
+    let manifest = Manifest::load(ARTIFACT_DIR).expect("manifest");
+    let rt = Runtime::cpu().expect("pjrt client");
+    let mut report = Report::new("runtime_exec — PJRT artifact execution");
+
+    for arch in ["tiny", "small"] {
+        if manifest.arch(arch).is_err() {
+            continue;
+        }
+        let net = Network::from_name(arch).unwrap();
+        let params = net.init_params(1);
+        let side = manifest.arch(arch).unwrap().input_side;
+        let mut rng = Pcg32::seeded(4);
+        let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        let fwd = ForwardEngine::load(&rt, &manifest, arch).unwrap();
+        report.note(format!("{arch}: forward compile {:.0} ms", 0.0));
+        report.add(
+            Bench::new(format!("{arch}/forward"))
+                .warmup(3)
+                .iters(30)
+                .run(|| fwd.run(&params, &img).unwrap()),
+        );
+
+        let tr = TrainEngine::load(&rt, &manifest, arch).unwrap();
+        report.add(
+            Bench::new(format!("{arch}/train_step"))
+                .warmup(3)
+                .iters(20)
+                .run(|| tr.run(&params, &img, 3).unwrap()),
+        );
+
+        let batched = BatchForwardEngine::load(&rt, &manifest, arch).unwrap();
+        let b = batched.batch;
+        let images: Vec<f32> = (0..b * side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let res = Bench::new(format!("{arch}/forward_b{b}"))
+            .warmup(3)
+            .iters(30)
+            .run(|| batched.run(&params, &images).unwrap());
+        report.note(format!(
+            "{arch}: batched throughput {:.0} images/s vs single {:.0} images/s",
+            b as f64 / res.mean_secs,
+            1.0 / report.results()[report.results().len() - 2].mean_secs,
+        ));
+        report.add(res);
+    }
+    report.print();
+}

@@ -1,0 +1,62 @@
+//! Bench: thread scaling (paper Figs 5/7/8/9).
+//!
+//! Two parts:
+//! 1. real CHAOS training wall-clock at 1/2/4/8 workers on this host —
+//!    on the single-core container this measures coordination *overhead*
+//!    (lock traffic, store publication), not parallel speedup, which is
+//!    exactly what it documents;
+//! 2. the simulated Xeon Phi sweep that regenerates the paper's scaling
+//!    curves (the substitution of DESIGN.md §2).
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::chaos::{train, Strategy};
+use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::data::{generate_synthetic, SynthConfig};
+use chaos_phi::nn::Network;
+use chaos_phi::phisim::speedup_table;
+
+fn main() {
+    let mut report = Report::new("thread_scaling — real host + simulated Phi");
+
+    // Part 1: real coordination overhead on this host.
+    let net = Network::new(ArchSpec::small());
+    let train_set = generate_synthetic(300, 1, &SynthConfig::default());
+    let test_set = generate_synthetic(60, 2, &SynthConfig::default());
+    for threads in [1usize, 2, 4, 8] {
+        let cfg = TrainConfig {
+            epochs: 1,
+            threads,
+            eta0: 0.01,
+            eta_decay: 0.9,
+            seed: 5,
+            validation_fraction: 0.0,
+        };
+        report.add(
+            Bench::new(format!("real/chaos_epoch/{threads}t"))
+                .warmup(1)
+                .iters(3)
+                .run(|| train(&net, &train_set, &test_set, &cfg, Strategy::Chaos).unwrap()),
+        );
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    report.note(format!(
+        "host has {cores} core(s): flat wall-clock across worker counts is expected — this measures coordination overhead, not speedup"
+    ));
+
+    // Part 2: the simulated Phi speedup sweep.
+    for arch in ["small", "medium", "large"] {
+        let rows = speedup_table(arch).unwrap();
+        let line: Vec<String> = rows
+            .iter()
+            .map(|r| format!("{}T={:.1}x", r.threads, r.vs_phi_1t))
+            .collect();
+        report.note(format!("phisim {arch} vs Phi-1T: {}", line.join("  ")));
+    }
+    let large = speedup_table("large").unwrap();
+    let r244 = large.iter().find(|r| r.threads == 244).unwrap();
+    report.note(format!(
+        "headline (large, 244T): {:.1}x vs Phi 1T (paper 103x), {:.1}x vs E5 (paper 14x), {:.1}x vs i5 (paper 58x)",
+        r244.vs_phi_1t, r244.vs_xeon_e5, r244.vs_core_i5
+    ));
+    report.print();
+}

@@ -1,0 +1,29 @@
+//! Performance-model explorer: regenerates the paper's prediction
+//! experiments (Tables 8/9, Figs 11–13) and prints per-term breakdowns.
+//!
+//! Run: `cargo run --release --example perf_model`
+
+use chaos_phi::harness;
+use chaos_phi::perfmodel::{PerfModel, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", harness::table8()?.to_markdown());
+    println!("{}", harness::table9()?.to_markdown());
+    for arch in ["small", "medium", "large"] {
+        println!("{}", harness::fig_pred_vs_measured(arch)?.to_markdown());
+    }
+
+    // Term-level view at the paper's flagship configuration.
+    println!("### Breakdown at 244 threads (seconds)\n");
+    println!("| arch | sequential | training | validation | testing | memory | total |");
+    println!("|---|---|---|---|---|---|---|");
+    for arch in ["small", "medium", "large"] {
+        let m = PerfModel::for_arch(arch)?;
+        let b = m.predict_breakdown(&Scenario::paper_default(arch, 244));
+        println!(
+            "| {arch} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} |",
+            b.sequential, b.training, b.validation, b.testing, b.memory, b.total()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Simulator sweep: regenerates the Xeon Phi scaling experiments
+//! (Figs 5–9, Tables 5–6) from the discrete-event machine model.
+//!
+//! Run: `cargo run --release --example phisim_sweep`
+
+use chaos_phi::harness;
+use chaos_phi::phisim::{speedup_table, PAPER_THREAD_COUNTS};
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", harness::fig5()?.to_markdown());
+    println!("{}", harness::fig6()?.to_markdown());
+    for f in [7u8, 8, 9] {
+        println!("{}", harness::fig_speedups(f)?.to_markdown());
+    }
+    println!("{}", harness::table5()?.to_markdown());
+    println!("{}", harness::table6()?.to_markdown());
+
+    // Headline summary (paper Result 3).
+    let rows = speedup_table("large")?;
+    let r244 = rows.iter().find(|r| r.threads == 244).unwrap();
+    println!("### Headline (large net, 244 threads)\n");
+    println!(
+        "speedup vs Phi 1T: {:.1}x (paper 103x) | vs Xeon E5: {:.1}x (paper 14x) | vs Core i5: {:.1}x (paper 58x)",
+        r244.vs_phi_1t, r244.vs_xeon_e5, r244.vs_core_i5
+    );
+    println!("thread counts simulated: {PAPER_THREAD_COUNTS:?}");
+    Ok(())
+}

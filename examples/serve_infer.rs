@@ -1,0 +1,78 @@
+//! Serving example: load the AOT-compiled batched-forward artifact through
+//! PJRT and serve concurrent prediction requests with dynamic batching,
+//! reporting latency percentiles and throughput.
+//!
+//! Requires `make artifacts` (tiny arch). Run:
+//! `cargo run --release --example serve_infer -- [requests] [clients]`
+
+use chaos_phi::data::{generate_synthetic, SynthConfig};
+use chaos_phi::nn::Network;
+use chaos_phi::runtime::{artifacts_available, ARTIFACT_DIR};
+use chaos_phi::serve::{Server, ServerConfig};
+use chaos_phi::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available(ARTIFACT_DIR) {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    // Weights would normally come from a CHAOS training run
+    // (`RunResult::final_params`); deterministic init keeps the example
+    // self-contained.
+    let net = Network::from_name("tiny")?;
+    let params = net.init_params(1);
+    let server = Server::spawn(
+        ARTIFACT_DIR.to_string(),
+        "tiny".to_string(),
+        params,
+        ServerConfig { max_delay: std::time::Duration::from_millis(1), ..Default::default() },
+    )?;
+    println!("server up (PJRT CPU, batched-forward artifact)");
+
+    let images = generate_synthetic(requests, 11, &SynthConfig::default()).resize(13);
+    let sw = Stopwatch::start();
+    let correct: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let handle = server.handle();
+                let images = &images;
+                s.spawn(move || {
+                    let mut correct = 0;
+                    let mut i = c;
+                    while i < requests {
+                        let probs = handle.predict(images.image(i)).expect("predict");
+                        let pred = probs
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0;
+                        correct += usize::from(pred == images.label(i));
+                        i += clients;
+                    }
+                    correct
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let secs = sw.elapsed_secs();
+
+    let m = server.handle().metrics.snapshot();
+    println!("\n{requests} requests, {clients} concurrent clients");
+    println!("throughput: {:.0} req/s  ({secs:.2}s total)", requests as f64 / secs);
+    println!(
+        "latency: p50 {:.0} µs   p99 {:.0} µs   max {:.0} µs",
+        m.p50_us, m.p99_us, m.max_us
+    );
+    println!("batches: {} (mean fill {:.2} / {})", m.batches, m.mean_batch_fill, 4);
+    println!(
+        "predictions from untrained weights: {}/{} correct (≈ chance, as expected)",
+        correct, requests
+    );
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! End-to-end training driver (the repository's E2E validation run —
+//! EXPERIMENTS.md §E2E records its output).
+//!
+//! Trains the paper's *medium* CNN (~76k parameters) with the CHAOS
+//! coordinator on a real small workload: 4,000 synthetic-MNIST images (or
+//! real MNIST when `data/mnist/` holds the IDX files), 6 epochs — several
+//! hundred thousand per-sample SGD steps across 4 asynchronous workers —
+//! and logs the full loss/error curve, proving all layers compose:
+//! data → nn kernels → shared-weight store → CHAOS workers → reporter.
+//!
+//! Run: `cargo run --release --example train_mnist -- [train_n] [epochs] [threads]`
+
+use chaos_phi::chaos::{train, Strategy};
+use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::data::load_or_generate;
+use chaos_phi::nn::Network;
+use chaos_phi::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let train_n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4_000);
+    let epochs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let threads: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let net = Network::new(ArchSpec::medium());
+    println!(
+        "medium CNN: {} parameters; CHAOS with {threads} threads; {epochs} epochs",
+        net.total_params
+    );
+    let (train_set, test_set) = load_or_generate("data/mnist", train_n, train_n / 4, 1234);
+    println!("data: {} train / {} test images", train_set.len(), test_set.len());
+
+    let cfg = TrainConfig {
+        epochs,
+        threads,
+        eta0: 0.005,
+        eta_decay: 0.9,
+        seed: 99,
+        validation_fraction: 0.2,
+    };
+    let sw = Stopwatch::start();
+    let run = train(&net, &train_set, &test_set, &cfg, Strategy::Chaos)?;
+
+    println!("\nepoch |   eta    | train loss | train err% | val err% | test err% | secs");
+    println!("------|----------|------------|------------|----------|-----------|-----");
+    for e in &run.epochs {
+        println!(
+            "{:>5} | {:.6} | {:>10.1} | {:>9.2}% | {:>7.2}% | {:>8.2}% | {:>5.1}",
+            e.epoch,
+            e.eta,
+            e.train.loss,
+            100.0 * e.train.errors as f64 / e.train.images.max(1) as f64,
+            e.validation.error_rate() * 100.0,
+            e.test.error_rate() * 100.0,
+            e.total_secs
+        );
+    }
+
+    let first = &run.epochs[0];
+    let last = run.final_epoch();
+    println!("\nwall time: {:.1}s", sw.elapsed_secs());
+    println!(
+        "loss: {:.1} -> {:.1} ({}x reduction); test error {:.2}% -> {:.2}%",
+        first.train.loss,
+        last.train.loss,
+        (first.train.loss / last.train.loss).round(),
+        first.test.error_rate() * 100.0,
+        last.test.error_rate() * 100.0
+    );
+    println!("shared-store publications: {}", run.publications);
+
+    // Per-layer time accounting (the paper's Table-1 shape: conv dominates).
+    use chaos_phi::util::timer::LayerClass as LC;
+    let t = &run.layer_times;
+    let conv = t.get_secs(LC::ConvForward) + t.get_secs(LC::ConvBackward);
+    println!(
+        "layer times: conv {:.1}s ({:.1}% of layer time), pool {:.1}s, fc+out {:.1}s",
+        conv,
+        100.0 * conv / t.total_secs(),
+        t.get_secs(LC::PoolForward) + t.get_secs(LC::PoolBackward),
+        t.get_secs(LC::FcForward)
+            + t.get_secs(LC::FcBackward)
+            + t.get_secs(LC::OutputForward)
+            + t.get_secs(LC::OutputBackward),
+    );
+
+    run.save("train_mnist_run.json")?;
+    println!("run record written to train_mnist_run.json");
+    anyhow::ensure!(
+        last.train.loss < first.train.loss * 0.6,
+        "E2E failed: loss did not fall substantially"
+    );
+    println!("E2E OK");
+    Ok(())
+}

@@ -1,0 +1,159 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime loads the text
+through `HloModuleProto::from_text_file` and executes it on the PJRT CPU
+client. Text — not `.serialize()` — because jax ≥ 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts per architecture:
+  {arch}_forward.hlo.txt          (params…, image)         -> (probs,)
+  {arch}_forward_b{B}.hlo.txt     (params…, images[B])     -> (probs[B],)
+  {arch}_train.hlo.txt            (params…, image, label)  -> (loss, probs, grads…)
+plus manifest.json describing parameter order/shapes and artifact I/O so the
+rust side never guesses.
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(arch: str):
+    side = model.ARCHS[arch]["input_side"]
+    shapes = model.param_shapes(arch)
+    param_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    image_spec = jax.ShapeDtypeStruct((side, side), jnp.float32)
+
+    def fn(*args):
+        params, image = list(args[:-1]), args[-1]
+        return (model.forward(arch, params, image),)
+
+    return jax.jit(fn).lower(*param_specs, image_spec)
+
+
+def lower_forward_batch(arch: str, batch: int):
+    side = model.ARCHS[arch]["input_side"]
+    shapes = model.param_shapes(arch)
+    param_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    images_spec = jax.ShapeDtypeStruct((batch, side, side), jnp.float32)
+
+    def fn(*args):
+        params, images = list(args[:-1]), args[-1]
+        return (model.forward_batch(arch, params, images),)
+
+    return jax.jit(fn).lower(*param_specs, images_spec)
+
+
+def lower_train(arch: str):
+    side = model.ARCHS[arch]["input_side"]
+    shapes = model.param_shapes(arch)
+    param_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    image_spec = jax.ShapeDtypeStruct((side, side), jnp.float32)
+    label_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(*args):
+        params, image, label = list(args[:-2]), args[-2], args[-1]
+        loss, probs, grads = model.train_step(arch, params, image, label)
+        return (loss, probs, *grads)
+
+    return jax.jit(fn).lower(*param_specs, image_spec, label_spec)
+
+
+def build(arch: str, out_dir: str, batch: int) -> dict:
+    """Lower all artifacts for one architecture; returns its manifest entry."""
+    side = model.ARCHS[arch]["input_side"]
+    shapes = model.param_shapes(arch)
+    entries = {}
+
+    jobs = {
+        "forward": (lower_forward(arch), [f"{side}x{side} image"], ["probs"]),
+        f"forward_b{batch}": (
+            lower_forward_batch(arch, batch),
+            [f"{batch}x{side}x{side} images"],
+            ["probs_batch"],
+        ),
+        "train": (
+            lower_train(arch),
+            [f"{side}x{side} image", "label i32"],
+            ["loss", "probs"] + [f"grad_{n}" for n, _ in shapes],
+        ),
+    }
+    for name, (lowered, extra_inputs, outputs) in jobs.items():
+        fname = f"{arch}_{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "inputs": [n for n, _ in shapes] + extra_inputs,
+            "outputs": outputs,
+        }
+        print(f"  wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    return {
+        "input_side": side,
+        "batch": batch,
+        "param_count": model.param_count(arch),
+        "params": [
+            {"name": n, "shape": list(s), "count": math.prod(s)} for n, s in shapes
+        ],
+        "artifacts": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--archs",
+        default="tiny,small",
+        help="comma list; medium/large cost minutes of lowering each "
+        "(default tiny,small keeps `make artifacts` quick)",
+    )
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "batch": args.batch, "archs": {}}
+    # Merge with an existing manifest so archs can be built incrementally.
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            manifest["archs"].update(old.get("archs", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    for arch in args.archs.split(","):
+        arch = arch.strip()
+        if arch not in model.ARCHS:
+            raise SystemExit(f"unknown arch '{arch}' (have {sorted(model.ARCHS)})")
+        print(f"lowering {arch} …", file=sys.stderr)
+        manifest["archs"][arch] = build(arch, args.out_dir, args.batch)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp reference oracles."""
+
+from .conv2d import conv2d, conv2d_macs, conv2d_vmem_bytes
+from .fc import fc
+from .maxpool import maxpool
+
+__all__ = ["conv2d", "conv2d_macs", "conv2d_vmem_bytes", "fc", "maxpool"]

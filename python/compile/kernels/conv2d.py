@@ -1,0 +1,155 @@
+"""L1 Pallas kernels: valid 2-D convolution, forward and backward (the
+paper's hot spot — Table 5 attributes ~88% of training time to conv
+back-propagation).
+
+Hardware adaptation (DESIGN.md §3): the paper vectorizes the convolution's
+inner loops for the Xeon Phi's 512-bit VPU with ``#pragma omp simd``. On the
+TPU model the same insight — turn the partial-derivative / weight-gradient
+loops into dense vector arithmetic — maps to an im2col restructuring so the
+multiply-accumulates run on the MXU systolic array:
+
+  forward : out  = W[M, C·k²] @ patches[C·k², oh·ow]
+  backward: dW   = g[M, oh·ow] @ patchesᵀ          (weight gradients)
+            dx   = col2im( Wᵀ @ g )                (input deltas)
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path and
+TPU efficiency is estimated analytically (EXPERIMENTS.md §Perf L1).
+
+``pallas_call`` has no built-in reverse-mode rule, so the backward kernel is
+attached with ``jax.custom_vjp`` — which is exactly how the paper structures
+the computation too: an explicit backward pass, not autodiff.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Run Pallas in interpret mode everywhere (CPU-only container).
+INTERPRET = True
+
+
+def _conv2d_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, oh: int, ow: int):
+    """One image: x [C,H,W], w [M,C,k,k], b [M] -> o [M,oh,ow]."""
+    x = x_ref[...]
+    c = x.shape[0]
+    cols = []
+    # k is a trace-time constant (≤ 6 for the paper's networks): the loop
+    # unrolls into k² static slices — the VMEM-resident analogue of the
+    # paper's kernel shifting over neurons.
+    for ky in range(k):
+        for kx in range(k):
+            cols.append(x[:, ky : ky + oh, kx : kx + ow])
+    # [C, k*k, oh, ow] -> [C*k*k, oh*ow]
+    patches = jnp.stack(cols, axis=1).reshape(c * k * k, oh * ow)
+    w = w_ref[...].reshape(-1, c * k * k)  # [M, C*k*k]
+    acc = jnp.dot(w, patches, preferred_element_type=jnp.float32)
+    o_ref[...] = (acc + b_ref[...][:, None]).reshape(-1, oh, ow)
+
+
+def _conv2d_bwd_kernel(
+    x_ref, w_ref, g_ref, dx_ref, dw_ref, db_ref, *, k: int, oh: int, ow: int
+):
+    """Backward: cotangent g [M,oh,ow] -> (dx [C,H,W], dw [M,C,k,k], db [M])."""
+    x = x_ref[...]
+    w = w_ref[...]
+    g = g_ref[...]
+    c = x.shape[0]
+    m = w.shape[0]
+
+    # Rebuild the forward's patch matrix (recompute-over-store: the patch
+    # matrix is k² times the input and recomputing it keeps VMEM small).
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            cols.append(x[:, ky : ky + oh, kx : kx + ow])
+    patches = jnp.stack(cols, axis=1).reshape(c * k * k, oh * ow)
+
+    gm = g.reshape(m, oh * ow)
+    # Weight gradients: one MXU matmul.
+    dw_ref[...] = jnp.dot(gm, patches.T, preferred_element_type=jnp.float32).reshape(
+        m, c, k, k
+    )
+    # Bias gradients: row sums.
+    db_ref[...] = jnp.sum(gm, axis=1)
+
+    # Input deltas: dx_cols [C·k², oh·ow] = Wᵀ @ g, then col2im scatter-add
+    # (k² shifted accumulations — the transpose of the forward's im2col).
+    wm = w.reshape(m, c * k * k)
+    dx_cols = jnp.dot(wm.T, gm, preferred_element_type=jnp.float32).reshape(
+        c, k * k, oh, ow
+    )
+    dx = jnp.zeros_like(x)
+    idx = 0
+    for ky in range(k):
+        for kx in range(k):
+            dx = dx.at[:, ky : ky + oh, kx : kx + ow].add(dx_cols[:, idx])
+            idx += 1
+    dx_ref[...] = dx
+
+
+def _conv2d_call(x, w, b):
+    c, h, width = x.shape
+    m, c2, k, k2 = w.shape
+    assert c == c2 and k == k2, f"shape mismatch: x {x.shape} w {w.shape}"
+    oh, ow = h - k + 1, width - k + 1
+    return pl.pallas_call(
+        partial(_conv2d_fwd_kernel, k=k, oh=oh, ow=ow),
+        out_shape=jax.ShapeDtypeStruct((m, oh, ow), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+def _conv2d_bwd_call(x, w, g):
+    c, h, width = x.shape
+    m, _, k, _ = w.shape
+    oh, ow = h - k + 1, width - k + 1
+    return pl.pallas_call(
+        partial(_conv2d_bwd_kernel, k=k, oh=oh, ow=ow),
+        out_shape=(
+            jax.ShapeDtypeStruct((c, h, width), jnp.float32),  # dx
+            jax.ShapeDtypeStruct((m, c, k, k), jnp.float32),  # dw
+            jax.ShapeDtypeStruct((m,), jnp.float32),  # db
+        ),
+        interpret=INTERPRET,
+    )(x, w, g)
+
+
+@jax.custom_vjp
+def conv2d(x, w, b):
+    """Valid convolution, stride 1: x [C,H,W], w [M,C,k,k], b [M].
+
+    Returns pre-activations [M, H-k+1, W-k+1]. Differentiable via the
+    explicit backward Pallas kernel.
+    """
+    return _conv2d_call(x, w, b)
+
+
+def _conv2d_vjp_fwd(x, w, b):
+    return _conv2d_call(x, w, b), (x, w)
+
+
+def _conv2d_vjp_bwd(residual, g):
+    x, w = residual
+    dx, dw, db = _conv2d_bwd_call(x, w, g)
+    return dx, dw, db
+
+
+conv2d.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)
+
+
+def conv2d_vmem_bytes(c: int, h: int, m: int, k: int) -> int:
+    """Estimated VMEM working set of the forward kernel in bytes (f32):
+    input + patch matrix + weights + output. Used by the L1 efficiency
+    estimate in EXPERIMENTS.md §Perf."""
+    oh = h - k + 1
+    patches = c * k * k * oh * oh
+    return 4 * (c * h * h + patches + m * c * k * k + m * oh * oh)
+
+
+def conv2d_macs(c: int, h: int, m: int, k: int) -> int:
+    """Multiply-accumulate count of one forward convolution."""
+    oh = h - k + 1
+    return m * c * k * k * oh * oh

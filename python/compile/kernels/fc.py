@@ -1,0 +1,64 @@
+"""L1 Pallas kernels: fully-connected layer, forward and backward
+(matvec / outer product on the MXU)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import INTERPRET
+
+
+def _fc_fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+    # w [O, I] @ x [I] + b [O]
+    o_ref[...] = (
+        jnp.dot(w_ref[...], x_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+    )
+
+
+def _fc_bwd_kernel(x_ref, w_ref, g_ref, dx_ref, dw_ref, db_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    g = g_ref[...]
+    dx_ref[...] = jnp.dot(w.T, g, preferred_element_type=jnp.float32)
+    dw_ref[...] = jnp.outer(g, x)
+    db_ref[...] = g
+
+
+def _fc_call(x, w, b):
+    (i,) = x.shape
+    o, i2 = w.shape
+    assert i == i2, f"shape mismatch: x {x.shape} w {w.shape}"
+    return pl.pallas_call(
+        _fc_fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((o,), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+@jax.custom_vjp
+def fc(x, w, b):
+    """x [I], w [O,I], b [O] -> pre-activations [O] (differentiable)."""
+    return _fc_call(x, w, b)
+
+
+def _fc_vjp_fwd(x, w, b):
+    return _fc_call(x, w, b), (x, w)
+
+
+def _fc_vjp_bwd(residual, g):
+    x, w = residual
+    (i,) = x.shape
+    (o,) = g.shape
+    dx, dw, db = pl.pallas_call(
+        _fc_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((i,), jnp.float32),
+            jax.ShapeDtypeStruct((o, i), jnp.float32),
+            jax.ShapeDtypeStruct((o,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, g)
+    return dx, dw, db
+
+
+fc.defvjp(_fc_vjp_fwd, _fc_vjp_bwd)

@@ -1,0 +1,82 @@
+"""L1 Pallas kernels: non-overlapping max pooling (kernel k, stride k),
+forward and backward.
+
+The reshape-max formulation keeps the whole map in VMEM and reduces with
+vector max ops — no gather/scatter in the forward. The backward routes each
+output delta to the *first* maximum of its window (argmax one-hot), matching
+the rust `nn::pool` switches semantics exactly so the two engines stay
+numerically aligned even on ties.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import INTERPRET
+
+
+def _windows(x, k: int, oh: int, ow: int):
+    """[C,H,W] -> [C,oh,ow,k*k] window view (crops ragged tails)."""
+    c = x.shape[0]
+    x = x[:, : oh * k, : ow * k]
+    return x.reshape(c, oh, k, ow, k).transpose(0, 1, 3, 2, 4).reshape(c, oh, ow, k * k)
+
+
+def _maxpool_fwd_kernel(x_ref, o_ref, *, k: int, oh: int, ow: int):
+    o_ref[...] = _windows(x_ref[...], k, oh, ow).max(axis=-1)
+
+
+def _maxpool_bwd_kernel(x_ref, g_ref, dx_ref, *, k: int, oh: int, ow: int):
+    x = x_ref[...]
+    g = g_ref[...]
+    c, h, w = x.shape
+    win = _windows(x, k, oh, ow)  # [C,oh,ow,k*k]
+    # First-argmax one-hot (ties resolved to the lowest flat index, like the
+    # rust switches).
+    am = jnp.argmax(win, axis=-1)
+    onehot = jax.nn.one_hot(am, k * k, dtype=jnp.float32)
+    routed = onehot * g[..., None]  # [C,oh,ow,k*k]
+    # Back to image layout; pad ragged tail with zeros.
+    dx_core = (
+        routed.reshape(c, oh, ow, k, k)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(c, oh * k, ow * k)
+    )
+    dx_ref[...] = jnp.pad(dx_core, ((0, 0), (0, h - oh * k), (0, w - ow * k)))
+
+
+def _maxpool_call(x, k: int):
+    c, h, w = x.shape
+    oh, ow = h // k, w // k
+    assert oh > 0 and ow > 0, f"pool kernel {k} too large for {x.shape}"
+    return pl.pallas_call(
+        partial(_maxpool_fwd_kernel, k=k, oh=oh, ow=ow),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def maxpool(x, k: int):
+    """x [C,H,W] -> [C, H//k, W//k] window maxima (differentiable)."""
+    return _maxpool_call(x, k)
+
+
+def _maxpool_vjp_fwd(x, k: int):
+    return _maxpool_call(x, k), x
+
+
+def _maxpool_vjp_bwd(k: int, x, g):
+    c, h, w = x.shape
+    oh, ow = h // k, w // k
+    dx = pl.pallas_call(
+        partial(_maxpool_bwd_kernel, k=k, oh=oh, ow=ow),
+        out_shape=jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+        interpret=INTERPRET,
+    )(x, g)
+    return (dx,)
+
+
+maxpool.defvjp(_maxpool_vjp_fwd, _maxpool_vjp_bwd)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest sweeps shapes/values drawn from
+the Table-2 family (plus hypothesis-generated ones) and asserts the Pallas
+kernels match to float tolerance. They are intentionally written with
+`jax.lax` primitives — a completely different code path from the kernels'
+im2col formulation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b):
+    """Valid conv, stride 1, via lax.conv_general_dilated.
+
+    x [C,H,W], w [M,C,k,k], b [M] -> [M,oh,ow].
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],  # [1, C, H, W]
+        w,  # [M, C, k, k] (OIHW)
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    return out + b[:, None, None]
+
+
+def maxpool_ref(x, k: int):
+    """Window max via lax.reduce_window. x [C,H,W] -> [C,H//k,W//k]."""
+    c, h, w = x.shape
+    oh, ow = h // k, w // k
+    cropped = x[:, : oh * k, : ow * k]
+    return jax.lax.reduce_window(
+        cropped,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, k, k),
+        window_strides=(1, k, k),
+        padding="VALID",
+    )
+
+
+def fc_ref(x, w, b):
+    """x [I], w [O,I], b [O] -> [O]."""
+    return w @ x + b
+
+
+# --- activation / loss references shared with the L2 model -----------------
+
+TANH_A = 1.7159
+TANH_B = 2.0 / 3.0
+
+
+def scaled_tanh(x):
+    """LeCun tanh: 1.7159 · tanh(2x/3) — same constants as the rust nn."""
+    return TANH_A * jnp.tanh(TANH_B * x)
+
+
+def softmax_xent(logits, label):
+    """Numerically stable softmax + cross-entropy; returns (probs, loss)."""
+    z = logits - jnp.max(logits)
+    e = jnp.exp(z)
+    probs = e / jnp.sum(e)
+    loss = -jnp.log(jnp.clip(probs[label], 1e-12, 1.0))
+    return probs, loss

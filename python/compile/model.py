@@ -1,0 +1,181 @@
+"""L2: the paper's CNN architectures (Table 2) as JAX forward/backward
+functions built on the L1 Pallas kernels.
+
+The layer stacks, parameter layouts ([M,C,k,k] conv weights + [M] biases,
+[O,I] fully-connected weights + [O] biases, weights-then-biases per layer)
+and activation constants mirror the rust `nn` module exactly, so the same
+flat parameter vector drives both engines and the runtime cross-validation
+test can compare them bit-for-bit-close.
+
+Build-time only: this module is lowered to HLO text by `compile.aot` and is
+never imported at runtime.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, fc, maxpool
+from .kernels import ref
+
+# (kind, *args): ("conv", maps, kernel) | ("pool", kernel) | ("fc", n) |
+# ("out", classes). Mirrors rust config::arch (including the documented
+# Table-2 large-net pool-3 reading: 6x6 pooled by 2 -> 3x3).
+ARCHS = {
+    "tiny": {
+        "input_side": 13,
+        "layers": [("conv", 3, 4), ("pool", 2), ("conv", 4, 2), ("pool", 2), ("fc", 8), ("out", 10)],
+    },
+    "small": {
+        "input_side": 29,
+        "layers": [("conv", 5, 4), ("pool", 2), ("conv", 10, 5), ("pool", 3), ("fc", 50), ("out", 10)],
+    },
+    "medium": {
+        "input_side": 29,
+        "layers": [("conv", 20, 4), ("pool", 2), ("conv", 40, 5), ("pool", 3), ("fc", 150), ("out", 10)],
+    },
+    "large": {
+        "input_side": 29,
+        "layers": [
+            ("conv", 20, 4),
+            ("pool", 1),
+            ("conv", 60, 5),
+            ("pool", 2),
+            ("conv", 100, 6),
+            ("pool", 2),
+            ("fc", 150),
+            ("out", 10),
+        ],
+    },
+}
+
+
+def param_shapes(arch: str):
+    """Ordered parameter list [(name, shape), ...] for an architecture.
+
+    The order (layer by layer, weights before biases) matches the rust flat
+    parameter layout, so concatenating the raveled arrays reproduces the
+    rust parameter vector exactly.
+    """
+    spec = ARCHS[arch]
+    side = spec["input_side"]
+    maps = 1
+    shapes = []
+    li = 0
+    for layer in spec["layers"]:
+        kind = layer[0]
+        li += 1
+        if kind == "conv":
+            _, m, k = layer
+            shapes.append((f"l{li}_conv_w", (m, maps, k, k)))
+            shapes.append((f"l{li}_conv_b", (m,)))
+            maps, side = m, side - k + 1
+        elif kind == "pool":
+            _, k = layer
+            side //= k
+        elif kind in ("fc", "out"):
+            _, n = layer
+            inputs = maps * side * side
+            shapes.append((f"l{li}_{kind}_w", (n, inputs)))
+            shapes.append((f"l{li}_{kind}_b", (n,)))
+            maps, side = n, 1
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    return shapes
+
+
+def param_count(arch: str) -> int:
+    import math
+
+    return sum(math.prod(s) for _, s in param_shapes(arch))
+
+
+def unflatten_params(arch: str, flat):
+    """Split a flat f32 vector into the ordered parameter arrays."""
+    shapes = param_shapes(arch)
+    expected = param_count(arch)
+    assert len(flat) == expected, f"flat params {len(flat)} != expected {expected}"
+    out, off = [], 0
+    for _, shape in shapes:
+        import math
+
+        n = math.prod(shape)
+        out.append(jnp.asarray(flat[off : off + n]).reshape(shape))
+        off += n
+    assert off == len(flat), f"flat params {len(flat)} != expected {off}"
+    return out
+
+
+def init_params(arch: str, key):
+    """Glorot-uniform init (structure check / python-side tests; rust owns
+    the canonical init for parity experiments)."""
+    params = []
+    for name, shape in param_shapes(arch):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            if len(shape) == 4:
+                fan_in = shape[1] * shape[2] * shape[3]
+                fan_out = shape[0] * shape[2] * shape[3]
+            else:
+                fan_out, fan_in = shape
+            r = (6.0 / (fan_in + fan_out)) ** 0.5
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -r, r))
+    return params
+
+
+def forward(arch: str, params, image, *, use_ref: bool = False):
+    """Forward-propagate one image [side, side] -> softmax probs [classes].
+
+    `use_ref=True` routes through the pure-jnp oracle ops instead of the
+    Pallas kernels (test path).
+    """
+    conv_f = ref.conv2d_ref if use_ref else conv2d
+    pool_f = ref.maxpool_ref if use_ref else maxpool
+    fc_f = ref.fc_ref if use_ref else fc
+
+    spec = ARCHS[arch]
+    x = image[None, :, :]  # [1, H, W]
+    it = iter(params)
+    logits = None
+    for layer in spec["layers"]:
+        kind = layer[0]
+        if kind == "conv":
+            w, b = next(it), next(it)
+            x = ref.scaled_tanh(conv_f(x, w, b))
+        elif kind == "pool":
+            x = pool_f(x, layer[1])
+        elif kind == "fc":
+            w, b = next(it), next(it)
+            x = ref.scaled_tanh(fc_f(x.reshape(-1), w, b))
+        elif kind == "out":
+            w, b = next(it), next(it)
+            logits = fc_f(x.reshape(-1), w, b)
+    z = logits - jnp.max(logits)
+    e = jnp.exp(z)
+    return e / jnp.sum(e)
+
+
+def loss_fn(arch: str, params, image, label, *, use_ref: bool = False):
+    """Cross-entropy loss + probs for one labelled image."""
+    probs = forward(arch, params, image, use_ref=use_ref)
+    onehot = jax.nn.one_hot(label, probs.shape[0], dtype=jnp.float32)
+    loss = -jnp.log(jnp.clip(jnp.sum(probs * onehot), 1e-12, 1.0))
+    return loss, probs
+
+
+def train_step(arch: str, params, image, label, *, use_ref: bool = False):
+    """One sample's (loss, probs, grads) — the unit the CHAOS workers
+    publish. Grads come back in parameter order."""
+    grad_fn = jax.value_and_grad(
+        lambda p: loss_fn(arch, p, image, label, use_ref=use_ref), has_aux=True
+    )
+    (loss, probs), grads = grad_fn(params)
+    return loss, probs, grads
+
+
+def forward_batch(arch: str, params, images, *, use_ref: bool = False):
+    """Batched forward via vmap: images [B, side, side] -> probs [B, C]."""
+    return jax.vmap(lambda im: forward(arch, params, im, use_ref=use_ref))(images)

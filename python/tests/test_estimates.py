@@ -1,0 +1,51 @@
+"""L1 analytic estimators (VMEM footprint / MAC counts) used by the
+EXPERIMENTS.md §Perf TPU-efficiency estimate."""
+
+from compile.kernels import conv2d_macs, conv2d_vmem_bytes
+from compile import model
+
+VMEM_BUDGET = 16 * 1024 * 1024  # 16 MiB
+
+
+def conv_layers(arch):
+    """(C, side, M, k) tuples for every conv layer of an architecture."""
+    side = model.ARCHS[arch]["input_side"]
+    maps = 1
+    out = []
+    for layer in model.ARCHS[arch]["layers"]:
+        if layer[0] == "conv":
+            _, m, k = layer
+            out.append((maps, side, m, k))
+            maps, side = m, side - k + 1
+        elif layer[0] == "pool":
+            side //= layer[1]
+    return out
+
+
+def test_all_paper_conv_layers_fit_vmem():
+    for arch in ["small", "medium", "large"]:
+        for (c, h, m, k) in conv_layers(arch):
+            b = conv2d_vmem_bytes(c, h, m, k)
+            assert b < VMEM_BUDGET, f"{arch} conv {c}x{h}-> {m} (k{k}): {b} bytes"
+
+
+def test_macs_match_closed_form():
+    # medium conv2: 40 maps, 20 inputs, k5, 13x13 -> 9x9
+    macs = conv2d_macs(20, 13, 40, 5)
+    assert macs == 40 * 20 * 25 * 81
+
+
+def test_macs_scale_with_arch():
+    totals = {
+        arch: sum(conv2d_macs(*t) for t in conv_layers(arch))
+        for arch in ["small", "medium", "large"]
+    }
+    assert totals["small"] < totals["medium"] < totals["large"]
+    # Table 3's FProp ratio between large and small is ~92x; MACs should be
+    # in the same order of magnitude of ratio.
+    ratio = totals["large"] / totals["small"]
+    assert 20 < ratio < 500, ratio
+
+
+def test_vmem_grows_with_maps():
+    assert conv2d_vmem_bytes(20, 13, 80, 5) > conv2d_vmem_bytes(20, 13, 40, 5)

@@ -1,0 +1,154 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle, swept
+with hypothesis over shapes/values from (and beyond) the Table-2 family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, fc, maxpool
+from compile.kernels.ref import conv2d_ref, fc_ref, maxpool_ref, scaled_tanh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+# The exact (C, H, M, k) conv configurations of the paper's three networks.
+TABLE2_CONVS = [
+    (1, 29, 5, 4),
+    (5, 13, 10, 5),  # small
+    (1, 29, 20, 4),
+    (20, 13, 40, 5),  # medium
+    (20, 26, 60, 5),
+    (60, 11, 100, 6),  # large
+]
+
+
+@pytest.mark.parametrize("c,h,m,k", TABLE2_CONVS)
+def test_conv2d_matches_ref_on_paper_shapes(c, h, m, k):
+    key = jax.random.PRNGKey(c * 1000 + h)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x, w, b = rand(k1, (c, h, h)), rand(k2, (m, c, k, k)), rand(k3, (m,))
+    # Accumulation order differs (im2col matmul vs direct conv); on the
+    # largest Table-2 reductions (C·k² up to 2160 terms) a few elements
+    # land ~1e-4 apart in relative terms.
+    np.testing.assert_allclose(conv2d(x, w, b), conv2d_ref(x, w, b), rtol=3e-4, atol=5e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    m=st.integers(1, 5),
+    k=st.integers(1, 4),
+    extra=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref_hypothesis(c, m, k, extra, seed):
+    h = k + extra
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x, w, b = rand(k1, (c, h, h)), rand(k2, (m, c, k, k)), rand(k3, (m,))
+    np.testing.assert_allclose(conv2d(x, w, b), conv2d_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+
+def test_conv2d_grads_match_ref_autodiff():
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x, w, b = rand(k1, (3, 9, 9)), rand(k2, (4, 3, 3, 3)), rand(k3, (4,))
+    cot = rand(k4, (4, 7, 7))
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(conv2d(x, w, b) * cot)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(conv2d_ref(x, w, b) * cot)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r, name in zip(gp, gr, ["dx", "dw", "db"]):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    k=st.integers(1, 4),
+    oh=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(c, k, oh, seed):
+    h = k * oh
+    x = rand(jax.random.PRNGKey(seed), (c, h, h))
+    np.testing.assert_allclose(maxpool(x, k), maxpool_ref(x, k), rtol=1e-6, atol=1e-6)
+
+
+def test_maxpool_identity_when_k1():
+    x = rand(jax.random.PRNGKey(0), (2, 5, 5))
+    np.testing.assert_allclose(maxpool(x, 1), x)
+
+
+def test_maxpool_grad_routes_to_argmax():
+    # Distinct values: gradient must land exactly on window maxima.
+    x = jnp.arange(16.0, dtype=jnp.float32).reshape(1, 4, 4)
+    g = jnp.ones((1, 2, 2), jnp.float32)
+    dx = jax.grad(lambda x: jnp.sum(maxpool(x, 2) * g))(x)
+    expected = np.zeros((1, 4, 4), np.float32)
+    for wy in range(2):
+        for wx in range(2):
+            expected[0, 2 * wy + 1, 2 * wx + 1] = 1.0  # max is bottom-right
+    np.testing.assert_allclose(dx, expected)
+
+
+def test_maxpool_grad_ties_route_once():
+    # All-equal window: exactly one input receives the delta (first argmax),
+    # matching the rust switches semantics.
+    x = jnp.zeros((1, 2, 2), jnp.float32)
+    dx = jax.grad(lambda x: jnp.sum(maxpool(x, 2)))(x)
+    assert float(jnp.sum(dx)) == pytest.approx(1.0)
+    assert int(jnp.count_nonzero(dx)) == 1
+    assert float(dx[0, 0, 0]) == pytest.approx(1.0), "first index wins ties"
+
+
+@settings(max_examples=25, deadline=None)
+@given(i=st.integers(1, 40), o=st.integers(1, 20), seed=st.integers(0, 2**31 - 1))
+def test_fc_matches_ref(i, o, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x, w, b = rand(k1, (i,)), rand(k2, (o, i)), rand(k3, (o,))
+    np.testing.assert_allclose(fc(x, w, b), fc_ref(x, w, b), rtol=1e-5, atol=1e-6)
+
+
+def test_fc_grads_match_ref_autodiff():
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x, w, b = rand(k1, (12,)), rand(k2, (5, 12)), rand(k3, (5,))
+    cot = rand(k4, (5,))
+    gp = jax.grad(lambda x, w, b: jnp.sum(fc(x, w, b) * cot), argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(lambda x, w, b: jnp.sum(fc_ref(x, w, b) * cot), argnums=(0, 1, 2))(x, w, b)
+    for a, r, name in zip(gp, gr, ["dx", "dw", "db"]):
+        np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_scaled_tanh_constants_match_rust():
+    # Same constants as rust nn::activation (A=1.7159, B=2/3).
+    assert float(scaled_tanh(jnp.float32(0.0))) == 0.0
+    y1 = float(scaled_tanh(jnp.float32(1.0)))
+    assert y1 == pytest.approx(1.7159 * np.tanh(2.0 / 3.0), rel=1e-6)
+
+
+def test_kernels_jit_compile():
+    # The kernels must lower inside jit (the AOT path requirement).
+    x = rand(jax.random.PRNGKey(1), (2, 8, 8))
+    w = rand(jax.random.PRNGKey(2), (3, 2, 3, 3))
+    b = rand(jax.random.PRNGKey(3), (3,))
+
+    @jax.jit
+    def f(x, w, b):
+        return maxpool(conv2d(x, w, b), 2)
+
+    out = f(x, w, b)
+    assert out.shape == (3, 3, 3)

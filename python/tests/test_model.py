@@ -1,0 +1,110 @@
+"""L2 correctness: architecture shapes against paper Table 2, Pallas-built
+model against the ref-op model, gradients, batching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def params_and_image(arch, seed=0):
+    key = jax.random.PRNGKey(seed)
+    p = model.init_params(arch, key)
+    side = model.ARCHS[arch]["input_side"]
+    img = jax.random.uniform(jax.random.PRNGKey(seed + 1), (side, side), jnp.float32, -1, 1)
+    return p, img
+
+
+# Paper Table 2 weight counts per parameterized layer (with the documented
+# large-net pool-3 reading). These must match rust nn::dims exactly.
+TABLE2_COUNTS = {
+    "small": [80, 5, 1250, 10, 4500, 50, 500, 10],
+    "medium": [320, 20, 20000, 40, 54000, 150, 1500, 10],
+    "large": [320, 20, 30000, 60, 216000, 100, 135000, 150, 1500, 10],
+}
+
+
+@pytest.mark.parametrize("arch", ["small", "medium", "large"])
+def test_param_shapes_match_table2(arch):
+    import math
+
+    counts = [math.prod(s) for _, s in model.param_shapes(arch)]
+    assert counts == TABLE2_COUNTS[arch]
+    # Layer totals (weights + biases) as printed in Table 2.
+    paired = [counts[i] + counts[i + 1] for i in range(0, len(counts), 2)]
+    expected = {
+        "small": [85, 1260, 4550, 510],
+        "medium": [340, 20040, 54150, 1510],
+        "large": [340, 30060, 216100, 135150, 1510],
+    }[arch]
+    assert paired == expected
+
+
+@pytest.mark.parametrize("arch", ["tiny", "small"])
+def test_forward_is_distribution(arch):
+    p, img = params_and_image(arch)
+    probs = model.forward(arch, p, img)
+    assert probs.shape == (10,)
+    assert float(jnp.sum(probs)) == pytest.approx(1.0, abs=1e-5)
+    assert bool(jnp.all(probs >= 0))
+
+
+@pytest.mark.parametrize("arch", ["tiny", "small"])
+def test_pallas_model_matches_ref_model(arch):
+    p, img = params_and_image(arch, seed=3)
+    probs = model.forward(arch, p, img)
+    probs_ref = model.forward(arch, p, img, use_ref=True)
+    np.testing.assert_allclose(probs, probs_ref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["tiny", "small"])
+def test_train_step_grads_match_ref_autodiff(arch):
+    p, img = params_and_image(arch, seed=5)
+    label = jnp.int32(4)
+    loss, probs, grads = model.train_step(arch, p, img, label)
+    loss_r, probs_r, grads_r = model.train_step(arch, p, img, label, use_ref=True)
+    assert float(loss) == pytest.approx(float(loss_r), rel=1e-5)
+    assert len(grads) == len(p)
+    for (name, _), g, gr in zip(model.param_shapes(arch), grads, grads_r):
+        np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-6, err_msg=name)
+
+
+def test_train_step_reduces_loss():
+    arch = "tiny"
+    p, img = params_and_image(arch, seed=9)
+    label = jnp.int32(2)
+    loss0, _, grads = model.train_step(arch, p, img, label)
+    p2 = [w - 0.1 * g for w, g in zip(p, grads)]
+    loss1, _, _ = model.train_step(arch, p2, img, label)
+    assert float(loss1) < float(loss0)
+
+
+def test_forward_batch_matches_singles():
+    arch = "tiny"
+    p, _ = params_and_image(arch)
+    side = model.ARCHS[arch]["input_side"]
+    imgs = jax.random.uniform(jax.random.PRNGKey(11), (3, side, side), jnp.float32, -1, 1)
+    batch = model.forward_batch(arch, p, imgs)
+    assert batch.shape == (3, 10)
+    for i in range(3):
+        single = model.forward(arch, p, imgs[i])
+        np.testing.assert_allclose(batch[i], single, rtol=1e-5, atol=1e-6)
+
+
+def test_unflatten_roundtrip():
+    arch = "small"
+    p, _ = params_and_image(arch, seed=2)
+    flat = np.concatenate([np.asarray(a).ravel() for a in p])
+    assert flat.size == model.param_count(arch)
+    back = model.unflatten_params(arch, flat)
+    for a, b in zip(p, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unflatten_rejects_wrong_size():
+    with pytest.raises(AssertionError):
+        model.unflatten_params("tiny", np.zeros(7, np.float32))

@@ -1,0 +1,159 @@
+//! In-crate micro-benchmark harness (criterion is not in the vendored
+//! registry). Provides warmup, repeated timed iterations, mean/σ/min
+//! statistics and markdown reporting — enough to drive every `cargo bench`
+//! target reproducibly.
+
+use crate::util::stats::Welford;
+use crate::util::Stopwatch;
+
+/// One benchmark definition.
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    measure_iters: usize,
+}
+
+/// Measured result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl BenchResult {
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            1.0 / self.mean_secs
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {} | {} | ±{} | {} |",
+            self.name,
+            self.iters,
+            crate::util::timer::fmt_secs(self.mean_secs),
+            crate::util::timer::fmt_secs(self.stddev_secs),
+            crate::util::timer::fmt_secs(self.min_secs),
+        )
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench { name: name.into(), warmup_iters: 3, measure_iters: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.measure_iters = n.max(1);
+        self
+    }
+
+    /// Run the closure `warmup + iters` times, timing the measured ones.
+    /// The closure's return value is black-boxed to keep the optimizer
+    /// honest.
+    pub fn run<T>(self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut w = Welford::new();
+        for _ in 0..self.measure_iters {
+            let sw = Stopwatch::start();
+            std::hint::black_box(f());
+            w.add(sw.elapsed_secs());
+        }
+        BenchResult {
+            name: self.name,
+            iters: self.measure_iters,
+            mean_secs: w.mean(),
+            stddev_secs: w.stddev(),
+            min_secs: w.min(),
+            max_secs: w.max(),
+        }
+    }
+}
+
+/// Collects results and prints a markdown report; used by the bench
+/// binaries so `cargo bench` output is paste-ready for EXPERIMENTS.md.
+#[derive(Debug, Default)]
+pub struct Report {
+    title: String,
+    results: Vec<BenchResult>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Report {
+        Report { title: title.into(), results: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn add(&mut self, r: BenchResult) {
+        println!("  {} -> mean {}", r.name, crate::util::timer::fmt_secs(r.mean_secs));
+        self.results.push(r);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("## {}\n\n", self.title);
+        out.push_str("| bench | iters | mean | σ | min |\n|---|---|---|---|---|\n");
+        for r in &self.results {
+            out.push_str(&r.row());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n> {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("\n{}", self.to_markdown());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let r = Bench::new("sleep").warmup(1).iters(5).run(|| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_secs >= 0.002, "mean {}", r.mean_secs);
+        assert!(r.min_secs <= r.mean_secs && r.mean_secs <= r.max_secs + 1e-12);
+        assert!(r.throughput() < 600.0);
+    }
+
+    #[test]
+    fn report_markdown_contains_rows() {
+        let mut rep = Report::new("test suite");
+        rep.add(Bench::new("noop").warmup(0).iters(3).run(|| 1 + 1));
+        rep.note("a note");
+        let md = rep.to_markdown();
+        assert!(md.contains("## test suite"));
+        assert!(md.contains("| noop | 3 |"));
+        assert!(md.contains("> a note"));
+    }
+}

@@ -1,0 +1,156 @@
+//! Weight checkpoints: persist a trained parameter vector so the serving
+//! path (`chaos serve --weights`) and later runs can reuse it.
+//!
+//! Format (little-endian): magic `CHKP1\n`, arch-name length (u32) + UTF-8
+//! name, parameter count (u64), raw f32 data, CRC32 of the data. The arch
+//! name and count are verified on load so a checkpoint can never be applied
+//! to the wrong network.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"CHKP1\n";
+
+/// A named weight snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub arch: String,
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn new(arch: impl Into<String>, params: Vec<f32>) -> Checkpoint {
+        Checkpoint { arch: arch.into(), params }
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        let name = self.arch.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        let mut crc = flate2::Crc::new();
+        for v in &self.params {
+            let b = v.to_le_bytes();
+            crc.update(&b);
+            f.write_all(&b)?;
+        }
+        f.write_all(&crc.sum().to_le_bytes())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Read from a file, verifying magic and checksum.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(&path)?);
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a CHKP1 checkpoint");
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        anyhow::ensure!(name_len <= 256, "arch name too long ({name_len})");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let arch = String::from_utf8(name).map_err(|_| anyhow::anyhow!("bad arch name"))?;
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let count = u64::from_le_bytes(u64b) as usize;
+        anyhow::ensure!(count <= 1 << 28, "implausible parameter count {count}");
+        let mut params = Vec::with_capacity(count);
+        let mut crc = flate2::Crc::new();
+        let mut buf = [0u8; 4];
+        for _ in 0..count {
+            f.read_exact(&mut buf)?;
+            crc.update(&buf);
+            params.push(f32::from_le_bytes(buf));
+        }
+        f.read_exact(&mut u32b)?;
+        let stored = u32::from_le_bytes(u32b);
+        anyhow::ensure!(
+            stored == crc.sum(),
+            "checkpoint corrupted: crc {stored:#x} != {:#x}",
+            crc.sum()
+        );
+        Ok(Checkpoint { arch, params })
+    }
+
+    /// Load and verify against a network (arch name + parameter count).
+    pub fn load_for(
+        path: impl AsRef<Path>,
+        net: &crate::nn::Network,
+    ) -> anyhow::Result<Vec<f32>> {
+        let ckpt = Self::load(path)?;
+        anyhow::ensure!(
+            ckpt.arch == net.arch.name,
+            "checkpoint is for arch '{}', network is '{}'",
+            ckpt.arch,
+            net.arch.name
+        );
+        anyhow::ensure!(
+            ckpt.params.len() == net.total_params,
+            "checkpoint has {} params, network needs {}",
+            ckpt.params.len(),
+            net.total_params
+        );
+        Ok(ckpt.params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::nn::Network;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(7);
+        let path = tmp("roundtrip.ckpt");
+        Checkpoint::new("tiny", params.clone()).save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.arch, "tiny");
+        assert_eq!(back.params, params);
+        let verified = Checkpoint::load_for(&path, &net).unwrap();
+        assert_eq!(verified, params);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn wrong_arch_rejected() {
+        let net_small = Network::new(ArchSpec::small());
+        let path = tmp("wrong_arch.ckpt");
+        Checkpoint::new("tiny", vec![0.0; 329]).save(&path).unwrap();
+        assert!(Checkpoint::load_for(&path, &net_small).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let path = tmp("corrupt.ckpt");
+        Checkpoint::new("tiny", vec![1.0; 64]).save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err();
+        assert!(e.to_string().contains("corrupted"), "{e}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+        assert!(Checkpoint::load("/nonexistent/x.ckpt").is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! The CHAOS coordinator — the paper's contribution (§4).
+//!
+//! **C**ontrolled **H**ogwild with **A**rbitrary **O**rder of
+//! **S**ynchronization: data-parallel asynchronous SGD where
+//!
+//! * every worker thread owns a network *instance* (private activations,
+//!   deltas and scratch — [`crate::nn::Scratch`]) but all instances share
+//!   one weight vector ([`SharedParams`]);
+//! * workers *pick* images from a common pool ([`Sampler`]) so nobody waits
+//!   on a straggler;
+//! * during back-propagation each layer's gradients are first accumulated
+//!   locally, then *published* to the shared weights as soon as that layer
+//!   finishes — delayed enough to avoid cache-line ping-pong, instant
+//!   enough that other workers see fresh weights within a layer's latency;
+//! * publication order is arbitrary and first-come-first-served; there is
+//!   no barrier anywhere in an epoch's training phase.
+//!
+//! The strategies the paper contrasts with (B: averaged/synchronous SGD,
+//! C: delayed round-robin, D: pure HogWild!) are implemented as alternate
+//! [`Strategy`] policies over the same worker framework for head-to-head
+//! ablations.
+
+mod checkpoint;
+mod reporter;
+mod sampler;
+mod shared;
+mod strategies;
+mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use reporter::{EpochRecord, EvalMetrics, RunResult};
+pub use sampler::Sampler;
+pub use shared::SharedParams;
+pub use strategies::{Strategy, Turnstile};
+pub use trainer::{eval_parallel, train};

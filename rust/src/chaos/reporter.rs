@@ -1,0 +1,193 @@
+//! Run records — the Rust analogue of the paper's `Reporter` class
+//! (§4.2: "we added a Reporter class to serialize execution results").
+//!
+//! Captures per-epoch errors, error rates and cumulative losses for the
+//! training/validation/test phases plus wall-clock and per-layer times;
+//! the harness consumes these to regenerate Table 7, Fig 6 and Fig 10.
+
+use crate::util::timer::LAYER_CLASSES;
+use crate::util::{Json, LayerTimes};
+
+/// Metrics of one evaluation pass over a dataset split.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EvalMetrics {
+    /// Images evaluated.
+    pub images: usize,
+    /// Incorrectly predicted images (paper Table 7 "Tot").
+    pub errors: usize,
+    /// Cumulative cross-entropy loss (paper Fig 10 "cumulative error").
+    pub loss: f64,
+}
+
+impl EvalMetrics {
+    /// Fraction of incorrect predictions.
+    pub fn error_rate(&self) -> f64 {
+        if self.images == 0 {
+            0.0
+        } else {
+            self.errors as f64 / self.images as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("images", Json::num(self.images as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("loss", Json::num(self.loss)),
+            ("error_rate", Json::num(self.error_rate())),
+        ])
+    }
+}
+
+/// One epoch of a run: train metrics plus validation/test evaluations,
+/// mirroring the paper's epoch structure (Fig 3: Training → Validation →
+/// Testing).
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub eta: f32,
+    pub train: EvalMetrics,
+    pub validation: EvalMetrics,
+    pub test: EvalMetrics,
+    /// Wall-clock seconds spent in the training phase of this epoch.
+    pub train_secs: f64,
+    /// Wall-clock seconds for the whole epoch.
+    pub total_secs: f64,
+}
+
+impl EpochRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("eta", Json::num(self.eta as f64)),
+            ("train", self.train.to_json()),
+            ("validation", self.validation.to_json()),
+            ("test", self.test.to_json()),
+            ("train_secs", Json::num(self.train_secs)),
+            ("total_secs", Json::num(self.total_secs)),
+        ])
+    }
+}
+
+/// Complete result of a training run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub arch: String,
+    pub strategy: String,
+    pub threads: usize,
+    pub epochs: Vec<EpochRecord>,
+    /// Final weights (for parity checks and serving).
+    pub final_params: Vec<f32>,
+    /// Accumulated per-layer-class times across all workers.
+    pub layer_times: LayerTimes,
+    /// End-to-end wall-clock seconds (excluding setup, like the paper's
+    /// "execution time" which excludes initialization).
+    pub wall_secs: f64,
+    /// Total shared-store publications (parallel strategies).
+    pub publications: u64,
+}
+
+impl RunResult {
+    pub fn final_epoch(&self) -> &EpochRecord {
+        self.epochs.last().expect("run has no epochs")
+    }
+
+    /// First epoch (1-based count) whose test error rate reached `target`,
+    /// if any — the paper's Fig 6 stop-criterion analysis.
+    pub fn epochs_to_error_rate(&self, target: f64) -> Option<usize> {
+        self.epochs
+            .iter()
+            .position(|e| e.test.error_rate() <= target)
+            .map(|p| p + 1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layer_times: Vec<Json> = LAYER_CLASSES
+            .iter()
+            .map(|&c| {
+                Json::obj(vec![
+                    ("class", Json::str(c.name())),
+                    ("secs", Json::num(self.layer_times.get_secs(c))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("arch", Json::str(self.arch.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("threads", Json::num(self.threads as f64)),
+            ("epochs", Json::arr(self.epochs.iter().map(|e| e.to_json()).collect())),
+            ("layer_times", Json::arr(layer_times)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("publications", Json::num(self.publications as f64)),
+        ])
+    }
+
+    /// Write the JSON record to a file (one run per file).
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(epoch: usize, test_errors: usize) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            eta: 0.001,
+            train: EvalMetrics { images: 100, errors: 20, loss: 50.0 },
+            validation: EvalMetrics { images: 100, errors: 15, loss: 40.0 },
+            test: EvalMetrics { images: 100, errors: test_errors, loss: 30.0 },
+            train_secs: 1.0,
+            total_secs: 2.0,
+        }
+    }
+
+    #[test]
+    fn error_rate() {
+        let m = EvalMetrics { images: 200, errors: 3, loss: 0.0 };
+        assert!((m.error_rate() - 0.015).abs() < 1e-12);
+        assert_eq!(EvalMetrics::default().error_rate(), 0.0);
+    }
+
+    #[test]
+    fn epochs_to_error_rate_finds_first() {
+        let r = RunResult {
+            arch: "small".into(),
+            strategy: "chaos".into(),
+            threads: 4,
+            epochs: vec![record(0, 50), record(1, 10), record(2, 1), record(3, 2)],
+            final_params: vec![],
+            layer_times: LayerTimes::new(),
+            wall_secs: 10.0,
+            publications: 0,
+        };
+        assert_eq!(r.epochs_to_error_rate(0.10), Some(2));
+        assert_eq!(r.epochs_to_error_rate(0.015), Some(3));
+        assert_eq!(r.epochs_to_error_rate(0.001), None);
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let r = RunResult {
+            arch: "small".into(),
+            strategy: "chaos".into(),
+            threads: 2,
+            epochs: vec![record(0, 5)],
+            final_params: vec![1.0],
+            layer_times: LayerTimes::new(),
+            wall_secs: 1.0,
+            publications: 42,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("arch").unwrap().as_str(), Some("small"));
+        assert_eq!(j.get("publications").unwrap().as_usize(), Some(42));
+        let epochs = j.get("epochs").unwrap().as_arr().unwrap();
+        assert_eq!(epochs.len(), 1);
+        assert_eq!(epochs[0].get("test").unwrap().get("errors").unwrap().as_usize(), Some(5));
+        // parses back
+        crate::util::Json::parse(&j.pretty()).unwrap();
+    }
+}

@@ -1,0 +1,119 @@
+//! Work distribution: workers *pick* images rather than being assigned
+//! static chunks — §4.2(3): "Letting workers pick images instead of
+//! assigning images to workers allows for a smaller overhead at the end of
+//! a work-sharing construct" (no straggler waits at the tail).
+//!
+//! The sampler is a shuffled index list with an atomic cursor; `next()` is
+//! one `fetch_add`.
+
+use crate::util::Pcg32;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A single-epoch pool of image indices, consumed concurrently.
+#[derive(Debug)]
+pub struct Sampler {
+    order: Vec<u32>,
+    cursor: AtomicUsize,
+}
+
+impl Sampler {
+    /// Sequential order over `n` images.
+    pub fn sequential(n: usize) -> Sampler {
+        Sampler { order: (0..n as u32).collect(), cursor: AtomicUsize::new(0) }
+    }
+
+    /// Shuffled order, deterministic in (seed, epoch).
+    pub fn shuffled(n: usize, seed: u64, epoch: usize) -> Sampler {
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut rng = Pcg32::new(seed, 0x5A17 ^ epoch as u64);
+        rng.shuffle(&mut order);
+        Sampler { order, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Claim the next image index, or `None` when the pool is drained.
+    #[inline]
+    pub fn next(&self) -> Option<usize> {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.order.get(i).map(|&v| v as usize)
+    }
+
+    /// Number of images in the pool.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// How many have been claimed so far (may exceed len briefly).
+    pub fn claimed(&self) -> usize {
+        self.cursor.load(Ordering::Relaxed).min(self.order.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn drains_exactly_once_single_thread() {
+        let s = Sampler::shuffled(100, 1, 0);
+        let mut seen = HashSet::new();
+        while let Some(i) = s.next() {
+            assert!(seen.insert(i), "index {i} issued twice");
+        }
+        assert_eq!(seen.len(), 100);
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn drains_exactly_once_multi_thread() {
+        let s = Sampler::shuffled(1000, 2, 5);
+        let issued: Vec<Vec<usize>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut mine = Vec::new();
+                        while let Some(i) = s.next() {
+                            mine.push(i);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let all: Vec<usize> = issued.into_iter().flatten().collect();
+        assert_eq!(all.len(), 1000);
+        let set: HashSet<usize> = all.iter().copied().collect();
+        assert_eq!(set.len(), 1000, "duplicates issued");
+        assert_eq!(s.claimed(), 1000);
+    }
+
+    #[test]
+    fn shuffle_depends_on_epoch_and_seed() {
+        let a: Vec<_> = {
+            let s = Sampler::shuffled(50, 1, 0);
+            std::iter::from_fn(|| s.next()).collect()
+        };
+        let b: Vec<_> = {
+            let s = Sampler::shuffled(50, 1, 1);
+            std::iter::from_fn(|| s.next()).collect()
+        };
+        let a2: Vec<_> = {
+            let s = Sampler::shuffled(50, 1, 0);
+            std::iter::from_fn(|| s.next()).collect()
+        };
+        assert_ne!(a, b, "different epochs must reshuffle");
+        assert_eq!(a, a2, "same (seed, epoch) must reproduce");
+    }
+
+    #[test]
+    fn sequential_in_order() {
+        let s = Sampler::sequential(5);
+        let got: Vec<_> = std::iter::from_fn(|| s.next()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,213 @@
+//! The shared weight store — the heart of CHAOS.
+//!
+//! All workers train against one parameter vector (§4.1: "all workers share
+//! weight parameters"). Storage is `AtomicU32` holding f32 bits: on x86 a
+//! relaxed atomic load/store compiles to a plain `mov`, so reads in the
+//! forward/backward hot path cost the same as the paper's raw C++ shared
+//! arrays while staying defined behaviour in Rust.
+//!
+//! Publication disciplines (§4.1 Design Aspects):
+//! * **Controlled** (CHAOS): one publisher per layer at a time, first-come
+//!   first-served via a per-layer mutex. A worker finishes a layer's local
+//!   gradients, takes the layer lock, applies `w -= η·g` — "non-instant
+//!   updates … without significant delay"; other workers keep reading and
+//!   never wait on a barrier, which is the "implicit synchronization in
+//!   arbitrary order".
+//! * **Unlocked** (HogWild!, strategy D): plain load-add-store without the
+//!   lock; concurrent publishers may lose updates — exactly the race the
+//!   original HogWild! tolerates.
+//! * **store_all** (averaged SGD, strategy B): the master overwrites the
+//!   whole vector between mini-batches.
+
+use crate::nn::{LayerDims, ParamSource};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared parameter vector with per-layer publication locks.
+pub struct SharedParams {
+    words: Vec<AtomicU32>,
+    /// One lock per layer (indexed by layer id; non-parameterized layers
+    /// carry an unused lock to keep indexing trivial).
+    locks: Vec<Mutex<()>>,
+    /// Count of published layer-updates (metrics / tests).
+    publications: AtomicU64,
+}
+
+impl SharedParams {
+    /// Initialize from a flat parameter vector and the layer table.
+    pub fn new(init: &[f32], dims: &[LayerDims]) -> SharedParams {
+        SharedParams {
+            words: init.iter().map(|&v| AtomicU32::new(v.to_bits())).collect(),
+            locks: dims.iter().map(|_| Mutex::new(())).collect(),
+            publications: AtomicU64::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Number of per-layer publications so far.
+    pub fn publication_count(&self) -> u64 {
+        self.publications.load(Ordering::Relaxed)
+    }
+
+    /// Read one value (tests/debug).
+    pub fn get(&self, i: usize) -> f32 {
+        f32::from_bits(self.words[i].load(Ordering::Relaxed))
+    }
+
+    /// Copy a span into `buf` — the worker's on-demand read.
+    #[inline]
+    pub fn load_span(&self, range: Range<usize>, buf: &mut [f32]) {
+        debug_assert_eq!(buf.len(), range.len());
+        for (dst, w) in buf.iter_mut().zip(&self.words[range]) {
+            *dst = f32::from_bits(w.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Controlled publication: `w[range] += scale · grads`, serialized per
+    /// layer. `scale` is `-η` for gradient descent.
+    pub fn publish_scaled(&self, layer: usize, range: Range<usize>, grads: &[f32], scale: f32) {
+        debug_assert_eq!(grads.len(), range.len());
+        let _guard = self.locks[layer].lock().unwrap();
+        for (w, &g) in self.words[range].iter().zip(grads) {
+            let cur = f32::from_bits(w.load(Ordering::Relaxed));
+            w.store((cur + scale * g).to_bits(), Ordering::Relaxed);
+        }
+        self.publications.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// HogWild!-style unlocked publication: same update, no lock; racing
+    /// publishers may interleave element-wise and lose increments.
+    pub fn publish_scaled_unlocked(&self, range: Range<usize>, grads: &[f32], scale: f32) {
+        debug_assert_eq!(grads.len(), range.len());
+        for (w, &g) in self.words[range].iter().zip(grads) {
+            let cur = f32::from_bits(w.load(Ordering::Relaxed));
+            w.store((cur + scale * g).to_bits(), Ordering::Relaxed);
+        }
+        self.publications.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Overwrite the full vector (averaged-SGD master step).
+    pub fn store_all(&self, values: &[f32]) {
+        debug_assert_eq!(values.len(), self.words.len());
+        for (w, &v) in self.words.iter().zip(values) {
+            w.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot the full vector.
+    pub fn snapshot(&self) -> Vec<f32> {
+        self.words
+            .iter()
+            .map(|w| f32::from_bits(w.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+impl ParamSource for &SharedParams {
+    #[inline]
+    fn load(&self, range: Range<usize>, buf: &mut [f32]) {
+        self.load_span(range, buf);
+    }
+}
+
+impl std::fmt::Debug for SharedParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SharedParams(len={}, layers={}, publications={})",
+            self.words.len(),
+            self.locks.len(),
+            self.publication_count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::nn::compute_dims;
+
+    fn store_for(arch: &ArchSpec, fill: f32) -> (SharedParams, Vec<LayerDims>) {
+        let dims = compute_dims(arch);
+        let total = crate::nn::total_params(&dims);
+        (SharedParams::new(&vec![fill; total], &dims), dims)
+    }
+
+    #[test]
+    fn roundtrip_snapshot() {
+        let (store, _) = store_for(&ArchSpec::tiny(), 0.5);
+        let snap = store.snapshot();
+        assert!(snap.iter().all(|&v| v == 0.5));
+        assert_eq!(snap.len(), store.len());
+    }
+
+    #[test]
+    fn publish_applies_scaled_update() {
+        let (store, dims) = store_for(&ArchSpec::tiny(), 1.0);
+        let layer = 1;
+        let range = dims[layer].params.clone();
+        let grads = vec![2.0f32; range.len()];
+        store.publish_scaled(layer, range.clone(), &grads, -0.25);
+        // w = 1.0 - 0.25*2.0 = 0.5 inside the layer; untouched elsewhere.
+        assert!((store.get(range.start) - 0.5).abs() < 1e-6);
+        assert!((store.get(range.end) - 1.0).abs() < 1e-6);
+        assert_eq!(store.publication_count(), 1);
+    }
+
+    #[test]
+    fn load_span_matches_get() {
+        let (store, dims) = store_for(&ArchSpec::tiny(), 0.0);
+        let range = dims[1].params.clone();
+        store.publish_scaled(1, range.clone(), &vec![1.0; range.len()], 3.0);
+        let mut buf = vec![0.0; range.len()];
+        store.load_span(range.clone(), &mut buf);
+        assert!(buf.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn locked_publications_never_lose_updates() {
+        // The controlled scheme serializes per layer: the sum of N
+        // publications must be exact regardless of thread interleaving.
+        let (store, dims) = store_for(&ArchSpec::tiny(), 0.0);
+        let layer = 1;
+        let range = dims[layer].params.clone();
+        let store = std::sync::Arc::new(store);
+        let per_thread = 200;
+        let threads = 8;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let store = store.clone();
+                let range = range.clone();
+                s.spawn(move || {
+                    let grads = vec![1.0f32; range.len()];
+                    for _ in 0..per_thread {
+                        store.publish_scaled(layer, range.clone(), &grads, 1.0);
+                    }
+                });
+            }
+        });
+        let expect = (per_thread * threads) as f32;
+        for i in range {
+            assert_eq!(store.get(i), expect, "lost update at {i}");
+        }
+        assert_eq!(store.publication_count(), (per_thread * threads) as u64);
+    }
+
+    #[test]
+    fn param_source_impl_reads_layers() {
+        let (store, dims) = store_for(&ArchSpec::tiny(), 7.0);
+        let src = &store;
+        let mut buf = vec![0.0; dims[1].param_count()];
+        ParamSource::load(&src, dims[1].params.clone(), &mut buf);
+        assert!(buf.iter().all(|&v| v == 7.0));
+    }
+}

@@ -1,0 +1,182 @@
+//! The update strategies of §4.1: CHAOS itself plus the four published
+//! schemes it draws from, implemented as selectable policies so the
+//! `update_policies` bench can ablate them head-to-head:
+//!
+//! * **Sequential** — plain on-line SGD, one thread (the paper's baseline).
+//! * **Strategy B, Averaged** — workers accumulate gradients over a chunk,
+//!   a barrier synchronizes, the master averages and broadcasts
+//!   (De Grazia et al.).
+//! * **Strategy C, Delayed round-robin** — workers train on the shared
+//!   weights but publish whole-sample updates one at a time in ticket
+//!   (first-come round-robin) order (Zinkevich et al., "slow learners").
+//! * **Strategy D, HogWild!** — instant, lock-free, racy updates
+//!   (Recht et al.).
+//! * **CHAOS** — controlled HogWild: local instant gradient accumulation,
+//!   per-layer publication under a per-layer lock, arbitrary order of
+//!   implicit synchronization.
+
+use std::sync::{Condvar, Mutex};
+
+/// Selectable update policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// On-line SGD on one thread.
+    Sequential,
+    /// CHAOS: per-layer delayed publication under per-layer locks.
+    Chaos,
+    /// Strategy D: per-layer publication without locks.
+    Hogwild,
+    /// Strategy C: whole-sample publications serialized in ticket order.
+    DelayedRoundRobin,
+    /// Strategy B: barrier-synchronized averaged gradients every
+    /// `sync_every` samples per worker.
+    Averaged { sync_every: usize },
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Sequential => "sequential",
+            Strategy::Chaos => "chaos",
+            Strategy::Hogwild => "hogwild",
+            Strategy::DelayedRoundRobin => "delayed-rr",
+            Strategy::Averaged { .. } => "averaged",
+        }
+    }
+
+    /// Parse from CLI text, e.g. `chaos`, `averaged:64`.
+    pub fn parse(text: &str) -> anyhow::Result<Strategy> {
+        let (head, arg) = match text.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (text, None),
+        };
+        Ok(match head {
+            "sequential" | "seq" => Strategy::Sequential,
+            "chaos" => Strategy::Chaos,
+            "hogwild" => Strategy::Hogwild,
+            "delayed-rr" | "delayed" => Strategy::DelayedRoundRobin,
+            "averaged" | "avg" => Strategy::Averaged {
+                sync_every: arg.unwrap_or("32").parse().map_err(|_| {
+                    anyhow::anyhow!("averaged:<sync_every> — bad integer '{}'", arg.unwrap())
+                })?,
+            },
+            _ => anyhow::bail!(
+                "unknown strategy '{text}' (sequential|chaos|hogwild|delayed-rr|averaged[:n])"
+            ),
+        })
+    }
+}
+
+/// FIFO ticket turnstile used by the delayed round-robin strategy: each
+/// publication takes a ticket and is admitted strictly in ticket order, so
+/// updates are serialized and delayed — Zinkevich et al.'s round-robin
+/// discipline with first-come ordering.
+#[derive(Debug, Default)]
+pub struct Turnstile {
+    state: Mutex<TurnstileState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct TurnstileState {
+    next_ticket: u64,
+    serving: u64,
+}
+
+impl Turnstile {
+    pub fn new() -> Turnstile {
+        Turnstile::default()
+    }
+
+    /// Block until it is this caller's turn; returns the ticket number.
+    pub fn enter(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        while st.serving != ticket {
+            st = self.cv.wait(st).unwrap();
+        }
+        ticket
+    }
+
+    /// Release the turnstile for the next ticket holder.
+    pub fn leave(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.serving += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Tickets served so far.
+    pub fn served(&self) -> u64 {
+        self.state.lock().unwrap().serving
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn parse_all() {
+        assert_eq!(Strategy::parse("chaos").unwrap(), Strategy::Chaos);
+        assert_eq!(Strategy::parse("seq").unwrap(), Strategy::Sequential);
+        assert_eq!(Strategy::parse("hogwild").unwrap(), Strategy::Hogwild);
+        assert_eq!(Strategy::parse("delayed-rr").unwrap(), Strategy::DelayedRoundRobin);
+        assert_eq!(
+            Strategy::parse("averaged:16").unwrap(),
+            Strategy::Averaged { sync_every: 16 }
+        );
+        assert_eq!(
+            Strategy::parse("averaged").unwrap(),
+            Strategy::Averaged { sync_every: 32 }
+        );
+        assert!(Strategy::parse("bogus").is_err());
+        assert!(Strategy::parse("averaged:x").is_err());
+    }
+
+    #[test]
+    fn names_stable() {
+        for (s, n) in [
+            (Strategy::Sequential, "sequential"),
+            (Strategy::Chaos, "chaos"),
+            (Strategy::Hogwild, "hogwild"),
+            (Strategy::DelayedRoundRobin, "delayed-rr"),
+            (Strategy::Averaged { sync_every: 8 }, "averaged"),
+        ] {
+            assert_eq!(s.name(), n);
+        }
+    }
+
+    #[test]
+    fn turnstile_serializes_in_ticket_order() {
+        let ts = Arc::new(Turnstile::new());
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let in_critical = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                let ts = ts.clone();
+                let order = order.clone();
+                let in_critical = in_critical.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let ticket = ts.enter();
+                        // mutual exclusion check
+                        assert_eq!(in_critical.fetch_add(1, Ordering::SeqCst), 0);
+                        order.lock().unwrap().push(ticket);
+                        in_critical.fetch_sub(1, Ordering::SeqCst);
+                        ts.leave();
+                    }
+                });
+            }
+        });
+        let order = order.lock().unwrap();
+        assert_eq!(order.len(), 300);
+        for (i, &t) in order.iter().enumerate() {
+            assert_eq!(t, i as u64, "tickets must be served in order");
+        }
+        assert_eq!(ts.served(), 300);
+    }
+}

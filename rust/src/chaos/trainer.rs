@@ -1,0 +1,564 @@
+//! The epoch driver — Fig 3 of the paper: per epoch, a parallel **Training**
+//! phase (workers pick images, forward/backward, publish updates according
+//! to the selected strategy), then parallel **Validation** and **Testing**
+//! phases where every worker participates in forward-only evaluation.
+
+use super::reporter::{EpochRecord, EvalMetrics, RunResult};
+use super::sampler::Sampler;
+use super::shared::SharedParams;
+use super::strategies::{Strategy, Turnstile};
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::nn::{Network, Scratch};
+use crate::util::{LayerTimes, Stopwatch};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// Train `net` on `train_set` (validating on its first
+/// `cfg.validation_fraction` portion) and evaluate on `test_set` each
+/// epoch, using the given update strategy. This is the public entry point
+/// of the CHAOS coordinator.
+pub fn train(
+    net: &Network,
+    train_set: &Dataset,
+    test_set: &Dataset,
+    cfg: &TrainConfig,
+    strategy: Strategy,
+) -> anyhow::Result<RunResult> {
+    cfg.validate()?;
+    if matches!(strategy, Strategy::Sequential) || cfg.threads == 1 {
+        return Ok(train_sequential(net, train_set, test_set, cfg, strategy));
+    }
+    Ok(train_parallel(net, train_set, test_set, cfg, strategy))
+}
+
+/// Number of validation images given the config.
+fn validation_len(cfg: &TrainConfig, train_set: &Dataset) -> usize {
+    ((train_set.len() as f64) * cfg.validation_fraction).round() as usize
+}
+
+// ---------------------------------------------------------------------------
+// Sequential baseline
+// ---------------------------------------------------------------------------
+
+fn train_sequential(
+    net: &Network,
+    train_set: &Dataset,
+    test_set: &Dataset,
+    cfg: &TrainConfig,
+    strategy: Strategy,
+) -> RunResult {
+    let mut params = net.init_params(cfg.seed);
+    let mut scratch = net.scratch();
+    let layer_times = LayerTimes::new();
+    let val_len = validation_len(cfg, train_set);
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let run_sw = Stopwatch::start();
+
+    for epoch in 0..cfg.epochs {
+        let eta = cfg.eta_at(epoch);
+        let epoch_sw = Stopwatch::start();
+        // Training phase: same shuffle the parallel runs use.
+        let sampler = Sampler::shuffled(train_set.len(), cfg.seed, epoch);
+        let mut train_m = EvalMetrics::default();
+        while let Some(idx) = sampler.next() {
+            let (loss, correct) = net.sgd_step(
+                &mut params,
+                train_set.image(idx),
+                train_set.label(idx),
+                eta,
+                &mut scratch,
+                Some(&layer_times),
+            );
+            train_m.images += 1;
+            train_m.loss += loss as f64;
+            train_m.errors += usize::from(!correct);
+        }
+        let train_secs = epoch_sw.elapsed_secs();
+
+        let validation =
+            eval_seq(net, &params, train_set, val_len, &mut scratch, Some(&layer_times));
+        let test =
+            eval_seq(net, &params, test_set, test_set.len(), &mut scratch, Some(&layer_times));
+        epochs.push(EpochRecord {
+            epoch,
+            eta,
+            train: train_m,
+            validation,
+            test,
+            train_secs,
+            total_secs: epoch_sw.elapsed_secs(),
+        });
+    }
+
+    RunResult {
+        arch: net.arch.name.clone(),
+        strategy: strategy.name().to_string(),
+        threads: 1,
+        epochs,
+        final_params: params,
+        layer_times,
+        wall_secs: run_sw.elapsed_secs(),
+        publications: 0,
+    }
+}
+
+fn eval_seq(
+    net: &Network,
+    params: &Vec<f32>,
+    data: &Dataset,
+    limit: usize,
+    scratch: &mut Scratch,
+    timers: Option<&LayerTimes>,
+) -> EvalMetrics {
+    let mut m = EvalMetrics::default();
+    for idx in 0..limit.min(data.len()) {
+        net.forward(params, data.image(idx), scratch, timers);
+        m.images += 1;
+        m.loss += net.loss(scratch, data.label(idx)) as f64;
+        m.errors += usize::from(net.prediction(scratch) != data.label(idx));
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Parallel strategies
+// ---------------------------------------------------------------------------
+
+fn train_parallel(
+    net: &Network,
+    train_set: &Dataset,
+    test_set: &Dataset,
+    cfg: &TrainConfig,
+    strategy: Strategy,
+) -> RunResult {
+    let init = net.init_params(cfg.seed);
+    let store = SharedParams::new(&init, &net.dims);
+    let layer_times = LayerTimes::new();
+    let val_len = validation_len(cfg, train_set);
+    let threads = cfg.threads;
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let run_sw = Stopwatch::start();
+
+    for epoch in 0..cfg.epochs {
+        let eta = cfg.eta_at(epoch);
+        let epoch_sw = Stopwatch::start();
+        let sampler = Sampler::shuffled(train_set.len(), cfg.seed, epoch);
+        let train_metrics = Mutex::new(EvalMetrics::default());
+
+        match strategy {
+            Strategy::Chaos | Strategy::Hogwild => {
+                let locked = matches!(strategy, Strategy::Chaos);
+                std::thread::scope(|s| {
+                    for _ in 0..threads {
+                        s.spawn(|| {
+                            worker_chaos(
+                                net,
+                                &store,
+                                train_set,
+                                &sampler,
+                                eta,
+                                locked,
+                                &layer_times,
+                                &train_metrics,
+                            )
+                        });
+                    }
+                });
+            }
+            Strategy::DelayedRoundRobin => {
+                let turnstile = Turnstile::new();
+                std::thread::scope(|s| {
+                    for _ in 0..threads {
+                        s.spawn(|| {
+                            worker_delayed_rr(
+                                net,
+                                &store,
+                                train_set,
+                                &sampler,
+                                eta,
+                                &turnstile,
+                                &layer_times,
+                                &train_metrics,
+                            )
+                        });
+                    }
+                });
+            }
+            Strategy::Averaged { sync_every } => {
+                let accum = Mutex::new(vec![0.0f32; net.total_params]);
+                let round_samples = AtomicUsize::new(0);
+                let barrier = Barrier::new(threads);
+                let done = AtomicBool::new(false);
+                std::thread::scope(|s| {
+                    for _ in 0..threads {
+                        s.spawn(|| {
+                            worker_averaged(
+                                net,
+                                &store,
+                                train_set,
+                                &sampler,
+                                eta,
+                                sync_every.max(1),
+                                &accum,
+                                &round_samples,
+                                &barrier,
+                                &done,
+                                &layer_times,
+                                &train_metrics,
+                            )
+                        });
+                    }
+                });
+            }
+            Strategy::Sequential => unreachable!("handled by train()"),
+        }
+        let train_secs = epoch_sw.elapsed_secs();
+
+        let validation =
+            eval_parallel(net, &store, train_set, val_len, threads, &layer_times);
+        let test =
+            eval_parallel(net, &store, test_set, test_set.len(), threads, &layer_times);
+        epochs.push(EpochRecord {
+            epoch,
+            eta,
+            train: train_metrics.into_inner().unwrap(),
+            validation,
+            test,
+            train_secs,
+            total_secs: epoch_sw.elapsed_secs(),
+        });
+    }
+
+    RunResult {
+        arch: net.arch.name.clone(),
+        strategy: strategy.name().to_string(),
+        threads,
+        epochs,
+        final_params: store.snapshot(),
+        layer_times,
+        wall_secs: run_sw.elapsed_secs(),
+        publications: store.publication_count(),
+    }
+}
+
+/// CHAOS / HogWild! worker: forward + backward on the shared weights,
+/// publishing each layer's scaled gradients as soon as they are complete
+/// (per-layer lock for CHAOS, none for HogWild!).
+#[allow(clippy::too_many_arguments)]
+fn worker_chaos(
+    net: &Network,
+    store: &SharedParams,
+    data: &Dataset,
+    sampler: &Sampler,
+    eta: f32,
+    locked: bool,
+    timers: &LayerTimes,
+    metrics: &Mutex<EvalMetrics>,
+) {
+    let mut scratch = net.scratch();
+    let mut local = EvalMetrics::default();
+    while let Some(idx) = sampler.next() {
+        let label = data.label(idx);
+        net.forward(&store, data.image(idx), &mut scratch, Some(timers));
+        local.images += 1;
+        local.loss += net.loss(&scratch, label) as f64;
+        local.errors += usize::from(net.prediction(&scratch) != label);
+        net.backward(&store, label, &mut scratch, Some(timers), |l, d, grads| {
+            if locked {
+                store.publish_scaled(l, d.params.clone(), grads, -eta);
+            } else {
+                store.publish_scaled_unlocked(d.params.clone(), grads, -eta);
+            }
+        });
+    }
+    merge_metrics(metrics, &local);
+}
+
+/// Strategy C worker: gradients of the whole sample are gathered locally,
+/// then published in strict ticket order through the turnstile.
+#[allow(clippy::too_many_arguments)]
+fn worker_delayed_rr(
+    net: &Network,
+    store: &SharedParams,
+    data: &Dataset,
+    sampler: &Sampler,
+    eta: f32,
+    turnstile: &Turnstile,
+    timers: &LayerTimes,
+    metrics: &Mutex<EvalMetrics>,
+) {
+    let mut scratch = net.scratch();
+    let mut local = EvalMetrics::default();
+    let mut grads = vec![0.0f32; net.total_params];
+    let param_layers: Vec<usize> = net
+        .dims
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| d.param_count() > 0)
+        .map(|(i, _)| i)
+        .collect();
+    while let Some(idx) = sampler.next() {
+        let label = data.label(idx);
+        net.forward(&store, data.image(idx), &mut scratch, Some(timers));
+        local.images += 1;
+        local.loss += net.loss(&scratch, label) as f64;
+        local.errors += usize::from(net.prediction(&scratch) != label);
+        net.backward(&store, label, &mut scratch, Some(timers), |_, d, g| {
+            grads[d.params.clone()].copy_from_slice(g);
+        });
+        turnstile.enter();
+        for &l in &param_layers {
+            let range = net.dims[l].params.clone();
+            // The turnstile already serializes all publishers.
+            store.publish_scaled_unlocked(range.clone(), &grads[range], -eta);
+        }
+        turnstile.leave();
+    }
+    merge_metrics(metrics, &local);
+}
+
+/// Strategy B worker: accumulate gradients over up to `sync_every` samples,
+/// merge into the round accumulator, barrier, leader applies the averaged
+/// update, barrier, repeat until the sampler drains.
+#[allow(clippy::too_many_arguments)]
+fn worker_averaged(
+    net: &Network,
+    store: &SharedParams,
+    data: &Dataset,
+    sampler: &Sampler,
+    eta: f32,
+    sync_every: usize,
+    accum: &Mutex<Vec<f32>>,
+    round_samples: &AtomicUsize,
+    barrier: &Barrier,
+    done: &AtomicBool,
+    timers: &LayerTimes,
+    metrics: &Mutex<EvalMetrics>,
+) {
+    let mut scratch = net.scratch();
+    let mut local_metrics = EvalMetrics::default();
+    let mut local = vec![0.0f32; net.total_params];
+    loop {
+        local.fill(0.0);
+        let mut n_local = 0usize;
+        for _ in 0..sync_every {
+            let Some(idx) = sampler.next() else { break };
+            let label = data.label(idx);
+            net.forward(&store, data.image(idx), &mut scratch, Some(timers));
+            local_metrics.images += 1;
+            local_metrics.loss += net.loss(&scratch, label) as f64;
+            local_metrics.errors += usize::from(net.prediction(&scratch) != label);
+            net.backward(&store, label, &mut scratch, Some(timers), |_, d, g| {
+                for (a, &gv) in local[d.params.clone()].iter_mut().zip(g) {
+                    *a += gv;
+                }
+            });
+            n_local += 1;
+        }
+        if n_local > 0 {
+            let mut acc = accum.lock().unwrap();
+            for (a, &l) in acc.iter_mut().zip(&local) {
+                *a += l;
+            }
+            round_samples.fetch_add(n_local, Ordering::Relaxed);
+        }
+        let wait = barrier.wait();
+        if wait.is_leader() {
+            let n = round_samples.swap(0, Ordering::Relaxed);
+            if n == 0 {
+                done.store(true, Ordering::Release);
+            } else {
+                let mut acc = accum.lock().unwrap();
+                // Averaged master step (strategy B): each learner's
+                // contribution is the gradient *sum* over its batch; the
+                // master averages across learners and applies one step:
+                // w -= η · (Σ_batches g) / workers. Note n counts samples;
+                // workers ≈ ceil(n / sync_every).
+                let workers = n.div_ceil(sync_every).max(1);
+                let mut new_params = store.snapshot();
+                let scale = eta / workers as f32;
+                for (w, g) in new_params.iter_mut().zip(acc.iter()) {
+                    *w -= scale * g;
+                }
+                store.store_all(&new_params);
+                acc.fill(0.0);
+            }
+        }
+        barrier.wait();
+        if done.load(Ordering::Acquire) {
+            break;
+        }
+    }
+    merge_metrics(metrics, &local_metrics);
+}
+
+fn merge_metrics(metrics: &Mutex<EvalMetrics>, local: &EvalMetrics) {
+    let mut m = metrics.lock().unwrap();
+    m.images += local.images;
+    m.errors += local.errors;
+    m.loss += local.loss;
+}
+
+/// Parallel forward-only evaluation (validation/testing phases — each
+/// worker picks images and forward-propagates, results are cumulated,
+/// paper Fig 4b).
+pub fn eval_parallel(
+    net: &Network,
+    store: &SharedParams,
+    data: &Dataset,
+    limit: usize,
+    threads: usize,
+    timers: &LayerTimes,
+) -> EvalMetrics {
+    let sampler = Sampler::sequential(limit.min(data.len()));
+    let metrics = Mutex::new(EvalMetrics::default());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut scratch = net.scratch();
+                let mut local = EvalMetrics::default();
+                while let Some(idx) = sampler.next() {
+                    let label = data.label(idx);
+                    net.forward(&store, data.image(idx), &mut scratch, Some(timers));
+                    local.images += 1;
+                    local.loss += net.loss(&scratch, label) as f64;
+                    local.errors += usize::from(net.prediction(&scratch) != label);
+                }
+                merge_metrics(&metrics, &local);
+            });
+        }
+    });
+    metrics.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::data::{generate_synthetic, SynthConfig};
+
+    /// 13×13 resized synthetic digits for the tiny architecture.
+    fn tiny_data(n: usize, seed: u64) -> Dataset {
+        generate_synthetic(n, seed, &SynthConfig::default()).resize(13)
+    }
+
+    fn tiny_cfg(threads: usize, epochs: usize) -> TrainConfig {
+        TrainConfig {
+            epochs,
+            threads,
+            // The tiny net wants a larger step than the paper networks.
+            eta0: 0.05,
+            eta_decay: 0.95,
+            seed: 42,
+            validation_fraction: 0.25,
+        }
+    }
+
+    #[test]
+    fn sequential_training_reduces_loss_and_errors() {
+        let net = Network::new(ArchSpec::tiny());
+        let trn = tiny_data(300, 1);
+        let tst = tiny_data(100, 2);
+        let r = train_sequential(&net, &trn, &tst, &tiny_cfg(1, 6), Strategy::Sequential);
+        let first = &r.epochs[0];
+        let last = r.final_epoch();
+        assert!(last.train.loss < first.train.loss, "training loss must fall");
+        assert!(
+            last.test.error_rate() < 0.5,
+            "test error rate {} should beat chance by a wide margin",
+            last.test.error_rate()
+        );
+        assert_eq!(first.train.images, 300);
+        assert_eq!(first.validation.images, 75);
+        assert_eq!(first.test.images, 100);
+        assert_eq!(r.publications, 0);
+    }
+
+    #[test]
+    fn chaos_parallel_matches_sequential_accuracy() {
+        // The paper's Result 4: parallel CHAOS training reaches accuracy
+        // comparable to sequential (Table 7's deviations are tens of
+        // images out of 60k). Here: same data/seed, small tolerance.
+        let net = Network::new(ArchSpec::tiny());
+        let trn = tiny_data(400, 3);
+        let tst = tiny_data(150, 4);
+        let seq = train(&net, &trn, &tst, &tiny_cfg(1, 3), Strategy::Sequential).unwrap();
+        let par = train(&net, &trn, &tst, &tiny_cfg(4, 3), Strategy::Chaos).unwrap();
+        let seq_err = seq.final_epoch().test.error_rate();
+        let par_err = par.final_epoch().test.error_rate();
+        assert!(
+            (seq_err - par_err).abs() < 0.15,
+            "parity violated: sequential {seq_err} vs chaos {par_err}"
+        );
+        assert!(par.publications > 0, "chaos must publish through the store");
+        assert_eq!(par.threads, 4);
+    }
+
+    #[test]
+    fn all_parallel_strategies_run_and_learn() {
+        let net = Network::new(ArchSpec::tiny());
+        let trn = tiny_data(240, 5);
+        let tst = tiny_data(80, 6);
+        for strategy in [
+            Strategy::Chaos,
+            Strategy::Hogwild,
+            Strategy::DelayedRoundRobin,
+            Strategy::Averaged { sync_every: 16 },
+        ] {
+            let r = train(&net, &trn, &tst, &tiny_cfg(3, 3), strategy).unwrap();
+            assert_eq!(r.strategy, strategy.name());
+            let first = &r.epochs[0];
+            let last = r.final_epoch();
+            assert_eq!(first.train.images, 240, "{}: all images trained", strategy.name());
+            assert!(
+                last.train.loss < first.train.loss,
+                "{}: loss should fall ({} -> {})",
+                strategy.name(),
+                first.train.loss,
+                last.train.loss
+            );
+            assert!(last.test.error_rate() < 0.7, "{}: learns something", strategy.name());
+        }
+    }
+
+    #[test]
+    fn thread_one_falls_back_to_sequential_engine() {
+        let net = Network::new(ArchSpec::tiny());
+        let trn = tiny_data(60, 7);
+        let tst = tiny_data(30, 8);
+        let r = train(&net, &trn, &tst, &tiny_cfg(1, 1), Strategy::Chaos).unwrap();
+        assert_eq!(r.threads, 1);
+        assert_eq!(r.publications, 0, "sequential path bypasses the store");
+    }
+
+    #[test]
+    fn eval_parallel_counts_every_image_once() {
+        let net = Network::new(ArchSpec::tiny());
+        let data = tiny_data(123, 9);
+        let params = net.init_params(1);
+        let store = SharedParams::new(&params, &net.dims);
+        let timers = LayerTimes::new();
+        let m = eval_parallel(&net, &store, &data, data.len(), 4, &timers);
+        assert_eq!(m.images, 123);
+        assert!(m.loss > 0.0);
+        // limit smaller than the dataset
+        let m2 = eval_parallel(&net, &store, &data, 50, 4, &timers);
+        assert_eq!(m2.images, 50);
+    }
+
+    #[test]
+    fn parallel_eval_matches_sequential_eval() {
+        let net = Network::new(ArchSpec::tiny());
+        let data = tiny_data(100, 10);
+        let params = net.init_params(2);
+        let store = SharedParams::new(&params, &net.dims);
+        let timers = LayerTimes::new();
+        let par = eval_parallel(&net, &store, &data, data.len(), 4, &timers);
+        let mut scratch = net.scratch();
+        let seq = eval_seq(&net, &params, &data, data.len(), &mut scratch, None);
+        assert_eq!(par.errors, seq.errors, "same weights ⇒ same predictions");
+        assert!((par.loss - seq.loss).abs() < 1e-3 * seq.loss.abs().max(1.0));
+    }
+}
+

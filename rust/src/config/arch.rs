@@ -1,0 +1,346 @@
+//! CNN architecture specifications — paper Table 2, exactly.
+//!
+//! All three networks take a 29×29 single-channel input. Convolutions are
+//! "valid" with stride 1 and full map-to-map connectivity plus one bias per
+//! output map (weights = maps·(prev_maps·k² + 1), matching every weight
+//! count in Table 2). Max-pooling uses kernel k with stride k, except the
+//! large network's third pooling, where 6×6 is pooled by 2×2 to 3×3 — the
+//! only reading consistent with the 135,150 fully-connected weights the
+//! paper states (DESIGN.md §5 documents the Table 2 inconsistency).
+
+use crate::util::Json;
+
+/// One layer of a network specification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Square single-channel input of side `side`.
+    Input { side: usize },
+    /// Convolution: `maps` output feature maps, `kernel`×`kernel` receptive
+    /// field, valid padding, stride 1, fully connected to all input maps.
+    Conv { maps: usize, kernel: usize },
+    /// Max pooling with `kernel`×`kernel` windows and stride = kernel.
+    MaxPool { kernel: usize },
+    /// Fully connected layer with `neurons` outputs.
+    FullyConnected { neurons: usize },
+    /// Output layer: fully connected + softmax over `classes`.
+    Output { classes: usize },
+}
+
+/// A named architecture (an ordered stack of layers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    /// Epoch count the paper trains this network for.
+    pub paper_epochs: usize,
+}
+
+/// Names of the three paper architectures, in Table 2 order of appearance.
+pub const PAPER_ARCHS: [&str; 3] = ["small", "medium", "large"];
+
+impl ArchSpec {
+    /// Table 2 "small": 29² → C(5,4×4) → P2 → C(10,5×5) → P3 → FC50 → 10.
+    pub fn small() -> ArchSpec {
+        ArchSpec {
+            name: "small".into(),
+            layers: vec![
+                LayerSpec::Input { side: 29 },
+                LayerSpec::Conv { maps: 5, kernel: 4 },
+                LayerSpec::MaxPool { kernel: 2 },
+                LayerSpec::Conv { maps: 10, kernel: 5 },
+                LayerSpec::MaxPool { kernel: 3 },
+                LayerSpec::FullyConnected { neurons: 50 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 70,
+        }
+    }
+
+    /// Table 2 "medium": 29² → C(20,4×4) → P2 → C(40,5×5) → P3 → FC150 → 10.
+    pub fn medium() -> ArchSpec {
+        ArchSpec {
+            name: "medium".into(),
+            layers: vec![
+                LayerSpec::Input { side: 29 },
+                LayerSpec::Conv { maps: 20, kernel: 4 },
+                LayerSpec::MaxPool { kernel: 2 },
+                LayerSpec::Conv { maps: 40, kernel: 5 },
+                LayerSpec::MaxPool { kernel: 3 },
+                LayerSpec::FullyConnected { neurons: 150 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 70,
+        }
+    }
+
+    /// Table 2 "large": 29² → C(20,4×4) → P1 → C(60,5×5) → P2 → C(100,6×6)
+    /// → P2 → FC150 → 10. (Third pooling is 2×2: see module docs.)
+    pub fn large() -> ArchSpec {
+        ArchSpec {
+            name: "large".into(),
+            layers: vec![
+                LayerSpec::Input { side: 29 },
+                LayerSpec::Conv { maps: 20, kernel: 4 },
+                LayerSpec::MaxPool { kernel: 1 },
+                LayerSpec::Conv { maps: 60, kernel: 5 },
+                LayerSpec::MaxPool { kernel: 2 },
+                LayerSpec::Conv { maps: 100, kernel: 6 },
+                LayerSpec::MaxPool { kernel: 2 },
+                LayerSpec::FullyConnected { neurons: 150 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 15,
+        }
+    }
+
+    /// A miniature but structurally complete network (conv/pool/conv/pool/
+    /// fc/output on a 13×13 input). Not from the paper — used by tests,
+    /// benches and examples where wall-clock budget matters.
+    pub fn tiny() -> ArchSpec {
+        ArchSpec {
+            name: "tiny".into(),
+            layers: vec![
+                LayerSpec::Input { side: 13 },
+                LayerSpec::Conv { maps: 3, kernel: 4 }, // 10x10
+                LayerSpec::MaxPool { kernel: 2 },       // 5x5
+                LayerSpec::Conv { maps: 4, kernel: 2 }, // 4x4
+                LayerSpec::MaxPool { kernel: 2 },       // 2x2
+                LayerSpec::FullyConnected { neurons: 8 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        }
+    }
+
+    /// Look up a paper architecture by name ("tiny" is also accepted for
+    /// the test network).
+    pub fn by_name(name: &str) -> Option<ArchSpec> {
+        match name {
+            "small" => Some(Self::small()),
+            "medium" => Some(Self::medium()),
+            "large" => Some(Self::large()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Parse an architecture from a JSON description, e.g.
+    /// `{"name":"custom","epochs":10,"layers":[{"input":29},{"conv":{"maps":5,"kernel":4}},
+    /// {"pool":2},{"fc":50},{"output":10}]}`.
+    pub fn from_json(j: &Json) -> anyhow::Result<ArchSpec> {
+        let name = j.req("name")?.as_str().ok_or_else(|| anyhow::anyhow!("name must be string"))?;
+        let epochs = j.get("epochs").and_then(|e| e.as_usize()).unwrap_or(10);
+        let layers_json = j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("layers must be an array"))?;
+        let mut layers = Vec::new();
+        for l in layers_json {
+            let obj = l.as_obj().ok_or_else(|| anyhow::anyhow!("layer must be an object"))?;
+            let (key, val) = obj.iter().next().ok_or_else(|| anyhow::anyhow!("empty layer"))?;
+            let layer = match key.as_str() {
+                "input" => LayerSpec::Input {
+                    side: val.as_usize().ok_or_else(|| anyhow::anyhow!("input side"))?,
+                },
+                "conv" => LayerSpec::Conv {
+                    maps: val.req("maps")?.as_usize().ok_or_else(|| anyhow::anyhow!("conv maps"))?,
+                    kernel: val
+                        .req("kernel")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("conv kernel"))?,
+                },
+                "pool" => LayerSpec::MaxPool {
+                    kernel: val.as_usize().ok_or_else(|| anyhow::anyhow!("pool kernel"))?,
+                },
+                "fc" => LayerSpec::FullyConnected {
+                    neurons: val.as_usize().ok_or_else(|| anyhow::anyhow!("fc neurons"))?,
+                },
+                "output" => LayerSpec::Output {
+                    classes: val.as_usize().ok_or_else(|| anyhow::anyhow!("output classes"))?,
+                },
+                other => anyhow::bail!("unknown layer type '{other}'"),
+            };
+            layers.push(layer);
+        }
+        let spec = ArchSpec { name: name.to_string(), layers, paper_epochs: epochs };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load an architecture from a JSON file.
+    pub fn from_file(path: &str) -> anyhow::Result<ArchSpec> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        Self::from_json(&j)
+    }
+
+    /// Serialize to JSON (inverse of [`Self::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| match *l {
+                LayerSpec::Input { side } => Json::obj(vec![("input", Json::num(side as f64))]),
+                LayerSpec::Conv { maps, kernel } => Json::obj(vec![(
+                    "conv",
+                    Json::obj(vec![
+                        ("maps", Json::num(maps as f64)),
+                        ("kernel", Json::num(kernel as f64)),
+                    ]),
+                )]),
+                LayerSpec::MaxPool { kernel } => Json::obj(vec![("pool", Json::num(kernel as f64))]),
+                LayerSpec::FullyConnected { neurons } => {
+                    Json::obj(vec![("fc", Json::num(neurons as f64))])
+                }
+                LayerSpec::Output { classes } => {
+                    Json::obj(vec![("output", Json::num(classes as f64))])
+                }
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("epochs", Json::num(self.paper_epochs as f64)),
+            ("layers", Json::arr(layers)),
+        ])
+    }
+
+    /// Structural validation: starts with input, ends with output, pooling
+    /// divides evenly, convolutions fit.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !matches!(self.layers.first(), Some(LayerSpec::Input { .. })) {
+            anyhow::bail!("architecture must start with an input layer");
+        }
+        if !matches!(self.layers.last(), Some(LayerSpec::Output { .. })) {
+            anyhow::bail!("architecture must end with an output layer");
+        }
+        let mut side = match self.layers[0] {
+            LayerSpec::Input { side } => side,
+            _ => unreachable!(),
+        };
+        let mut seen_fc = false;
+        for (i, l) in self.layers.iter().enumerate().skip(1) {
+            match *l {
+                LayerSpec::Input { .. } => anyhow::bail!("layer {i}: input after start"),
+                LayerSpec::Conv { maps, kernel } => {
+                    if seen_fc {
+                        anyhow::bail!("layer {i}: conv after fully-connected");
+                    }
+                    if kernel == 0 || maps == 0 || kernel > side {
+                        anyhow::bail!(
+                            "layer {i}: conv kernel {kernel} invalid for side {side}"
+                        );
+                    }
+                    side = side - kernel + 1;
+                }
+                LayerSpec::MaxPool { kernel } => {
+                    if seen_fc {
+                        anyhow::bail!("layer {i}: pool after fully-connected");
+                    }
+                    if kernel == 0 || kernel > side {
+                        anyhow::bail!("layer {i}: pool kernel {kernel} invalid for side {side}");
+                    }
+                    // Stride = kernel; require at least one full window and
+                    // allow a truncated tail only when it is empty.
+                    if side % kernel != 0 && side >= kernel {
+                        // e.g. 6x6 pooled by 2 -> 3 is fine (6%2==0); what we
+                        // reject is a remainder, like 9 pooled by 2.
+                        anyhow::bail!(
+                            "layer {i}: pool kernel {kernel} does not evenly divide side {side}"
+                        );
+                    }
+                    side /= kernel;
+                }
+                LayerSpec::FullyConnected { neurons } => {
+                    if neurons == 0 {
+                        anyhow::bail!("layer {i}: fc with zero neurons");
+                    }
+                    seen_fc = true;
+                }
+                LayerSpec::Output { classes } => {
+                    if classes == 0 {
+                        anyhow::bail!("layer {i}: output with zero classes");
+                    }
+                    if i != self.layers.len() - 1 {
+                        anyhow::bail!("layer {i}: output before the end");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_archs_validate() {
+        for name in PAPER_ARCHS {
+            ArchSpec::by_name(name).unwrap().validate().unwrap();
+        }
+        ArchSpec::by_name("tiny").unwrap().validate().unwrap();
+        assert!(ArchSpec::by_name("giant").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for name in PAPER_ARCHS {
+            let a = ArchSpec::by_name(name).unwrap();
+            let j = a.to_json();
+            let b = ArchSpec::from_json(&j).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_stacks() {
+        let no_input = ArchSpec {
+            name: "x".into(),
+            layers: vec![LayerSpec::Output { classes: 10 }],
+            paper_epochs: 1,
+        };
+        assert!(no_input.validate().is_err());
+
+        let pool_too_big = ArchSpec {
+            name: "x".into(),
+            layers: vec![
+                LayerSpec::Input { side: 5 },
+                LayerSpec::MaxPool { kernel: 7 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        assert!(pool_too_big.validate().is_err());
+
+        let uneven_pool = ArchSpec {
+            name: "x".into(),
+            layers: vec![
+                LayerSpec::Input { side: 9 },
+                LayerSpec::MaxPool { kernel: 2 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        assert!(uneven_pool.validate().is_err());
+
+        let conv_after_fc = ArchSpec {
+            name: "x".into(),
+            layers: vec![
+                LayerSpec::Input { side: 9 },
+                LayerSpec::FullyConnected { neurons: 5 },
+                LayerSpec::Conv { maps: 2, kernel: 2 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        assert!(conv_after_fc.validate().is_err());
+    }
+
+    #[test]
+    fn paper_epochs_match() {
+        assert_eq!(ArchSpec::small().paper_epochs, 70);
+        assert_eq!(ArchSpec::medium().paper_epochs, 70);
+        assert_eq!(ArchSpec::large().paper_epochs, 15);
+    }
+}

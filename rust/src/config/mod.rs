@@ -1,0 +1,9 @@
+//! Configuration: the paper's CNN architectures (Table 2) and training
+//! hyper-parameters (§5.1), plus parsing of user-supplied architecture
+//! files so downstream users are not locked to the three paper networks.
+
+mod arch;
+mod training;
+
+pub use arch::{ArchSpec, LayerSpec, PAPER_ARCHS};
+pub use training::TrainConfig;

@@ -1,0 +1,103 @@
+//! Training hyper-parameters — paper §5.1: "trained … using a starting
+//! decay (eta) of 0.001 and factor of 0.9", per-sample (on-line) SGD.
+
+use crate::util::Json;
+
+/// Hyper-parameters for a training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of epochs.
+    pub epochs: usize,
+    /// Starting learning rate η₀ (the paper calls it "decay (eta)").
+    pub eta0: f64,
+    /// Multiplicative per-epoch decay factor.
+    pub eta_decay: f64,
+    /// Worker/thread count (network instances). 1 = sequential.
+    pub threads: usize,
+    /// PRNG seed for weight init and the image shuffle.
+    pub seed: u64,
+    /// Fraction of the training set also used for validation. The paper
+    /// validates on the full training set (Table 7's validation column has
+    /// 60,000 images); 1.0 reproduces that.
+    pub validation_fraction: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 70,
+            eta0: 0.001,
+            eta_decay: 0.9,
+            threads: 1,
+            seed: 0xC4A0_5EED,
+            validation_fraction: 1.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// η at the given 0-based epoch: η₀ · decay^epoch.
+    pub fn eta_at(&self, epoch: usize) -> f32 {
+        (self.eta0 * self.eta_decay.powi(epoch as i32)) as f32
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.epochs == 0 {
+            anyhow::bail!("epochs must be > 0");
+        }
+        if self.threads == 0 {
+            anyhow::bail!("threads must be > 0");
+        }
+        if !(self.eta0 > 0.0) {
+            anyhow::bail!("eta0 must be positive");
+        }
+        if !(0.0 < self.eta_decay && self.eta_decay <= 1.0) {
+            anyhow::bail!("eta_decay must be in (0, 1]");
+        }
+        if !(0.0..=1.0).contains(&self.validation_fraction) {
+            anyhow::bail!("validation_fraction must be in [0, 1]");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epochs", Json::num(self.epochs as f64)),
+            ("eta0", Json::num(self.eta0)),
+            ("eta_decay", Json::num(self.eta_decay)),
+            ("threads", Json::num(self.threads as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("validation_fraction", Json::num(self.validation_fraction)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_decays() {
+        let c = TrainConfig::default();
+        assert!((c.eta_at(0) - 0.001).abs() < 1e-9);
+        assert!((c.eta_at(1) - 0.0009).abs() < 1e-9);
+        assert!(c.eta_at(10) < c.eta_at(9));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(TrainConfig::default().validate().is_ok());
+        assert!(TrainConfig { epochs: 0, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { threads: 0, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { eta0: -1.0, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { eta_decay: 1.5, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn json_has_all_fields() {
+        let j = TrainConfig::default().to_json();
+        for k in ["epochs", "eta0", "eta_decay", "threads", "seed", "validation_fraction"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+}

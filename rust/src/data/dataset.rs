@@ -1,0 +1,230 @@
+//! In-memory image dataset with the flat layout the training hot path wants.
+//!
+//! Images are stored contiguously (one row of `pixels_per_image` floats per
+//! image, values normalized to [-1, 1] as in the Cireşan reference
+//! implementation) so a worker picking image `i` touches exactly one
+//! cache-friendly span — §4.2(1): "images are loaded into a pre-allocated
+//! memory instead of allocating new memory when requesting an image".
+//!
+//! The paper's geometry is 29×29 ([`super::IMAGE_PIXELS`]); the struct
+//! itself is geometry-agnostic so tests and custom architectures can use
+//! other sizes.
+
+use super::NUM_CLASSES;
+
+/// Which split a dataset represents (drives reporter labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Validation,
+    Test,
+}
+
+impl Split {
+    pub fn name(self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::Validation => "validation",
+            Split::Test => "test",
+        }
+    }
+}
+
+/// A labelled image dataset in pre-allocated flat storage.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pixels: Vec<f32>,
+    labels: Vec<u8>,
+    pixels_per_image: usize,
+    n: usize,
+}
+
+impl Dataset {
+    /// Build from flat pixels (`labels.len() * pixels_per_image` values).
+    pub fn new(pixels: Vec<f32>, labels: Vec<u8>, pixels_per_image: usize) -> Dataset {
+        assert!(pixels_per_image > 0);
+        assert_eq!(
+            pixels.len(),
+            labels.len() * pixels_per_image,
+            "pixel/label count mismatch"
+        );
+        assert!(labels.iter().all(|&l| (l as usize) < NUM_CLASSES), "label out of range");
+        let n = labels.len();
+        Dataset { pixels, labels, pixels_per_image, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Pixels per image.
+    pub fn image_len(&self) -> usize {
+        self.pixels_per_image
+    }
+
+    /// The `i`-th image as a flat slice.
+    #[inline]
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.pixels[i * self.pixels_per_image..(i + 1) * self.pixels_per_image]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+
+    /// First `n` images as a new dataset (cheap experiment scaling).
+    pub fn take(&self, n: usize) -> Dataset {
+        let n = n.min(self.n);
+        Dataset {
+            pixels: self.pixels[..n * self.pixels_per_image].to_vec(),
+            labels: self.labels[..n].to_vec(),
+            pixels_per_image: self.pixels_per_image,
+            n,
+        }
+    }
+
+    /// Center-crop every image to a `side`×`side` square (both source and
+    /// target sides must be square). Used by tests that pair small
+    /// architectures with the 29×29 generator output.
+    pub fn center_crop(&self, side: usize) -> Dataset {
+        let src_side = (self.pixels_per_image as f64).sqrt() as usize;
+        assert_eq!(src_side * src_side, self.pixels_per_image, "images not square");
+        assert!(side <= src_side);
+        let off = (src_side - side) / 2;
+        let mut pixels = Vec::with_capacity(self.n * side * side);
+        for i in 0..self.n {
+            let img = self.image(i);
+            for y in 0..side {
+                let row = (y + off) * src_side + off;
+                pixels.extend_from_slice(&img[row..row + side]);
+            }
+        }
+        Dataset::new(pixels, self.labels.clone(), side * side)
+    }
+
+    /// Bilinear-resize every (square) image to `side`×`side`. Used by tests
+    /// pairing small architectures with the 29×29 generator output — unlike
+    /// a crop, the full glyph stays visible.
+    pub fn resize(&self, side: usize) -> Dataset {
+        let src_side = (self.pixels_per_image as f64).sqrt() as usize;
+        assert_eq!(src_side * src_side, self.pixels_per_image, "images not square");
+        assert!(side >= 2);
+        let mut pixels = Vec::with_capacity(self.n * side * side);
+        let scale = (src_side - 1) as f32 / (side - 1) as f32;
+        for i in 0..self.n {
+            let img = self.image(i);
+            for y in 0..side {
+                let fy = y as f32 * scale;
+                let y0 = fy.floor() as usize;
+                let y1 = (y0 + 1).min(src_side - 1);
+                let wy = fy - y0 as f32;
+                for x in 0..side {
+                    let fx = x as f32 * scale;
+                    let x0 = fx.floor() as usize;
+                    let x1 = (x0 + 1).min(src_side - 1);
+                    let wx = fx - x0 as f32;
+                    let v = img[y0 * src_side + x0] * (1.0 - wy) * (1.0 - wx)
+                        + img[y0 * src_side + x1] * (1.0 - wy) * wx
+                        + img[y1 * src_side + x0] * wy * (1.0 - wx)
+                        + img[y1 * src_side + x1] * wy * wx;
+                    pixels.push(v);
+                }
+            }
+        }
+        Dataset::new(pixels, self.labels.clone(), side * side)
+    }
+
+    /// Per-class counts — sanity metric for the synthetic generator.
+    pub fn class_histogram(&self) -> [usize; NUM_CLASSES] {
+        let mut h = [0usize; NUM_CLASSES];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    /// Mean pixel value across the dataset (normalization check).
+    pub fn pixel_mean(&self) -> f32 {
+        if self.pixels.is_empty() {
+            return 0.0;
+        }
+        self.pixels.iter().sum::<f32>() / self.pixels.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::IMAGE_PIXELS;
+
+    fn tiny(n: usize) -> Dataset {
+        let pixels = vec![0.5; n * IMAGE_PIXELS];
+        let labels: Vec<u8> = (0..n).map(|i| (i % NUM_CLASSES) as u8).collect();
+        Dataset::new(pixels, labels, IMAGE_PIXELS)
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let d = tiny(20);
+        assert_eq!(d.len(), 20);
+        assert_eq!(d.image(3).len(), IMAGE_PIXELS);
+        assert_eq!(d.label(13), 3);
+    }
+
+    #[test]
+    fn image_slices_are_disjoint_spans() {
+        let mut pixels = vec![0.0; 2 * IMAGE_PIXELS];
+        pixels[IMAGE_PIXELS] = 9.0; // first pixel of image 1
+        let d = Dataset::new(pixels, vec![0, 1], IMAGE_PIXELS);
+        assert_eq!(d.image(0)[0], 0.0);
+        assert_eq!(d.image(1)[0], 9.0);
+    }
+
+    #[test]
+    fn take_truncates() {
+        let d = tiny(30).take(7);
+        assert_eq!(d.len(), 7);
+        assert_eq!(d.class_histogram()[0], 1);
+        // take more than available is a no-op
+        assert_eq!(tiny(5).take(50).len(), 5);
+    }
+
+    #[test]
+    fn center_crop_geometry() {
+        // 4x4 image with a distinctive center.
+        let mut pixels = vec![0.0; 16];
+        pixels[5] = 1.0; // (1,1)
+        let d = Dataset::new(pixels, vec![2], 16);
+        let c = d.center_crop(2);
+        assert_eq!(c.image_len(), 4);
+        // offset = (4-2)/2 = 1, so crop covers rows/cols 1..3
+        assert_eq!(c.image(0), &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(c.label(0), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn mismatched_sizes_panic() {
+        Dataset::new(vec![0.0; 10], vec![0, 1], IMAGE_PIXELS);
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn bad_label_panics() {
+        Dataset::new(vec![0.0; IMAGE_PIXELS], vec![10], IMAGE_PIXELS);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let d = tiny(25);
+        let h = d.class_histogram();
+        assert_eq!(h.iter().sum::<usize>(), 25);
+        assert_eq!(h[0], 3); // 0, 10, 20
+        assert_eq!(h[5], 2); // 5, 15
+    }
+}

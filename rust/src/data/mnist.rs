@@ -1,0 +1,245 @@
+//! MNIST IDX file loader.
+//!
+//! Reads the classic LeCun IDX format (`train-images-idx3-ubyte`,
+//! `train-labels-idx1-ubyte`, `t10k-…`), optionally gzip-compressed.
+//! 28×28 images are zero-padded to 29×29 — the input geometry the paper
+//! inherits from the Cireşan reference code (Table 2: input 29×29) — and
+//! pixel values are normalized from [0, 255] to [-1, 1].
+
+use super::{Dataset, IMAGE_PIXELS, IMAGE_SIDE};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum MnistError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("{path}: bad magic {found:#x}, expected {expected:#x}")]
+    BadMagic { path: String, found: u32, expected: u32 },
+    #[error("{path}: unsupported image size {rows}x{cols} (expected 28x28)")]
+    BadSize { path: String, rows: u32, cols: u32 },
+    #[error("{path}: truncated file")]
+    Truncated { path: String },
+    #[error("image/label count mismatch: {images} images vs {labels} labels")]
+    CountMismatch { images: usize, labels: usize },
+    #[error("missing file: {0} (nor {0}.gz)")]
+    Missing(String),
+}
+
+const IMAGE_MAGIC: u32 = 0x0000_0803;
+const LABEL_MAGIC: u32 = 0x0000_0801;
+const MNIST_SIDE: usize = 28;
+
+/// True when all four IDX files (possibly .gz) exist under `dir`.
+pub fn mnist_available(dir: &str) -> bool {
+    ["train-images-idx3-ubyte", "train-labels-idx1-ubyte", "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte"]
+        .iter()
+        .all(|f| resolve(dir, f).is_some())
+}
+
+fn resolve(dir: &str, name: &str) -> Option<PathBuf> {
+    let plain = Path::new(dir).join(name);
+    if plain.exists() {
+        return Some(plain);
+    }
+    let gz = Path::new(dir).join(format!("{name}.gz"));
+    if gz.exists() {
+        return Some(gz);
+    }
+    None
+}
+
+fn read_file(dir: &str, name: &str) -> Result<Vec<u8>, MnistError> {
+    let path = resolve(dir, name).ok_or_else(|| MnistError::Missing(format!("{dir}/{name}")))?;
+    let display = path.display().to_string();
+    let raw = std::fs::read(&path).map_err(|source| MnistError::Io { path: display.clone(), source })?;
+    if path.extension().is_some_and(|e| e == "gz") {
+        let mut out = Vec::new();
+        flate2::read::GzDecoder::new(&raw[..])
+            .read_to_end(&mut out)
+            .map_err(|source| MnistError::Io { path: display, source })?;
+        Ok(out)
+    } else {
+        Ok(raw)
+    }
+}
+
+fn be_u32(bytes: &[u8], off: usize, path: &str) -> Result<u32, MnistError> {
+    bytes
+        .get(off..off + 4)
+        .map(|b| u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+        .ok_or_else(|| MnistError::Truncated { path: path.to_string() })
+}
+
+/// Parse an IDX3 image file into padded, normalized flat pixels.
+fn parse_images(bytes: &[u8], path: &str, limit: usize) -> Result<Vec<f32>, MnistError> {
+    let magic = be_u32(bytes, 0, path)?;
+    if magic != IMAGE_MAGIC {
+        return Err(MnistError::BadMagic { path: path.into(), found: magic, expected: IMAGE_MAGIC });
+    }
+    let count = be_u32(bytes, 4, path)? as usize;
+    let rows = be_u32(bytes, 8, path)?;
+    let cols = be_u32(bytes, 12, path)?;
+    if rows as usize != MNIST_SIDE || cols as usize != MNIST_SIDE {
+        return Err(MnistError::BadSize { path: path.into(), rows, cols });
+    }
+    let n = count.min(limit);
+    let need = 16 + count * MNIST_SIDE * MNIST_SIDE;
+    if bytes.len() < need {
+        return Err(MnistError::Truncated { path: path.into() });
+    }
+    let mut pixels = vec![-1.0f32; n * IMAGE_PIXELS];
+    for i in 0..n {
+        let src = &bytes[16 + i * MNIST_SIDE * MNIST_SIDE..];
+        let dst = &mut pixels[i * IMAGE_PIXELS..(i + 1) * IMAGE_PIXELS];
+        // Pad by one row on top and one column on the left (28 -> 29);
+        // normalize 0..255 -> -1..1.
+        for r in 0..MNIST_SIDE {
+            for c in 0..MNIST_SIDE {
+                let v = src[r * MNIST_SIDE + c] as f32;
+                dst[(r + 1) * IMAGE_SIDE + (c + 1)] = v / 127.5 - 1.0;
+            }
+        }
+    }
+    Ok(pixels)
+}
+
+/// Parse an IDX1 label file.
+fn parse_labels(bytes: &[u8], path: &str, limit: usize) -> Result<Vec<u8>, MnistError> {
+    let magic = be_u32(bytes, 0, path)?;
+    if magic != LABEL_MAGIC {
+        return Err(MnistError::BadMagic { path: path.into(), found: magic, expected: LABEL_MAGIC });
+    }
+    let count = be_u32(bytes, 4, path)? as usize;
+    let n = count.min(limit);
+    if bytes.len() < 8 + count {
+        return Err(MnistError::Truncated { path: path.into() });
+    }
+    Ok(bytes[8..8 + n].to_vec())
+}
+
+/// Load (train, test) datasets from IDX files under `dir`, truncated to
+/// `train_n` / `test_n` images.
+pub fn load_mnist(dir: &str, train_n: usize, test_n: usize) -> Result<(Dataset, Dataset), MnistError> {
+    let load_split = |img_name: &str, lbl_name: &str, limit: usize| -> Result<Dataset, MnistError> {
+        let img_bytes = read_file(dir, img_name)?;
+        let lbl_bytes = read_file(dir, lbl_name)?;
+        let pixels = parse_images(&img_bytes, img_name, limit)?;
+        let labels = parse_labels(&lbl_bytes, lbl_name, limit)?;
+        if pixels.len() != labels.len() * IMAGE_PIXELS {
+            return Err(MnistError::CountMismatch {
+                images: pixels.len() / IMAGE_PIXELS,
+                labels: labels.len(),
+            });
+        }
+        Ok(Dataset::new(pixels, labels, IMAGE_PIXELS))
+    };
+    let train = load_split("train-images-idx3-ubyte", "train-labels-idx1-ubyte", train_n)?;
+    let test = load_split("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte", test_n)?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny in-memory IDX image file.
+    fn fake_idx3(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&IMAGE_MAGIC.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&28u32.to_be_bytes());
+        b.extend_from_slice(&28u32.to_be_bytes());
+        for i in 0..n {
+            // image i: all pixels = i*20 (so images are distinguishable)
+            b.extend(std::iter::repeat((i * 20) as u8).take(784));
+        }
+        b
+    }
+
+    fn fake_idx1(labels: &[u8]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&LABEL_MAGIC.to_be_bytes());
+        b.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        b.extend_from_slice(labels);
+        b
+    }
+
+    #[test]
+    fn parse_images_pads_and_normalizes() {
+        let bytes = fake_idx3(2);
+        let px = parse_images(&bytes, "t", 2).unwrap();
+        assert_eq!(px.len(), 2 * IMAGE_PIXELS);
+        // Padding row/column stays at -1.
+        assert_eq!(px[0], -1.0); // top-left of image 0
+        // Interior pixel of image 1: value 20 -> 20/127.5-1
+        let inner = IMAGE_PIXELS + IMAGE_SIDE + 1;
+        assert!((px[inner] - (20.0 / 127.5 - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_images_respects_limit() {
+        let bytes = fake_idx3(5);
+        let px = parse_images(&bytes, "t", 2).unwrap();
+        assert_eq!(px.len(), 2 * IMAGE_PIXELS);
+    }
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        let bytes = fake_idx1(&[3, 1, 4, 1, 5]);
+        assert_eq!(parse_labels(&bytes, "t", 10).unwrap(), vec![3, 1, 4, 1, 5]);
+        assert_eq!(parse_labels(&bytes, "t", 3).unwrap(), vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = fake_idx3(1);
+        bytes[3] = 0x42;
+        assert!(matches!(
+            parse_images(&bytes, "t", 1),
+            Err(MnistError::BadMagic { .. })
+        ));
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let bytes = fake_idx3(3);
+        assert!(matches!(
+            parse_images(&bytes[..100], "t", 3),
+            Err(MnistError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn missing_dir_not_available() {
+        assert!(!mnist_available("/nonexistent/mnist"));
+    }
+
+    #[test]
+    fn gz_roundtrip() {
+        use std::io::Write;
+        let dir = std::env::temp_dir().join(format!("mnist_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let write_gz = |name: &str, data: &[u8]| {
+            let f = std::fs::File::create(dir.join(format!("{name}.gz"))).unwrap();
+            let mut enc = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
+            enc.write_all(data).unwrap();
+            enc.finish().unwrap();
+        };
+        write_gz("train-images-idx3-ubyte", &fake_idx3(4));
+        write_gz("train-labels-idx1-ubyte", &fake_idx1(&[0, 1, 2, 3]));
+        write_gz("t10k-images-idx3-ubyte", &fake_idx3(2));
+        write_gz("t10k-labels-idx1-ubyte", &fake_idx1(&[4, 5]));
+        let dirs = dir.to_str().unwrap();
+        assert!(mnist_available(dirs));
+        let (train, test) = load_mnist(dirs, 100, 100).unwrap();
+        assert_eq!(train.len(), 4);
+        assert_eq!(test.len(), 2);
+        assert_eq!(test.label(1), 5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

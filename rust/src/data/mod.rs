@@ -1,0 +1,45 @@
+//! Dataset substrate: the MNIST IDX loader (used when the real MNIST files
+//! are present) and a deterministic procedural substitute, `synth-mnist`,
+//! for offline environments (DESIGN.md §2).
+//!
+//! The paper trains on MNIST: 70,000 images of handwritten digits, 29×29
+//! after padding (the Cireşan reference implementation pads 28×28 MNIST by
+//! one row/column), 60,000 for training/validation and 10,000 for testing.
+
+mod augment;
+mod dataset;
+mod mnist;
+mod synthetic;
+
+pub use augment::{distort_dataset, distort_into, AugmentConfig};
+pub use dataset::{Dataset, Split};
+pub use mnist::{load_mnist, mnist_available, MnistError};
+pub use synthetic::{generate_synthetic, SynthConfig};
+
+/// Image side used throughout (29×29 as in the paper).
+pub const IMAGE_SIDE: usize = 29;
+/// Pixels per image.
+pub const IMAGE_PIXELS: usize = IMAGE_SIDE * IMAGE_SIDE;
+/// Number of classes (digits 0–9).
+pub const NUM_CLASSES: usize = 10;
+
+/// Load the training+test splits: real MNIST when the IDX files exist under
+/// `dir`, otherwise the deterministic synthetic substitute scaled to
+/// `train_n`/`test_n` images.
+pub fn load_or_generate(
+    dir: &str,
+    train_n: usize,
+    test_n: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    if mnist_available(dir) {
+        match load_mnist(dir, train_n, test_n) {
+            Ok(pair) => return pair,
+            Err(e) => eprintln!("warning: MNIST load failed ({e}); falling back to synthetic"),
+        }
+    }
+    let cfg = SynthConfig::default();
+    let train = generate_synthetic(train_n, seed, &cfg);
+    let test = generate_synthetic(test_n, seed ^ 0x7E57_0000, &cfg);
+    (train, test)
+}

@@ -1,0 +1,210 @@
+//! Regeneration of every figure's data series (Figs 5–13). Figures are
+//! emitted as markdown tables of the same series the paper plots.
+
+use super::report::{fnum, Table};
+use super::tables::{parity_runs, RealRunScale};
+use crate::perfmodel::{PerfModel, Scenario};
+use crate::phisim::{simulate, speedup_table, xeon_e5_seq_secs, SimConfig, PAPER_THREAD_COUNTS};
+use crate::util::stats::relative_deviation;
+
+/// Fig 5: total execution time (hours) vs threads for all architectures,
+/// with the sequential Xeon E5 reference.
+pub fn fig5() -> anyhow::Result<Table> {
+    let mut tab = Table::new(
+        "Fig 5 — total execution time (hours), Phi parallel vs Xeon E5 sequential",
+        &["Config", "Small", "Medium", "Large"],
+    );
+    let totals = |f: &dyn Fn(&str) -> anyhow::Result<f64>| -> anyhow::Result<Vec<f64>> {
+        ["small", "medium", "large"].iter().map(|a| f(a)).collect()
+    };
+    let e5 = totals(&|a| xeon_e5_seq_secs(a))?;
+    tab.row(vec![
+        "Xeon E5 Seq.".into(),
+        fnum(e5[0] / 3600.0),
+        fnum(e5[1] / 3600.0),
+        fnum(e5[2] / 3600.0),
+    ]);
+    for &p in &PAPER_THREAD_COUNTS {
+        let t = totals(&|a| Ok(simulate(&SimConfig::paper(a, p))?.total_secs()))?;
+        tab.row(vec![
+            format!("Phi Par. {p} T"),
+            fnum(t[0] / 3600.0),
+            fnum(t[1] / 3600.0),
+            fnum(t[2] / 3600.0),
+        ]);
+    }
+    tab.note("Paper anchors: large 1T = 295.5 h, 244T = 2.9 h, E5 seq = 31.1 h.");
+    Ok(tab)
+}
+
+/// Epochs each architecture needs to reach the paper's 1.54% stop
+/// criterion. The small network defines the target (its own ending error
+/// after its full 70 epochs); bigger networks hit it in far fewer epochs.
+/// The paper does not tabulate the counts, only the resulting ordering
+/// (Fig 6: medium fastest to the target, large slowest despite fewest
+/// epochs); these constants are chosen to satisfy that ordering and are
+/// documented as assumptions in EXPERIMENTS.md. The real-training
+/// convergence complement is Fig 10 / Table 7.
+pub const EPOCHS_TO_TARGET: [(&str, usize); 3] = [("small", 70), ("medium", 5), ("large", 3)];
+
+/// Fig 6: total execution time until test error ≤ 1.54%.
+pub fn fig6() -> anyhow::Result<Table> {
+    let mut tab = Table::new(
+        "Fig 6 — hours until test error ≤ 1.54% (phisim × epochs-to-target)",
+        &["Config", "Small (70 ep)", "Medium (5 ep)", "Large (3 ep)"],
+    );
+    for &p in &PAPER_THREAD_COUNTS[1..] {
+        let mut cells = vec![format!("Phi Par. {p} T")];
+        for (arch, epochs) in EPOCHS_TO_TARGET {
+            let mut cfg = SimConfig::paper(arch, p);
+            cfg.epochs = epochs;
+            cells.push(fnum(simulate(&cfg)?.total_secs() / 3600.0));
+        }
+        tab.row(cells);
+    }
+    tab.note("Paper: medium reaches the target faster than small; large takes longest despite fewest epochs.");
+    Ok(tab)
+}
+
+/// Figs 7/8/9: speedups vs Xeon E5 seq / Phi 1T / Core i5 seq.
+pub fn fig_speedups(which: u8) -> anyhow::Result<Table> {
+    let (title, pick): (&str, fn(&crate::phisim::SpeedupRow) -> f64) = match which {
+        7 => ("Fig 7 — speedup vs sequential Xeon E5", |r| r.vs_xeon_e5),
+        8 => ("Fig 8 — speedup vs one Phi thread", |r| r.vs_phi_1t),
+        9 => ("Fig 9 — speedup vs sequential Core i5", |r| r.vs_core_i5),
+        _ => anyhow::bail!("fig_speedups expects 7, 8 or 9"),
+    };
+    let mut tab = Table::new(title, &["Threads", "Small", "Medium", "Large"]);
+    let tables: Vec<_> = ["small", "medium", "large"]
+        .iter()
+        .map(|a| speedup_table(a))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    for (i, &p) in PAPER_THREAD_COUNTS.iter().enumerate() {
+        if p == 1 {
+            continue;
+        }
+        tab.row(vec![
+            p.to_string(),
+            fnum(pick(&tables[0][i])),
+            fnum(pick(&tables[1][i])),
+            fnum(pick(&tables[2][i])),
+        ]);
+    }
+    match which {
+        7 => tab.note("Paper: up to 14.07× at 244 threads."),
+        8 => tab.note("Paper: up to 103× at 244 threads; near-linear to 60."),
+        _ => tab.note("Paper: up to 65.3× at 244 threads (58× headline at 240)."),
+    };
+    Ok(tab)
+}
+
+/// Fig 10: relative cumulative error (loss) of parallel runs vs the
+/// sequential baseline, validation and test sets — real training.
+pub fn fig10(arch: &str, threads: &[usize], scale: RealRunScale) -> anyhow::Result<Table> {
+    let (baseline, runs) = parity_runs(arch, threads, scale)?;
+    let b = baseline.final_epoch();
+    let mut tab = Table::new(
+        format!("Fig 10 — relative cumulative error vs sequential ({arch}, real training)"),
+        &["# threads", "Validation loss ratio", "Test loss ratio"],
+    );
+    for r in &runs {
+        let e = r.final_epoch();
+        tab.row(vec![
+            r.threads.to_string(),
+            fnum(e.validation.loss / b.validation.loss),
+            fnum(e.test.loss / b.test.loss),
+        ]);
+    }
+    tab.note("1.0 = identical to sequential; paper's worst deviation is ~0.05% above baseline.");
+    Ok(tab)
+}
+
+/// Figs 11–13: predicted (analytic model) vs simulated-measured execution
+/// time for one architecture, with the paper's deviation metric.
+pub fn fig_pred_vs_measured(arch: &str) -> anyhow::Result<Table> {
+    let fig_no = match arch {
+        "small" => 11,
+        "medium" => 12,
+        "large" => 13,
+        _ => anyhow::bail!("paper archs only"),
+    };
+    let model = PerfModel::for_arch(arch)?;
+    let mut tab = Table::new(
+        format!("Fig {fig_no} — predicted vs measured execution time ({arch})"),
+        &["Threads", "Predicted (min)", "Measured/sim (min)", "Deviation"],
+    );
+    let mut devs = Vec::new();
+    for &p in &PAPER_THREAD_COUNTS {
+        let predicted = model.predict_secs(&Scenario::paper_default(arch, p));
+        let measured = simulate(&SimConfig::paper(arch, p))?.total_secs();
+        let dev = relative_deviation(measured, predicted);
+        devs.push(dev);
+        tab.row(vec![
+            p.to_string(),
+            fnum(predicted / 60.0),
+            fnum(measured / 60.0),
+            format!("{:.1}%", dev * 100.0),
+        ]);
+    }
+    let avg = devs.iter().sum::<f64>() / devs.len() as f64;
+    tab.note(format!(
+        "Average deviation {:.1}% (paper: 14.57% small / 14.76% medium / 15.36% large).",
+        avg * 100.0
+    ));
+    Ok(tab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_renders_with_e5_row() {
+        let t = fig5().unwrap();
+        let md = t.to_markdown();
+        assert!(md.contains("Xeon E5 Seq."));
+        assert_eq!(t.n_rows(), 9);
+    }
+
+    #[test]
+    fn fig6_medium_faster_than_small_and_large_slowest() {
+        let t = fig6().unwrap();
+        let md = t.to_markdown();
+        // 244T row: medium < small < large (paper's qualitative finding).
+        let row = md.lines().find(|l| l.starts_with("| 244") || l.contains("244 T")).unwrap();
+        let cells: Vec<f64> = row
+            .split('|')
+            .filter_map(|c| c.trim().parse::<f64>().ok())
+            .collect();
+        assert_eq!(cells.len(), 3, "{row}");
+        assert!(cells[1] < cells[0], "medium should beat small: {row}");
+        assert!(cells[2] > cells[0], "large slowest: {row}");
+    }
+
+    #[test]
+    fn speedup_figs_render() {
+        for which in [7u8, 8, 9] {
+            let t = fig_speedups(which).unwrap();
+            assert_eq!(t.n_rows(), 7);
+        }
+        assert!(fig_speedups(4).is_err());
+    }
+
+    #[test]
+    fn fig11_13_deviation_reasonable() {
+        for arch in ["small", "medium", "large"] {
+            let t = fig_pred_vs_measured(arch).unwrap();
+            let md = t.to_markdown();
+            // The model and simulator must agree within the paper's own
+            // error regime (avg ≤ 25%).
+            let avg: f64 = md
+                .lines()
+                .find(|l| l.contains("Average deviation"))
+                .and_then(|l| l.split("deviation ").nth(1))
+                .and_then(|s| s.split('%').next())
+                .and_then(|s| s.trim().parse().ok())
+                .unwrap();
+            assert!(avg <= 25.0, "{arch}: avg deviation {avg}%");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (the per-experiment index lives in DESIGN.md §6).
+//!
+//! Tables/figures measured on the Xeon Phi testbed come from the
+//! [`crate::phisim`] simulator and the [`crate::perfmodel`] analytic model;
+//! accuracy experiments (Table 7, Fig 10, Table 1) run the real CHAOS
+//! trainer on this host.
+
+mod figures;
+mod report;
+mod tables;
+
+pub use figures::{fig10, fig5, fig6, fig_pred_vs_measured, fig_speedups, EPOCHS_TO_TARGET};
+pub use report::{fnum, fpct, Table};
+pub use tables::{
+    parity_runs, table1, table2, table3, table4, table5, table6, table7, table8, table9,
+    RealRunScale,
+};

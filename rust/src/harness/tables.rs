@@ -1,0 +1,454 @@
+//! Regeneration of every table in the paper's evaluation section
+//! (DESIGN.md §6 maps each to its modules). Tables that the paper measured
+//! on the Xeon Phi testbed are regenerated through `phisim`; accuracy
+//! tables run the real CHAOS trainer on this host.
+
+use super::report::{fnum, fpct, Table};
+use crate::chaos::{self, RunResult, Strategy};
+use crate::config::{ArchSpec, LayerSpec, TrainConfig, PAPER_ARCHS};
+use crate::data;
+use crate::nn::{compute_dims, Network};
+use crate::perfmodel::{
+    arch_constants, contention_measured, paper_predicted, ContentionModel, PerfModel, Scenario,
+    CLOCK_HZ, MEASURED_THREADS, OPERATION_FACTOR,
+};
+use crate::phisim::{simulate, SimConfig, PAPER_THREAD_COUNTS};
+use crate::util::timer::LayerClass;
+
+/// Scale knobs for the tables that run real training.
+#[derive(Debug, Clone, Copy)]
+pub struct RealRunScale {
+    pub train_images: usize,
+    pub test_images: usize,
+    pub epochs: usize,
+    pub eta0: f64,
+}
+
+impl RealRunScale {
+    pub fn quick() -> RealRunScale {
+        RealRunScale { train_images: 400, test_images: 200, epochs: 3, eta0: 0.01 }
+    }
+
+    pub fn full() -> RealRunScale {
+        RealRunScale { train_images: 2_000, test_images: 800, epochs: 8, eta0: 0.01 }
+    }
+}
+
+/// Table 1: execution time at each layer type for the sequential version
+/// (small architecture). The paper measured a Xeon E5; we measure this
+/// host, and the shape claim — convolution dominating with ~94% — is what
+/// must reproduce.
+pub fn table1(scale: RealRunScale) -> anyhow::Result<Table> {
+    let net = Network::new(ArchSpec::small());
+    let (train, test) = data::load_or_generate("data/mnist", scale.train_images, scale.test_images, 7);
+    let cfg = TrainConfig {
+        epochs: 1,
+        threads: 1,
+        eta0: scale.eta0,
+        eta_decay: 0.9,
+        seed: 1,
+        validation_fraction: 0.0,
+    };
+    let run = chaos::train(&net, &train, &test, &cfg, Strategy::Sequential)?;
+    let t = &run.layer_times;
+    let total = t.total_secs();
+    let mut tab = Table::new(
+        "Table 1 — sequential per-layer-type times (small arch, this host)",
+        &["Layer type", "Forward propagation", "Back-propagation", "% of total"],
+    );
+    let get = |c: LayerClass| t.get_secs(c);
+    let rows = [
+        (
+            "Fully connected (+output)",
+            get(LayerClass::FcForward) + get(LayerClass::OutputForward),
+            get(LayerClass::FcBackward) + get(LayerClass::OutputBackward),
+        ),
+        ("Convolutional", get(LayerClass::ConvForward), get(LayerClass::ConvBackward)),
+        ("Max pooling", get(LayerClass::PoolForward), get(LayerClass::PoolBackward)),
+    ];
+    for (name, f, b) in rows {
+        tab.row(vec![
+            name.into(),
+            format!("{:.2} s", f),
+            format!("{:.2} s", b),
+            fpct((f + b) / total),
+        ]);
+    }
+    tab.note(format!(
+        "{} train images, 1 epoch, sequential. Paper: conv layers take 93.7% on a Xeon E5.",
+        train.len()
+    ));
+    Ok(tab)
+}
+
+/// Table 2: the three CNN architectures, regenerated from the config
+/// structs (maps, map sizes, neurons, kernels, weights per layer).
+pub fn table2() -> Table {
+    let mut tab = Table::new(
+        "Table 2 — CNN architectures",
+        &["Arch", "Layer type", "Maps", "Map size", "Neurons", "Kernel", "Weights"],
+    );
+    for name in PAPER_ARCHS {
+        let arch = ArchSpec::by_name(name).unwrap();
+        let dims = compute_dims(&arch);
+        for d in &dims {
+            let (ty, maps, kernel): (&str, String, String) = match d.spec {
+                LayerSpec::Input { .. } => ("Input", "-".into(), "-".into()),
+                LayerSpec::Conv { maps, kernel } => {
+                    ("Convolutional", maps.to_string(), format!("{kernel}x{kernel}"))
+                }
+                LayerSpec::MaxPool { kernel } => {
+                    ("Max-pooling", d.out_maps.to_string(), format!("{kernel}x{kernel}"))
+                }
+                LayerSpec::FullyConnected { .. } => ("Fully connected", "-".into(), "-".into()),
+                LayerSpec::Output { .. } => ("Output", "-".into(), "-".into()),
+            };
+            tab.row(vec![
+                name.into(),
+                ty.into(),
+                maps,
+                format!("{0}x{0}", d.out_side),
+                d.out_len().to_string(),
+                kernel,
+                if d.param_count() > 0 { d.param_count().to_string() } else { "-".into() },
+            ]);
+        }
+    }
+    tab.note("Large pool-3 kernel is 2x2 (3x3 output): the only reading consistent with the paper's 135,150 FC weights — see DESIGN.md §5.");
+    tab
+}
+
+/// Table 3: performance-model variables.
+pub fn table3() -> Table {
+    let mut tab = Table::new(
+        "Table 3 — performance model variables",
+        &["Variable", "Small", "Medium", "Large"],
+    );
+    let c: Vec<_> = ["small", "medium", "large"]
+        .iter()
+        .map(|a| arch_constants(a).unwrap())
+        .collect();
+    tab.row(vec![
+        "FProp ops/image".into(),
+        fnum(c[0].fprop_ops),
+        fnum(c[1].fprop_ops),
+        fnum(c[2].fprop_ops),
+    ]);
+    tab.row(vec![
+        "BProp ops/image".into(),
+        fnum(c[0].bprop_ops),
+        fnum(c[1].bprop_ops),
+        fnum(c[2].bprop_ops),
+    ]);
+    tab.row(vec![
+        "Prep ops".into(),
+        format!("{:.0e}", c[0].prep_ops),
+        format!("{:.0e}", c[1].prep_ops),
+        format!("{:.0e}", c[2].prep_ops),
+    ]);
+    tab.row(vec![
+        "T_Fprop / image (ms)".into(),
+        fnum(c[0].t_fprop_ms),
+        fnum(c[1].t_fprop_ms),
+        fnum(c[2].t_fprop_ms),
+    ]);
+    tab.row(vec![
+        "T_Bprop / image (ms)".into(),
+        fnum(c[0].t_bprop_ms),
+        fnum(c[1].t_bprop_ms),
+        fnum(c[2].t_bprop_ms),
+    ]);
+    tab.row(vec![
+        "Epochs".into(),
+        c[0].epochs.to_string(),
+        c[1].epochs.to_string(),
+        c[2].epochs.to_string(),
+    ]);
+    tab.row(vec![
+        "Clock s (GHz) / OperationFactor".into(),
+        format!("{:.3} / {}", CLOCK_HZ / 1e9, OPERATION_FACTOR),
+        "—".into(),
+        "—".into(),
+    ]);
+    tab
+}
+
+/// Table 4: measured and extrapolated memory contention.
+pub fn table4() -> Table {
+    let mut tab = Table::new(
+        "Table 4 — memory contention (s/image): measured + extrapolated",
+        &["# Threads", "Small", "Medium", "Large", "Source"],
+    );
+    let models: Vec<_> = ["small", "medium", "large"]
+        .iter()
+        .map(|a| ContentionModel::for_arch(a).unwrap())
+        .collect();
+    for (i, &p) in MEASURED_THREADS.iter().enumerate() {
+        let m: Vec<f64> = ["small", "medium", "large"]
+            .iter()
+            .map(|a| contention_measured(a).unwrap()[i])
+            .collect();
+        tab.row(vec![
+            p.to_string(),
+            format!("{:.2e}", m[0]),
+            format!("{:.2e}", m[1]),
+            format!("{:.2e}", m[2]),
+            "paper (measured)".into(),
+        ]);
+    }
+    for p in [480usize, 960, 1920, 3840] {
+        tab.row(vec![
+            format!("{p}*"),
+            format!("{:.2e}", models[0].contention(p)),
+            format!("{:.2e}", models[1].contention(p)),
+            format!("{:.2e}", models[2].contention(p)),
+            "extrapolated".into(),
+        ]);
+    }
+    // Regression note vs the paper's own starred rows.
+    let mut worst: f64 = 0.0;
+    for (ai, a) in ["small", "medium", "large"].iter().enumerate() {
+        for (p, expect) in paper_predicted(a).unwrap() {
+            let got = models[ai].contention(p);
+            worst = worst.max((got - expect).abs() / expect);
+        }
+    }
+    tab.note(format!(
+        "Extrapolation vs the paper's starred rows: worst deviation {:.1}%.",
+        worst * 100.0
+    ));
+    tab
+}
+
+/// Table 5: average time per layer class, large architecture, per network
+/// instance per epoch (simulated testbed).
+pub fn table5() -> anyhow::Result<Table> {
+    let mut tab = Table::new(
+        "Table 5 — time per layer class, large arch (per instance/epoch, phisim)",
+        &["Config", "BPF (s)", "BPF %", "BPC (s)", "BPC %", "FPC (s)", "FPC %", "FPF (s)", "FPF %"],
+    );
+    for &p in PAPER_THREAD_COUNTS.iter().rev() {
+        let r = simulate(&SimConfig::paper("large", p))?;
+        let c = r.layer_class_secs();
+        let total = c.total();
+        tab.row(vec![
+            format!("Phi Par. {p} T"),
+            fnum(c.bpf),
+            fpct(c.bpf / total),
+            fnum(c.bpc),
+            fpct(c.bpc / total),
+            fnum(c.fpc),
+            fpct(c.fpc / total),
+            fnum(c.fpf),
+            fpct(c.fpf / total),
+        ]);
+    }
+    tab.note("Paper (244T): BPC 88.5%, FPC 9.6%, BPF 1.4%, FPF 0.04%.");
+    Ok(tab)
+}
+
+/// Table 6: per-layer speedup of the convolutional layers vs Phi 1T.
+pub fn table6() -> anyhow::Result<Table> {
+    let mut tab = Table::new(
+        "Table 6 — conv-layer speedup vs Phi 1T (phisim)",
+        &["Config", "BPC-S", "BPC-M", "BPC-L", "FPC-S", "FPC-M", "FPC-L"],
+    );
+    // per-arch: per-instance conv times at 1T and pT
+    let mut results = Vec::new();
+    for arch in ["small", "medium", "large"] {
+        let base = simulate(&SimConfig::paper(arch, 1))?.layer_class_secs();
+        let rows: Vec<(usize, f64, f64)> = PAPER_THREAD_COUNTS[1..]
+            .iter()
+            .map(|&p| {
+                let c = simulate(&SimConfig::paper(arch, p)).unwrap().layer_class_secs();
+                (p, base.bpc / c.bpc, base.fpc / c.fpc)
+            })
+            .collect();
+        results.push(rows);
+    }
+    for (i, &p) in PAPER_THREAD_COUNTS[1..].iter().enumerate().rev() {
+        tab.row(vec![
+            format!("Phi Par. {p} T"),
+            fnum(results[0][i].1),
+            fnum(results[1][i].1),
+            fnum(results[2][i].1),
+            fnum(results[0][i].2),
+            fnum(results[1][i].2),
+            fnum(results[2][i].2),
+        ]);
+    }
+    tab.note("Paper (244T): BPC 102.0/99.3/103.5, FPC 122.3/124.2/125.4.");
+    Ok(tab)
+}
+
+/// Run the real accuracy-parity experiment behind Table 7 / Fig 10:
+/// a sequential baseline plus CHAOS at several thread counts, identical
+/// seeds and data. Returns (baseline, parallel runs).
+pub fn parity_runs(
+    arch: &str,
+    threads: &[usize],
+    scale: RealRunScale,
+) -> anyhow::Result<(RunResult, Vec<RunResult>)> {
+    let spec = ArchSpec::by_name(arch)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch '{arch}'"))?;
+    let net = Network::new(spec);
+    let (train, test) =
+        data::load_or_generate("data/mnist", scale.train_images, scale.test_images, 7);
+    let cfg = TrainConfig {
+        epochs: scale.epochs,
+        threads: 1,
+        eta0: scale.eta0,
+        eta_decay: 0.9,
+        seed: 0xC4A05,
+        validation_fraction: 0.25,
+    };
+    let baseline = chaos::train(&net, &train, &test, &cfg, Strategy::Sequential)?;
+    let mut runs = Vec::new();
+    for &t in threads {
+        let cfg_t = TrainConfig { threads: t, ..cfg.clone() };
+        runs.push(chaos::train(&net, &train, &test, &cfg_t, Strategy::Chaos)?);
+    }
+    Ok((baseline, runs))
+}
+
+/// Table 7: incorrectly classified images, parallel vs sequential.
+/// Thread counts are scaled to this host (the semantics — shared weights,
+/// asynchronous updates — are identical at any thread count; DESIGN.md §2).
+pub fn table7(arch: &str, threads: &[usize], scale: RealRunScale) -> anyhow::Result<Table> {
+    let (baseline, runs) = parity_runs(arch, threads, scale)?;
+    let b_val = baseline.final_epoch().validation.errors as i64;
+    let b_test = baseline.final_epoch().test.errors as i64;
+    let mut tab = Table::new(
+        format!("Table 7 — incorrectly classified images ({arch}, real training)"),
+        &["# threads", "Validation Tot", "Validation Diff", "Test Tot", "Test Diff"],
+    );
+    tab.row(vec![
+        "1 (seq baseline)".into(),
+        b_val.to_string(),
+        "0".into(),
+        b_test.to_string(),
+        "0".into(),
+    ]);
+    for r in &runs {
+        let e = r.final_epoch();
+        tab.row(vec![
+            r.threads.to_string(),
+            e.validation.errors.to_string(),
+            (e.validation.errors as i64 - b_val).to_string(),
+            e.test.errors.to_string(),
+            (e.test.errors as i64 - b_test).to_string(),
+        ]);
+    }
+    tab.note(format!(
+        "{} train / {} test images, {} epochs, eta0 {}. Paper finds deviations of tens of images out of 60k/10k.",
+        scale.train_images, scale.test_images, scale.epochs, scale.eta0
+    ));
+    Ok(tab)
+}
+
+/// Table 8: predicted execution times (minutes) for 480–3840 threads.
+pub fn table8() -> anyhow::Result<Table> {
+    let mut tab = Table::new(
+        "Table 8 — predicted minutes for future thread counts (Listing-2 model)",
+        &["# Threads", "480", "960", "1920", "3840"],
+    );
+    let paper = [
+        ("Small CNN", [6.6, 5.4, 4.9, 4.6]),
+        ("Medium CNN", [36.8, 23.9, 17.4, 14.2]),
+        ("Large CNN", [92.9, 60.8, 44.8, 36.8]),
+    ];
+    for (row, (label, paper_vals)) in ["small", "medium", "large"].iter().zip(paper) {
+        let m = PerfModel::for_arch(row)?;
+        let mins: Vec<f64> = [480usize, 960, 1920, 3840]
+            .iter()
+            .map(|&p| m.predict_minutes(&Scenario::paper_default(row, p)))
+            .collect();
+        tab.row(vec![
+            label.to_string(),
+            format!("{:.1} ({:.1})", mins[0], paper_vals[0]),
+            format!("{:.1} ({:.1})", mins[1], paper_vals[1]),
+            format!("{:.1} ({:.1})", mins[2], paper_vals[2]),
+            format!("{:.1} ({:.1})", mins[3], paper_vals[3]),
+        ]);
+    }
+    tab.note("Cell format: ours (paper).");
+    Ok(tab)
+}
+
+/// Table 9: predicted minutes scaling images/epochs at 240/480 threads.
+pub fn table9() -> anyhow::Result<Table> {
+    let m = PerfModel::for_arch("small")?;
+    let mut tab = Table::new(
+        "Table 9 — predicted minutes scaling images and epochs (small CNN)",
+        &["i/it", "p", "70 ep", "140 ep", "280 ep", "560 ep"],
+    );
+    for (i, it) in [(60_000, 10_000), (120_000, 20_000), (240_000, 40_000)] {
+        for p in [240usize, 480] {
+            let mins: Vec<String> = [70usize, 140, 280, 560]
+                .iter()
+                .map(|&ep| {
+                    fnum(m.predict_minutes(&Scenario {
+                        images: i,
+                        test_images: it,
+                        epochs: ep,
+                        threads: p,
+                    }))
+                })
+                .collect();
+            tab.row(vec![
+                format!("{}k/{}k", i / 1000, it / 1000),
+                p.to_string(),
+                mins[0].clone(),
+                mins[1].clone(),
+                mins[2].clone(),
+                mins[3].clone(),
+            ]);
+        }
+    }
+    tab.note("Paper anchors: 60k/10k, 240T, 70 ep → 8.9 min; 480T → 6.6 min.");
+    Ok(tab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper_weight_counts() {
+        let t = table2();
+        let md = t.to_markdown();
+        for w in ["340", "30060", "216100", "135150", "1510", "85", "1260", "4550", "510", "20040", "54150"] {
+            assert!(md.contains(w), "missing weight count {w}");
+        }
+    }
+
+    #[test]
+    fn table3_and_4_render() {
+        assert!(table3().to_markdown().contains("5349000"));
+        let t4 = table4().to_markdown();
+        assert!(t4.contains("3840*"));
+        assert!(t4.contains("1.40e-2") || t4.contains("1.40e-02"), "{t4}");
+    }
+
+    #[test]
+    fn table5_dominated_by_bpc() {
+        let t = table5().unwrap();
+        let md = t.to_markdown();
+        assert!(t.n_rows() == 8);
+        // 244T row: BPC share must be in the high-80s%.
+        let row244 = md.lines().find(|l| l.contains("244 T")).unwrap();
+        assert!(row244.contains("8") && row244.contains("%"), "{row244}");
+    }
+
+    #[test]
+    fn table6_shape() {
+        let t = table6().unwrap();
+        assert_eq!(t.n_rows(), 7);
+    }
+
+    #[test]
+    fn table8_and_9_render() {
+        assert!(table8().unwrap().to_markdown().contains("(92.9)"));
+        assert!(table9().unwrap().n_rows() == 6);
+    }
+}

@@ -1,0 +1,34 @@
+//! # chaos-phi
+//!
+//! A reproduction of **CHAOS: A Parallelization Scheme for Training
+//! Convolutional Neural Networks on Intel Xeon Phi** (Viebke, Memeti,
+//! Pllana, Abraham — Journal of Supercomputing, 2017) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Layers:
+//! - **L3 (this crate)** — the CHAOS coordinator: shared-weight store with
+//!   controlled-Hogwild delayed updates, worker pool, epoch driver, the
+//!   paper's strategy baselines, the analytic performance model, and a
+//!   discrete-event Intel Xeon Phi simulator standing in for the
+//!   discontinued hardware (DESIGN.md §2).
+//! - **L2/L1 (python/, build time only)** — JAX model + Pallas kernels,
+//!   AOT-lowered to HLO text, loaded and executed here through
+//!   [`runtime`] via the PJRT CPU client. Python is never on the
+//!   request path.
+//!
+//! Start with [`config::ArchSpec`] (the paper's Table 2 networks),
+//! [`chaos::train`] (the parallel trainer), and [`harness`] (regenerates
+//! every table and figure of the paper's evaluation).
+
+pub mod bench;
+pub mod chaos;
+pub mod config;
+pub mod data;
+pub mod harness;
+pub mod nn;
+pub mod perfmodel;
+pub mod phisim;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,350 @@
+//! `chaos` — the CHAOS coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train      run the CHAOS trainer (or any strategy baseline)
+//!   table N    regenerate paper Table N (1–9)
+//!   fig N      regenerate paper Figure N (5–13)
+//!   report     regenerate every table and figure into one markdown file
+//!   predict    analytic performance model (Listing 2)
+//!   simulate   Xeon Phi discrete-event simulator
+//!   serve      batched-inference serving demo over the AOT artifacts
+//!   info       architecture/manifest inventory
+
+use chaos_phi::chaos::{self, Strategy};
+use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::data;
+use chaos_phi::harness::{self, RealRunScale};
+use chaos_phi::nn::Network;
+use chaos_phi::perfmodel::{PerfModel, Scenario};
+use chaos_phi::phisim::{simulate, SimConfig};
+use chaos_phi::serve::{Server, ServerConfig};
+use chaos_phi::util::cli::Args;
+use chaos_phi::util::Stopwatch;
+
+const USAGE: &str = "\
+chaos — CHAOS parallel CNN training (Viebke et al. 2017 reproduction)
+
+USAGE: chaos <command> [flags]
+
+  train     --arch small|medium|large|tiny --threads N --strategy chaos|sequential|hogwild|delayed-rr|averaged[:n]
+            --epochs E --train-n N --test-n N --eta F --seed S --data-dir DIR
+            --out FILE.json --weights-out FILE.ckpt
+  table N   [--quick|--full] [--threads 2,4,8] [--arch small]    (N in 1..9)
+  fig N     [--quick|--full] [--threads 2,4,8] [--arch small]    (N in 5..13)
+  report    --out FILE.md [--quick]
+  predict   --arch A --threads 1,15,30,...  [--images N --test-n N --epochs E]
+  simulate  --arch A --threads 1,15,30,...
+  serve     --arch tiny --requests N --clients C --artifacts DIR --weights FILE.ckpt
+  info      [--artifacts DIR]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "table" => cmd_table(rest),
+        "fig" => cmd_fig(rest),
+        "report" => cmd_report(rest),
+        "predict" => cmd_predict(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(rest),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::parse(
+        raw,
+        &["arch", "threads", "strategy", "epochs", "train-n", "test-n", "eta", "seed", "data-dir", "out", "weights-out", "validation-fraction"],
+    )?;
+    let arch_name = a.get_str("arch", "small");
+    let arch = ArchSpec::by_name(&arch_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch '{arch_name}'"))?;
+    let net = Network::new(arch.clone());
+    let strategy = Strategy::parse(&a.get_str("strategy", "chaos"))?;
+    let cfg = TrainConfig {
+        epochs: a.get_usize("epochs", arch.paper_epochs)?,
+        threads: a.get_usize("threads", 4)?,
+        eta0: a.get_f64("eta", 0.001)?,
+        eta_decay: 0.9,
+        seed: a.get_u64("seed", 0xC4A05)?,
+        validation_fraction: a.get_f64("validation-fraction", 0.25)?,
+    };
+    let train_n = a.get_usize("train-n", 2_000)?;
+    let test_n = a.get_usize("test-n", 1_000)?;
+    let data_dir = a.get_str("data-dir", "data/mnist");
+    let (mut train_set, mut test_set) = data::load_or_generate(&data_dir, train_n, test_n, cfg.seed);
+    // Match the network's input geometry (e.g. the 13x13 tiny arch).
+    let side = match arch.layers[0] {
+        chaos_phi::config::LayerSpec::Input { side } => side,
+        _ => unreachable!(),
+    };
+    if train_set.image_len() != side * side {
+        train_set = train_set.resize(side);
+        test_set = test_set.resize(side);
+    }
+    println!(
+        "training {arch_name} with {} ({} threads) on {} train / {} test images, {} epochs",
+        strategy.name(),
+        cfg.threads,
+        train_set.len(),
+        test_set.len(),
+        cfg.epochs
+    );
+    let sw = Stopwatch::start();
+    let run = chaos::train(&net, &train_set, &test_set, &cfg, strategy)?;
+    for e in &run.epochs {
+        println!(
+            "epoch {:>3}  eta {:.5}  train loss {:>10.2}  train err {:>6}  val err-rate {:>6.3}%  test err-rate {:>6.3}%  ({:.1}s)",
+            e.epoch,
+            e.eta,
+            e.train.loss,
+            e.train.errors,
+            e.validation.error_rate() * 100.0,
+            e.test.error_rate() * 100.0,
+            e.total_secs,
+        );
+    }
+    println!(
+        "done in {:.1}s; publications={}  final test errors {}/{}",
+        sw.elapsed_secs(),
+        run.publications,
+        run.final_epoch().test.errors,
+        run.final_epoch().test.images
+    );
+    if let Some(out) = a.get("out") {
+        run.save(out)?;
+        println!("wrote {out}");
+    }
+    if let Some(w) = a.get("weights-out") {
+        chaos_phi::chaos::Checkpoint::new(arch_name.clone(), run.final_params.clone()).save(w)?;
+        println!("wrote weights checkpoint {w}");
+    }
+    Ok(())
+}
+
+fn scale_from(a: &Args) -> RealRunScale {
+    if a.has("full") {
+        RealRunScale::full()
+    } else {
+        RealRunScale::quick()
+    }
+}
+
+fn cmd_table(raw: &[String]) -> anyhow::Result<()> {
+    anyhow::ensure!(!raw.is_empty(), "usage: chaos table <1..9> [flags]");
+    let a = Args::parse(&raw[1..], &["quick!", "full!", "threads", "arch"])?;
+    let n: usize = raw[0].parse().map_err(|_| anyhow::anyhow!("table number expected"))?;
+    let threads = a.get_usize_list("threads", &[2, 4, 8])?;
+    let arch = a.get_str("arch", "small");
+    let table = match n {
+        1 => harness::table1(scale_from(&a))?,
+        2 => harness::table2(),
+        3 => harness::table3(),
+        4 => harness::table4(),
+        5 => harness::table5()?,
+        6 => harness::table6()?,
+        7 => harness::table7(&arch, &threads, scale_from(&a))?,
+        8 => harness::table8()?,
+        9 => harness::table9()?,
+        _ => anyhow::bail!("tables 1..9 exist"),
+    };
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_fig(raw: &[String]) -> anyhow::Result<()> {
+    anyhow::ensure!(!raw.is_empty(), "usage: chaos fig <5..13> [flags]");
+    let a = Args::parse(&raw[1..], &["quick!", "full!", "threads", "arch"])?;
+    let n: usize = raw[0].parse().map_err(|_| anyhow::anyhow!("figure number expected"))?;
+    let threads = a.get_usize_list("threads", &[2, 4, 8])?;
+    let arch = a.get_str("arch", "small");
+    let table = match n {
+        5 => harness::fig5()?,
+        6 => harness::fig6()?,
+        7 | 8 | 9 => harness::fig_speedups(n as u8)?,
+        10 => harness::fig10(&arch, &threads, scale_from(&a))?,
+        11 => harness::fig_pred_vs_measured("small")?,
+        12 => harness::fig_pred_vs_measured("medium")?,
+        13 => harness::fig_pred_vs_measured("large")?,
+        _ => anyhow::bail!("figures 5..13 exist"),
+    };
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_report(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::parse(raw, &["out", "quick!", "full!", "threads"])?;
+    let out = a.get_str("out", "report.md");
+    let scale = scale_from(&a);
+    let threads = a.get_usize_list("threads", &[2, 4, 8])?;
+    let mut md = String::from("# CHAOS reproduction — regenerated tables & figures\n\n");
+    let sw = Stopwatch::start();
+    eprintln!("tables 2,3,4,8,9 (instant) …");
+    md.push_str(&harness::table2().to_markdown());
+    md.push_str(&harness::table3().to_markdown());
+    md.push_str(&harness::table4().to_markdown());
+    md.push_str(&harness::table8()?.to_markdown());
+    md.push_str(&harness::table9()?.to_markdown());
+    eprintln!("phisim tables/figures (5,6; figs 5-9, 11-13) …");
+    md.push_str(&harness::table5()?.to_markdown());
+    md.push_str(&harness::table6()?.to_markdown());
+    md.push_str(&harness::fig5()?.to_markdown());
+    md.push_str(&harness::fig6()?.to_markdown());
+    for f in [7u8, 8, 9] {
+        md.push_str(&harness::fig_speedups(f)?.to_markdown());
+    }
+    for arch in ["small", "medium", "large"] {
+        md.push_str(&harness::fig_pred_vs_measured(arch)?.to_markdown());
+    }
+    eprintln!("real-training tables (1, 7, fig 10) — this trains networks …");
+    md.push_str(&harness::table1(scale)?.to_markdown());
+    md.push_str(&harness::table7("small", &threads, scale)?.to_markdown());
+    md.push_str(&harness::fig10("small", &threads, scale)?.to_markdown());
+    md.push_str(&format!("\n_Total regeneration time: {:.1}s_\n", sw.elapsed_secs()));
+    std::fs::write(&out, &md)?;
+    println!("wrote {out} ({} bytes)", md.len());
+    Ok(())
+}
+
+fn cmd_predict(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::parse(raw, &["arch", "threads", "images", "test-n", "epochs"])?;
+    let arch = a.get_str("arch", "small");
+    let model = PerfModel::for_arch(&arch)?;
+    let threads = a.get_usize_list("threads", &[1, 15, 30, 60, 120, 180, 240, 244, 480, 960])?;
+    println!("| threads | predicted | breakdown (seq/train/val/test/mem, s) |");
+    println!("|---|---|---|");
+    for p in threads {
+        let mut sc = Scenario::paper_default(&arch, p);
+        sc.images = a.get_usize("images", sc.images)?;
+        sc.test_images = a.get_usize("test-n", sc.test_images)?;
+        sc.epochs = a.get_usize("epochs", sc.epochs)?;
+        let b = model.predict_breakdown(&sc);
+        println!(
+            "| {p} | {} | {:.0}/{:.0}/{:.0}/{:.0}/{:.0} |",
+            chaos_phi::util::timer::fmt_secs(b.total()),
+            b.sequential,
+            b.training,
+            b.validation,
+            b.testing,
+            b.memory
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::parse(raw, &["arch", "threads"])?;
+    let arch = a.get_str("arch", "large");
+    let threads = a.get_usize_list("threads", &[1, 15, 30, 60, 120, 180, 240, 244])?;
+    println!("| threads | total | train/epoch | BPC% | FPC% |");
+    println!("|---|---|---|---|---|");
+    for p in threads {
+        let r = simulate(&SimConfig::paper(&arch, p))?;
+        let c = r.layer_class_secs();
+        println!(
+            "| {p} | {} | {} | {:.1}% | {:.1}% |",
+            chaos_phi::util::timer::fmt_secs(r.total_secs()),
+            chaos_phi::util::timer::fmt_secs(r.train_epoch_secs),
+            100.0 * c.bpc / c.total(),
+            100.0 * c.fpc / c.total(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::parse(raw, &["arch", "requests", "clients", "artifacts", "delay-us", "weights"])?;
+    let arch = a.get_str("arch", "tiny");
+    let requests = a.get_usize("requests", 256)?;
+    let clients = a.get_usize("clients", 4)?;
+    let artifacts = a.get_str("artifacts", chaos_phi::runtime::ARTIFACT_DIR);
+    let delay_us = a.get_u64("delay-us", 2000)?;
+
+    let net = Network::from_name(&arch)?;
+    let params = match a.get("weights") {
+        Some(path) => chaos_phi::chaos::Checkpoint::load_for(path, &net)?,
+        None => net.init_params(1),
+    };
+    let cfg = ServerConfig {
+        max_delay: std::time::Duration::from_micros(delay_us),
+        ..Default::default()
+    };
+    let server = Server::spawn(artifacts, arch.clone(), params, cfg)?;
+    let side = match net.arch.layers[0] {
+        chaos_phi::config::LayerSpec::Input { side } => side,
+        _ => unreachable!(),
+    };
+    let images = data::generate_synthetic(requests, 5, &data::SynthConfig::default()).resize(side);
+
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let handle = server.handle();
+            let images = &images;
+            s.spawn(move || {
+                let mut i = c;
+                while i < requests {
+                    let probs = handle.predict(images.image(i)).expect("predict");
+                    assert_eq!(probs.len(), 10);
+                    i += clients;
+                }
+            });
+        }
+    });
+    let secs = sw.elapsed_secs();
+    let m = server.handle().metrics.snapshot();
+    println!(
+        "served {requests} requests from {clients} clients in {secs:.2}s ({:.0} req/s)",
+        requests as f64 / secs
+    );
+    println!(
+        "latency p50 {:.0}µs  p99 {:.0}µs  max {:.0}µs; {} batches, mean fill {:.2}",
+        m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch_fill
+    );
+    Ok(())
+}
+
+fn cmd_info(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::parse(raw, &["artifacts"])?;
+    println!("paper architectures:");
+    for name in chaos_phi::config::PAPER_ARCHS {
+        let net = Network::from_name(name)?;
+        println!(
+            "  {name:8} {} layers, {} parameters, {} paper epochs",
+            net.dims.len(),
+            net.total_params,
+            net.arch.paper_epochs
+        );
+    }
+    let dir = a.get_str("artifacts", chaos_phi::runtime::ARTIFACT_DIR);
+    if chaos_phi::runtime::artifacts_available(&dir) {
+        let manifest = chaos_phi::runtime::Manifest::load(&dir)?;
+        println!("artifacts in {dir}:");
+        for (name, am) in &manifest.archs {
+            println!(
+                "  {name:8} side {}, batch {}, artifacts: {}",
+                am.input_side,
+                am.batch,
+                am.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            );
+        }
+    } else {
+        println!("artifacts not built (run `make artifacts`)");
+    }
+    Ok(())
+}

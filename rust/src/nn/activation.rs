@@ -1,0 +1,104 @@
+//! Activation functions.
+//!
+//! Hidden layers use the LeCun-scaled tanh `f(x) = 1.7159·tanh(2x/3)`
+//! (the activation of the Cireşan reference implementation the paper builds
+//! on); the output layer applies softmax, trained with cross-entropy.
+
+/// Scale A of the LeCun tanh.
+pub const TANH_A: f32 = 1.7159;
+/// Slope B of the LeCun tanh.
+pub const TANH_B: f32 = 2.0 / 3.0;
+
+/// f(x) = A·tanh(B·x).
+#[inline]
+pub fn scaled_tanh(x: f32) -> f32 {
+    TANH_A * (TANH_B * x).tanh()
+}
+
+/// f'(x) expressed through the *output* y = f(x):
+/// f'(x) = A·B·(1 − tanh²(Bx)) = (B/A)·(A² − y²).
+/// Formulating the derivative in terms of y lets backward reuse the stored
+/// activations instead of the pre-activations.
+#[inline]
+pub fn scaled_tanh_deriv_from_y(y: f32) -> f32 {
+    (TANH_B / TANH_A) * (TANH_A * TANH_A - y * y)
+}
+
+/// Apply the scaled tanh elementwise.
+#[inline]
+pub fn apply_scaled_tanh(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = scaled_tanh(*v);
+    }
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Cross-entropy loss −ln p[label] with clamping for numerical safety.
+#[inline]
+pub fn cross_entropy(probs: &[f32], label: usize) -> f32 {
+    -probs[label].max(1e-12).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tanh_shape() {
+        assert_eq!(scaled_tanh(0.0), 0.0);
+        assert!((scaled_tanh(1e9) - TANH_A).abs() < 1e-4, "saturates at A");
+        assert!((scaled_tanh(-1e9) + TANH_A).abs() < 1e-4);
+        // f(1) = 1.7159 * tanh(2/3) ≈ 1.7159 * 0.58278
+        assert!((scaled_tanh(1.0) - 1.0).abs() < 0.01, "f(1) ≈ 1 by design");
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3f32;
+            let fd = (scaled_tanh(x + h) - scaled_tanh(x - h)) / (2.0 * h);
+            let y = scaled_tanh(x);
+            let an = scaled_tanh_deriv_from_y(y);
+            assert!((fd - an).abs() < 1e-3, "x={x}: fd={fd} analytic={an}");
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut v = [1.0f32, 2.0, 3.0];
+        softmax(&mut v);
+        let s: f32 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let mut v = [1000.0f32, 1001.0, 999.0];
+        softmax(&mut v);
+        assert!(v.iter().all(|p| p.is_finite()));
+        let s: f32 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_basics() {
+        let p = [0.1f32, 0.7, 0.2];
+        assert!((cross_entropy(&p, 1) - (-0.7f32.ln())).abs() < 1e-6);
+        // Zero probability does not produce inf.
+        assert!(cross_entropy(&[0.0, 1.0], 0).is_finite());
+    }
+}

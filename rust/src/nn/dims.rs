@@ -1,0 +1,237 @@
+//! Derived per-layer dimensions and the flat parameter layout.
+//!
+//! From an [`ArchSpec`](crate::config::ArchSpec) we compute, per layer, the
+//! input/output geometry and the range this layer's parameters occupy in the
+//! single flat parameter vector. The flat layout is what makes CHAOS's
+//! per-layer publication cheap: a layer's weights are one contiguous span,
+//! shared between workers, updated with one pass.
+
+use crate::config::{ArchSpec, LayerSpec};
+use std::ops::Range;
+
+/// Geometry + parameter layout for one layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerDims {
+    pub spec: LayerSpec,
+    /// Input feature maps (1 for the input layer itself).
+    pub in_maps: usize,
+    /// Input side length (square maps). For FC/Output this is 1 and
+    /// `in_maps` carries the flattened neuron count.
+    pub in_side: usize,
+    /// Output feature maps.
+    pub out_maps: usize,
+    /// Output side length.
+    pub out_side: usize,
+    /// Number of weights (excluding biases).
+    pub weights: usize,
+    /// Number of biases.
+    pub biases: usize,
+    /// Range of this layer's parameters in the flat parameter vector
+    /// (weights first, then biases).
+    pub params: Range<usize>,
+}
+
+impl LayerDims {
+    /// Output activation element count.
+    pub fn out_len(&self) -> usize {
+        self.out_maps * self.out_side * self.out_side
+    }
+
+    /// Input activation element count.
+    pub fn in_len(&self) -> usize {
+        self.in_maps * self.in_side * self.in_side
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        self.weights + self.biases
+    }
+
+    /// Split a flat layer-parameter slice into (weights, biases).
+    pub fn split_params<'a>(&self, layer_params: &'a [f32]) -> (&'a [f32], &'a [f32]) {
+        debug_assert_eq!(layer_params.len(), self.param_count());
+        layer_params.split_at(self.weights)
+    }
+
+    /// Mutable variant of [`Self::split_params`].
+    pub fn split_params_mut<'a>(
+        &self,
+        layer_params: &'a mut [f32],
+    ) -> (&'a mut [f32], &'a mut [f32]) {
+        debug_assert_eq!(layer_params.len(), self.param_count());
+        layer_params.split_at_mut(self.weights)
+    }
+}
+
+/// Compute dims for every layer of an architecture. The returned vector is
+/// parallel to `arch.layers`.
+pub fn compute_dims(arch: &ArchSpec) -> Vec<LayerDims> {
+    arch.validate().expect("invalid architecture");
+    let mut dims = Vec::with_capacity(arch.layers.len());
+    let mut maps = 1usize;
+    let mut side = 0usize;
+    let mut offset = 0usize;
+    for spec in &arch.layers {
+        let d = match *spec {
+            LayerSpec::Input { side: s } => {
+                side = s;
+                LayerDims {
+                    spec: *spec,
+                    in_maps: 1,
+                    in_side: s,
+                    out_maps: 1,
+                    out_side: s,
+                    weights: 0,
+                    biases: 0,
+                    params: offset..offset,
+                }
+            }
+            LayerSpec::Conv { maps: m, kernel } => {
+                let out_side = side - kernel + 1;
+                let weights = m * maps * kernel * kernel;
+                let d = LayerDims {
+                    spec: *spec,
+                    in_maps: maps,
+                    in_side: side,
+                    out_maps: m,
+                    out_side,
+                    weights,
+                    biases: m,
+                    params: offset..offset + weights + m,
+                };
+                maps = m;
+                side = out_side;
+                d
+            }
+            LayerSpec::MaxPool { kernel } => {
+                let out_side = side / kernel;
+                let d = LayerDims {
+                    spec: *spec,
+                    in_maps: maps,
+                    in_side: side,
+                    out_maps: maps,
+                    out_side,
+                    weights: 0,
+                    biases: 0,
+                    params: offset..offset,
+                };
+                side = out_side;
+                d
+            }
+            LayerSpec::FullyConnected { neurons } => {
+                let inputs = maps * side * side;
+                let weights = neurons * inputs;
+                let d = LayerDims {
+                    spec: *spec,
+                    in_maps: inputs,
+                    in_side: 1,
+                    out_maps: neurons,
+                    out_side: 1,
+                    weights,
+                    biases: neurons,
+                    params: offset..offset + weights + neurons,
+                };
+                maps = neurons;
+                side = 1;
+                d
+            }
+            LayerSpec::Output { classes } => {
+                let inputs = maps * side * side;
+                let weights = classes * inputs;
+                let d = LayerDims {
+                    spec: *spec,
+                    in_maps: inputs,
+                    in_side: 1,
+                    out_maps: classes,
+                    out_side: 1,
+                    weights,
+                    biases: classes,
+                    params: offset..offset + weights + classes,
+                };
+                maps = classes;
+                side = 1;
+                d
+            }
+        };
+        offset = d.params.end;
+        dims.push(d);
+    }
+    dims
+}
+
+/// Total parameter count of an architecture.
+pub fn total_params(dims: &[LayerDims]) -> usize {
+    dims.last().map(|d| d.params.end).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    /// Paper Table 2 weight counts, per parameterized layer.
+    #[test]
+    fn small_matches_table2() {
+        let dims = compute_dims(&ArchSpec::small());
+        // conv1: 85, conv2: 1260, fc: 4550, out: 510
+        let params: Vec<usize> =
+            dims.iter().filter(|d| d.param_count() > 0).map(|d| d.param_count()).collect();
+        assert_eq!(params, vec![85, 1260, 4550, 510]);
+        assert_eq!(total_params(&dims), 85 + 1260 + 4550 + 510);
+    }
+
+    #[test]
+    fn medium_matches_table2() {
+        let dims = compute_dims(&ArchSpec::medium());
+        let params: Vec<usize> =
+            dims.iter().filter(|d| d.param_count() > 0).map(|d| d.param_count()).collect();
+        assert_eq!(params, vec![340, 20040, 54150, 1510]);
+    }
+
+    #[test]
+    fn large_matches_table2() {
+        let dims = compute_dims(&ArchSpec::large());
+        let params: Vec<usize> =
+            dims.iter().filter(|d| d.param_count() > 0).map(|d| d.param_count()).collect();
+        assert_eq!(params, vec![340, 30060, 216100, 135150, 1510]);
+    }
+
+    #[test]
+    fn small_neuron_counts_match_table2() {
+        let dims = compute_dims(&ArchSpec::small());
+        let neurons: Vec<usize> = dims.iter().map(|d| d.out_len()).collect();
+        // input 841, conv 3380, pool 845, conv 810, pool 90, fc 50, out 10
+        assert_eq!(neurons, vec![841, 3380, 845, 810, 90, 50, 10]);
+    }
+
+    #[test]
+    fn large_neuron_counts_match_table2() {
+        let dims = compute_dims(&ArchSpec::large());
+        let neurons: Vec<usize> = dims.iter().map(|d| d.out_len()).collect();
+        // Table 2 (with the documented pool-3 fix -> 3x3x100 = 900)
+        assert_eq!(neurons, vec![841, 13520, 13520, 29040, 7260, 3600, 900, 150, 10]);
+    }
+
+    #[test]
+    fn ranges_are_contiguous_and_disjoint() {
+        for name in crate::config::PAPER_ARCHS {
+            let dims = compute_dims(&ArchSpec::by_name(name).unwrap());
+            let mut expected_start = 0;
+            for d in &dims {
+                assert_eq!(d.params.start, expected_start, "{name}: gap in layout");
+                assert_eq!(d.params.len(), d.param_count());
+                expected_start = d.params.end;
+            }
+        }
+    }
+
+    #[test]
+    fn split_params_partition() {
+        let dims = compute_dims(&ArchSpec::small());
+        let conv1 = &dims[1];
+        let buf = vec![0.0f32; conv1.param_count()];
+        let (w, b) = conv1.split_params(&buf);
+        assert_eq!(w.len(), 80);
+        assert_eq!(b.len(), 5);
+    }
+}

@@ -1,0 +1,152 @@
+//! Fully-connected layer kernels (also used by the output layer, which is a
+//! fully-connected layer followed by softmax).
+//!
+//! Weights are `[neuron][input]` row-major, so the forward pass is a
+//! sequence of contiguous dot products and the backward input-gradient is a
+//! saxpy over the weight rows — both auto-vectorizable.
+
+/// Geometry for one fully-connected layer.
+#[derive(Debug, Clone, Copy)]
+pub struct FcShape {
+    pub inputs: usize,
+    pub outputs: usize,
+}
+
+impl FcShape {
+    pub fn new(inputs: usize, outputs: usize) -> FcShape {
+        assert!(inputs > 0 && outputs > 0);
+        FcShape { inputs, outputs }
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.inputs * self.outputs
+    }
+}
+
+/// Forward: `out[n] = b[n] + Σ_i w[n][i]·in[i]` (pre-activations).
+pub fn fc_forward(s: &FcShape, input: &[f32], weights: &[f32], biases: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(input.len(), s.inputs);
+    debug_assert_eq!(weights.len(), s.weight_len());
+    debug_assert_eq!(biases.len(), s.outputs);
+    debug_assert_eq!(out.len(), s.outputs);
+    for n in 0..s.outputs {
+        let row = &weights[n * s.inputs..(n + 1) * s.inputs];
+        out[n] = super::simd::dot(row, input) + biases[n];
+    }
+}
+
+/// Backward: accumulate `wgrads[n][i] += delta[n]·in[i]`,
+/// `bgrads[n] += delta[n]`, and compute `dinput[i] = Σ_n w[n][i]·delta[n]`
+/// (w.r.t. this layer's input; caller applies the previous activation's
+/// derivative). Pass an empty `dinput` to skip.
+pub fn fc_backward(
+    s: &FcShape,
+    input: &[f32],
+    weights: &[f32],
+    delta: &[f32],
+    wgrads: &mut [f32],
+    bgrads: &mut [f32],
+    dinput: &mut [f32],
+) {
+    debug_assert_eq!(input.len(), s.inputs);
+    debug_assert_eq!(weights.len(), s.weight_len());
+    debug_assert_eq!(delta.len(), s.outputs);
+    debug_assert_eq!(wgrads.len(), s.weight_len());
+    debug_assert_eq!(bgrads.len(), s.outputs);
+    let want_dinput = !dinput.is_empty();
+    if want_dinput {
+        debug_assert_eq!(dinput.len(), s.inputs);
+        dinput.fill(0.0);
+    }
+    for n in 0..s.outputs {
+        let d = delta[n];
+        bgrads[n] += d;
+        let wrow = &weights[n * s.inputs..(n + 1) * s.inputs];
+        let grow = &mut wgrads[n * s.inputs..(n + 1) * s.inputs];
+        for i in 0..s.inputs {
+            grow[i] += d * input[i];
+        }
+        if want_dinput {
+            for i in 0..s.inputs {
+                dinput[i] += d * wrow[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn forward_known_values() {
+        let s = FcShape::new(3, 2);
+        let input = [1.0, 2.0, 3.0];
+        let weights = [1.0, 0.0, 0.0, 0.0, 1.0, 1.0]; // n0 = in0, n1 = in1+in2
+        let biases = [0.5, -0.5];
+        let mut out = [0.0; 2];
+        fc_forward(&s, &input, &weights, &biases, &mut out);
+        assert_eq!(out, [1.5, 4.5]);
+    }
+
+    #[test]
+    fn backward_grads_match_finite_difference() {
+        let mut rng = Pcg32::seeded(5);
+        let s = FcShape::new(7, 4);
+        let input: Vec<f32> = (0..s.inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut weights: Vec<f32> = (0..s.weight_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let biases: Vec<f32> = (0..s.outputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        // Loss = Σ c_n·out_n with random coefficients → delta = c.
+        let coeff: Vec<f32> = (0..s.outputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut wg = vec![0.0; s.weight_len()];
+        let mut bg = vec![0.0; s.outputs];
+        let mut din = vec![0.0; s.inputs];
+        fc_backward(&s, &input, &weights, &coeff, &mut wg, &mut bg, &mut din);
+
+        let loss = |w: &[f32], inp: &[f32]| -> f32 {
+            let mut out = vec![0.0; s.outputs];
+            fc_forward(&s, inp, w, &biases, &mut out);
+            out.iter().zip(&coeff).map(|(o, c)| o * c).sum()
+        };
+        let h = 1e-3;
+        for idx in [0, 3, 11, s.weight_len() - 1] {
+            let orig = weights[idx];
+            weights[idx] = orig + h;
+            let lp = loss(&weights, &input);
+            weights[idx] = orig - h;
+            let lm = loss(&weights, &input);
+            weights[idx] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!((fd - wg[idx]).abs() < 1e-2, "w[{idx}] fd={fd} vs {}", wg[idx]);
+        }
+        let mut input2 = input.clone();
+        for idx in [0, 4, s.inputs - 1] {
+            let orig = input2[idx];
+            input2[idx] = orig + h;
+            let lp = loss(&weights, &input2);
+            input2[idx] = orig - h;
+            let lm = loss(&weights, &input2);
+            input2[idx] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!((fd - din[idx]).abs() < 1e-2, "din[{idx}] fd={fd} vs {}", din[idx]);
+        }
+        for (b, c) in bg.iter().zip(&coeff) {
+            assert!((b - c).abs() < 1e-6, "bias grad equals delta");
+        }
+    }
+
+    #[test]
+    fn backward_accumulates() {
+        let s = FcShape::new(2, 2);
+        let input = [1.0, 2.0];
+        let weights = [0.1, 0.2, 0.3, 0.4];
+        let delta = [1.0, 1.0];
+        let mut wg = vec![0.0; 4];
+        let mut bg = vec![0.0; 2];
+        fc_backward(&s, &input, &weights, &delta, &mut wg, &mut bg, &mut []);
+        fc_backward(&s, &input, &weights, &delta, &mut wg, &mut bg, &mut []);
+        assert_eq!(wg, vec![2.0, 4.0, 2.0, 4.0]);
+        assert_eq!(bg, vec![2.0, 2.0]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Weight initialization.
+//!
+//! Glorot/Xavier-uniform per parameterized layer (biases start at zero).
+//! Initialization is fully determined by the seed, so sequential and
+//! parallel runs start from identical weights — the precondition for the
+//! paper's accuracy-parity comparison (Table 7).
+
+use super::dims::LayerDims;
+use crate::config::LayerSpec;
+use crate::util::Pcg32;
+
+/// Per-layer fan-in/fan-out used for the init scale.
+fn fans(d: &LayerDims) -> (usize, usize) {
+    match d.spec {
+        LayerSpec::Conv { maps: _, kernel } => {
+            let fan_in = d.in_maps * kernel * kernel;
+            let fan_out = d.out_maps * kernel * kernel;
+            (fan_in, fan_out)
+        }
+        LayerSpec::FullyConnected { .. } | LayerSpec::Output { .. } => (d.in_maps, d.out_maps),
+        _ => (1, 1),
+    }
+}
+
+/// Initialize a flat parameter vector for the given layer dims.
+pub fn init_params(dims: &[LayerDims], seed: u64) -> Vec<f32> {
+    let total = super::dims::total_params(dims);
+    let mut params = vec![0.0f32; total];
+    // One PRNG stream per layer: init of layer k does not depend on the
+    // sizes of earlier layers.
+    for (l, d) in dims.iter().enumerate() {
+        if d.param_count() == 0 {
+            continue;
+        }
+        let mut rng = Pcg32::new(seed, l as u64);
+        let (fan_in, fan_out) = fans(d);
+        let r = (6.0f32 / (fan_in + fan_out) as f32).sqrt();
+        let slice = &mut params[d.params.clone()];
+        let (w, b) = slice.split_at_mut(d.weights);
+        rng.fill_uniform(w, -r, r);
+        b.fill(0.0);
+    }
+    params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::nn::dims::compute_dims;
+
+    #[test]
+    fn deterministic() {
+        let dims = compute_dims(&ArchSpec::small());
+        let a = init_params(&dims, 42);
+        let b = init_params(&dims, 42);
+        assert_eq!(a, b);
+        let c = init_params(&dims, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn biases_zero_weights_bounded() {
+        let dims = compute_dims(&ArchSpec::medium());
+        let p = init_params(&dims, 1);
+        for d in &dims {
+            if d.param_count() == 0 {
+                continue;
+            }
+            let slice = &p[d.params.clone()];
+            let (w, b) = d.split_params(slice);
+            assert!(b.iter().all(|&x| x == 0.0));
+            let max = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            assert!(max > 0.0 && max < 1.0, "weights look unscaled: {max}");
+        }
+    }
+
+    #[test]
+    fn nonzero_everywhere_weights() {
+        let dims = compute_dims(&ArchSpec::small());
+        let p = init_params(&dims, 7);
+        // Not a rigorous check, but all-zero weight blocks would break
+        // symmetry-sensitive training.
+        for d in &dims {
+            if d.weights > 0 {
+                let w = &p[d.params.start..d.params.start + d.weights];
+                assert!(w.iter().any(|&x| x != 0.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! From-scratch CNN substrate (the analogue of the Cireşan C++ network the
+//! paper parallelizes): convolution, max-pooling, fully-connected and
+//! softmax-output layers over flat f32 buffers, with per-layer gradient
+//! emission hooks that the CHAOS coordinator uses for its controlled
+//! Hogwild updates.
+
+pub mod activation;
+pub mod conv;
+pub mod dims;
+pub mod fc;
+pub mod init;
+pub mod network;
+pub mod pool;
+pub mod simd;
+
+pub use dims::{compute_dims, total_params, LayerDims};
+pub use network::{Network, ParamSource, Scratch};

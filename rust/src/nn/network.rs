@@ -1,0 +1,522 @@
+//! The network orchestrator: forward/backward over an architecture's layer
+//! stack, with pluggable parameter sources so the same code path serves
+//! the sequential engine (plain `Vec<f32>`) and the CHAOS workers (shared
+//! atomic store, read on demand — §4.1 "reads are performed on demand").
+//!
+//! Backward emits each layer's gradients through a callback **as soon as
+//! that layer's computation finishes** — the hook CHAOS uses to publish
+//! non-instant, per-layer updates without waiting for the whole sample
+//! (§4.1 "Controlled HogWild").
+
+use super::activation::{
+    apply_scaled_tanh, cross_entropy, scaled_tanh_deriv_from_y, softmax,
+};
+use super::conv::{conv_backward, conv_forward, ConvShape};
+use super::dims::{compute_dims, total_params, LayerDims};
+use super::fc::{fc_backward, fc_forward, FcShape};
+use super::pool::{pool_backward, pool_forward, PoolShape};
+use crate::config::{ArchSpec, LayerSpec};
+use crate::util::timer::{LayerClass, LayerTimes};
+use std::time::Instant;
+
+/// Read access to the flat parameter vector. Implementations copy the
+/// requested span into a caller-provided buffer ("read on demand").
+pub trait ParamSource {
+    fn load(&self, range: std::ops::Range<usize>, buf: &mut [f32]);
+}
+
+/// Plain flat vector (sequential engine, tests).
+impl ParamSource for &[f32] {
+    fn load(&self, range: std::ops::Range<usize>, buf: &mut [f32]) {
+        buf.copy_from_slice(&self[range]);
+    }
+}
+
+impl ParamSource for Vec<f32> {
+    fn load(&self, range: std::ops::Range<usize>, buf: &mut [f32]) {
+        buf.copy_from_slice(&self[range]);
+    }
+}
+
+/// A compiled network: architecture plus derived geometry.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub arch: ArchSpec,
+    pub dims: Vec<LayerDims>,
+    pub total_params: usize,
+}
+
+impl Network {
+    pub fn new(arch: ArchSpec) -> Network {
+        let dims = compute_dims(&arch);
+        let total_params = total_params(&dims);
+        Network { arch, dims, total_params }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Network> {
+        ArchSpec::by_name(name)
+            .map(Network::new)
+            .ok_or_else(|| anyhow::anyhow!("unknown architecture '{name}'"))
+    }
+
+    /// Deterministic initial parameters.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        super::init::init_params(&self.dims, seed)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.dims.last().unwrap().out_maps
+    }
+
+    /// Allocate per-worker scratch buffers for this network.
+    pub fn scratch(&self) -> Scratch {
+        let acts: Vec<Vec<f32>> = self.dims.iter().map(|d| vec![0.0; d.out_len()]).collect();
+        let switches: Vec<Vec<u32>> = self
+            .dims
+            .iter()
+            .map(|d| match d.spec {
+                LayerSpec::MaxPool { .. } => vec![0u32; d.out_len()],
+                _ => Vec::new(),
+            })
+            .collect();
+        let max_act = self.dims.iter().map(|d| d.out_len()).max().unwrap_or(0);
+        let max_params = self.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
+        Scratch {
+            acts,
+            switches,
+            delta_a: vec![0.0; max_act],
+            delta_b: vec![0.0; max_act],
+            param_buf: vec![0.0; max_params],
+            grad_buf: vec![0.0; max_params],
+        }
+    }
+
+    /// Forward-propagate one image; returns the softmax probabilities
+    /// (stored in the scratch's last activation buffer).
+    pub fn forward<'s, P: ParamSource>(
+        &self,
+        params: &P,
+        image: &[f32],
+        scratch: &'s mut Scratch,
+        timers: Option<&LayerTimes>,
+    ) -> &'s [f32] {
+        let n_layers = self.dims.len();
+        debug_assert_eq!(image.len(), self.dims[0].out_len(), "input size mismatch");
+        scratch.acts[0].copy_from_slice(image);
+
+        for l in 1..n_layers {
+            let d = &self.dims[l];
+            let t0 = timers.map(|_| Instant::now());
+            // Split so we can borrow acts[l-1] and acts[l] simultaneously.
+            let (prev_acts, rest) = scratch.acts.split_at_mut(l);
+            let input = &prev_acts[l - 1];
+            let out = &mut rest[0];
+            let class = match d.spec {
+                LayerSpec::Input { .. } => unreachable!("input after layer 0"),
+                LayerSpec::Conv { maps, kernel } => {
+                    let shape = ConvShape {
+                        in_maps: d.in_maps,
+                        in_side: d.in_side,
+                        out_maps: maps,
+                        out_side: d.out_side,
+                        kernel,
+                    };
+                    let pbuf = &mut scratch.param_buf[..d.param_count()];
+                    params.load(d.params.clone(), pbuf);
+                    let (w, b) = pbuf.split_at(d.weights);
+                    conv_forward(&shape, input, w, b, out);
+                    apply_scaled_tanh(out);
+                    LayerClass::ConvForward
+                }
+                LayerSpec::MaxPool { kernel } => {
+                    let shape = PoolShape {
+                        maps: d.in_maps,
+                        in_side: d.in_side,
+                        out_side: d.out_side,
+                        kernel,
+                    };
+                    pool_forward(&shape, input, out, &mut scratch.switches[l]);
+                    LayerClass::PoolForward
+                }
+                LayerSpec::FullyConnected { neurons } => {
+                    let shape = FcShape { inputs: d.in_maps, outputs: neurons };
+                    let pbuf = &mut scratch.param_buf[..d.param_count()];
+                    params.load(d.params.clone(), pbuf);
+                    let (w, b) = pbuf.split_at(d.weights);
+                    fc_forward(&shape, input, w, b, out);
+                    apply_scaled_tanh(out);
+                    LayerClass::FcForward
+                }
+                LayerSpec::Output { classes } => {
+                    let shape = FcShape { inputs: d.in_maps, outputs: classes };
+                    let pbuf = &mut scratch.param_buf[..d.param_count()];
+                    params.load(d.params.clone(), pbuf);
+                    let (w, b) = pbuf.split_at(d.weights);
+                    fc_forward(&shape, input, w, b, out);
+                    softmax(out);
+                    LayerClass::OutputForward
+                }
+            };
+            if let (Some(t), Some(start)) = (timers, t0) {
+                t.add(class, start.elapsed().as_nanos() as u64);
+            }
+        }
+        &scratch.acts[n_layers - 1]
+    }
+
+    /// Cross-entropy loss of the last forward pass.
+    pub fn loss(&self, scratch: &Scratch, label: usize) -> f32 {
+        cross_entropy(scratch.acts.last().unwrap(), label)
+    }
+
+    /// Predicted class of the last forward pass.
+    pub fn prediction(&self, scratch: &Scratch) -> usize {
+        crate::tensor::argmax(scratch.acts.last().unwrap())
+    }
+
+    /// Back-propagate from the last forward pass. For each parameterized
+    /// layer, `on_grads(layer_index, dims, grads)` is invoked right after
+    /// that layer's gradients are complete (back-to-front order) — grads is
+    /// the flat `[weights..., biases...]` gradient of this sample.
+    pub fn backward<P: ParamSource>(
+        &self,
+        params: &P,
+        label: usize,
+        scratch: &mut Scratch,
+        timers: Option<&LayerTimes>,
+        mut on_grads: impl FnMut(usize, &LayerDims, &[f32]),
+    ) {
+        let n_layers = self.dims.len();
+        debug_assert!(label < self.num_classes());
+
+        // delta at the output layer: softmax + cross-entropy ⇒ p − onehot
+        {
+            let probs = scratch.acts.last().unwrap();
+            let delta = &mut scratch.delta_a[..probs.len()];
+            delta.copy_from_slice(probs);
+            delta[label] -= 1.0;
+        }
+
+        // Walking back: `delta_a[..d.out_len()]` holds ∂L/∂(pre-activation)
+        // for conv/fc/output layers and ∂L/∂(output) for pool layers.
+        for l in (1..n_layers).rev() {
+            let d = self.dims[l].clone();
+            let t0 = timers.map(|_| Instant::now());
+            let is_first = l == 1; // layer below is the input layer
+            let input_len = d.in_len();
+
+            let class = match d.spec {
+                LayerSpec::Input { .. } => unreachable!(),
+                LayerSpec::Conv { maps, kernel } => {
+                    let shape = ConvShape {
+                        in_maps: d.in_maps,
+                        in_side: d.in_side,
+                        out_maps: maps,
+                        out_side: d.out_side,
+                        kernel,
+                    };
+                    let pbuf = &mut scratch.param_buf[..d.param_count()];
+                    params.load(d.params.clone(), pbuf);
+                    let (w, _b) = pbuf.split_at(d.weights);
+                    let gbuf = &mut scratch.grad_buf[..d.param_count()];
+                    gbuf.fill(0.0);
+                    let (wg, bg) = gbuf.split_at_mut(d.weights);
+                    let delta = &scratch.delta_a[..d.out_len()];
+                    let dinput: &mut [f32] = if is_first {
+                        &mut []
+                    } else {
+                        &mut scratch.delta_b[..input_len]
+                    };
+                    conv_backward(&shape, &scratch.acts[l - 1], w, delta, wg, bg, dinput);
+                    on_grads(l, &d, &scratch.grad_buf[..d.param_count()]);
+                    LayerClass::ConvBackward
+                }
+                LayerSpec::MaxPool { kernel } => {
+                    let shape = PoolShape {
+                        maps: d.in_maps,
+                        in_side: d.in_side,
+                        out_side: d.out_side,
+                        kernel,
+                    };
+                    let delta = &scratch.delta_a[..d.out_len()];
+                    pool_backward(
+                        &shape,
+                        delta,
+                        &scratch.switches[l],
+                        &mut scratch.delta_b[..input_len],
+                    );
+                    LayerClass::PoolBackward
+                }
+                LayerSpec::FullyConnected { neurons } | LayerSpec::Output { classes: neurons } => {
+                    let shape = FcShape { inputs: d.in_maps, outputs: neurons };
+                    let pbuf = &mut scratch.param_buf[..d.param_count()];
+                    params.load(d.params.clone(), pbuf);
+                    let (w, _b) = pbuf.split_at(d.weights);
+                    let gbuf = &mut scratch.grad_buf[..d.param_count()];
+                    gbuf.fill(0.0);
+                    let (wg, bg) = gbuf.split_at_mut(d.weights);
+                    let delta = &scratch.delta_a[..d.out_len()];
+                    let dinput: &mut [f32] = if is_first {
+                        &mut []
+                    } else {
+                        &mut scratch.delta_b[..input_len]
+                    };
+                    fc_backward(&shape, &scratch.acts[l - 1], w, delta, wg, bg, dinput);
+                    on_grads(l, &d, &scratch.grad_buf[..d.param_count()]);
+                    if matches!(d.spec, LayerSpec::Output { .. }) {
+                        LayerClass::OutputBackward
+                    } else {
+                        LayerClass::FcBackward
+                    }
+                }
+            };
+
+            // Convert ∂L/∂(output of layer l−1) into ∂L/∂(pre-activation)
+            // when layer l−1 owns a tanh; pools pass through unchanged.
+            if !is_first {
+                let prev_spec = self.dims[l - 1].spec;
+                let prev_has_tanh = matches!(
+                    prev_spec,
+                    LayerSpec::Conv { .. } | LayerSpec::FullyConnected { .. }
+                );
+                if prev_has_tanh {
+                    let prev_acts = &scratch.acts[l - 1];
+                    let din = &mut scratch.delta_b[..input_len];
+                    for (dv, &y) in din.iter_mut().zip(prev_acts.iter()) {
+                        *dv *= scaled_tanh_deriv_from_y(y);
+                    }
+                }
+                std::mem::swap(&mut scratch.delta_a, &mut scratch.delta_b);
+            }
+
+            if let (Some(t), Some(start)) = (timers, t0) {
+                t.add(class, start.elapsed().as_nanos() as u64);
+            }
+        }
+    }
+
+    /// Convenience: forward + backward one labelled image against a plain
+    /// parameter vector, applying the SGD update in place. Returns
+    /// (loss, correct). This is the sequential per-sample step.
+    pub fn sgd_step(
+        &self,
+        params: &mut Vec<f32>,
+        image: &[f32],
+        label: usize,
+        eta: f32,
+        scratch: &mut Scratch,
+        timers: Option<&LayerTimes>,
+    ) -> (f32, bool) {
+        // Reads (layer loads) and writes (per-layer SGD updates) interleave
+        // during backward — exactly the paper's scheme, where local weights
+        // are updated instantly. Both go through one raw pointer so the
+        // aliasing provenance is shared; single-threaded, and within a layer
+        // the load always happens before the callback's write.
+        let ptr = params.as_mut_ptr();
+        let len = params.len();
+        let src = ParamsPtr(ptr, len);
+        let probs = self.forward(&src, image, scratch, timers);
+        let loss = cross_entropy(probs, label);
+        let correct = crate::tensor::argmax(probs) == label;
+        self.backward(&src, label, scratch, timers, |_, d, grads| {
+            debug_assert!(d.params.end <= len);
+            // Safety: see above — exclusive single-threaded access.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(ptr.add(d.params.start), d.params.len())
+            };
+            for (w, g) in dst.iter_mut().zip(grads) {
+                *w -= eta * g;
+            }
+        });
+        (loss, correct)
+    }
+}
+
+/// Raw-pointer parameter source used by `sgd_step` to allow in-place
+/// updates between layer computations (mirrors the paper's instant local
+/// updates). Safe because `sgd_step` is single-threaded and the network
+/// loads each layer's parameters before its callback runs.
+struct ParamsPtr(*mut f32, usize);
+
+impl ParamSource for ParamsPtr {
+    fn load(&self, range: std::ops::Range<usize>, buf: &mut [f32]) {
+        debug_assert!(range.end <= self.1);
+        let src = unsafe { std::slice::from_raw_parts(self.0.add(range.start), range.len()) };
+        buf.copy_from_slice(src);
+    }
+}
+
+/// Per-worker mutable state: activations, pool switches, delta ping-pong
+/// buffers, and staging buffers for on-demand parameter reads and per-layer
+/// gradient accumulation. Everything here is thread-private in CHAOS
+/// (§4.2(5): "most of the variables thread private to achieve data
+/// locality").
+#[derive(Debug, Clone)]
+pub struct Scratch {
+    pub acts: Vec<Vec<f32>>,
+    pub switches: Vec<Vec<u32>>,
+    delta_a: Vec<f32>,
+    delta_b: Vec<f32>,
+    param_buf: Vec<f32>,
+    grad_buf: Vec<f32>,
+}
+
+impl Scratch {
+    /// Probabilities of the last forward pass.
+    pub fn probs(&self) -> &[f32] {
+        self.acts.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::util::Pcg32;
+
+    fn tiny_arch() -> ArchSpec {
+        ArchSpec::tiny()
+    }
+
+    fn rand_image(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn forward_produces_distribution() {
+        let net = Network::new(tiny_arch());
+        let params = net.init_params(3);
+        let mut scratch = net.scratch();
+        let mut rng = Pcg32::seeded(4);
+        let img = rand_image(&mut rng, 13 * 13);
+        let probs = net.forward(&params.as_slice(), &img, &mut scratch, None);
+        assert_eq!(probs.len(), 10);
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "softmax sums to 1, got {sum}");
+        assert!(probs.iter().all(|&p| p >= 0.0));
+    }
+
+    #[test]
+    fn full_network_gradcheck() {
+        // The decisive correctness test: analytic gradients of the complete
+        // stack (conv/pool/tanh/fc/softmax-CE) against central differences.
+        let net = Network::new(tiny_arch());
+        let mut params = net.init_params(7);
+        let mut scratch = net.scratch();
+        let mut rng = Pcg32::seeded(8);
+        let img = rand_image(&mut rng, 13 * 13);
+        let label = 3usize;
+
+        net.forward(&params.as_slice(), &img, &mut scratch, None);
+        let mut analytic = vec![0.0f32; net.total_params];
+        net.backward(&params.as_slice(), label, &mut scratch, None, |_, d, grads| {
+            analytic[d.params.clone()].copy_from_slice(grads);
+        });
+
+        let loss_of = |p: &[f32], scratch: &mut Scratch| -> f64 {
+            net.forward(&p, &img, scratch, None);
+            net.loss(scratch, label) as f64
+        };
+        let h = 1e-3f32;
+        let mut rng2 = Pcg32::seeded(99);
+        let mut checked = 0;
+        // Sample parameters from every parameterized layer.
+        for d in net.dims.clone() {
+            if d.param_count() == 0 {
+                continue;
+            }
+            for _ in 0..6 {
+                let idx = d.params.start + rng2.range(0, d.param_count());
+                let orig = params[idx];
+                params[idx] = orig + h;
+                let lp = loss_of(params.as_slice(), &mut scratch);
+                params[idx] = orig - h;
+                let lm = loss_of(params.as_slice(), &mut scratch);
+                params[idx] = orig;
+                let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+                let an = analytic[idx];
+                // Pool argmax ties can make FD noisy; tolerance is loose
+                // but catches sign/structure errors decisively.
+                assert!(
+                    (fd - an).abs() < 5e-3 + 0.05 * fd.abs().max(an.abs()),
+                    "param {idx} (layer {:?}): fd={fd} analytic={an}",
+                    d.spec
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 24);
+    }
+
+    #[test]
+    fn sgd_step_reduces_loss_on_repeated_sample() {
+        let net = Network::new(tiny_arch());
+        let mut params = net.init_params(5);
+        let mut scratch = net.scratch();
+        let mut rng = Pcg32::seeded(10);
+        let img = rand_image(&mut rng, 13 * 13);
+        let label = 7usize;
+        let (first_loss, _) = net.sgd_step(&mut params, &img, label, 0.05, &mut scratch, None);
+        let mut last = first_loss;
+        for _ in 0..30 {
+            let (l, _) = net.sgd_step(&mut params, &img, label, 0.05, &mut scratch, None);
+            last = l;
+        }
+        assert!(
+            last < first_loss * 0.5,
+            "loss should collapse when overfitting one sample: {first_loss} -> {last}"
+        );
+    }
+
+    #[test]
+    fn grads_emitted_back_to_front_for_all_param_layers() {
+        let net = Network::new(tiny_arch());
+        let params = net.init_params(2);
+        let mut scratch = net.scratch();
+        let mut rng = Pcg32::seeded(1);
+        let img = rand_image(&mut rng, 13 * 13);
+        net.forward(&params.as_slice(), &img, &mut scratch, None);
+        let mut order = Vec::new();
+        net.backward(&params.as_slice(), 0, &mut scratch, None, |l, _, _| order.push(l));
+        assert_eq!(order, vec![6, 5, 3, 1], "output, fc, conv2, conv1");
+    }
+
+    #[test]
+    fn timers_populate_all_classes() {
+        let net = Network::new(tiny_arch());
+        let params = net.init_params(2);
+        let mut scratch = net.scratch();
+        let timers = LayerTimes::new();
+        let mut rng = Pcg32::seeded(1);
+        let img = rand_image(&mut rng, 13 * 13);
+        net.forward(&params.as_slice(), &img, &mut scratch, Some(&timers));
+        net.backward(&params.as_slice(), 1, &mut scratch, Some(&timers), |_, _, _| {});
+        use crate::util::timer::LayerClass as LC;
+        for c in [
+            LC::ConvForward,
+            LC::ConvBackward,
+            LC::PoolForward,
+            LC::PoolBackward,
+            LC::FcForward,
+            LC::FcBackward,
+            LC::OutputForward,
+            LC::OutputBackward,
+        ] {
+            assert!(timers.get_secs(c) > 0.0, "no time recorded for {:?}", c);
+        }
+    }
+
+    #[test]
+    fn paper_architectures_run_end_to_end() {
+        let mut rng = Pcg32::seeded(6);
+        let img = rand_image(&mut rng, 29 * 29);
+        for name in crate::config::PAPER_ARCHS {
+            let net = Network::from_name(name).unwrap();
+            let mut params = net.init_params(1);
+            let mut scratch = net.scratch();
+            let (loss, _) = net.sgd_step(&mut params, &img, 4, 0.001, &mut scratch, None);
+            assert!(loss.is_finite(), "{name}: non-finite loss");
+            assert!(loss > 0.0);
+        }
+    }
+}

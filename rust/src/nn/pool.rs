@@ -1,0 +1,217 @@
+//! Max-pooling layer (kernel k, stride k — LeNet-style non-overlapping
+//! windows; the large network's 1×1 pooling degenerates to identity).
+//!
+//! Forward records the argmax position of every window so backward can
+//! route deltas to the winning input ("switches", as in the original
+//! LeNet/Cireşan code).
+
+/// Geometry for one pooling layer.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolShape {
+    pub maps: usize,
+    pub in_side: usize,
+    pub out_side: usize,
+    pub kernel: usize,
+}
+
+impl PoolShape {
+    pub fn new(maps: usize, in_side: usize, kernel: usize) -> PoolShape {
+        assert!(kernel > 0 && kernel <= in_side);
+        PoolShape { maps, in_side, out_side: in_side / kernel, kernel }
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.maps * self.in_side * self.in_side
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.maps * self.out_side * self.out_side
+    }
+}
+
+/// Forward max-pool. `switches[o]` receives the flat input index of the
+/// maximum for output element `o`.
+pub fn pool_forward(s: &PoolShape, input: &[f32], out: &mut [f32], switches: &mut [u32]) {
+    debug_assert_eq!(input.len(), s.in_len());
+    debug_assert_eq!(out.len(), s.out_len());
+    debug_assert_eq!(switches.len(), s.out_len());
+
+    let k = s.kernel;
+    let is = s.in_side;
+    let os = s.out_side;
+    let imap = is * is;
+    let omap = os * os;
+
+    for m in 0..s.maps {
+        let in_map = &input[m * imap..(m + 1) * imap];
+        for oy in 0..os {
+            for ox in 0..os {
+                let mut best = f32::NEG_INFINITY;
+                let mut best_idx = 0u32;
+                for ky in 0..k {
+                    let row = (oy * k + ky) * is + ox * k;
+                    for kx in 0..k {
+                        let idx = row + kx;
+                        let v = in_map[idx];
+                        if v > best {
+                            best = v;
+                            best_idx = (m * imap + idx) as u32;
+                        }
+                    }
+                }
+                let o = m * omap + oy * os + ox;
+                out[o] = best;
+                switches[o] = best_idx;
+            }
+        }
+    }
+}
+
+/// Backward max-pool: route each output delta to the recorded argmax input.
+/// `dinput` is overwritten.
+pub fn pool_backward(s: &PoolShape, delta: &[f32], switches: &[u32], dinput: &mut [f32]) {
+    debug_assert_eq!(delta.len(), s.out_len());
+    debug_assert_eq!(switches.len(), s.out_len());
+    debug_assert_eq!(dinput.len(), s.in_len());
+    dinput.fill(0.0);
+    for (o, &d) in delta.iter().enumerate() {
+        dinput[switches[o] as usize] += d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Pcg32};
+
+    #[test]
+    fn forward_picks_window_max() {
+        // 1 map, 4x4 -> 2x2 with kernel 2.
+        let s = PoolShape::new(1, 4, 2);
+        #[rustfmt::skip]
+        let input = [
+            1.0, 2.0,   5.0, 1.0,
+            3.0, 4.0,   0.0, 2.0,
+            9.0, 0.0,   1.0, 1.0,
+            0.0, 0.0,   1.0, 8.0,
+        ];
+        let mut out = [0.0; 4];
+        let mut sw = [0u32; 4];
+        pool_forward(&s, &input, &mut out, &mut sw);
+        assert_eq!(out, [4.0, 5.0, 9.0, 8.0]);
+        assert_eq!(sw, [5, 2, 8, 15]);
+    }
+
+    #[test]
+    fn identity_pool_is_identity() {
+        let s = PoolShape::new(2, 3, 1);
+        let input: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let mut out = vec![0.0; 18];
+        let mut sw = vec![0u32; 18];
+        pool_forward(&s, &input, &mut out, &mut sw);
+        assert_eq!(out, input);
+        for (i, &x) in sw.iter().enumerate() {
+            assert_eq!(x as usize, i);
+        }
+    }
+
+    #[test]
+    fn backward_routes_to_argmax() {
+        let s = PoolShape::new(1, 4, 2);
+        #[rustfmt::skip]
+        let input = [
+            1.0, 2.0,   5.0, 1.0,
+            3.0, 4.0,   0.0, 2.0,
+            9.0, 0.0,   1.0, 1.0,
+            0.0, 0.0,   1.0, 8.0,
+        ];
+        let mut out = [0.0; 4];
+        let mut sw = [0u32; 4];
+        pool_forward(&s, &input, &mut out, &mut sw);
+        let delta = [10.0, 20.0, 30.0, 40.0];
+        let mut din = [0.0; 16];
+        pool_backward(&s, &delta, &sw, &mut din);
+        assert_eq!(din[5], 10.0);
+        assert_eq!(din[2], 20.0);
+        assert_eq!(din[8], 30.0);
+        assert_eq!(din[15], 40.0);
+        assert_eq!(din.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn switch_always_within_window() {
+        proptest::run(
+            proptest::Config { cases: 40, max_size: 6, ..Default::default() },
+            |rng, size| {
+                let maps = rng.range(1, 4);
+                let kernel = rng.range(1, size.min(4) + 1);
+                let out_side = rng.range(1, 5);
+                let in_side = kernel * out_side;
+                let s = PoolShape::new(maps, in_side, kernel);
+                let input: Vec<f32> =
+                    (0..s.in_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                (s, input)
+            },
+            |(s, input)| {
+                let mut out = vec![0.0; s.out_len()];
+                let mut sw = vec![0u32; s.out_len()];
+                pool_forward(s, input, &mut out, &mut sw);
+                let imap = s.in_side * s.in_side;
+                let omap = s.out_side * s.out_side;
+                for m in 0..s.maps {
+                    for oy in 0..s.out_side {
+                        for ox in 0..s.out_side {
+                            let o = m * omap + oy * s.out_side + ox;
+                            let idx = sw[o] as usize;
+                            // window membership
+                            let mi = idx / imap;
+                            let rem = idx % imap;
+                            let y = rem / s.in_side;
+                            let x = rem % s.in_side;
+                            if mi != m
+                                || y / s.kernel != oy
+                                || x / s.kernel != ox
+                                || input[idx] != out[o]
+                            {
+                                return Err(format!(
+                                    "switch {idx} outside window for out {o}"
+                                ));
+                            }
+                            // maximality
+                            for ky in 0..s.kernel {
+                                for kx in 0..s.kernel {
+                                    let cand = m * imap
+                                        + (oy * s.kernel + ky) * s.in_side
+                                        + ox * s.kernel
+                                        + kx;
+                                    if input[cand] > out[o] {
+                                        return Err(format!(
+                                            "out {o} not the max of its window"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn backward_conserves_delta_mass() {
+        let mut rng = Pcg32::seeded(3);
+        let s = PoolShape::new(3, 6, 2);
+        let input: Vec<f32> = (0..s.in_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut out = vec![0.0; s.out_len()];
+        let mut sw = vec![0u32; s.out_len()];
+        pool_forward(&s, &input, &mut out, &mut sw);
+        let delta: Vec<f32> = (0..s.out_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut din = vec![0.0; s.in_len()];
+        pool_backward(&s, &delta, &sw, &mut din);
+        let sum_d: f32 = delta.iter().sum();
+        let sum_i: f32 = din.iter().sum();
+        assert!((sum_d - sum_i).abs() < 1e-4, "delta mass must be conserved");
+    }
+}

@@ -1,0 +1,88 @@
+//! Vector-friendly primitives for the hot loops.
+//!
+//! Rust/LLVM will not reassociate floating-point reductions, so a naive
+//! `acc += a[i] * b[i]` dot product is a *scalar* dependency chain even at
+//! opt-level 3. Splitting the accumulator into 8 independent lanes lets
+//! the auto-vectorizer emit packed mul/add — the same transformation the
+//! paper's `#pragma omp simd` performed on the Phi's 512-bit VPU
+//! (§Perf iteration 3 in EXPERIMENTS.md measures the win).
+
+/// Dot product with 8 independent accumulator lanes (4-lane pass over the
+/// remainder, scalar only for the last ≤3 elements — the large network's
+/// 6-wide map rows would otherwise fall back to a scalar chain).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    // Exact-size slices help LLVM drop bounds checks.
+    let (a8, a_rest) = a.split_at(chunks * 8);
+    let (b8, b_rest) = b.split_at(chunks * 8);
+    for (ca, cb) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    let quads = a_rest.len() / 4;
+    let (a4, a_tail) = a_rest.split_at(quads * 4);
+    let (b4, b_tail) = b_rest.split_at(quads * 4);
+    if quads > 0 {
+        let mut q = [0.0f32; 4];
+        for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+            for l in 0..4 {
+                q[l] += ca[l] * cb[l];
+            }
+        }
+        s += (q[0] + q[1]) + (q[2] + q[3]);
+    }
+    for (x, y) in a_tail.iter().zip(b_tail) {
+        s += x * y;
+    }
+    s
+}
+
+/// `dst += w * src` over equal-length slices (saxpy). No reduction, so the
+/// plain loop already vectorizes; kept as a named primitive for clarity.
+#[inline]
+pub fn saxpy(dst: &mut [f32], src: &[f32], w: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += w * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [0, 1, 7, 8, 9, 16, 31, 100, 841] {
+            let a: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot(&a, &b);
+            assert!(
+                (naive - fast).abs() < 1e-4 * (1.0 + naive.abs()),
+                "n={n}: {naive} vs {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn saxpy_matches_naive() {
+        let mut rng = Pcg32::seeded(2);
+        let src: Vec<f32> = (0..50).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut dst = vec![1.0f32; 50];
+        let mut expect = dst.clone();
+        saxpy(&mut dst, &src, 0.5);
+        for (e, &s) in expect.iter_mut().zip(&src) {
+            *e += 0.5 * s;
+        }
+        assert_eq!(dst, expect);
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's analytic performance model (§5.2, Listing 2, Tables 3/4)
+//! and its constants. Regenerates Figs 11–13 and Tables 8/9, and predicts
+//! execution times for thread counts beyond the 7120P's 244 hardware
+//! threads.
+
+mod contention;
+mod model;
+mod params;
+
+pub use contention::{
+    measured as contention_measured, paper_predicted, ContentionModel, MEASURED_THREADS,
+};
+pub use model::{Breakdown, PerfModel, Scenario};
+pub use params::{
+    arch_constants, cpi, cpi_for_threads_per_core, threads_per_core, ArchConstants, LayerCosts,
+    CLOCK_HZ, CORE_I5_SPEED_VS_PHI1T, OPERATION_FACTOR, PHI_CORES, XEON_E5_SPEED_VS_PHI1T,
+};

@@ -1,0 +1,239 @@
+//! Performance-model constants — paper Table 3, verbatim.
+//!
+//! Hardware-dependent constants describe the Intel Xeon Phi 7120P (61
+//! cores, 1.238 GHz, 4 hardware threads per core with the round-robin CPI
+//! schedule 1/1/1.5/2) and the two host CPUs the paper compares against.
+//! Hardware-independent constants are the per-architecture operation
+//! counts the authors derived for FProp/BProp/Prep.
+
+use crate::config::{ArchSpec, LayerSpec};
+use crate::nn::compute_dims;
+
+/// Xeon Phi core count (7120P).
+pub const PHI_CORES: usize = 61;
+/// Clock of one processing unit, Hz (Table 3: s = 1.238 GHz).
+pub const CLOCK_HZ: f64 = 1.238e9;
+/// Table 3: OperationFactor = 15 ("adjusted to closely match the measured
+/// value for 15 threads … at the same time account for vectorization").
+pub const OPERATION_FACTOR: f64 = 15.0;
+
+/// Relative sequential speed of the comparison hosts versus one Phi
+/// thread, derived from the paper's own speedup triple (103× vs Phi 1T,
+/// 14× vs Xeon E5, 58× vs Core i5 ⇒ E5 ≈ 103/14, i5 ≈ 103/58).
+pub const XEON_E5_SPEED_VS_PHI1T: f64 = 103.0 / 14.0;
+pub const CORE_I5_SPEED_VS_PHI1T: f64 = 103.0 / 58.0;
+
+/// Best theoretical CPI per thread for a given threads-per-core occupancy
+/// (Table 3: 1–2 threads → 1, 3 threads → 1.5, 4 threads → 2).
+pub fn cpi_for_threads_per_core(tpc: usize) -> f64 {
+    match tpc {
+        0 | 1 | 2 => 1.0,
+        3 => 1.5,
+        _ => 2.0,
+    }
+}
+
+/// Threads-per-core occupancy for `p` threads. Up to 244 threads this is
+/// the real 61-core Phi. Beyond that the paper models future parts; its
+/// Table-8 numbers are reproduced best by a 3-way-occupancy CPI (1.5) —
+/// full 4-way (CPI 2) overshoots the large net by >30% while CPI 1
+/// undershoots small/medium. We use 3 (CPI 1.5) and record the residual
+/// deviation in EXPERIMENTS.md.
+pub fn threads_per_core(p: usize) -> usize {
+    if p == 0 {
+        1
+    } else if p <= 4 * PHI_CORES {
+        p.div_ceil(PHI_CORES)
+    } else {
+        3
+    }
+}
+
+/// CPI for a thread count (convenience composition).
+pub fn cpi(p: usize) -> f64 {
+    cpi_for_threads_per_core(threads_per_core(p))
+}
+
+/// Per-architecture model constants (Table 3).
+#[derive(Debug, Clone, Copy)]
+pub struct ArchConstants {
+    /// # FProp operations / image.
+    pub fprop_ops: f64,
+    /// # BProp operations / image.
+    pub bprop_ops: f64,
+    /// # operations for preparations.
+    pub prep_ops: f64,
+    /// Measured forward time / image on one Phi thread (ms) — prediction b.
+    pub t_fprop_ms: f64,
+    /// Measured backward time / image on one Phi thread (ms).
+    pub t_bprop_ms: f64,
+    /// Epochs the paper trains this architecture.
+    pub epochs: usize,
+}
+
+/// Table 3 constants by architecture name.
+pub fn arch_constants(arch: &str) -> Option<ArchConstants> {
+    match arch {
+        "small" => Some(ArchConstants {
+            fprop_ops: 58_000.0,
+            bprop_ops: 524_000.0,
+            prep_ops: 1e9,
+            t_fprop_ms: 1.45,
+            t_bprop_ms: 5.3,
+            epochs: 70,
+        }),
+        "medium" => Some(ArchConstants {
+            fprop_ops: 559_000.0,
+            bprop_ops: 6_119_000.0,
+            prep_ops: 1e10,
+            t_fprop_ms: 12.55,
+            t_bprop_ms: 69.73,
+            epochs: 70,
+        }),
+        "large" => Some(ArchConstants {
+            fprop_ops: 5_349_000.0,
+            bprop_ops: 73_178_000.0,
+            prep_ops: 1e11,
+            t_fprop_ms: 148.88,
+            t_bprop_ms: 859.19,
+            epochs: 15,
+        }),
+        _ => None,
+    }
+}
+
+/// Per-layer cost weights (MAC-style operation counts) computed from the
+/// architecture geometry. The analytic model uses the paper's aggregate
+/// constants; the simulator distributes them over layers proportionally to
+/// these weights to regenerate the per-layer tables (Table 5/6).
+#[derive(Debug, Clone)]
+pub struct LayerCosts {
+    /// Parallel to the arch's layers: (forward_ops, backward_ops).
+    pub per_layer: Vec<(f64, f64)>,
+}
+
+impl LayerCosts {
+    pub fn of(arch: &ArchSpec) -> LayerCosts {
+        let dims = compute_dims(arch);
+        let per_layer = dims
+            .iter()
+            .map(|d| match d.spec {
+                LayerSpec::Input { .. } => (0.0, 0.0),
+                LayerSpec::Conv { maps, kernel } => {
+                    let macs =
+                        (maps * d.out_side * d.out_side * d.in_maps * kernel * kernel) as f64;
+                    // backward = weight grads + input deltas ≈ 2× forward
+                    (macs, 2.0 * macs)
+                }
+                LayerSpec::MaxPool { kernel } => {
+                    let cmp = (d.out_len() * kernel * kernel) as f64;
+                    (cmp, d.out_len() as f64)
+                }
+                LayerSpec::FullyConnected { .. } | LayerSpec::Output { .. } => {
+                    let macs = (d.in_maps * d.out_maps) as f64;
+                    (macs, 2.0 * macs)
+                }
+            })
+            .collect();
+        LayerCosts { per_layer }
+    }
+
+    pub fn total_forward(&self) -> f64 {
+        self.per_layer.iter().map(|(f, _)| f).sum()
+    }
+
+    pub fn total_backward(&self) -> f64 {
+        self.per_layer.iter().map(|(_, b)| b).sum()
+    }
+
+    /// Fraction of forward cost in layer `l`.
+    pub fn forward_fraction(&self, l: usize) -> f64 {
+        self.per_layer[l].0 / self.total_forward()
+    }
+
+    pub fn backward_fraction(&self, l: usize) -> f64 {
+        self.per_layer[l].1 / self.total_backward()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    #[test]
+    fn cpi_schedule_matches_table3() {
+        assert_eq!(cpi(1), 1.0);
+        assert_eq!(cpi(61), 1.0);
+        assert_eq!(cpi(122), 1.0); // 2 threads/core
+        assert_eq!(cpi(180), 1.5); // 3 threads/core
+        assert_eq!(cpi(240), 2.0);
+        assert_eq!(cpi(244), 2.0);
+        assert_eq!(cpi(480), 1.5); // future parts: see threads_per_core docs
+        assert_eq!(cpi(3840), 1.5);
+    }
+
+    #[test]
+    fn threads_per_core_boundaries() {
+        assert_eq!(threads_per_core(61), 1);
+        assert_eq!(threads_per_core(62), 2);
+        assert_eq!(threads_per_core(122), 2);
+        assert_eq!(threads_per_core(123), 3);
+        assert_eq!(threads_per_core(244), 4);
+        assert_eq!(threads_per_core(960), 3);
+    }
+
+    #[test]
+    fn table3_constants_present() {
+        for (name, f, b) in [
+            ("small", 58_000.0, 524_000.0),
+            ("medium", 559_000.0, 6_119_000.0),
+            ("large", 5_349_000.0, 73_178_000.0),
+        ] {
+            let c = arch_constants(name).unwrap();
+            assert_eq!(c.fprop_ops, f);
+            assert_eq!(c.bprop_ops, b);
+        }
+        assert!(arch_constants("tiny").is_none());
+    }
+
+    #[test]
+    fn layer_costs_dominated_by_conv() {
+        // Paper Table 1/5: convolution dominates. Our computed
+        // distribution must reflect that for all paper archs.
+        for name in crate::config::PAPER_ARCHS {
+            let arch = ArchSpec::by_name(name).unwrap();
+            let costs = LayerCosts::of(&arch);
+            let dims = crate::nn::compute_dims(&arch);
+            let conv_b: f64 = dims
+                .iter()
+                .zip(&costs.per_layer)
+                .filter(|(d, _)| matches!(d.spec, LayerSpec::Conv { .. }))
+                .map(|(_, (_, b))| b)
+                .sum();
+            let frac = conv_b / costs.total_backward();
+            assert!(frac > 0.85, "{name}: conv backward fraction {frac}");
+        }
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let arch = ArchSpec::medium();
+        let costs = LayerCosts::of(&arch);
+        let f: f64 = (0..costs.per_layer.len()).map(|l| costs.forward_fraction(l)).sum();
+        let b: f64 = (0..costs.per_layer.len()).map(|l| costs.backward_fraction(l)).sum();
+        assert!((f - 1.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_op_ratio_consistency() {
+        // Table 3's BProp/FProp ratios (≈9–13.7×) should be in the same
+        // regime as our MAC-derived ratios (≈2–3×, since the paper counts
+        // more than MACs in backward). Sanity: both grow with arch size.
+        let small = arch_constants("small").unwrap();
+        let large = arch_constants("large").unwrap();
+        assert!(large.fprop_ops / small.fprop_ops > 50.0);
+        assert!(large.bprop_ops / small.bprop_ops > 100.0);
+    }
+}

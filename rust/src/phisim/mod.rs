@@ -1,0 +1,27 @@
+//! `phisim` — a discrete-event simulator of CHAOS training on the Intel
+//! Xeon Phi 7120P machine model.
+//!
+//! The physical Phi is discontinued and this container exposes a single
+//! host core, so the paper's *wall-clock* experiments (Figs 5–9, Tables
+//! 5–6) cannot be re-measured directly. Per the substitution rule
+//! (DESIGN.md §2), this module stands in for the testbed: it executes the
+//! CHAOS schedule — dynamic image picking, per-layer delayed publication
+//! under per-layer locks, no barriers — against the machine model the
+//! paper itself validates (Table 3 operation counts, the 1/1/1.5/2 CPI
+//! schedule, Table 4 memory contention), at event granularity.
+//!
+//! The analytic model ([`crate::perfmodel`]) is the closed-form
+//! counterpart; Figs 11–13 compare the two, exactly as the paper compares
+//! its model against measurements.
+
+#[allow(clippy::module_inception)]
+mod sim;
+mod hetero;
+mod speedup;
+
+pub use sim::{
+    core_i5_seq_secs, phi_total_secs, simulate, xeon_e5_seq_secs, LayerBusy, LayerClassSecs,
+    SimConfig, SimResult, WRITE_SECS_PER_WEIGHT,
+};
+pub use hetero::{simulate_hetero, HeteroConfig, HeteroResult, PCIE_PUBLISH_SECS};
+pub use speedup::{speedup_table, SpeedupRow, PAPER_THREAD_COUNTS};

@@ -1,0 +1,304 @@
+//! Discrete-event simulation of CHAOS training on the Xeon Phi machine
+//! model.
+//!
+//! Workers are simulated timelines drawing images from a shared pool
+//! (exactly the coordinator's sampling discipline). Per image, a worker
+//! advances through the architecture's layers; per-layer compute times come
+//! from the paper's Table-3 operation counts distributed over layers by
+//! MAC-derived fractions, scaled by the CPI schedule for the configured
+//! occupancy. Two contention mechanisms make parallel efficiency
+//! sub-linear, as on the real machine:
+//!
+//! * **memory contention** (Table 4): extra seconds per training image,
+//!   charged during the backward pass of parameterized layers (weight I/O),
+//!   proportionally to each layer's weight count;
+//! * **publication serialization**: the CHAOS per-layer lock — each
+//!   backward publication holds its layer's lock for
+//!   `weights × WRITE_SECS_PER_WEIGHT`, so hot layers queue when many
+//!   workers publish at once (this is why the paper's backward-conv
+//!   speedups in Table 6 trail the forward-conv ones).
+
+use crate::config::ArchSpec;
+use crate::nn::{compute_dims, LayerDims};
+use crate::perfmodel::{
+    arch_constants, ContentionModel, LayerCosts, CLOCK_HZ, CORE_I5_SPEED_VS_PHI1T,
+    OPERATION_FACTOR, XEON_E5_SPEED_VS_PHI1T,
+};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Cost of publishing one weight to the shared store (lock-held time per
+/// element, seconds). Calibrated so the large network's backward-conv
+/// speedup at 244 threads lands near the paper's ~103× (Table 6) without
+/// saturating the per-layer locks.
+pub const WRITE_SECS_PER_WEIGHT: f64 = 5e-9;
+
+/// Effective CPI used by the *simulator* (measured-side stand-in). The
+/// paper's Table-3 schedule (1/1/1.5/2) is the "best theoretical" bound
+/// its analytic model uses; the measured runs beat it at 3–4 threads/core
+/// because multithreading hides the in-order core's stalls (the paper
+/// observes exactly this divergence between 120 and 240 threads in Figs
+/// 12–13). 1/1/1.4/1.75 reproduces the measured 120→240 gains.
+fn sim_cpi(p: usize) -> f64 {
+    match crate::perfmodel::threads_per_core(p) {
+        0 | 1 | 2 => 1.0,
+        3 => 1.4,
+        _ => 1.75,
+    }
+}
+
+/// Simulation scenario.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub arch: String,
+    pub threads: usize,
+    /// Training (= validation) images.
+    pub images: usize,
+    pub test_images: usize,
+    pub epochs: usize,
+    /// Images actually event-simulated per phase; the makespan is scaled
+    /// by `images / sample_images`. 2 048 keeps runs instant while giving
+    /// every worker hundreds of samples.
+    pub sample_images: usize,
+}
+
+impl SimConfig {
+    /// The paper's MNIST scenario for an architecture.
+    pub fn paper(arch: &str, threads: usize) -> SimConfig {
+        let epochs = arch_constants(arch).map(|c| c.epochs).unwrap_or(10);
+        SimConfig {
+            arch: arch.to_string(),
+            threads,
+            images: 60_000,
+            test_images: 10_000,
+            epochs,
+            sample_images: 2_048,
+        }
+    }
+}
+
+/// Per-layer simulated busy seconds (per network instance, per epoch).
+#[derive(Debug, Clone, Default)]
+pub struct LayerBusy {
+    pub forward: f64,
+    pub backward: f64,
+    /// Time spent waiting for / holding the publication lock (subset of
+    /// neither forward nor backward compute; reported separately).
+    pub publish: f64,
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub cfg_threads: usize,
+    /// Wall seconds of one training phase (per epoch).
+    pub train_epoch_secs: f64,
+    /// Wall seconds of one validation phase (per epoch).
+    pub val_epoch_secs: f64,
+    /// Wall seconds of one test phase (per epoch).
+    pub test_epoch_secs: f64,
+    /// Preparation time (Prep ops, sequential).
+    pub prep_secs: f64,
+    /// Per-layer busy time, per instance per epoch (training phase).
+    pub layers: Vec<LayerBusy>,
+    /// Layer table of the architecture (parallel to `layers`).
+    pub dims: Vec<LayerDims>,
+    /// Epochs of the scenario.
+    pub epochs: usize,
+}
+
+impl SimResult {
+    /// Total wall-clock seconds for the full run (all epochs + prep).
+    pub fn total_secs(&self) -> f64 {
+        self.prep_secs
+            + self.epochs as f64
+                * (self.train_epoch_secs + self.val_epoch_secs + self.test_epoch_secs)
+    }
+    /// Aggregate busy seconds over layer classes, per instance per epoch —
+    /// the rows of paper Table 5 (BPF, BPC, FPC, FPF).
+    pub fn layer_class_secs(&self) -> LayerClassSecs {
+        use crate::config::LayerSpec;
+        let mut out = LayerClassSecs::default();
+        for (d, b) in self.dims.iter().zip(&self.layers) {
+            match d.spec {
+                LayerSpec::Conv { .. } => {
+                    out.fpc += b.forward;
+                    out.bpc += b.backward + b.publish;
+                }
+                LayerSpec::FullyConnected { .. } | LayerSpec::Output { .. } => {
+                    out.fpf += b.forward;
+                    out.bpf += b.backward + b.publish;
+                }
+                LayerSpec::MaxPool { .. } => {
+                    out.pool_fwd += b.forward;
+                    out.pool_bwd += b.backward;
+                }
+                LayerSpec::Input { .. } => {}
+            }
+        }
+        out
+    }
+}
+
+/// Paper Table 5 row: seconds per layer class (per instance per epoch).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerClassSecs {
+    pub bpf: f64,
+    pub bpc: f64,
+    pub fpc: f64,
+    pub fpf: f64,
+    pub pool_fwd: f64,
+    pub pool_bwd: f64,
+}
+
+impl LayerClassSecs {
+    pub fn total(&self) -> f64 {
+        self.bpf + self.bpc + self.fpc + self.fpf + self.pool_fwd + self.pool_bwd
+    }
+}
+
+/// f64 min-heap key.
+#[derive(PartialEq)]
+struct Clock(f64);
+impl Eq for Clock {}
+impl PartialOrd for Clock {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Clock {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Run the simulation.
+pub fn simulate(cfg: &SimConfig) -> anyhow::Result<SimResult> {
+    let arch = ArchSpec::by_name(&cfg.arch)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch '{}'", cfg.arch))?;
+    let consts = arch_constants(&cfg.arch)
+        .ok_or_else(|| anyhow::anyhow!("no Table-3 constants for '{}'", cfg.arch))?;
+    let contention = ContentionModel::for_arch(&cfg.arch)
+        .ok_or_else(|| anyhow::anyhow!("no Table-4 contention for '{}'", cfg.arch))?;
+    anyhow::ensure!(cfg.threads >= 1, "threads must be >= 1");
+
+    let dims = compute_dims(&arch);
+    let costs = LayerCosts::of(&arch);
+    let p = cfg.threads;
+    let slowdown = sim_cpi(p) * OPERATION_FACTOR / CLOCK_HZ; // seconds per op
+
+    // Per-layer per-image compute seconds at this occupancy.
+    let n_layers = dims.len();
+    let fwd_secs: Vec<f64> = (0..n_layers)
+        .map(|l| consts.fprop_ops * costs.forward_fraction(l) * slowdown)
+        .collect();
+    let bwd_secs: Vec<f64> = (0..n_layers)
+        .map(|l| consts.bprop_ops * costs.backward_fraction(l) * slowdown)
+        .collect();
+
+    // Memory contention per training image, split across parameterized
+    // layers by weight share.
+    let mc = contention.contention(p);
+    let total_weights: f64 = dims.iter().map(|d| d.param_count() as f64).sum();
+    let mc_share: Vec<f64> = dims
+        .iter()
+        .map(|d| mc * d.param_count() as f64 / total_weights)
+        .collect();
+
+    // Publication lock hold per layer.
+    let hold: Vec<f64> = dims
+        .iter()
+        .map(|d| d.param_count() as f64 * WRITE_SECS_PER_WEIGHT * sim_cpi(p))
+        .collect();
+
+    // ---- training phase --------------------------------------------------
+    let n_sim = cfg.sample_images.min(cfg.images).max(p);
+    let scale = cfg.images as f64 / n_sim as f64;
+    let mut heap: BinaryHeap<Reverse<(Clock, usize)>> = (0..p)
+        .map(|w| Reverse((Clock(0.0), w)))
+        .collect();
+    let mut lock_free = vec![0.0f64; n_layers];
+    let mut busy = vec![LayerBusy::default(); n_layers];
+
+    for _ in 0..n_sim {
+        let Reverse((Clock(mut t), w)) = heap.pop().unwrap();
+        // forward
+        for l in 1..n_layers {
+            t += fwd_secs[l];
+            busy[l].forward += fwd_secs[l];
+        }
+        // backward (output → first hidden layer)
+        for l in (1..n_layers).rev() {
+            t += bwd_secs[l] + mc_share[l];
+            busy[l].backward += bwd_secs[l] + mc_share[l];
+            if dims[l].param_count() > 0 {
+                // CHAOS publication: serialized per layer, arbitrary order.
+                let start = lock_free[l].max(t);
+                let wait = start - t;
+                lock_free[l] = start + hold[l];
+                t = start + hold[l];
+                busy[l].publish += wait + hold[l];
+            }
+        }
+        heap.push(Reverse((Clock(t), w)));
+    }
+    let train_makespan = heap
+        .iter()
+        .map(|Reverse((Clock(t), _))| *t)
+        .fold(0.0, f64::max);
+    let train_epoch_secs = train_makespan * scale;
+
+    // Per-instance per-epoch layer times (all instances do n_sim/p images
+    // in the sample; scale to images/p each).
+    let per_instance_scale = scale / p as f64;
+    for b in busy.iter_mut() {
+        b.forward *= per_instance_scale;
+        b.backward *= per_instance_scale;
+        b.publish *= per_instance_scale;
+    }
+
+    // ---- evaluation phases (forward only, no contention charges) ---------
+    let fwd_image_secs: f64 = fwd_secs.iter().sum();
+    let eval_secs = |count: usize| -> f64 {
+        // forward-only work divides cleanly over workers.
+        fwd_image_secs * (count as f64 / p as f64)
+    };
+    let val_epoch_secs = eval_secs(cfg.images);
+    let test_epoch_secs = eval_secs(cfg.test_images);
+    // Table 5 counts forward time of validation/testing too: every image
+    // evaluated adds its per-layer forward cost to each instance's tally.
+    let eval_images_per_instance = (cfg.images + cfg.test_images) as f64 / p as f64;
+    for (l, b) in busy.iter_mut().enumerate() {
+        b.forward += fwd_secs[l] * eval_images_per_instance;
+    }
+
+    // Preparation is sequential: one thread, full-speed CPI.
+    let prep_secs = consts.prep_ops * OPERATION_FACTOR / CLOCK_HZ;
+
+    Ok(SimResult {
+        cfg_threads: p,
+        train_epoch_secs,
+        val_epoch_secs,
+        test_epoch_secs,
+        prep_secs,
+        layers: busy,
+        dims,
+        epochs: cfg.epochs,
+    })
+}
+
+/// Total Phi wall-clock for the paper scenario at `threads`.
+pub fn phi_total_secs(arch: &str, threads: usize) -> anyhow::Result<f64> {
+    Ok(simulate(&SimConfig::paper(arch, threads))?.total_secs())
+}
+
+/// Modeled sequential total on the Intel Xeon E5 (derived host speed —
+/// DESIGN.md §2).
+pub fn xeon_e5_seq_secs(arch: &str) -> anyhow::Result<f64> {
+    Ok(phi_total_secs(arch, 1)? / XEON_E5_SPEED_VS_PHI1T)
+}
+
+/// Modeled sequential total on the Intel Core i5.
+pub fn core_i5_seq_secs(arch: &str) -> anyhow::Result<f64> {
+    Ok(phi_total_secs(arch, 1)? / CORE_I5_SPEED_VS_PHI1T)
+}

@@ -1,0 +1,145 @@
+//! Speedup sweeps over the paper's thread counts — the series behind
+//! Figs 5, 7, 8, 9 and Tables 5/6.
+
+use super::sim::{simulate, SimConfig, SimResult};
+use crate::perfmodel::{CORE_I5_SPEED_VS_PHI1T, XEON_E5_SPEED_VS_PHI1T};
+
+/// The thread counts evaluated in the paper (§5.1).
+pub const PAPER_THREAD_COUNTS: [usize; 8] = [1, 15, 30, 60, 120, 180, 240, 244];
+
+/// One row of the speedup tables.
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub threads: usize,
+    pub total_secs: f64,
+    /// Speedup vs one Phi thread (Fig 8).
+    pub vs_phi_1t: f64,
+    /// Speedup vs sequential Xeon E5 (Fig 7).
+    pub vs_xeon_e5: f64,
+    /// Speedup vs sequential Core i5 (Fig 9).
+    pub vs_core_i5: f64,
+    /// Full simulation result (layer tables etc.).
+    pub result: SimResult,
+}
+
+/// Simulate every paper thread count for an architecture.
+pub fn speedup_table(arch: &str) -> anyhow::Result<Vec<SpeedupRow>> {
+    let base = simulate(&SimConfig::paper(arch, 1))?.total_secs();
+    let e5 = base / XEON_E5_SPEED_VS_PHI1T;
+    let i5 = base / CORE_I5_SPEED_VS_PHI1T;
+    PAPER_THREAD_COUNTS
+        .iter()
+        .map(|&p| {
+            let result = simulate(&SimConfig::paper(arch, p))?;
+            let total = result.total_secs();
+            Ok(SpeedupRow {
+                threads: p,
+                total_secs: total,
+                vs_phi_1t: base / total,
+                vs_xeon_e5: e5 / total,
+                vs_core_i5: i5 / total,
+                result,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let a = simulate(&SimConfig::paper("small", 60)).unwrap();
+        let b = simulate(&SimConfig::paper("small", 60)).unwrap();
+        assert_eq!(a.total_secs(), b.total_secs());
+        assert_eq!(a.layer_class_secs(), b.layer_class_secs());
+    }
+
+    #[test]
+    fn near_linear_scaling_up_to_60_threads() {
+        // Paper Result 3: "doubling the number of threads from 15 to 30,
+        // and from 30 to 60 almost doubles the speedup".
+        let rows = speedup_table("medium").unwrap();
+        let at = |p: usize| rows.iter().find(|r| r.threads == p).unwrap();
+        let s15 = at(15).vs_phi_1t;
+        let s30 = at(30).vs_phi_1t;
+        let s60 = at(60).vs_phi_1t;
+        assert!((13.0..=15.2).contains(&s15), "s15={s15}");
+        assert!((s30 / s15 - 2.0).abs() < 0.25, "30/15 ratio {}", s30 / s15);
+        assert!((s60 / s30 - 2.0).abs() < 0.25, "60/30 ratio {}", s60 / s30);
+    }
+
+    #[test]
+    fn trend_bends_past_two_threads_per_core() {
+        // Fig 8: the double-speedup trend breaks at 120 threads (2/core)
+        // and flattens further at 180/240.
+        let rows = speedup_table("large").unwrap();
+        let at = |p: usize| rows.iter().find(|r| r.threads == p).unwrap();
+        let r120 = at(120).vs_phi_1t / at(60).vs_phi_1t;
+        let r240 = at(240).vs_phi_1t / at(120).vs_phi_1t;
+        assert!(r120 < 1.8, "120/60 ratio should bend: {r120}");
+        assert!(r240 < 1.45, "240/120 ratio should flatten: {r240}");
+        // but still improve
+        assert!(at(240).vs_phi_1t > at(120).vs_phi_1t);
+    }
+
+    #[test]
+    fn headline_speedups_in_paper_regime() {
+        // Paper Result 3: up to 103× vs Phi 1T, 14× vs Xeon E5, 58× vs
+        // Core i5 (best over architectures, 244 threads). Shape target:
+        // within ±25%.
+        let rows = speedup_table("large").unwrap();
+        let last = rows.iter().find(|r| r.threads == 244).unwrap();
+        assert!(
+            (77.0..=129.0).contains(&last.vs_phi_1t),
+            "vs Phi 1T: {}",
+            last.vs_phi_1t
+        );
+        assert!(
+            (10.5..=17.5).contains(&last.vs_xeon_e5),
+            "vs E5: {}",
+            last.vs_xeon_e5
+        );
+        assert!(
+            (43.0..=73.0).contains(&last.vs_core_i5),
+            "vs i5: {}",
+            last.vs_core_i5
+        );
+    }
+
+    #[test]
+    fn conv_backward_dominates_large_at_high_threads() {
+        // Paper Table 5: at 240T on the large net, ~88% of layer time is
+        // backward conv, ~10% forward conv.
+        let r = simulate(&SimConfig::paper("large", 240)).unwrap();
+        let c = r.layer_class_secs();
+        let bpc_frac = c.bpc / c.total();
+        let fpc_frac = c.fpc / c.total();
+        assert!((0.80..=0.93).contains(&bpc_frac), "bpc fraction {bpc_frac}");
+        assert!((0.05..=0.16).contains(&fpc_frac), "fpc fraction {fpc_frac}");
+        assert!(c.bpf < c.bpc * 0.05, "fully-connected backward is tiny");
+    }
+
+    #[test]
+    fn more_threads_never_slower() {
+        let rows = speedup_table("small").unwrap();
+        for pair in rows.windows(2) {
+            assert!(
+                pair[1].total_secs <= pair[0].total_secs * 1.02,
+                "slower at {} threads than {}",
+                pair[1].threads,
+                pair[0].threads
+            );
+        }
+    }
+
+    #[test]
+    fn large_one_thread_total_matches_paper_magnitude() {
+        // Paper: large net, 1 Phi thread ≈ 295.5 h; 244 threads ≈ 2.9 h.
+        let t1 = simulate(&SimConfig::paper("large", 1)).unwrap().total_secs() / 3600.0;
+        let t244 = simulate(&SimConfig::paper("large", 244)).unwrap().total_secs() / 3600.0;
+        assert!((200.0..400.0).contains(&t1), "1T: {t1} h");
+        assert!((1.9..4.4).contains(&t244), "244T: {t244} h");
+    }
+}

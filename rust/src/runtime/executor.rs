@@ -1,0 +1,219 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
+//! → `execute` (see /opt/xla-example/load_hlo). One compiled executable per
+//! artifact; compilation happens once at load, execution is the request
+//! path. Python is never involved here.
+
+use super::manifest::{ArchManifest, Manifest};
+use crate::util::Stopwatch;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A shared PJRT CPU client (compile + execute context).
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact file into an executable.
+    pub fn load_artifact(&self, path: &std::path::Path) -> anyhow::Result<Executable> {
+        let sw = Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe, compile_secs: sw.elapsed_secs() })
+    }
+}
+
+/// A compiled artifact.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    /// Wall-clock seconds spent compiling (reported by examples/benches).
+    pub compile_secs: f64,
+}
+
+impl Executable {
+    /// Execute with the given literals; returns the decomposed result tuple
+    /// (the AOT pipeline lowers everything with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple result: {e}"))
+    }
+}
+
+/// Build the input literals for an architecture: one literal per parameter
+/// (sliced out of the flat vector in manifest order) plus trailing inputs.
+fn param_literals(am: &ArchManifest, flat: &[f32]) -> anyhow::Result<Vec<Literal>> {
+    anyhow::ensure!(
+        flat.len() == am.param_count,
+        "flat params {} != manifest {}",
+        flat.len(),
+        am.param_count
+    );
+    let mut lits = Vec::with_capacity(am.params.len() + 2);
+    let mut off = 0;
+    for p in &am.params {
+        let span = &flat[off..off + p.count];
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        let lit = Literal::vec1(span)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {}: {e}", p.name))?;
+        lits.push(lit);
+        off += p.count;
+    }
+    Ok(lits)
+}
+
+/// The single-image forward artifact, loaded and ready.
+pub struct ForwardEngine {
+    pub arch: ArchManifest,
+    exe: Executable,
+}
+
+impl ForwardEngine {
+    pub fn load(rt: &Runtime, manifest: &Manifest, arch: &str) -> anyhow::Result<ForwardEngine> {
+        let am = manifest.arch(arch)?.clone();
+        let spec = am.artifact("forward")?;
+        let exe = rt.load_artifact(&manifest.path_of(spec))?;
+        Ok(ForwardEngine { arch: am, exe })
+    }
+
+    /// probs = forward(params, image).
+    pub fn run(&self, flat_params: &[f32], image: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let side = self.arch.input_side;
+        anyhow::ensure!(image.len() == side * side, "image size mismatch");
+        let mut inputs = param_literals(&self.arch, flat_params)?;
+        inputs.push(
+            Literal::vec1(image)
+                .reshape(&[side as i64, side as i64])
+                .map_err(|e| anyhow::anyhow!("image literal: {e}"))?,
+        );
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 1, "forward returned {} outputs", out.len());
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("probs to_vec: {e}"))
+    }
+}
+
+/// The batched forward artifact (serving path).
+pub struct BatchForwardEngine {
+    pub arch: ArchManifest,
+    pub batch: usize,
+    exe: Executable,
+}
+
+impl BatchForwardEngine {
+    pub fn load(rt: &Runtime, manifest: &Manifest, arch: &str) -> anyhow::Result<BatchForwardEngine> {
+        let am = manifest.arch(arch)?.clone();
+        let kind = am.batched_forward_kind();
+        let spec = am.artifact(&kind)?;
+        let exe = rt.load_artifact(&manifest.path_of(spec))?;
+        let batch = am.batch;
+        Ok(BatchForwardEngine { arch: am, batch, exe })
+    }
+
+    /// probs[B][classes] = forward(params, images[B]); `images` is
+    /// `B * side²` long (callers pad short batches).
+    pub fn run(&self, flat_params: &[f32], images: &[f32]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let side = self.arch.input_side;
+        anyhow::ensure!(
+            images.len() == self.batch * side * side,
+            "batch images size mismatch: {} != {}",
+            images.len(),
+            self.batch * side * side
+        );
+        let mut inputs = param_literals(&self.arch, flat_params)?;
+        inputs.push(
+            Literal::vec1(images)
+                .reshape(&[self.batch as i64, side as i64, side as i64])
+                .map_err(|e| anyhow::anyhow!("images literal: {e}"))?,
+        );
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 1, "batched forward returned {} outputs", out.len());
+        let flat = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("probs to_vec: {e}"))?;
+        let classes = flat.len() / self.batch;
+        Ok(flat.chunks(classes).map(|c| c.to_vec()).collect())
+    }
+}
+
+/// The train-step artifact: one sample's (loss, probs, grads).
+pub struct TrainEngine {
+    pub arch: ArchManifest,
+    exe: Executable,
+}
+
+/// Result of one AOT train step.
+#[derive(Debug)]
+pub struct TrainStepOut {
+    pub loss: f32,
+    pub probs: Vec<f32>,
+    /// Flat gradient vector in the shared parameter order.
+    pub grads: Vec<f32>,
+}
+
+impl TrainEngine {
+    pub fn load(rt: &Runtime, manifest: &Manifest, arch: &str) -> anyhow::Result<TrainEngine> {
+        let am = manifest.arch(arch)?.clone();
+        let spec = am.artifact("train")?;
+        let exe = rt.load_artifact(&manifest.path_of(spec))?;
+        Ok(TrainEngine { arch: am, exe })
+    }
+
+    pub fn run(&self, flat_params: &[f32], image: &[f32], label: i32) -> anyhow::Result<TrainStepOut> {
+        let side = self.arch.input_side;
+        anyhow::ensure!(image.len() == side * side, "image size mismatch");
+        let mut inputs = param_literals(&self.arch, flat_params)?;
+        inputs.push(
+            Literal::vec1(image)
+                .reshape(&[side as i64, side as i64])
+                .map_err(|e| anyhow::anyhow!("image literal: {e}"))?,
+        );
+        inputs.push(Literal::scalar(label));
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(
+            out.len() == 2 + self.arch.params.len(),
+            "train returned {} outputs, expected {}",
+            out.len(),
+            2 + self.arch.params.len()
+        );
+        let loss = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e}"))?[0];
+        let probs = out[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("probs: {e}"))?;
+        let mut grads = Vec::with_capacity(self.arch.param_count);
+        for (i, p) in self.arch.params.iter().enumerate() {
+            let g = out[2 + i]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("grad {}: {e}", p.name))?;
+            anyhow::ensure!(g.len() == p.count, "grad {} wrong length", p.name);
+            grads.extend_from_slice(&g);
+        }
+        Ok(TrainStepOut { loss, probs, grads })
+    }
+}

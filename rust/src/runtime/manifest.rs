@@ -1,0 +1,254 @@
+//! `artifacts/manifest.json` — the contract between the AOT pipeline
+//! (python/compile/aot.py) and this runtime. The manifest pins parameter
+//! order, shapes and artifact I/O signatures so the rust side never guesses
+//! about the HLO entry layout.
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named parameter of an architecture (e.g. `l1_conv_w`, shape
+/// `[5,1,4,4]`). Order in `ArchManifest::params` is the flat-vector order
+/// shared with `nn::dims`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub count: usize,
+}
+
+/// One lowered artifact (forward / forward_bN / train).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// File name relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Everything the runtime needs to drive one architecture.
+#[derive(Debug, Clone)]
+pub struct ArchManifest {
+    pub name: String,
+    pub input_side: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArchManifest {
+    /// Total flat parameter count (must equal `nn::Network::total_params`).
+    pub fn flat_len(&self) -> usize {
+        self.params.iter().map(|p| p.count).sum()
+    }
+
+    /// The artifact spec by kind (`forward`, `train`, `forward_b{N}`).
+    pub fn artifact(&self, kind: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("arch '{}' has no artifact '{kind}'", self.name))
+    }
+
+    /// Kind string of the batched-forward artifact.
+    pub fn batched_forward_kind(&self) -> String {
+        format!("forward_b{}", self.batch)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub archs: BTreeMap<String, ArchManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut archs = BTreeMap::new();
+        for (name, aj) in j
+            .req("archs")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("archs must be an object"))?
+        {
+            let params = aj
+                .req("params")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("params must be an array"))?
+                .iter()
+                .map(|p| -> anyhow::Result<ParamSpec> {
+                    let shape = p.req("shape")?.usize_vec()?;
+                    let count = p
+                        .req("count")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("param count"))?;
+                    anyhow::ensure!(
+                        shape.iter().product::<usize>() == count,
+                        "param count mismatch in manifest"
+                    );
+                    Ok(ParamSpec {
+                        name: p
+                            .req("name")?
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("param name"))?
+                            .to_string(),
+                        shape,
+                        count,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+
+            let mut artifacts = BTreeMap::new();
+            for (kind, art) in aj
+                .req("artifacts")?
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("artifacts must be an object"))?
+            {
+                let strings = |key: &str| -> anyhow::Result<Vec<String>> {
+                    art.req(key)?
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("{key} must be an array"))?
+                        .iter()
+                        .map(|s| {
+                            s.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow::anyhow!("{key} entries must be strings"))
+                        })
+                        .collect()
+                };
+                artifacts.insert(
+                    kind.clone(),
+                    ArtifactSpec {
+                        file: art
+                            .req("file")?
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("artifact file"))?
+                            .to_string(),
+                        inputs: strings("inputs")?,
+                        outputs: strings("outputs")?,
+                    },
+                );
+            }
+
+            let am = ArchManifest {
+                name: name.clone(),
+                input_side: aj
+                    .req("input_side")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("input_side"))?,
+                batch: aj.get("batch").and_then(|b| b.as_usize()).unwrap_or(16),
+                param_count: aj
+                    .req("param_count")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("param_count"))?,
+                params,
+                artifacts,
+            };
+            anyhow::ensure!(
+                am.flat_len() == am.param_count,
+                "arch '{name}': param shapes sum to {} but param_count says {}",
+                am.flat_len(),
+                am.param_count
+            );
+            archs.insert(name.clone(), am);
+        }
+        Ok(Manifest { dir, archs })
+    }
+
+    pub fn arch(&self, name: &str) -> anyhow::Result<&ArchManifest> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no arch '{name}' (have: {:?})", self.archs.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "batch": 4,
+      "archs": {
+        "tiny": {
+          "input_side": 13, "batch": 4, "param_count": 329,
+          "params": [
+            {"name": "l1_conv_w", "shape": [3,1,4,4], "count": 48},
+            {"name": "l1_conv_b", "shape": [3], "count": 3},
+            {"name": "l3_conv_w", "shape": [4,3,2,2], "count": 48},
+            {"name": "l3_conv_b", "shape": [4], "count": 4},
+            {"name": "l5_fc_w", "shape": [8,16], "count": 128},
+            {"name": "l5_fc_b", "shape": [8], "count": 8},
+            {"name": "l6_out_w", "shape": [10,8], "count": 80},
+            {"name": "l6_out_b", "shape": [10], "count": 10}
+          ],
+          "artifacts": {
+            "forward": {"file": "tiny_forward.hlo.txt", "inputs": ["l1_conv_w", "image"], "outputs": ["probs"]},
+            "train": {"file": "tiny_train.hlo.txt", "inputs": ["l1_conv_w", "image", "label"], "outputs": ["loss", "probs", "grad_l1_conv_w"]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let t = m.arch("tiny").unwrap();
+        assert_eq!(t.input_side, 13);
+        assert_eq!(t.params.len(), 8);
+        assert_eq!(t.flat_len(), 48 + 3 + 48 + 4 + 128 + 8 + 80 + 10);
+        assert_eq!(t.artifact("forward").unwrap().file, "tiny_forward.hlo.txt");
+        assert!(t.artifact("missing").is_err());
+        assert!(m.arch("big").is_err());
+        assert_eq!(
+            m.path_of(t.artifact("train").unwrap()),
+            PathBuf::from("/tmp/a/tiny_train.hlo.txt")
+        );
+        assert_eq!(t.batched_forward_kind(), "forward_b4");
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let bad = SAMPLE.replace(r#""count": 48}"#, r#""count": 49}"#);
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let bad = SAMPLE.replace(r#""param_count": 329"#, r#""param_count": 700"#);
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, the real manifest must parse and
+        // agree with the rust dims for every arch it carries.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for (name, am) in &m.archs {
+            if let Some(spec) = crate::config::ArchSpec::by_name(name) {
+                let net = crate::nn::Network::new(spec);
+                assert_eq!(am.param_count, net.total_params, "{name} param count");
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Runtime layer: loads the AOT-lowered HLO artifacts (`make artifacts`)
+//! and executes them on the PJRT CPU client from the rust request path.
+//!
+//! The interchange format is HLO **text** — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids (see DESIGN.md §4 and /opt/xla-example/README.md).
+//!
+//! Cross-validation between this path and the native [`crate::nn`] engine
+//! lives in `rust/tests/runtime_roundtrip.rs`: both implement the same
+//! math, so probabilities and gradients must agree to float tolerance.
+
+mod executor;
+mod manifest;
+
+pub use executor::{
+    BatchForwardEngine, Executable, ForwardEngine, Runtime, TrainEngine, TrainStepOut,
+};
+pub use manifest::{ArchManifest, ArtifactSpec, Manifest, ParamSpec};
+
+/// Default artifact directory (relative to the repo root).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// True when the AOT artifacts have been built.
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

@@ -1,0 +1,197 @@
+//! Dynamic batcher + serving loop.
+//!
+//! Requests arrive on an mpsc channel; the collector drains up to `B`
+//! requests, waiting at most `max_delay` for stragglers, pads the batch to
+//! `B` with zeros (the compiled HLO has a static batch dimension), executes,
+//! and replies per-request. This is the standard router/batcher shape of
+//! serving systems (vLLM-style), sized down to the paper's models.
+
+use super::metrics::ServeMetrics;
+use crate::runtime::BatchForwardEngine;
+use crate::util::Stopwatch;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max time a request may wait for batch-mates.
+    pub max_delay: Duration,
+    /// Channel capacity (back-pressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_delay: Duration::from_millis(2), queue_depth: 1024 }
+    }
+}
+
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<anyhow::Result<Vec<f32>>>,
+}
+
+/// Handle used by client threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<Request>,
+    image_len: usize,
+    pub metrics: Arc<ServeMetrics>,
+}
+
+impl ServerHandle {
+    /// Submit one image and block for its probability vector.
+    pub fn predict(&self, image: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(image.len() == self.image_len, "image size mismatch");
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request { image: image.to_vec(), enqueued: Instant::now(), reply: reply_tx };
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+}
+
+/// The serving loop owner. Dropping `Server` (after all handles are gone)
+/// stops the worker thread.
+pub struct Server {
+    handle: ServerHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the serving thread. The PJRT client and executable are
+    /// created *inside* the worker (the xla crate's handles are not
+    /// `Send`); load errors are reported back before this returns.
+    pub fn spawn(
+        artifact_dir: String,
+        arch: String,
+        params: Vec<f32>,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Server> {
+        let metrics = Arc::new(ServeMetrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<usize>>();
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let load = (|| -> anyhow::Result<BatchForwardEngine> {
+                let manifest = crate::runtime::Manifest::load(&artifact_dir)?;
+                let rt = crate::runtime::Runtime::cpu()?;
+                BatchForwardEngine::load(&rt, &manifest, &arch)
+            })();
+            match load {
+                Ok(engine) => {
+                    let side = engine.arch.input_side;
+                    let _ = ready_tx.send(Ok(side * side));
+                    serve_loop(engine, params, cfg, rx, m2);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            }
+        });
+        let image_len = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server thread died during load"))??;
+        Ok(Server { handle: ServerHandle { tx, image_len, metrics }, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Close our handle's sender by replacing it with a dummy channel,
+        // then join once all external handles are dropped. We cannot force
+        // external handles closed; join only if the channel is already
+        // disconnected, otherwise detach.
+        if let Some(w) = self.worker.take() {
+            let (dummy_tx, _) = mpsc::sync_channel(1);
+            self.handle.tx = dummy_tx;
+            // If no other handles exist the loop will exit promptly.
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop(
+    engine: BatchForwardEngine,
+    params: Vec<f32>,
+    cfg: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<ServeMetrics>,
+) {
+    let image_len = engine.arch.input_side * engine.arch.input_side;
+    let batch_cap = engine.batch;
+    let mut batch: Vec<Request> = Vec::with_capacity(batch_cap);
+    let mut images = vec![0.0f32; batch_cap * image_len];
+
+    loop {
+        batch.clear();
+        // Block for the first request of a batch.
+        match rx.recv() {
+            Ok(r) => batch.push(r),
+            Err(_) => return, // all senders dropped
+        }
+        // Then collect batch-mates until full or the delay budget of the
+        // *first* request runs out.
+        let deadline = batch[0].enqueued + cfg.max_delay;
+        while batch.len() < batch_cap {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Pad and execute.
+        images.fill(0.0);
+        for (i, r) in batch.iter().enumerate() {
+            images[i * image_len..(i + 1) * image_len].copy_from_slice(&r.image);
+        }
+        metrics.record_batch(batch.len());
+        let sw = Stopwatch::start();
+        let result = engine.run(&params, &images);
+        let _exec_secs = sw.elapsed_secs();
+
+        match result {
+            Ok(rows) => {
+                for (i, r) in batch.drain(..).enumerate() {
+                    metrics
+                        .record_latency_us(r.enqueued.elapsed().as_secs_f64() * 1e6);
+                    let _ = r.reply.send(Ok(rows[i].clone()));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e}");
+                for r in batch.drain(..) {
+                    let _ = r.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The full server path needs compiled artifacts; integration coverage
+    // lives in rust/tests/serving.rs and examples/serve_infer.rs. Unit
+    // tests here cover config defaults.
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = ServerConfig::default();
+        assert!(c.max_delay >= Duration::from_micros(100));
+        assert!(c.queue_depth >= 16);
+    }
+}

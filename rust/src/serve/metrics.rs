@@ -1,0 +1,97 @@
+//! Serving metrics: request latency distribution and batch fill —
+//! the numbers the `serve_infer` example reports.
+
+use crate::util::stats;
+use std::sync::Mutex;
+
+/// Thread-safe latency/batch accounting.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    batch_sizes: Vec<usize>,
+}
+
+/// A snapshot of the metrics for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub mean_batch_fill: f64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency_us(&self, us: f64) {
+        self.inner.lock().unwrap().latencies_us.push(us);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.inner.lock().unwrap().batch_sizes.push(size);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let l = &inner.latencies_us;
+        MetricsSnapshot {
+            requests: l.len(),
+            batches: inner.batch_sizes.len(),
+            p50_us: stats::percentile(l, 50.0),
+            p99_us: stats::percentile(l, 99.0),
+            max_us: l.iter().copied().fold(0.0, f64::max),
+            mean_batch_fill: if inner.batch_sizes.is_empty() {
+                0.0
+            } else {
+                inner.batch_sizes.iter().sum::<usize>() as f64 / inner.batch_sizes.len() as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = ServeMetrics::new();
+        for i in 1..=100 {
+            m.record_latency_us(i as f64);
+        }
+        m.record_batch(4);
+        m.record_batch(8);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 2);
+        assert!((s.p50_us - 50.5).abs() < 1.0);
+        assert!(s.p99_us >= 99.0);
+        assert_eq!(s.max_us, 100.0);
+        assert!((s.mean_batch_fill - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(ServeMetrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..250 {
+                        m.record_latency_us(1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.snapshot().requests, 1000);
+    }
+}

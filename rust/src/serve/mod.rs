@@ -1,0 +1,16 @@
+//! Batched inference service over the AOT executable — the deployment-side
+//! complement of the trainer: once CHAOS has produced weights, this module
+//! serves predictions from the PJRT path with dynamic batching.
+//!
+//! Architecture (std threads + channels; tokio is not in the vendored
+//! registry): callers submit images through [`ServerHandle::predict`]; a
+//! collector thread groups them into batches of up to `B` (the artifact's
+//! compiled batch size), flushing on size or on `max_delay`; the executor
+//! runs the batched HLO and routes each row back through the caller's
+//! oneshot channel.
+
+mod batcher;
+mod metrics;
+
+pub use batcher::{Server, ServerConfig, ServerHandle};
+pub use metrics::ServeMetrics;

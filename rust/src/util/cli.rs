@@ -1,0 +1,202 @@
+//! Tiny command-line argument parser (the vendored registry has no `clap`).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` style the `chaos` binary uses. Unknown flags are an error, so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Positional arguments (after the subcommand).
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    /// Flags the command declares; used for unknown-flag detection.
+    known: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("flag --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+    #[error("missing required flag --{0}")]
+    MissingFlag(String),
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]/subcommand). `known_flags` lists the
+    /// accepted flag names; names ending in `!` are boolean flags.
+    pub fn parse(raw: &[String], known_flags: &[&str]) -> Result<Args, CliError> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut bools = Vec::new();
+        let boolean: Vec<&str> = known_flags
+            .iter()
+            .filter(|f| f.ends_with('!'))
+            .map(|f| f.trim_end_matches('!'))
+            .collect();
+        let valued: Vec<&str> = known_flags
+            .iter()
+            .filter(|f| !f.ends_with('!'))
+            .map(|f| *f)
+            .collect();
+
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if boolean.contains(&name) {
+                    bools.push(name.to_string());
+                } else if valued.contains(&name) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.to_string()))?
+                        }
+                    };
+                    flags.insert(name.to_string(), v);
+                } else {
+                    return Err(CliError::UnknownFlag(name.to_string()));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            positional,
+            flags,
+            bools,
+            known: known_flags.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        debug_assert!(
+            self.known.iter().any(|k| k.trim_end_matches('!') == name),
+            "querying undeclared flag --{name}"
+        );
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::MissingFlag(name.to_string()))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "usize")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "f64")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "u64")),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--threads 1,15,30`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError::BadValue(name.into(), v.into(), "usize list"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse(
+            &raw(&["small", "--threads=8", "--eta", "0.001", "--verbose"]),
+            &["threads", "eta", "verbose!"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["small"]);
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 8);
+        assert!((a.get_f64("eta", 0.0).unwrap() - 0.001).abs() < 1e-12);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let e = Args::parse(&raw(&["--bogus", "1"]), &["threads"]).unwrap_err();
+        assert!(matches!(e, CliError::UnknownFlag(_)));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = Args::parse(&raw(&["--threads"]), &["threads"]).unwrap_err();
+        assert!(matches!(e, CliError::MissingValue(_)));
+    }
+
+    #[test]
+    fn bad_value_type() {
+        let a = Args::parse(&raw(&["--threads", "abc"]), &["threads"]).unwrap();
+        assert!(a.get_usize("threads", 1).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::parse(&raw(&["--threads", "1, 15,30"]), &["threads"]).unwrap();
+        assert_eq!(a.get_usize_list("threads", &[]).unwrap(), vec![1, 15, 30]);
+        let b = Args::parse(&raw(&[]), &["threads"]).unwrap();
+        assert_eq!(b.get_usize_list("threads", &[2, 4]).unwrap(), vec![2, 4]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(&raw(&[]), &["out"]).unwrap();
+        assert_eq!(a.get_str("out", "x.md"), "x.md");
+        assert!(a.require("out").is_err());
+    }
+}

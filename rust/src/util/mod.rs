@@ -1,0 +1,17 @@
+//! Foundation utilities: deterministic PRNG, JSON, CLI parsing, statistics,
+//! timing, and a lightweight property-testing harness.
+//!
+//! These replace crates (`rand`, `serde_json`, `clap`, `criterion`,
+//! `proptest`) that are absent from the offline vendored registry — see
+//! DESIGN.md §10.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use prng::Pcg32;
+pub use timer::{LayerClass, LayerTimes, Stopwatch};

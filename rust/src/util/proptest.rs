@@ -1,0 +1,122 @@
+//! Lightweight property-based testing (the vendored registry has no
+//! `proptest`). A property is run against many PRNG-generated cases; on
+//! failure we re-run a deterministic "shrink-lite" pass that retries the
+//! failing seed with scaled-down size hints, then report the smallest
+//! failing seed so the case can be replayed in a unit test.
+
+use super::prng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (e.g. max dimension).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC4A05, max_size: 16 }
+    }
+}
+
+/// A generated test case: the generator gets a PRNG and a size hint.
+pub fn run<G, T, P>(cfg: Config, gen: G, prop: P)
+where
+    G: Fn(&mut Pcg32, usize) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Pcg32::new(case_seed, 17);
+        // Grow sizes over the run: early cases are small, later ones large.
+        let size = 1 + (cfg.max_size.saturating_sub(1)) * case / cfg.cases.max(1);
+        let input = gen(&mut rng, size.max(1));
+        if let Err(msg) = prop(&input) {
+            // Shrink-lite: try the same seed at smaller sizes to find a
+            // more readable counterexample.
+            let mut smallest: Option<(usize, T)> = None;
+            for s in 1..size {
+                let mut r2 = Pcg32::new(case_seed, 17);
+                let candidate = gen(&mut r2, s);
+                if prop(&candidate).is_err() {
+                    smallest = Some((s, candidate));
+                    break;
+                }
+            }
+            match smallest {
+                Some((s, c)) => panic!(
+                    "property failed (case {case}, seed {case_seed:#x}, shrunk to size {s}):\n  {msg}\n  input: {c:?}"
+                ),
+                None => panic!(
+                    "property failed (case {case}, seed {case_seed:#x}, size {size}):\n  {msg}\n  input: {input:?}"
+                ),
+            }
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close; returns an Err message
+/// suitable for `run` properties.
+pub fn check_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if !(x - y).abs().le(&tol) {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff|={}, tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        run(
+            Config { cases: 32, ..Default::default() },
+            |rng, size| {
+                counter.set(counter.get() + 1);
+                (0..size).map(|_| rng.next_f32()).collect::<Vec<f32>>()
+            },
+            |v| {
+                if v.iter().all(|x| (0.0..1.0).contains(x)) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        count += counter.get();
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        run(
+            Config { cases: 8, ..Default::default() },
+            |rng, _| rng.below(100),
+            |&v| if v < 1000 { Err(format!("forced failure on {v}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn check_close_reports_index() {
+        let err = check_close(&[1.0, 2.0], &[1.0, 2.5], 0.1, 0.0).unwrap_err();
+        assert!(err.contains("element 1"), "{err}");
+        assert!(check_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-8], 1e-6, 0.0).is_ok());
+        assert!(check_close(&[1.0], &[1.0, 2.0], 0.1, 0.0).is_err());
+    }
+}

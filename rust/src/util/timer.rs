@@ -1,0 +1,194 @@
+//! Wall-clock timing and the per-layer time accounting the paper's
+//! evaluation is built on (Tables 1 and 5 report seconds per layer class;
+//! Table 6 reports per-layer speedups).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Simple scope timer returning elapsed seconds.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_nanos(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+}
+
+/// The four layer-time classes the paper reports (Table 5): forward and
+/// backward, split into convolutional and fully-connected. Pooling is folded
+/// into its adjacent class in Table 5; we track it separately and let the
+/// harness aggregate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    ConvForward,
+    ConvBackward,
+    PoolForward,
+    PoolBackward,
+    FcForward,
+    FcBackward,
+    OutputForward,
+    OutputBackward,
+}
+
+pub const LAYER_CLASSES: [LayerClass; 8] = [
+    LayerClass::ConvForward,
+    LayerClass::ConvBackward,
+    LayerClass::PoolForward,
+    LayerClass::PoolBackward,
+    LayerClass::FcForward,
+    LayerClass::FcBackward,
+    LayerClass::OutputForward,
+    LayerClass::OutputBackward,
+];
+
+impl LayerClass {
+    pub fn index(self) -> usize {
+        match self {
+            LayerClass::ConvForward => 0,
+            LayerClass::ConvBackward => 1,
+            LayerClass::PoolForward => 2,
+            LayerClass::PoolBackward => 3,
+            LayerClass::FcForward => 4,
+            LayerClass::FcBackward => 5,
+            LayerClass::OutputForward => 6,
+            LayerClass::OutputBackward => 7,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerClass::ConvForward => "conv/fwd",
+            LayerClass::ConvBackward => "conv/bwd",
+            LayerClass::PoolForward => "pool/fwd",
+            LayerClass::PoolBackward => "pool/bwd",
+            LayerClass::FcForward => "fc/fwd",
+            LayerClass::FcBackward => "fc/bwd",
+            LayerClass::OutputForward => "out/fwd",
+            LayerClass::OutputBackward => "out/bwd",
+        }
+    }
+}
+
+/// Thread-safe accumulator of nanoseconds per layer class. Shared by all
+/// workers (relaxed atomics: we only need sum integrity, not ordering).
+#[derive(Debug, Default)]
+pub struct LayerTimes {
+    nanos: [AtomicU64; 8],
+}
+
+impl LayerTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, class: LayerClass, nanos: u64) {
+        self.nanos[class.index()].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn get_secs(&self, class: LayerClass) -> f64 {
+        self.nanos[class.index()].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        LAYER_CLASSES.iter().map(|&c| self.get_secs(c)).sum()
+    }
+
+    /// Snapshot as (class, seconds) pairs.
+    pub fn snapshot(&self) -> Vec<(LayerClass, f64)> {
+        LAYER_CLASSES.iter().map(|&c| (c, self.get_secs(c))).collect()
+    }
+
+    pub fn reset(&self) {
+        for a in &self.nanos {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Format seconds compactly for table output.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.1} h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_times_accumulate() {
+        let t = LayerTimes::new();
+        t.add(LayerClass::ConvForward, 1_000_000_000);
+        t.add(LayerClass::ConvForward, 500_000_000);
+        t.add(LayerClass::FcBackward, 250_000_000);
+        assert!((t.get_secs(LayerClass::ConvForward) - 1.5).abs() < 1e-9);
+        assert!((t.get_secs(LayerClass::FcBackward) - 0.25).abs() < 1e-9);
+        assert!((t.total_secs() - 1.75).abs() < 1e-9);
+        t.reset();
+        assert_eq!(t.total_secs(), 0.0);
+    }
+
+    #[test]
+    fn layer_times_threaded_sum() {
+        let t = std::sync::Arc::new(LayerTimes::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let t = t.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        t.add(LayerClass::ConvBackward, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            (t.get_secs(LayerClass::ConvBackward) * 1e9).round() as u64,
+            8000
+        );
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(7200.0), "2.0 h");
+        assert_eq!(fmt_secs(90.0), "1.5 min");
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_secs(0.0025), "2.50 ms");
+        assert_eq!(fmt_secs(0.0000025), "2.50 µs");
+    }
+
+    #[test]
+    fn class_indices_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for c in LAYER_CLASSES {
+            assert!(seen.insert(c.index()));
+            assert!(!c.name().is_empty());
+        }
+    }
+}

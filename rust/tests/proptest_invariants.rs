@@ -1,0 +1,258 @@
+//! Property-based invariants across modules, driven by the in-crate
+//! proptest harness (util::proptest).
+
+use chaos_phi::chaos::{Sampler, SharedParams};
+use chaos_phi::config::{ArchSpec, LayerSpec};
+use chaos_phi::nn::{compute_dims, Network};
+use chaos_phi::perfmodel::{PerfModel, Scenario};
+use chaos_phi::phisim::{simulate, SimConfig};
+use chaos_phi::util::proptest::{check_close, run, Config};
+use chaos_phi::util::Pcg32;
+
+/// Random valid architecture generator: input side, conv/pool pairs, fc.
+fn random_arch(rng: &mut Pcg32, size: usize) -> ArchSpec {
+    let mut layers = vec![];
+    let mut side = 8 + rng.range(0, 8 + size);
+    layers.push(LayerSpec::Input { side });
+    let n_conv = 1 + rng.range(0, 2);
+    for _ in 0..n_conv {
+        let max_k = side.saturating_sub(2).clamp(1, 4);
+        let kernel = 1 + rng.range(0, max_k);
+        if kernel > side {
+            break;
+        }
+        layers.push(LayerSpec::Conv { maps: 1 + rng.range(0, 4), kernel });
+        side = side - kernel + 1;
+        // pool with a divisor kernel
+        let divisors: Vec<usize> = (1..=side.min(3)).filter(|d| side % d == 0).collect();
+        let k = divisors[rng.range(0, divisors.len())];
+        layers.push(LayerSpec::MaxPool { kernel: k });
+        side /= k;
+        if side < 3 {
+            break;
+        }
+    }
+    layers.push(LayerSpec::FullyConnected { neurons: 1 + rng.range(0, 12) });
+    layers.push(LayerSpec::Output { classes: 10 });
+    ArchSpec { name: "prop".into(), layers, paper_epochs: 1 }
+}
+
+#[test]
+fn gradcheck_on_random_architectures() {
+    run(
+        Config { cases: 10, max_size: 6, seed: 0xFACE },
+        |rng, size| {
+            let arch = random_arch(rng, size);
+            let seed = rng.next_u64();
+            (arch, seed)
+        },
+        |(arch, seed)| {
+            if arch.validate().is_err() {
+                return Ok(()); // generator produced a degenerate stack; skip
+            }
+            let net = Network::new(arch.clone());
+            let mut params = net.init_params(*seed);
+            let mut scratch = net.scratch();
+            let mut rng = Pcg32::seeded(*seed ^ 0x1234);
+            let side = match arch.layers[0] {
+                LayerSpec::Input { side } => side,
+                _ => unreachable!(),
+            };
+            let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let label = rng.range(0, 10);
+
+            net.forward(&params.as_slice(), &img, &mut scratch, None);
+            let mut analytic = vec![0.0f32; net.total_params];
+            net.backward(&params.as_slice(), label, &mut scratch, None, |_, d, g| {
+                analytic[d.params.clone()].copy_from_slice(g);
+            });
+
+            // Check a handful of random parameters by central differences.
+            let h = 1e-3f32;
+            for _ in 0..8 {
+                let idx = rng.range(0, net.total_params);
+                let orig = params[idx];
+                params[idx] = orig + h;
+                net.forward(&params.as_slice(), &img, &mut scratch, None);
+                let lp = net.loss(&scratch, label);
+                params[idx] = orig - h;
+                net.forward(&params.as_slice(), &img, &mut scratch, None);
+                let lm = net.loss(&scratch, label);
+                params[idx] = orig;
+                let fd = (lp - lm) / (2.0 * h);
+                let an = analytic[idx];
+                if (fd - an).abs() > 6e-3 + 0.06 * fd.abs().max(an.abs()) {
+                    return Err(format!(
+                        "gradcheck failed at param {idx}: fd={fd} analytic={an} (arch {:?})",
+                        arch.layers
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shared_store_publications_sum_exactly() {
+    // Linearizability of the controlled scheme: concurrent per-layer
+    // publications never lose updates, for random layer choices and
+    // publication counts.
+    run(
+        Config { cases: 12, max_size: 8, seed: 0xBEEF },
+        |rng, size| {
+            let threads = 2 + rng.range(0, 6);
+            let pubs = 20 + rng.range(0, 50 * size);
+            (threads, pubs, rng.next_u64())
+        },
+        |&(threads, pubs, seed)| {
+            let arch = ArchSpec::tiny();
+            let dims = compute_dims(&arch);
+            let total = chaos_phi::nn::total_params(&dims);
+            let store = SharedParams::new(&vec![0.0; total], &dims);
+            let layer = 1; // first conv layer
+            let range = dims[layer].params.clone();
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    let store = &store;
+                    let range = range.clone();
+                    s.spawn(move || {
+                        let mut rng = Pcg32::new(seed, t as u64);
+                        let grads: Vec<f32> = (0..range.len()).map(|_| rng.next_f32()).collect();
+                        // integers scaled: use 1.0 per publish for exactness
+                        let ones = vec![1.0f32; grads.len()];
+                        for _ in 0..pubs {
+                            store.publish_scaled(layer, range.clone(), &ones, 1.0);
+                        }
+                    });
+                }
+            });
+            let expect = (threads * pubs) as f32;
+            for i in range {
+                if store.get(i) != expect {
+                    return Err(format!("element {i}: {} != {expect}", store.get(i)));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sampler_is_an_exact_partition() {
+    run(
+        Config { cases: 16, max_size: 10, seed: 0x5A11 },
+        |rng, size| {
+            let n = 10 + rng.range(0, 200 * size);
+            let threads = 1 + rng.range(0, 8);
+            let epoch = rng.range(0, 5);
+            (n, threads, epoch as usize)
+        },
+        |&(n, threads, epoch)| {
+            let s = Sampler::shuffled(n, 42, epoch);
+            let counts: Vec<usize> = std::thread::scope(|scope| {
+                let hs: Vec<_> = (0..threads)
+                    .map(|_| {
+                        scope.spawn(|| {
+                            let mut mine = std::collections::HashSet::new();
+                            while let Some(i) = s.next() {
+                                if !mine.insert(i) {
+                                    panic!("duplicate within a thread");
+                                }
+                            }
+                            mine.len()
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let total: usize = counts.iter().sum();
+            if total != n {
+                return Err(format!("issued {total} of {n} images"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simulator_time_monotone_in_work() {
+    run(
+        Config { cases: 10, max_size: 8, seed: 0x7137 },
+        |rng, _| {
+            let arch = ["small", "medium", "large"][rng.range(0, 3)];
+            let p = [1, 15, 30, 60, 120, 240][rng.range(0, 6)];
+            (arch, p)
+        },
+        |&(arch, p)| {
+            let base = SimConfig { epochs: 2, ..SimConfig::paper(arch, p) };
+            let more_images = SimConfig { images: base.images * 2, ..base.clone() };
+            let more_epochs = SimConfig { epochs: 4, ..base.clone() };
+            let t = simulate(&base).map_err(|e| e.to_string())?.total_secs();
+            let ti = simulate(&more_images).map_err(|e| e.to_string())?.total_secs();
+            let te = simulate(&more_epochs).map_err(|e| e.to_string())?.total_secs();
+            if ti <= t {
+                return Err(format!("{arch}@{p}: 2x images not slower ({ti} <= {t})"));
+            }
+            if te <= t {
+                return Err(format!("{arch}@{p}: 2x epochs not slower ({te} <= {t})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn perfmodel_monotone_in_images_and_epochs() {
+    run(
+        Config { cases: 16, max_size: 8, seed: 0xD00D },
+        |rng, _| {
+            let arch = ["small", "medium", "large"][rng.range(0, 3)];
+            let p = 1 + rng.range(0, 4000);
+            (arch, p)
+        },
+        |&(arch, p)| {
+            let m = PerfModel::for_arch(arch).map_err(|e| e.to_string())?;
+            let base = Scenario::paper_default(arch, p);
+            let t = m.predict_secs(&base);
+            let t2 = m.predict_secs(&Scenario { images: base.images * 2, ..base });
+            let t3 = m.predict_secs(&Scenario { epochs: base.epochs * 2, ..base });
+            if !(t2 > t && t3 > t && t > 0.0) {
+                return Err(format!("monotonicity violated at {arch}@{p}: {t} {t2} {t3}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn forward_probs_always_a_distribution() {
+    run(
+        Config { cases: 12, max_size: 6, seed: 0xABCD },
+        |rng, size| {
+            let arch = random_arch(rng, size);
+            (arch, rng.next_u64())
+        },
+        |(arch, seed)| {
+            if arch.validate().is_err() {
+                return Ok(());
+            }
+            let net = Network::new(arch.clone());
+            let params = net.init_params(*seed);
+            let mut scratch = net.scratch();
+            let side = match arch.layers[0] {
+                LayerSpec::Input { side } => side,
+                _ => unreachable!(),
+            };
+            let mut rng = Pcg32::seeded(*seed);
+            let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let probs = net.forward(&params.as_slice(), &img, &mut scratch, None).to_vec();
+            let sum: f32 = probs.iter().sum();
+            check_close(&[sum], &[1.0], 1e-4, 0.0)?;
+            if probs.iter().any(|&p| !(0.0..=1.0).contains(&p)) {
+                return Err(format!("probs out of range: {probs:?}"));
+            }
+            Ok(())
+        },
+    );
+}

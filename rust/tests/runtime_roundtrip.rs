@@ -1,0 +1,163 @@
+//! Cross-validation of the two engines: the native rust `nn` stack against
+//! the AOT JAX/Pallas artifacts executed through PJRT. Both implement the
+//! same math over the same flat parameter vector, so probabilities, losses
+//! and gradients must agree to float tolerance.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use chaos_phi::nn::Network;
+use chaos_phi::runtime::{
+    artifacts_available, BatchForwardEngine, ForwardEngine, Manifest, Runtime, TrainEngine,
+};
+use chaos_phi::util::Pcg32;
+
+fn artifact_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn skip_unless_built() -> Option<(Manifest, Runtime)> {
+    let dir = artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest parses");
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    Some((manifest, rt))
+}
+
+fn rand_image(rng: &mut Pcg32, side: usize) -> Vec<f32> {
+    (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn forward_probs_match_native_engine() {
+    let Some((manifest, rt)) = skip_unless_built() else { return };
+    for arch_name in ["tiny", "small"] {
+        if manifest.arch(arch_name).is_err() {
+            continue;
+        }
+        let engine = ForwardEngine::load(&rt, &manifest, arch_name).unwrap();
+        let net = Network::from_name(arch_name).unwrap();
+        assert_eq!(engine.arch.param_count, net.total_params);
+
+        let params = net.init_params(0xAB);
+        let mut scratch = net.scratch();
+        let mut rng = Pcg32::seeded(17);
+        for trial in 0..3 {
+            let img = rand_image(&mut rng, engine.arch.input_side);
+            let hlo_probs = engine.run(&params, &img).unwrap();
+            let native = net.forward(&params.as_slice(), &img, &mut scratch, None);
+            let d = max_abs_diff(&hlo_probs, native);
+            assert!(
+                d < 2e-5,
+                "{arch_name} trial {trial}: probs diverge by {d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_matches_native_gradients() {
+    let Some((manifest, rt)) = skip_unless_built() else { return };
+    let arch_name = "tiny";
+    if manifest.arch(arch_name).is_err() {
+        eprintln!("SKIP: tiny not in manifest");
+        return;
+    }
+    let engine = TrainEngine::load(&rt, &manifest, arch_name).unwrap();
+    let net = Network::from_name(arch_name).unwrap();
+    let params = net.init_params(0xCD);
+    let mut scratch = net.scratch();
+    let mut rng = Pcg32::seeded(23);
+    let img = rand_image(&mut rng, engine.arch.input_side);
+    let label = 6usize;
+
+    let out = engine.run(&params, &img, label as i32).unwrap();
+
+    let native_probs =
+        net.forward(&params.as_slice(), &img, &mut scratch, None).to_vec();
+    let native_loss = net.loss(&scratch, label);
+    let mut native_grads = vec![0.0f32; net.total_params];
+    net.backward(&params.as_slice(), label, &mut scratch, None, |_, d, g| {
+        native_grads[d.params.clone()].copy_from_slice(g);
+    });
+
+    assert!(
+        (out.loss - native_loss).abs() < 1e-4,
+        "loss: hlo {} vs native {}",
+        out.loss,
+        native_loss
+    );
+    assert!(max_abs_diff(&out.probs, &native_probs) < 2e-5, "probs diverge");
+    let gd = max_abs_diff(&out.grads, &native_grads);
+    assert!(gd < 5e-4, "gradients diverge by {gd}");
+    assert_eq!(out.grads.len(), net.total_params);
+}
+
+#[test]
+fn batched_forward_matches_singles() {
+    let Some((manifest, rt)) = skip_unless_built() else { return };
+    let arch_name = "tiny";
+    if manifest.arch(arch_name).is_err() {
+        eprintln!("SKIP: tiny not in manifest");
+        return;
+    }
+    let batched = BatchForwardEngine::load(&rt, &manifest, arch_name).unwrap();
+    let single = ForwardEngine::load(&rt, &manifest, arch_name).unwrap();
+    let net = Network::from_name(arch_name).unwrap();
+    let params = net.init_params(0xEF);
+    let side = batched.arch.input_side;
+    let mut rng = Pcg32::seeded(31);
+
+    // Fill a whole batch with random images.
+    let b = batched.batch;
+    let mut images = Vec::with_capacity(b * side * side);
+    for _ in 0..b {
+        images.extend(rand_image(&mut rng, side));
+    }
+    let rows = batched.run(&params, &images).unwrap();
+    assert_eq!(rows.len(), b);
+    for (i, row) in rows.iter().enumerate() {
+        let img = &images[i * side * side..(i + 1) * side * side];
+        let one = single.run(&params, img).unwrap();
+        let d = max_abs_diff(row, &one);
+        assert!(d < 2e-5, "batch row {i} diverges by {d}");
+    }
+}
+
+#[test]
+fn sgd_on_hlo_gradients_reduces_loss() {
+    // The AOT train-step is a drop-in gradient source: a few steps of SGD
+    // using only PJRT-produced gradients must reduce the loss.
+    let Some((manifest, rt)) = skip_unless_built() else { return };
+    if manifest.arch("tiny").is_err() {
+        eprintln!("SKIP: tiny not in manifest");
+        return;
+    }
+    let engine = TrainEngine::load(&rt, &manifest, "tiny").unwrap();
+    let net = Network::from_name("tiny").unwrap();
+    let mut params = net.init_params(0x11);
+    let mut rng = Pcg32::seeded(41);
+    let img = rand_image(&mut rng, engine.arch.input_side);
+    let label = 3;
+
+    let first = engine.run(&params, &img, label).unwrap().loss;
+    let mut last = first;
+    for _ in 0..10 {
+        let out = engine.run(&params, &img, label).unwrap();
+        for (w, g) in params.iter_mut().zip(&out.grads) {
+            *w -= 0.1 * g;
+        }
+        last = out.loss;
+    }
+    assert!(
+        last < first * 0.5,
+        "HLO-gradient SGD failed to overfit one sample: {first} -> {last}"
+    );
+}

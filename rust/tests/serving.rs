@@ -1,0 +1,101 @@
+//! Serving integration: dynamic batcher + PJRT batched executor under
+//! concurrent clients. Requires `make artifacts`; skips otherwise.
+
+use chaos_phi::data::{generate_synthetic, SynthConfig};
+use chaos_phi::nn::Network;
+use chaos_phi::runtime::{artifacts_available, ForwardEngine, Manifest, Runtime};
+use chaos_phi::serve::{Server, ServerConfig};
+
+fn artifact_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn skip() -> bool {
+    if !artifacts_available(&artifact_dir()) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn server_answers_concurrent_clients_correctly() {
+    if skip() {
+        return;
+    }
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(3);
+    let server = Server::spawn(
+        artifact_dir(),
+        "tiny".into(),
+        params.clone(),
+        ServerConfig { max_delay: std::time::Duration::from_millis(1), ..Default::default() },
+    )
+    .unwrap();
+
+    // Ground truth via the single-image engine.
+    let manifest = Manifest::load(artifact_dir()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let single = ForwardEngine::load(&rt, &manifest, "tiny").unwrap();
+
+    let images = generate_synthetic(24, 8, &SynthConfig::default()).resize(13);
+    // Ground truth precomputed on this thread (the PJRT handles are !Sync).
+    let expected: Vec<Vec<f32>> =
+        (0..images.len()).map(|i| single.run(&params, images.image(i)).unwrap()).collect();
+    std::thread::scope(|s| {
+        for c in 0..3usize {
+            let handle = server.handle();
+            let images = &images;
+            let expected = &expected;
+            s.spawn(move || {
+                let mut i = c;
+                while i < images.len() {
+                    let got = handle.predict(images.image(i)).unwrap();
+                    for (a, b) in got.iter().zip(&expected[i]) {
+                        assert!(
+                            (a - b).abs() < 2e-5,
+                            "batched vs single mismatch on image {i}"
+                        );
+                    }
+                    i += 3;
+                }
+            });
+        }
+    });
+    let m = server.handle().metrics.snapshot();
+    assert_eq!(m.requests, 24);
+    assert!(m.batches >= 6, "batch cap is 4, so ≥6 batches for 24 requests");
+    assert!(m.mean_batch_fill <= 4.0);
+}
+
+#[test]
+fn server_rejects_wrong_image_size() {
+    if skip() {
+        return;
+    }
+    let net = Network::from_name("tiny").unwrap();
+    let server = Server::spawn(
+        artifact_dir(),
+        "tiny".into(),
+        net.init_params(1),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let err = server.handle().predict(&[0.0; 10]).unwrap_err();
+    assert!(err.to_string().contains("size"), "{err}");
+}
+
+#[test]
+fn server_load_error_is_reported() {
+    if skip() {
+        return;
+    }
+    let net = Network::from_name("tiny").unwrap();
+    let r = Server::spawn(
+        "/nonexistent/artifacts".into(),
+        "tiny".into(),
+        net.init_params(1),
+        ServerConfig::default(),
+    );
+    assert!(r.is_err(), "missing artifact dir must fail spawn");
+}

@@ -1,0 +1,116 @@
+//! End-to-end training integration: data generation → CHAOS coordinator →
+//! reporter, across strategies and architectures, plus failure-mode
+//! coverage (bad configs).
+
+use chaos_phi::chaos::{train, Strategy};
+use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::data::{generate_synthetic, load_or_generate, SynthConfig};
+use chaos_phi::nn::Network;
+
+fn cfg(threads: usize, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        threads,
+        eta0: 0.01,
+        eta_decay: 0.9,
+        seed: 77,
+        validation_fraction: 0.2,
+    }
+}
+
+#[test]
+fn small_arch_learns_synthetic_digits() {
+    let net = Network::new(ArchSpec::small());
+    let (train_set, test_set) = load_or_generate("data/mnist", 600, 200, 7);
+    let run = train(&net, &train_set, &test_set, &cfg(1, 3), Strategy::Sequential).unwrap();
+    let first = &run.epochs[0];
+    let last = run.final_epoch();
+    assert!(last.train.loss < first.train.loss * 0.8, "loss must fall substantially");
+    assert!(
+        last.test.error_rate() < 0.35,
+        "test error rate {} too high after 3 epochs",
+        last.test.error_rate()
+    );
+}
+
+#[test]
+fn chaos_accuracy_parity_on_small_arch() {
+    // The Result-4 experiment at integration scale: same seed/data, CHAOS
+    // at 4 workers vs sequential; final error rates must be comparable.
+    let net = Network::new(ArchSpec::small());
+    let (train_set, test_set) = load_or_generate("data/mnist", 500, 200, 9);
+    let seq = train(&net, &train_set, &test_set, &cfg(1, 2), Strategy::Sequential).unwrap();
+    let par = train(&net, &train_set, &test_set, &cfg(4, 2), Strategy::Chaos).unwrap();
+    let d = (seq.final_epoch().test.error_rate() - par.final_epoch().test.error_rate()).abs();
+    assert!(
+        d < 0.12,
+        "parity gap {d}: seq {} vs chaos {}",
+        seq.final_epoch().test.error_rate(),
+        par.final_epoch().test.error_rate()
+    );
+    // CHAOS must actually publish per parameterized layer: 4 per sample
+    // per epoch (small arch has 4 parameterized layers).
+    let expected = (train_set.len() * 2 * 4) as u64;
+    assert_eq!(par.publications, expected);
+}
+
+#[test]
+fn epoch_metrics_account_every_image() {
+    let net = Network::new(ArchSpec::tiny());
+    let train_set = generate_synthetic(150, 3, &SynthConfig::default()).resize(13);
+    let test_set = generate_synthetic(50, 4, &SynthConfig::default()).resize(13);
+    for strategy in [Strategy::Chaos, Strategy::Hogwild, Strategy::Averaged { sync_every: 8 }] {
+        let run = train(&net, &train_set, &test_set, &cfg(3, 2), strategy).unwrap();
+        for e in &run.epochs {
+            assert_eq!(e.train.images, 150, "{}", strategy.name());
+            assert_eq!(e.validation.images, 30, "{}", strategy.name());
+            assert_eq!(e.test.images, 50, "{}", strategy.name());
+        }
+        assert_eq!(run.epochs.len(), 2);
+        assert_eq!(run.final_params.len(), net.total_params);
+    }
+}
+
+#[test]
+fn run_result_round_trips_through_json_file() {
+    let net = Network::new(ArchSpec::tiny());
+    let train_set = generate_synthetic(60, 5, &SynthConfig::default()).resize(13);
+    let test_set = generate_synthetic(30, 6, &SynthConfig::default()).resize(13);
+    let run = train(&net, &train_set, &test_set, &cfg(2, 1), Strategy::Chaos).unwrap();
+    let path = std::env::temp_dir().join(format!("chaos_run_{}.json", std::process::id()));
+    run.save(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = chaos_phi::util::Json::parse(&text).unwrap();
+    assert_eq!(j.get("arch").unwrap().as_str(), Some("tiny"));
+    assert_eq!(j.get("threads").unwrap().as_usize(), Some(2));
+    assert_eq!(j.get("epochs").unwrap().as_arr().unwrap().len(), 1);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    let net = Network::new(ArchSpec::tiny());
+    let d = generate_synthetic(10, 1, &SynthConfig::default()).resize(13);
+    for bad in [
+        TrainConfig { epochs: 0, ..cfg(1, 1) },
+        TrainConfig { threads: 0, ..cfg(1, 1) },
+        TrainConfig { eta0: 0.0, ..cfg(1, 1) },
+        TrainConfig { eta_decay: 0.0, ..cfg(1, 1) },
+        TrainConfig { validation_fraction: 2.0, ..cfg(1, 1) },
+    ] {
+        assert!(train(&net, &d, &d, &bad, Strategy::Chaos).is_err());
+    }
+}
+
+#[test]
+fn large_arch_single_step_is_finite() {
+    // The large net is too slow for a full integration epoch in debug
+    // builds; one SGD step proves the stack composes at full depth.
+    let net = Network::new(ArchSpec::large());
+    let mut params = net.init_params(1);
+    let mut scratch = net.scratch();
+    let img = generate_synthetic(1, 2, &SynthConfig::default());
+    let (loss, _) = net.sgd_step(&mut params, img.image(0), 5, 0.001, &mut scratch, None);
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(params.iter().all(|w| w.is_finite()));
+}
