@@ -9,7 +9,7 @@
 //!    curves (the substitution of DESIGN.md §2).
 
 use chaos_phi::bench::{Bench, Report};
-use chaos_phi::chaos::{train, Strategy};
+use chaos_phi::chaos::{ChaosPolicy, Trainer};
 use chaos_phi::config::{ArchSpec, TrainConfig};
 use chaos_phi::data::{generate_synthetic, SynthConfig};
 use chaos_phi::nn::Network;
@@ -35,7 +35,14 @@ fn main() {
             Bench::new(format!("real/chaos_epoch/{threads}t"))
                 .warmup(1)
                 .iters(3)
-                .run(|| train(&net, &train_set, &test_set, &cfg, Strategy::Chaos).unwrap()),
+                .run(|| {
+                    Trainer::new()
+                        .network(net.clone())
+                        .config(cfg.clone())
+                        .policy(ChaosPolicy)
+                        .run(&train_set, &test_set)
+                        .unwrap()
+                }),
         );
     }
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);

@@ -1,16 +1,20 @@
 //! Bench: CHAOS vs the strategy baselines of §4.1 (A–D ablation).
-//! Measures one training epoch per strategy at 4 workers — wall-clock,
+//! Measures one training epoch per policy at 4 workers — wall-clock,
 //! publication counts, and resulting training loss, on identical data and
 //! seeds.
+//!
+//! Policies come from the registry (`chaos::policy::names`), so an impl
+//! registered through `chaos::policy::register` is benchmarked
+//! automatically.
 
 use chaos_phi::bench::{Bench, Report};
-use chaos_phi::chaos::{train, Strategy};
+use chaos_phi::chaos::{policy, Trainer};
 use chaos_phi::config::{ArchSpec, TrainConfig};
 use chaos_phi::data::{generate_synthetic, SynthConfig};
 use chaos_phi::nn::Network;
 
 fn main() {
-    let mut report = Report::new("update_policies — strategy ablation (4 workers, 1 epoch)");
+    let mut report = Report::new("update_policies — policy ablation (4 workers, 1 epoch)");
     let net = Network::new(ArchSpec::small());
     let train_set = generate_synthetic(400, 9, &SynthConfig::default());
     let test_set = generate_synthetic(100, 10, &SynthConfig::default());
@@ -23,34 +27,36 @@ fn main() {
         validation_fraction: 0.0,
     };
 
-    for strategy in [
-        Strategy::Sequential,
-        Strategy::Chaos,
-        Strategy::Hogwild,
-        Strategy::DelayedRoundRobin,
-        Strategy::Averaged { sync_every: 32 },
-    ] {
-        let cfg = if matches!(strategy, Strategy::Sequential) {
-            TrainConfig { threads: 1, ..cfg.clone() }
-        } else {
-            cfg.clone()
+    for name in policy::names() {
+        // A registered factory may require a ':' argument; such policies
+        // can't be instantiated from the bare name, so skip with a note.
+        let sequential = match policy::from_name(&name) {
+            Ok(p) => p.is_sequential(),
+            Err(e) => {
+                report.note(format!("{name}: skipped ({e})"));
+                continue;
+            }
         };
+        let cfg = if sequential { TrainConfig { threads: 1, ..cfg.clone() } } else { cfg.clone() };
         let mut last_loss = 0.0;
         let mut pubs = 0;
         report.add(
-            Bench::new(format!("epoch/{}", strategy.name()))
+            Bench::new(format!("epoch/{name}"))
                 .warmup(1)
                 .iters(3)
                 .run(|| {
-                    let r = train(&net, &train_set, &test_set, &cfg, strategy).unwrap();
+                    let r = Trainer::new()
+                        .network(net.clone())
+                        .config(cfg.clone())
+                        .policy_name(&name)
+                        .unwrap()
+                        .run(&train_set, &test_set)
+                        .unwrap();
                     last_loss = r.final_epoch().train.loss;
                     pubs = r.publications;
                 }),
         );
-        report.note(format!(
-            "{}: train loss {last_loss:.1}, {pubs} publications",
-            strategy.name()
-        ));
+        report.note(format!("{name}: train loss {last_loss:.1}, {pubs} publications"));
     }
     report.note("CHAOS's per-layer locking costs little over pure HogWild! while keeping updates exact; delayed-rr serializes whole samples; averaged adds barriers.");
     report.print();

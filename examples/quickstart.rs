@@ -1,4 +1,5 @@
-//! Quickstart: train a CNN with CHAOS in ~30 seconds.
+//! Quickstart: train a CNN with CHAOS in ~30 seconds, through the
+//! [`Trainer`] builder — the public face of the coordinator.
 //!
 //! Builds the paper's "small" architecture, generates a synthetic MNIST
 //! stand-in (or loads the real IDX files from `data/mnist/` if present),
@@ -6,10 +7,14 @@
 //! compares accuracy — the paper's core claim: asynchronous parallel
 //! training matches sequential accuracy.
 //!
+//! The update scheme is a pluggable policy: swap `.policy(ChaosPolicy)`
+//! for `.policy_name("averaged:64")?` (or any policy registered through
+//! `chaos::policy::register`) and nothing else changes.
+//!
 //! Run: `cargo run --release --example quickstart`
 
-use chaos_phi::chaos::{train, Strategy};
-use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::chaos::{ChaosPolicy, SequentialPolicy, Trainer};
+use chaos_phi::config::ArchSpec;
 use chaos_phi::data::load_or_generate;
 use chaos_phi::nn::Network;
 
@@ -24,17 +29,18 @@ fn main() -> anyhow::Result<()> {
     let (train_set, test_set) = load_or_generate("data/mnist", 1_000, 400, 42);
     println!("data: {} train / {} test images\n", train_set.len(), test_set.len());
 
-    let cfg = TrainConfig {
-        epochs: 3,
-        threads: 1,
-        eta0: 0.01,
-        eta_decay: 0.9,
-        seed: 7,
-        validation_fraction: 0.2,
+    // Shared hyper-parameters, stated once through the fluent builder.
+    let trainer = || {
+        Trainer::new()
+            .network(net.clone())
+            .epochs(3)
+            .eta(0.01, 0.9)
+            .seed(7)
+            .validation_fraction(0.2)
     };
 
     println!("== sequential baseline ==");
-    let seq = train(&net, &train_set, &test_set, &cfg, Strategy::Sequential)?;
+    let seq = trainer().threads(1).policy(SequentialPolicy).run(&train_set, &test_set)?;
     for e in &seq.epochs {
         println!(
             "  epoch {}: train loss {:.1}, test error rate {:.2}%",
@@ -45,8 +51,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n== CHAOS, 4 threads (shared weights, per-layer delayed publication) ==");
-    let cfg4 = TrainConfig { threads: 4, ..cfg };
-    let par = train(&net, &train_set, &test_set, &cfg4, Strategy::Chaos)?;
+    let par = trainer().threads(4).policy(ChaosPolicy).run(&train_set, &test_set)?;
     for e in &par.epochs {
         println!(
             "  epoch {}: train loss {:.1}, test error rate {:.2}%",

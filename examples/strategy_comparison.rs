@@ -2,40 +2,39 @@
 //! sequential SGD, averaged SGD (B), delayed round-robin (C), and pure
 //! HogWild! (D) — same data, same seed, same epoch budget.
 //!
+//! The comparison iterates the *policy registry*, so a policy registered
+//! through `chaos::policy::register` shows up here (and in the
+//! `update_policies` bench) with no further changes.
+//!
 //! Run: `cargo run --release --example strategy_comparison`
 
-use chaos_phi::chaos::{train, Strategy};
-use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::chaos::{policy, Trainer};
+use chaos_phi::config::ArchSpec;
 use chaos_phi::data::load_or_generate;
 use chaos_phi::nn::Network;
 
 fn main() -> anyhow::Result<()> {
     let net = Network::new(ArchSpec::small());
     let (train_set, test_set) = load_or_generate("data/mnist", 1_200, 500, 3);
-    let base = TrainConfig {
-        epochs: 3,
-        threads: 4,
-        eta0: 0.01,
-        eta_decay: 0.9,
-        seed: 11,
-        validation_fraction: 0.2,
-    };
 
-    println!("| strategy | threads | final test err | train loss | publications | wall s |");
+    println!("| policy | threads | final test err | train loss | publications | wall s |");
     println!("|---|---|---|---|---|---|");
-    for strategy in [
-        Strategy::Sequential,
-        Strategy::Chaos,
-        Strategy::Hogwild,
-        Strategy::DelayedRoundRobin,
-        Strategy::Averaged { sync_every: 32 },
-    ] {
-        let cfg = if matches!(strategy, Strategy::Sequential) {
-            TrainConfig { threads: 1, ..base.clone() }
-        } else {
-            base.clone()
+    for name in policy::names() {
+        // A registered factory may require a ':' argument; skip those.
+        let Ok(update_policy) = policy::from_name(&name) else {
+            println!("| {name} | - | (needs an argument — skipped) | - | - | - |");
+            continue;
         };
-        let r = train(&net, &train_set, &test_set, &cfg, strategy)?;
+        let threads = if update_policy.is_sequential() { 1 } else { 4 };
+        let r = Trainer::new()
+            .network(net.clone())
+            .epochs(3)
+            .threads(threads)
+            .eta(0.01, 0.9)
+            .seed(11)
+            .validation_fraction(0.2)
+            .policy_boxed(update_policy)
+            .run(&train_set, &test_set)?;
         let e = r.final_epoch();
         println!(
             "| {} | {} | {:.2}% | {:.1} | {} | {:.1} |",

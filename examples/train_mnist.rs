@@ -10,7 +10,7 @@
 //!
 //! Run: `cargo run --release --example train_mnist -- [train_n] [epochs] [threads]`
 
-use chaos_phi::chaos::{train, Strategy};
+use chaos_phi::chaos::{observer_fn, ChaosPolicy, TrainControl, Trainer};
 use chaos_phi::config::{ArchSpec, TrainConfig};
 use chaos_phi::data::load_or_generate;
 use chaos_phi::nn::Network;
@@ -39,7 +39,21 @@ fn main() -> anyhow::Result<()> {
         validation_fraction: 0.2,
     };
     let sw = Stopwatch::start();
-    let run = train(&net, &train_set, &test_set, &cfg, Strategy::Chaos)?;
+    // Live progress through the observer API (fires as each epoch lands).
+    let run = Trainer::new()
+        .network(net)
+        .config(cfg)
+        .policy(ChaosPolicy)
+        .observer(observer_fn(|e, _run| {
+            eprintln!(
+                "[live] epoch {} done: train loss {:.1}, test err {:.2}%",
+                e.epoch,
+                e.train.loss,
+                e.test.error_rate() * 100.0
+            );
+            TrainControl::Continue
+        }))
+        .run(&train_set, &test_set)?;
 
     println!("\nepoch |   eta    | train loss | train err% | val err% | test err% | secs");
     println!("------|----------|------------|------------|----------|-----------|-----");

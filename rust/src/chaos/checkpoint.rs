@@ -23,22 +23,40 @@ impl Checkpoint {
         Checkpoint { arch: arch.into(), params }
     }
 
-    /// Write to a file.
+    /// Write to a file. The write goes to a sibling temp file that is
+    /// renamed into place, so live mid-run checkpointing (see
+    /// [`super::CheckpointEvery`]) can overwrite a previous snapshot
+    /// without ever leaving a torn file behind.
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        let name = self.arch.as_bytes();
-        f.write_all(&(name.len() as u32).to_le_bytes())?;
-        f.write_all(name)?;
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        let mut crc = flate2::Crc::new();
-        for v in &self.params {
-            let b = v.to_le_bytes();
-            crc.update(&b);
-            f.write_all(&b)?;
+        let path = path.as_ref();
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint path has no file name: {path:?}"))?;
+        let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+        let write = || -> anyhow::Result<()> {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(MAGIC)?;
+            let name = self.arch.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+            let mut crc = flate2::Crc::new();
+            for v in &self.params {
+                let b = v.to_le_bytes();
+                crc.update(&b);
+                f.write_all(&b)?;
+            }
+            f.write_all(&crc.sum().to_le_bytes())?;
+            f.flush()?;
+            Ok(())
+        };
+        if let Err(e) = write() {
+            // Don't leave a partial sibling behind (repeated live
+            // checkpointing would otherwise accumulate stale .tmp files).
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
         }
-        f.write_all(&crc.sum().to_le_bytes())?;
-        f.flush()?;
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 

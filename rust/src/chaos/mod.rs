@@ -15,12 +15,17 @@
 //! * publication order is arbitrary and first-come-first-served; there is
 //!   no barrier anywhere in an epoch's training phase.
 //!
-//! The strategies the paper contrasts with (B: averaged/synchronous SGD,
-//! C: delayed round-robin, D: pure HogWild!) are implemented as alternate
-//! [`Strategy`] policies over the same worker framework for head-to-head
-//! ablations.
+//! The coordinator is driven through the [`Trainer`] builder; the update
+//! scheme — CHAOS itself or the strategies the paper contrasts with (B:
+//! averaged/synchronous SGD, C: delayed round-robin, D: pure HogWild!) —
+//! is an open [`UpdatePolicy`] trait over one shared worker framework, so
+//! new schemes plug in without touching the epoch driver (see [`policy`]).
+//! Runs can be observed in flight (early stopping, live checkpointing)
+//! through [`EpochObserver`].
 
 mod checkpoint;
+mod observer;
+pub mod policy;
 mod reporter;
 mod sampler;
 mod shared;
@@ -28,8 +33,17 @@ mod strategies;
 mod trainer;
 
 pub use checkpoint::Checkpoint;
+pub use observer::{
+    observer_fn, CheckpointEvery, EarlyStop, EpochObserver, FnObserver, RunView, TrainControl,
+};
+pub use policy::{
+    AveragedPolicy, ChaosPolicy, DelayedRoundRobinPolicy, EpochCtx, EpochState, HogwildPolicy,
+    SequentialPolicy, UpdatePolicy, WorkerHooks,
+};
 pub use reporter::{EpochRecord, EvalMetrics, RunResult};
 pub use sampler::Sampler;
 pub use shared::SharedParams;
 pub use strategies::{Strategy, Turnstile};
-pub use trainer::{eval_parallel, train};
+pub use trainer::{eval_parallel, Trainer};
+#[allow(deprecated)]
+pub use trainer::train;

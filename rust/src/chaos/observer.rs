@@ -1,0 +1,249 @@
+//! Run observation hooks: callbacks fired by the epoch driver while a
+//! training run is in flight, so callers can stop early, checkpoint live
+//! (via [`super::Checkpoint`]) or stream progress — instead of only
+//! inspecting the [`super::RunResult`] after the fact.
+
+use super::checkpoint::Checkpoint;
+use super::reporter::EpochRecord;
+use super::shared::SharedParams;
+use std::path::PathBuf;
+
+/// What the run should do after an observer callback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainControl {
+    /// Keep training.
+    Continue,
+    /// Finish the current epoch's record and end the run
+    /// ([`super::RunResult::stopped_early`] is set).
+    Stop,
+}
+
+/// Where the live parameters currently live (engine-dependent).
+pub(crate) enum ParamsView<'a> {
+    /// Sequential engine: the plain in-place vector.
+    Seq(&'a [f32]),
+    /// Parallel engines: the shared atomic store.
+    Par(&'a SharedParams),
+}
+
+/// A read-only window into the in-flight run, passed to every observer
+/// callback.
+pub struct RunView<'a> {
+    /// Architecture name (e.g. `"small"`).
+    pub arch: &'a str,
+    /// Active update-policy name (e.g. `"chaos"`).
+    pub policy: &'a str,
+    /// Worker threads in use (1 for the sequential engine).
+    pub threads: usize,
+    /// Epochs the run was configured for (early stopping may cut this
+    /// short).
+    pub epochs_planned: usize,
+    /// Cumulative shared-store publications so far (0 on the sequential
+    /// engine).
+    pub publications: u64,
+    pub(crate) params: ParamsView<'a>,
+}
+
+impl<'a> RunView<'a> {
+    pub(crate) fn new(
+        arch: &'a str,
+        policy: &'a str,
+        threads: usize,
+        epochs_planned: usize,
+        publications: u64,
+        params: ParamsView<'a>,
+    ) -> RunView<'a> {
+        RunView { arch, policy, threads, epochs_planned, publications, params }
+    }
+
+    /// Snapshot the current parameter vector (consistent enough for
+    /// checkpointing: on parallel engines concurrent publications may be
+    /// torn across layers, exactly like any CHAOS read).
+    pub fn params(&self) -> Vec<f32> {
+        match &self.params {
+            ParamsView::Seq(p) => p.to_vec(),
+            ParamsView::Par(store) => store.snapshot(),
+        }
+    }
+
+    /// Package the current weights as a [`Checkpoint`] (live mid-run
+    /// checkpointing — pair with [`Checkpoint::save`]).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint::new(self.arch, self.params())
+    }
+}
+
+/// Observer of an in-flight training run. All callbacks run on the driver
+/// thread, between phases — they never race the workers.
+pub trait EpochObserver: Send {
+    /// Fired after each epoch's record (train + validation + test) is
+    /// complete. Return [`TrainControl::Stop`] to end the run after this
+    /// epoch.
+    fn on_epoch_end(&mut self, _record: &EpochRecord, _run: &RunView<'_>) -> TrainControl {
+        TrainControl::Continue
+    }
+
+    /// Publication milestone: fired after each epoch's *training* phase on
+    /// parallel engines, with the new cumulative shared-store publication
+    /// count. Never fired by the sequential engine (which publishes
+    /// nothing).
+    fn on_publications(&mut self, _total: u64, _run: &RunView<'_>) {}
+}
+
+/// Stop the run once the test error rate reaches a target — the paper's
+/// Fig 6 stop-criterion, applied live.
+#[derive(Debug, Clone, Copy)]
+pub struct EarlyStop {
+    /// Stop when `test.error_rate() <= target_test_error`.
+    pub target_test_error: f64,
+}
+
+impl EarlyStop {
+    pub fn at_test_error(target_test_error: f64) -> EarlyStop {
+        EarlyStop { target_test_error }
+    }
+}
+
+impl EpochObserver for EarlyStop {
+    fn on_epoch_end(&mut self, record: &EpochRecord, _run: &RunView<'_>) -> TrainControl {
+        if record.test.error_rate() <= self.target_test_error {
+            TrainControl::Stop
+        } else {
+            TrainControl::Continue
+        }
+    }
+}
+
+/// Save a [`Checkpoint`] of the live weights every `every` epochs, so a
+/// long run can be resumed or served before it finishes.
+#[derive(Debug)]
+pub struct CheckpointEvery {
+    every: usize,
+    path: PathBuf,
+    /// Successful saves so far.
+    pub saves: usize,
+    /// The last save error, if any (the run continues regardless).
+    pub last_error: Option<String>,
+}
+
+impl CheckpointEvery {
+    pub fn new(every: usize, path: impl Into<PathBuf>) -> CheckpointEvery {
+        CheckpointEvery { every: every.max(1), path: path.into(), saves: 0, last_error: None }
+    }
+}
+
+impl EpochObserver for CheckpointEvery {
+    fn on_epoch_end(&mut self, record: &EpochRecord, run: &RunView<'_>) -> TrainControl {
+        if (record.epoch + 1) % self.every == 0 {
+            match run.checkpoint().save(&self.path) {
+                Ok(()) => self.saves += 1,
+                Err(e) => {
+                    // The observer is consumed by the run, so surface the
+                    // failure immediately rather than only in the field.
+                    eprintln!(
+                        "warning: live checkpoint to {} failed at epoch {}: {e}",
+                        self.path.display(),
+                        record.epoch
+                    );
+                    self.last_error = Some(e.to_string());
+                }
+            }
+        }
+        TrainControl::Continue
+    }
+}
+
+/// Adapter turning a closure into an [`EpochObserver`].
+pub struct FnObserver<F>(pub F);
+
+impl<F> EpochObserver for FnObserver<F>
+where
+    F: FnMut(&EpochRecord, &RunView<'_>) -> TrainControl + Send,
+{
+    fn on_epoch_end(&mut self, record: &EpochRecord, run: &RunView<'_>) -> TrainControl {
+        (self.0)(record, run)
+    }
+}
+
+/// Convenience constructor for [`FnObserver`].
+pub fn observer_fn<F>(f: F) -> FnObserver<F>
+where
+    F: FnMut(&EpochRecord, &RunView<'_>) -> TrainControl + Send,
+{
+    FnObserver(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::reporter::EvalMetrics;
+
+    fn record(epoch: usize, test_errors: usize) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            eta: 0.001,
+            train: EvalMetrics { images: 100, errors: 30, loss: 60.0 },
+            validation: EvalMetrics { images: 100, errors: 20, loss: 50.0 },
+            test: EvalMetrics { images: 100, errors: test_errors, loss: 40.0 },
+            train_secs: 1.0,
+            total_secs: 2.0,
+        }
+    }
+
+    fn view(params: &[f32]) -> RunView<'_> {
+        RunView::new("tiny", "chaos", 1, 5, 0, ParamsView::Seq(params))
+    }
+
+    #[test]
+    fn early_stop_triggers_at_target() {
+        let params = vec![0.0f32; 4];
+        let mut obs = EarlyStop::at_test_error(0.10);
+        assert_eq!(obs.on_epoch_end(&record(0, 50), &view(&params)), TrainControl::Continue);
+        assert_eq!(obs.on_epoch_end(&record(1, 10), &view(&params)), TrainControl::Stop);
+        assert_eq!(obs.on_epoch_end(&record(2, 0), &view(&params)), TrainControl::Stop);
+    }
+
+    #[test]
+    fn run_view_snapshots_params_and_checkpoints() {
+        let params = vec![1.0f32, 2.0, 3.0];
+        let v = view(&params);
+        assert_eq!(v.params(), params);
+        let ckpt = v.checkpoint();
+        assert_eq!(ckpt.arch, "tiny");
+        assert_eq!(ckpt.params, params);
+    }
+
+    #[test]
+    fn checkpoint_every_saves_on_schedule() {
+        let params = vec![0.5f32; 8];
+        let path = std::env::temp_dir().join(format!("obs_ckpt_{}.ckpt", std::process::id()));
+        let mut obs = CheckpointEvery::new(2, &path);
+        obs.on_epoch_end(&record(0, 50), &view(&params)); // epoch 1: no save
+        assert_eq!(obs.saves, 0);
+        obs.on_epoch_end(&record(1, 50), &view(&params)); // epoch 2: save
+        assert_eq!(obs.saves, 1);
+        assert!(obs.last_error.is_none(), "{:?}", obs.last_error);
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.params, params);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fn_observer_invokes_closure() {
+        let params = vec![0.0f32; 2];
+        let mut calls = 0;
+        {
+            let mut obs = observer_fn(|rec: &EpochRecord, _run: &RunView<'_>| {
+                calls += 1;
+                if rec.epoch >= 1 {
+                    TrainControl::Stop
+                } else {
+                    TrainControl::Continue
+                }
+            });
+            assert_eq!(obs.on_epoch_end(&record(0, 9), &view(&params)), TrainControl::Continue);
+            assert_eq!(obs.on_epoch_end(&record(1, 9), &view(&params)), TrainControl::Stop);
+        }
+        assert_eq!(calls, 2);
+    }
+}

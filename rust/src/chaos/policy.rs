@@ -1,0 +1,626 @@
+//! The open update-policy API — the seam the paper's §4.1 identifies as
+//! the *interchangeable* part of the trainer.
+//!
+//! A policy decides how each worker's gradients reach the shared weights:
+//! instantly or delayed, locked or racy, per layer or per sample, with or
+//! without barriers. The epoch driver ([`super::Trainer`]) is policy-blind;
+//! it drives forward/backward passes and hands every layer's finished
+//! gradient block to the policy's per-worker hooks. New schemes (e.g. the
+//! hybrid data/model parallelism of Krizhevsky's "one weird trick",
+//! arXiv:1404.5997, or heterogeneous-device scheduling, arXiv:1712.02546)
+//! are new [`UpdatePolicy`] impls plus a [`register`] call — no changes to
+//! the driver.
+//!
+//! The five paper strategies ship as provided impls, resolvable by name
+//! through [`from_name`] (e.g. `"chaos"`, `"averaged:64"`):
+//!
+//! * [`SequentialPolicy`] — plain on-line SGD on one thread (baseline A);
+//! * [`AveragedPolicy`] — barrier-synchronized averaged gradients
+//!   (strategy B, De Grazia et al.);
+//! * [`DelayedRoundRobinPolicy`] — whole-sample publications serialized in
+//!   ticket order (strategy C, Zinkevich et al.);
+//! * [`HogwildPolicy`] — instant, lock-free, racy updates (strategy D,
+//!   Recht et al.);
+//! * [`ChaosPolicy`] — controlled HogWild: per-layer publication under a
+//!   per-layer lock, arbitrary order of implicit synchronization (the
+//!   paper's contribution).
+
+use super::shared::SharedParams;
+use super::strategies::Turnstile;
+use crate::nn::{LayerDims, Network};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
+
+/// Everything a policy may consult while running one epoch's training
+/// phase. Borrowed by the driver for the duration of the epoch.
+pub struct EpochCtx<'a> {
+    /// The network being trained (geometry, layer table).
+    pub net: &'a Network,
+    /// The shared weight store all workers read from and publish to.
+    pub store: &'a SharedParams,
+    /// Number of worker threads in this run.
+    pub threads: usize,
+    /// Learning rate η for this epoch.
+    pub eta: f32,
+    /// 0-based epoch index.
+    pub epoch: usize,
+}
+
+/// An update policy: how worker gradients reach the shared weights.
+///
+/// A policy is long-lived (one per run); per-epoch shared state (barriers,
+/// accumulators, turnstiles) is created by [`UpdatePolicy::epoch_state`]
+/// and per-worker state by [`EpochState::worker`].
+pub trait UpdatePolicy: Send + Sync {
+    /// Stable name recorded in [`super::RunResult::strategy`] (and used by
+    /// the registry), e.g. `"chaos"`.
+    fn name(&self) -> String;
+
+    /// Sequential policies run the in-place single-thread engine; the
+    /// driver also takes that path whenever `threads == 1`.
+    fn is_sequential(&self) -> bool {
+        false
+    }
+
+    /// Reject invalid parameterizations before any thread spawns.
+    fn validate(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Per-epoch shared state; called once per epoch before workers start.
+    fn epoch_state(&self, ctx: &EpochCtx<'_>) -> Box<dyn EpochState>;
+}
+
+/// Shared state for one epoch's training phase; hands out per-worker hooks
+/// (worker setup). Shared by reference across all worker threads.
+pub trait EpochState: Send + Sync {
+    /// Per-worker setup: build this worker's hook object. Called once per
+    /// worker thread, inside that thread.
+    fn worker(&self, ctx: &EpochCtx<'_>, worker_id: usize) -> Box<dyn WorkerHooks + '_>;
+}
+
+/// Per-worker policy hooks, driven by the epoch driver.
+pub trait WorkerHooks {
+    /// Layer `layer`'s gradients for the current sample are complete
+    /// (called back-to-front during back-propagation — the per-layer
+    /// publication point).
+    fn publish(&mut self, ctx: &EpochCtx<'_>, layer: usize, dims: &LayerDims, grads: &[f32]);
+
+    /// The current sample's backward pass finished (sample-boundary sync
+    /// point — turnstiles, chunk counting, barriers).
+    fn end_sample(&mut self, _ctx: &EpochCtx<'_>) {}
+
+    /// The sampler drained; flush remaining state and join any collective
+    /// shutdown (worker teardown). Called once, before the thread exits.
+    fn finish(&mut self, _ctx: &EpochCtx<'_>) {}
+}
+
+// ---------------------------------------------------------------------------
+// Baseline A: sequential
+// ---------------------------------------------------------------------------
+
+/// Plain on-line SGD on one thread (the paper's baseline).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SequentialPolicy;
+
+impl UpdatePolicy for SequentialPolicy {
+    fn name(&self) -> String {
+        "sequential".to_string()
+    }
+
+    fn is_sequential(&self) -> bool {
+        true
+    }
+
+    fn epoch_state(&self, _ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        // Never reached through the driver (sequential policies run the
+        // in-place engine); behaves like CHAOS if driven directly.
+        Box::new(LockedState)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CHAOS (controlled HogWild) and strategy D (pure HogWild!)
+// ---------------------------------------------------------------------------
+
+/// CHAOS: per-layer delayed publication under a per-layer lock.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChaosPolicy;
+
+impl UpdatePolicy for ChaosPolicy {
+    fn name(&self) -> String {
+        "chaos".to_string()
+    }
+
+    fn epoch_state(&self, _ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        Box::new(LockedState)
+    }
+}
+
+struct LockedState;
+
+impl EpochState for LockedState {
+    fn worker(&self, _ctx: &EpochCtx<'_>, _worker_id: usize) -> Box<dyn WorkerHooks + '_> {
+        Box::new(LockedHooks)
+    }
+}
+
+struct LockedHooks;
+
+impl WorkerHooks for LockedHooks {
+    fn publish(&mut self, ctx: &EpochCtx<'_>, layer: usize, dims: &LayerDims, grads: &[f32]) {
+        ctx.store.publish_scaled(layer, dims.params.clone(), grads, -ctx.eta);
+    }
+}
+
+/// Strategy D: per-layer publication without locks; racing publishers may
+/// lose updates — exactly the race the original HogWild! tolerates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HogwildPolicy;
+
+impl UpdatePolicy for HogwildPolicy {
+    fn name(&self) -> String {
+        "hogwild".to_string()
+    }
+
+    fn epoch_state(&self, _ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        Box::new(UnlockedState)
+    }
+}
+
+struct UnlockedState;
+
+impl EpochState for UnlockedState {
+    fn worker(&self, _ctx: &EpochCtx<'_>, _worker_id: usize) -> Box<dyn WorkerHooks + '_> {
+        Box::new(UnlockedHooks)
+    }
+}
+
+struct UnlockedHooks;
+
+impl WorkerHooks for UnlockedHooks {
+    fn publish(&mut self, ctx: &EpochCtx<'_>, _layer: usize, dims: &LayerDims, grads: &[f32]) {
+        ctx.store.publish_scaled_unlocked(dims.params.clone(), grads, -ctx.eta);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strategy C: delayed round-robin
+// ---------------------------------------------------------------------------
+
+/// Strategy C: gradients of the whole sample are gathered locally, then
+/// published one worker at a time in strict ticket order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DelayedRoundRobinPolicy;
+
+impl UpdatePolicy for DelayedRoundRobinPolicy {
+    fn name(&self) -> String {
+        "delayed-rr".to_string()
+    }
+
+    fn epoch_state(&self, ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        let param_layers: Vec<usize> = ctx
+            .net
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.param_count() > 0)
+            .map(|(i, _)| i)
+            .collect();
+        Box::new(RoundRobinState {
+            turnstile: Turnstile::new(),
+            param_layers,
+            total_params: ctx.net.total_params,
+        })
+    }
+}
+
+struct RoundRobinState {
+    turnstile: Turnstile,
+    param_layers: Vec<usize>,
+    total_params: usize,
+}
+
+impl EpochState for RoundRobinState {
+    fn worker(&self, _ctx: &EpochCtx<'_>, _worker_id: usize) -> Box<dyn WorkerHooks + '_> {
+        Box::new(RoundRobinWorker { state: self, grads: vec![0.0; self.total_params] })
+    }
+}
+
+struct RoundRobinWorker<'a> {
+    state: &'a RoundRobinState,
+    grads: Vec<f32>,
+}
+
+impl WorkerHooks for RoundRobinWorker<'_> {
+    fn publish(&mut self, _ctx: &EpochCtx<'_>, _layer: usize, dims: &LayerDims, grads: &[f32]) {
+        self.grads[dims.params.clone()].copy_from_slice(grads);
+    }
+
+    fn end_sample(&mut self, ctx: &EpochCtx<'_>) {
+        self.state.turnstile.enter();
+        for &l in &self.state.param_layers {
+            let range = ctx.net.dims[l].params.clone();
+            // The turnstile already serializes all publishers.
+            ctx.store.publish_scaled_unlocked(range.clone(), &self.grads[range], -ctx.eta);
+        }
+        self.state.turnstile.leave();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strategy B: averaged (synchronous) SGD
+// ---------------------------------------------------------------------------
+
+/// Strategy B: workers accumulate gradients over up to `sync_every`
+/// samples, a barrier synchronizes, the leader averages across workers and
+/// applies one master step, and the round repeats until the epoch's sample
+/// pool drains.
+#[derive(Debug, Clone, Copy)]
+pub struct AveragedPolicy {
+    /// Samples accumulated per worker between synchronization rounds.
+    pub sync_every: usize,
+}
+
+impl AveragedPolicy {
+    pub fn new(sync_every: usize) -> AveragedPolicy {
+        AveragedPolicy { sync_every }
+    }
+}
+
+impl Default for AveragedPolicy {
+    fn default() -> AveragedPolicy {
+        AveragedPolicy { sync_every: 32 }
+    }
+}
+
+impl UpdatePolicy for AveragedPolicy {
+    fn name(&self) -> String {
+        "averaged".to_string()
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.sync_every > 0,
+            "averaged: sync_every must be ≥ 1 (0 would deadlock the barrier rounds)"
+        );
+        Ok(())
+    }
+
+    fn epoch_state(&self, ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        Box::new(AveragedState {
+            sync_every: self.sync_every.max(1),
+            accum: Mutex::new(vec![0.0f32; ctx.net.total_params]),
+            round_samples: AtomicUsize::new(0),
+            barrier: Barrier::new(ctx.threads),
+            done: AtomicBool::new(false),
+        })
+    }
+}
+
+struct AveragedState {
+    sync_every: usize,
+    accum: Mutex<Vec<f32>>,
+    round_samples: AtomicUsize,
+    barrier: Barrier,
+    done: AtomicBool,
+}
+
+impl EpochState for AveragedState {
+    fn worker(&self, ctx: &EpochCtx<'_>, _worker_id: usize) -> Box<dyn WorkerHooks + '_> {
+        Box::new(AveragedWorker {
+            state: self,
+            local: vec![0.0; ctx.net.total_params],
+            n_local: 0,
+        })
+    }
+}
+
+struct AveragedWorker<'a> {
+    state: &'a AveragedState,
+    local: Vec<f32>,
+    n_local: usize,
+}
+
+impl AveragedWorker<'_> {
+    /// One synchronization round: merge the local chunk, barrier, leader
+    /// applies the averaged master step (or flags the epoch done when the
+    /// round gathered nothing), barrier, reset.
+    fn round(&mut self, ctx: &EpochCtx<'_>) {
+        let st = self.state;
+        if self.n_local > 0 {
+            let mut acc = st.accum.lock().unwrap();
+            for (a, &l) in acc.iter_mut().zip(&self.local) {
+                *a += l;
+            }
+            st.round_samples.fetch_add(self.n_local, Ordering::Relaxed);
+        }
+        let wait = st.barrier.wait();
+        if wait.is_leader() {
+            let n = st.round_samples.swap(0, Ordering::Relaxed);
+            if n == 0 {
+                st.done.store(true, Ordering::Release);
+            } else {
+                let mut acc = st.accum.lock().unwrap();
+                // Averaged master step (strategy B): each learner's
+                // contribution is the gradient *sum* over its batch; the
+                // master averages across learners and applies one step:
+                // w -= η · (Σ_batches g) / workers. Note n counts samples;
+                // workers ≈ ceil(n / sync_every).
+                let workers = n.div_ceil(st.sync_every).max(1);
+                let mut new_params = ctx.store.snapshot();
+                let scale = ctx.eta / workers as f32;
+                for (w, g) in new_params.iter_mut().zip(acc.iter()) {
+                    *w -= scale * g;
+                }
+                ctx.store.store_all(&new_params);
+                acc.fill(0.0);
+            }
+        }
+        st.barrier.wait();
+        self.local.fill(0.0);
+        self.n_local = 0;
+    }
+}
+
+impl WorkerHooks for AveragedWorker<'_> {
+    fn publish(&mut self, _ctx: &EpochCtx<'_>, _layer: usize, dims: &LayerDims, grads: &[f32]) {
+        for (a, &g) in self.local[dims.params.clone()].iter_mut().zip(grads) {
+            *a += g;
+        }
+    }
+
+    fn end_sample(&mut self, ctx: &EpochCtx<'_>) {
+        self.n_local += 1;
+        if self.n_local >= self.state.sync_every {
+            self.round(ctx);
+        }
+    }
+
+    fn finish(&mut self, ctx: &EpochCtx<'_>) {
+        // Flush the partial chunk, then keep joining rounds until every
+        // worker has drained: the round that gathers zero samples globally
+        // ends the epoch for everyone.
+        loop {
+            self.round(ctx);
+            if self.state.done.load(Ordering::Acquire) {
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Name registry
+// ---------------------------------------------------------------------------
+
+type Factory = Arc<dyn Fn(Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> + Send + Sync>;
+
+fn make_sequential(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    no_arg("sequential", arg)?;
+    Ok(Box::new(SequentialPolicy))
+}
+
+fn make_chaos(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    no_arg("chaos", arg)?;
+    Ok(Box::new(ChaosPolicy))
+}
+
+fn make_hogwild(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    no_arg("hogwild", arg)?;
+    Ok(Box::new(HogwildPolicy))
+}
+
+fn make_delayed_rr(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    no_arg("delayed-rr", arg)?;
+    Ok(Box::new(DelayedRoundRobinPolicy))
+}
+
+fn make_averaged(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    Ok(Box::new(AveragedPolicy { sync_every: parse_sync_every(arg)? }))
+}
+
+/// Parse the `averaged:<sync_every>` argument (`None` = the default 32).
+pub(crate) fn parse_sync_every(arg: Option<&str>) -> anyhow::Result<usize> {
+    let sync_every: usize = match arg {
+        None => 32,
+        Some(a) => a
+            .parse()
+            .map_err(|_| anyhow::anyhow!("averaged:<sync_every> — bad integer '{a}'"))?,
+    };
+    anyhow::ensure!(
+        sync_every > 0,
+        "averaged:<sync_every> must be ≥ 1 (0 would deadlock the barrier rounds)"
+    );
+    Ok(sync_every)
+}
+
+fn no_arg(name: &str, arg: Option<&str>) -> anyhow::Result<()> {
+    match arg {
+        None => Ok(()),
+        Some(a) => anyhow::bail!("policy '{name}' takes no ':' argument (got '{a}')"),
+    }
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Factory>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Factory>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut map: BTreeMap<String, Factory> = BTreeMap::new();
+        map.insert("sequential".to_string(), Arc::new(make_sequential));
+        map.insert("chaos".to_string(), Arc::new(make_chaos));
+        map.insert("hogwild".to_string(), Arc::new(make_hogwild));
+        map.insert("delayed-rr".to_string(), Arc::new(make_delayed_rr));
+        map.insert("averaged".to_string(), Arc::new(make_averaged));
+        Mutex::new(map)
+    })
+}
+
+/// Short aliases accepted by [`from_name`] (CLI back-compat).
+fn canonical(head: &str) -> &str {
+    match head {
+        "seq" => "sequential",
+        "delayed" => "delayed-rr",
+        "avg" => "averaged",
+        other => other,
+    }
+}
+
+/// Resolve a policy by name, e.g. `"chaos"` or `"averaged:64"`. Text after
+/// the first `:` is handed to the policy's factory as its argument. The
+/// returned policy has already passed [`UpdatePolicy::validate`].
+pub fn from_name(text: &str) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    let (head, arg) = match text.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (text, None),
+    };
+    let head = canonical(head);
+    // Clone the factory out and drop the guard before calling it, so a
+    // factory may itself consult the registry (delegating/wrapper
+    // policies) and a panicking factory cannot poison the lock.
+    let factory = {
+        let reg = registry().lock().unwrap();
+        reg.get(head)
+            .cloned()
+            .ok_or_else(|| {
+                let known: Vec<&str> = reg.keys().map(|k| k.as_str()).collect();
+                anyhow::anyhow!("unknown policy '{text}' (available: {})", known.join("|"))
+            })?
+    };
+    let policy = factory(arg)?;
+    policy.validate()?;
+    Ok(policy)
+}
+
+/// The registered policy names (built-ins plus [`register`]ed customs),
+/// sorted. Benches and examples iterate this so new policies are covered
+/// automatically.
+pub fn names() -> Vec<String> {
+    registry().lock().unwrap().keys().cloned().collect()
+}
+
+/// Register a custom policy factory under `name`, making it selectable via
+/// [`from_name`] (and therefore the CLI and every registry-driven bench)
+/// without touching the trainer. The factory receives the text after the
+/// first `:`, if any. Fails on duplicate or malformed names.
+pub fn register<F>(name: &str, factory: F) -> anyhow::Result<()>
+where
+    F: Fn(Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> + Send + Sync + 'static,
+{
+    anyhow::ensure!(
+        !name.is_empty() && !name.contains(':'),
+        "policy name '{name}' must be non-empty and ':'-free"
+    );
+    // Alias heads are rewritten before lookup, so a policy registered
+    // under one would be silently unreachable.
+    anyhow::ensure!(
+        canonical(name) == name,
+        "policy name '{name}' is a reserved alias of '{}'",
+        canonical(name)
+    );
+    let mut reg = registry().lock().unwrap();
+    anyhow::ensure!(!reg.contains_key(name), "policy '{name}' is already registered");
+    reg.insert(name.to_string(), Arc::new(factory));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    #[test]
+    fn builtin_names_resolve() {
+        for (text, want) in [
+            ("sequential", "sequential"),
+            ("seq", "sequential"),
+            ("chaos", "chaos"),
+            ("hogwild", "hogwild"),
+            ("delayed-rr", "delayed-rr"),
+            ("delayed", "delayed-rr"),
+            ("averaged", "averaged"),
+            ("avg:8", "averaged"),
+            ("averaged:64", "averaged"),
+        ] {
+            assert_eq!(from_name(text).unwrap().name(), want, "{text}");
+        }
+    }
+
+    #[test]
+    fn from_name_error_branches() {
+        // Unknown name lists the registry.
+        let e = from_name("bogus").unwrap_err().to_string();
+        assert!(e.contains("unknown policy 'bogus'") && e.contains("chaos"), "{e}");
+        // Bad integer argument.
+        let e = from_name("averaged:x").unwrap_err().to_string();
+        assert!(e.contains("bad integer 'x'"), "{e}");
+        // Zero sync_every would deadlock the barrier rounds.
+        let e = from_name("averaged:0").unwrap_err().to_string();
+        assert!(e.contains("deadlock"), "{e}");
+        // Stray argument on an argument-free policy.
+        let e = from_name("chaos:7").unwrap_err().to_string();
+        assert!(e.contains("takes no ':' argument"), "{e}");
+    }
+
+    #[test]
+    fn names_lists_builtins_sorted() {
+        let names = names();
+        for n in ["averaged", "chaos", "delayed-rr", "hogwild", "sequential"] {
+            assert!(names.iter().any(|x| x == n), "missing {n}");
+        }
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_bad_names() {
+        assert!(register("chaos", make_chaos).is_err());
+        assert!(register("", make_chaos).is_err());
+        assert!(register("a:b", make_chaos).is_err());
+        // Alias heads are canonicalized before lookup, so registering one
+        // would create an unreachable policy.
+        for alias in ["seq", "avg", "delayed"] {
+            let e = register(alias, make_chaos).unwrap_err().to_string();
+            assert!(e.contains("reserved alias"), "{alias}: {e}");
+        }
+    }
+
+    #[test]
+    fn averaged_validate_rejects_zero() {
+        assert!(AveragedPolicy { sync_every: 0 }.validate().is_err());
+        assert!(AveragedPolicy::new(16).validate().is_ok());
+    }
+
+    #[test]
+    fn sequential_flag_only_on_sequential() {
+        assert!(SequentialPolicy.is_sequential());
+        assert!(!ChaosPolicy.is_sequential());
+        assert!(!HogwildPolicy.is_sequential());
+        assert!(!DelayedRoundRobinPolicy.is_sequential());
+        assert!(!AveragedPolicy::default().is_sequential());
+    }
+
+    #[test]
+    fn delayed_rr_state_finds_param_layers() {
+        let net = crate::nn::Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        let store = SharedParams::new(&params, &net.dims);
+        let ctx = EpochCtx { net: &net, store: &store, threads: 2, eta: 0.01, epoch: 0 };
+        let state = DelayedRoundRobinPolicy.epoch_state(&ctx);
+        // Drive one worker through a fake sample: publish into every
+        // parameterized layer, then end_sample must push it to the store.
+        let mut hooks = state.worker(&ctx, 0);
+        for (l, d) in net.dims.iter().enumerate() {
+            if d.param_count() > 0 {
+                let grads = vec![1.0f32; d.param_count()];
+                hooks.publish(&ctx, l, d, &grads);
+            }
+        }
+        let before = store.get(net.dims.last().unwrap().params.start);
+        hooks.end_sample(&ctx);
+        let after = store.get(net.dims.last().unwrap().params.start);
+        assert!((before - after - 0.01).abs() < 1e-6, "w -= η·g must apply: {before} -> {after}");
+        assert!(store.publication_count() > 0);
+    }
+}

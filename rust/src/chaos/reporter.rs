@@ -85,6 +85,9 @@ pub struct RunResult {
     pub wall_secs: f64,
     /// Total shared-store publications (parallel strategies).
     pub publications: u64,
+    /// True when an [`super::EpochObserver`] ended the run before
+    /// `cfg.epochs` (early stopping).
+    pub stopped_early: bool,
 }
 
 impl RunResult {
@@ -119,6 +122,7 @@ impl RunResult {
             ("layer_times", Json::arr(layer_times)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("publications", Json::num(self.publications as f64)),
+            ("stopped_early", Json::Bool(self.stopped_early)),
         ])
     }
 
@@ -163,6 +167,7 @@ mod tests {
             layer_times: LayerTimes::new(),
             wall_secs: 10.0,
             publications: 0,
+            stopped_early: false,
         };
         assert_eq!(r.epochs_to_error_rate(0.10), Some(2));
         assert_eq!(r.epochs_to_error_rate(0.015), Some(3));
@@ -180,10 +185,12 @@ mod tests {
             layer_times: LayerTimes::new(),
             wall_secs: 1.0,
             publications: 42,
+            stopped_early: true,
         };
         let j = r.to_json();
         assert_eq!(j.get("arch").unwrap().as_str(), Some("small"));
         assert_eq!(j.get("publications").unwrap().as_usize(), Some(42));
+        assert_eq!(j.get("stopped_early").unwrap().as_bool(), Some(true));
         let epochs = j.get("epochs").unwrap().as_arr().unwrap();
         assert_eq!(epochs.len(), 1);
         assert_eq!(epochs[0].get("test").unwrap().get("errors").unwrap().as_usize(), Some(5));

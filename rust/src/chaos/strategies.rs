@@ -15,9 +15,16 @@
 //!   per-layer publication under a per-layer lock, arbitrary order of
 //!   implicit synchronization.
 
+use super::policy::{
+    self, AveragedPolicy, ChaosPolicy, DelayedRoundRobinPolicy, HogwildPolicy, SequentialPolicy,
+    UpdatePolicy,
+};
 use std::sync::{Condvar, Mutex};
 
-/// Selectable update policy.
+/// The closed strategy enum of the original API, kept as a convenience for
+/// naming the five paper schemes. The open, extensible surface is
+/// [`UpdatePolicy`] (see [`super::policy`]); [`Strategy::into_policy`]
+/// bridges the two.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// On-line SGD on one thread.
@@ -44,26 +51,45 @@ impl Strategy {
         }
     }
 
-    /// Parse from CLI text, e.g. `chaos`, `averaged:64`.
+    /// Parse from CLI text, e.g. `chaos`, `averaged:64`. Rejects a zero
+    /// `sync_every` (it would deadlock the averaged barrier rounds) and
+    /// stray `:` arguments on strategies that take none.
     pub fn parse(text: &str) -> anyhow::Result<Strategy> {
         let (head, arg) = match text.split_once(':') {
             Some((h, a)) => (h, Some(a)),
             None => (text, None),
         };
-        Ok(match head {
+        let strategy = match head {
             "sequential" | "seq" => Strategy::Sequential,
             "chaos" => Strategy::Chaos,
             "hogwild" => Strategy::Hogwild,
             "delayed-rr" | "delayed" => Strategy::DelayedRoundRobin,
-            "averaged" | "avg" => Strategy::Averaged {
-                sync_every: arg.unwrap_or("32").parse().map_err(|_| {
-                    anyhow::anyhow!("averaged:<sync_every> — bad integer '{}'", arg.unwrap())
-                })?,
-            },
+            "averaged" | "avg" => {
+                return Ok(Strategy::Averaged { sync_every: policy::parse_sync_every(arg)? });
+            }
             _ => anyhow::bail!(
                 "unknown strategy '{text}' (sequential|chaos|hogwild|delayed-rr|averaged[:n])"
             ),
-        })
+        };
+        if let Some(a) = arg {
+            anyhow::bail!("strategy '{head}' takes no ':' argument (got '{a}')");
+        }
+        Ok(strategy)
+    }
+
+    /// Bridge into the open policy API: the equivalent [`UpdatePolicy`].
+    pub fn into_policy(self) -> Box<dyn UpdatePolicy> {
+        match self {
+            Strategy::Sequential => Box::new(SequentialPolicy),
+            Strategy::Chaos => Box::new(ChaosPolicy),
+            Strategy::Hogwild => Box::new(HogwildPolicy),
+            Strategy::DelayedRoundRobin => Box::new(DelayedRoundRobinPolicy),
+            // Hand-built zero values are clamped like the old worker did;
+            // `parse` already rejects `averaged:0`.
+            Strategy::Averaged { sync_every } => {
+                Box::new(AveragedPolicy { sync_every: sync_every.max(1) })
+            }
+        }
     }
 }
 
@@ -125,6 +151,7 @@ mod tests {
         assert_eq!(Strategy::parse("seq").unwrap(), Strategy::Sequential);
         assert_eq!(Strategy::parse("hogwild").unwrap(), Strategy::Hogwild);
         assert_eq!(Strategy::parse("delayed-rr").unwrap(), Strategy::DelayedRoundRobin);
+        assert_eq!(Strategy::parse("delayed").unwrap(), Strategy::DelayedRoundRobin);
         assert_eq!(
             Strategy::parse("averaged:16").unwrap(),
             Strategy::Averaged { sync_every: 16 }
@@ -133,8 +160,40 @@ mod tests {
             Strategy::parse("averaged").unwrap(),
             Strategy::Averaged { sync_every: 32 }
         );
-        assert!(Strategy::parse("bogus").is_err());
-        assert!(Strategy::parse("averaged:x").is_err());
+        assert_eq!(Strategy::parse("avg:8").unwrap(), Strategy::Averaged { sync_every: 8 });
+    }
+
+    #[test]
+    fn parse_error_branches() {
+        // Unknown strategy name.
+        let e = Strategy::parse("bogus").unwrap_err().to_string();
+        assert!(e.contains("unknown strategy 'bogus'"), "{e}");
+        // Non-numeric sync_every.
+        let e = Strategy::parse("averaged:x").unwrap_err().to_string();
+        assert!(e.contains("bad integer 'x'"), "{e}");
+        // Zero sync_every would deadlock the averaged barrier rounds.
+        let e = Strategy::parse("averaged:0").unwrap_err().to_string();
+        assert!(e.contains("deadlock"), "{e}");
+        // Stray argument on an argument-free strategy.
+        for text in ["chaos:4", "sequential:1", "hogwild:x", "delayed-rr:9"] {
+            let e = Strategy::parse(text).unwrap_err().to_string();
+            assert!(e.contains("takes no ':' argument"), "{text}: {e}");
+        }
+    }
+
+    #[test]
+    fn into_policy_preserves_names_and_clamps_zero() {
+        for (s, n) in [
+            (Strategy::Sequential, "sequential"),
+            (Strategy::Chaos, "chaos"),
+            (Strategy::Hogwild, "hogwild"),
+            (Strategy::DelayedRoundRobin, "delayed-rr"),
+            (Strategy::Averaged { sync_every: 8 }, "averaged"),
+        ] {
+            assert_eq!(s.into_policy().name(), n);
+        }
+        // A hand-built zero clamps instead of deadlocking.
+        assert!(Strategy::Averaged { sync_every: 0 }.into_policy().validate().is_ok());
     }
 
     #[test]

@@ -1,23 +1,182 @@
-//! The epoch driver — Fig 3 of the paper: per epoch, a parallel **Training**
-//! phase (workers pick images, forward/backward, publish updates according
-//! to the selected strategy), then parallel **Validation** and **Testing**
-//! phases where every worker participates in forward-only evaluation.
+//! The epoch driver and its public face, the [`Trainer`] builder.
+//!
+//! Fig 3 of the paper: per epoch, a parallel **Training** phase (workers
+//! pick images, forward/backward, publish updates according to the selected
+//! [`UpdatePolicy`]), then parallel **Validation** and **Testing** phases
+//! where every worker participates in forward-only evaluation.
+//!
+//! One driver serves every policy. Sequential policies (and any run with
+//! `threads == 1`) use the in-place single-thread engine — plain `Vec<f32>`
+//! weights, no shared store, no publications; parallel policies share one
+//! [`SharedParams`] store and drive the policy's per-worker hooks. Epoch
+//! records, evaluation order and learning-rate schedule are identical on
+//! both paths, so a 1-thread run of any policy is bit-identical to the
+//! sequential baseline from the same seed.
+//!
+//! ```ignore
+//! let run = chaos::Trainer::new()
+//!     .arch(ArchSpec::small())
+//!     .epochs(5)
+//!     .threads(4)
+//!     .policy_name("averaged:64")?
+//!     .observer(chaos::EarlyStop::at_test_error(0.05))
+//!     .run(&train_set, &test_set)?;
+//! ```
 
+use super::observer::{EpochObserver, ParamsView, RunView, TrainControl};
+use super::policy::{self, ChaosPolicy, EpochCtx, UpdatePolicy};
 use super::reporter::{EpochRecord, EvalMetrics, RunResult};
 use super::sampler::Sampler;
 use super::shared::SharedParams;
-use super::strategies::{Strategy, Turnstile};
-use crate::config::TrainConfig;
+use super::strategies::Strategy;
+use crate::config::{ArchSpec, TrainConfig};
 use crate::data::Dataset;
 use crate::nn::{Network, Scratch};
 use crate::util::{LayerTimes, Stopwatch};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::Mutex;
 
-/// Train `net` on `train_set` (validating on its first
-/// `cfg.validation_fraction` portion) and evaluate on `test_set` each
-/// epoch, using the given update strategy. This is the public entry point
-/// of the CHAOS coordinator.
+/// Builder for a training run — the public entry point of the CHAOS
+/// coordinator.
+///
+/// Configure the network (`.arch(..)` / `.network(..)`), hyper-parameters
+/// (`.config(..)` or the fluent setters), the update policy (`.policy(..)`
+/// / `.policy_name(..)`) and any observers, then `.run(train, test)`.
+/// Everything is validated up front; `.run` fails fast on an incomplete or
+/// inconsistent build.
+pub struct Trainer {
+    net: Option<Network>,
+    cfg: TrainConfig,
+    policy: Box<dyn UpdatePolicy>,
+    observers: Vec<Box<dyn EpochObserver>>,
+}
+
+impl Default for Trainer {
+    fn default() -> Trainer {
+        Trainer::new()
+    }
+}
+
+impl Trainer {
+    /// A trainer with the default config and the CHAOS policy; the
+    /// architecture must still be set.
+    pub fn new() -> Trainer {
+        Trainer {
+            net: None,
+            cfg: TrainConfig::default(),
+            policy: Box::new(ChaosPolicy),
+            observers: Vec::new(),
+        }
+    }
+
+    /// Train the given architecture (compiles it into a [`Network`]).
+    pub fn arch(mut self, arch: ArchSpec) -> Trainer {
+        self.net = Some(Network::new(arch));
+        self
+    }
+
+    /// Train an already-compiled network.
+    pub fn network(mut self, net: Network) -> Trainer {
+        self.net = Some(net);
+        self
+    }
+
+    /// Replace the whole hyper-parameter block.
+    pub fn config(mut self, cfg: TrainConfig) -> Trainer {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Number of epochs.
+    pub fn epochs(mut self, epochs: usize) -> Trainer {
+        self.cfg = self.cfg.with_epochs(epochs);
+        self
+    }
+
+    /// Worker/thread count (1 = the sequential engine).
+    pub fn threads(mut self, threads: usize) -> Trainer {
+        self.cfg = self.cfg.with_threads(threads);
+        self
+    }
+
+    /// Learning-rate schedule: η₀ and the per-epoch decay factor.
+    pub fn eta(mut self, eta0: f64, eta_decay: f64) -> Trainer {
+        self.cfg = self.cfg.with_eta(eta0, eta_decay);
+        self
+    }
+
+    /// PRNG seed for weight init and the per-epoch image shuffle.
+    pub fn seed(mut self, seed: u64) -> Trainer {
+        self.cfg = self.cfg.with_seed(seed);
+        self
+    }
+
+    /// Fraction of the training set evaluated as the validation split.
+    pub fn validation_fraction(mut self, fraction: f64) -> Trainer {
+        self.cfg = self.cfg.with_validation_fraction(fraction);
+        self
+    }
+
+    /// Select the update policy.
+    pub fn policy(mut self, policy: impl UpdatePolicy + 'static) -> Trainer {
+        self.policy = Box::new(policy);
+        self
+    }
+
+    /// Select an already-boxed update policy (e.g. from
+    /// [`policy::from_name`] or [`Strategy::into_policy`]).
+    pub fn policy_boxed(mut self, policy: Box<dyn UpdatePolicy>) -> Trainer {
+        self.policy = policy;
+        self
+    }
+
+    /// Select the update policy by registry name, e.g. `"averaged:64"`.
+    pub fn policy_name(self, name: &str) -> anyhow::Result<Trainer> {
+        Ok(self.policy_boxed(policy::from_name(name)?))
+    }
+
+    /// Attach an observer ([`EpochObserver`]); repeat to attach several.
+    /// The run stops early if *any* observer returns
+    /// [`TrainControl::Stop`].
+    pub fn observer(mut self, observer: impl EpochObserver + 'static) -> Trainer {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Check the build without running: architecture present, config sane,
+    /// policy parameterization valid.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.net.is_some(),
+            "Trainer: no architecture set (use .arch(..) or .network(..))"
+        );
+        self.cfg.validate()?;
+        self.policy.validate()?;
+        Ok(())
+    }
+
+    /// Validate, then train on `train_set` (validating on its first
+    /// `validation_fraction` portion) and evaluate on `test_set` each
+    /// epoch.
+    pub fn run(mut self, train_set: &Dataset, test_set: &Dataset) -> anyhow::Result<RunResult> {
+        self.validate()?;
+        let net = self.net.take().expect("validated above");
+        Ok(run_epochs(
+            &net,
+            train_set,
+            test_set,
+            &self.cfg,
+            self.policy.as_ref(),
+            &mut self.observers,
+        ))
+    }
+}
+
+/// Deprecated closed-enum entry point, kept for one release.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the Trainer builder: chaos::Trainer::new().network(net.clone())\
+            .config(cfg.clone()).policy_boxed(strategy.into_policy()).run(train, test)"
+)]
 pub fn train(
     net: &Network,
     train_set: &Dataset,
@@ -25,11 +184,11 @@ pub fn train(
     cfg: &TrainConfig,
     strategy: Strategy,
 ) -> anyhow::Result<RunResult> {
-    cfg.validate()?;
-    if matches!(strategy, Strategy::Sequential) || cfg.threads == 1 {
-        return Ok(train_sequential(net, train_set, test_set, cfg, strategy));
-    }
-    Ok(train_parallel(net, train_set, test_set, cfg, strategy))
+    Trainer::new()
+        .network(net.clone())
+        .config(cfg.clone())
+        .policy_boxed(strategy.into_policy())
+        .run(train_set, test_set)
 }
 
 /// Number of validation images given the config.
@@ -37,50 +196,94 @@ fn validation_len(cfg: &TrainConfig, train_set: &Dataset) -> usize {
     ((train_set.len() as f64) * cfg.validation_fraction).round() as usize
 }
 
-// ---------------------------------------------------------------------------
-// Sequential baseline
-// ---------------------------------------------------------------------------
+/// Engine state: where the weights live for the duration of the run.
+enum Engine {
+    /// Single-thread in-place SGD (sequential policies or `threads == 1`).
+    Seq { params: Vec<f32>, scratch: Scratch },
+    /// Shared atomic store driven by a policy's worker hooks.
+    Par { store: SharedParams },
+}
 
-fn train_sequential(
+/// The unified epoch driver behind [`Trainer::run`].
+fn run_epochs(
     net: &Network,
     train_set: &Dataset,
     test_set: &Dataset,
     cfg: &TrainConfig,
-    strategy: Strategy,
+    policy: &dyn UpdatePolicy,
+    observers: &mut [Box<dyn EpochObserver>],
 ) -> RunResult {
-    let mut params = net.init_params(cfg.seed);
-    let mut scratch = net.scratch();
+    let sequential = policy.is_sequential() || cfg.threads == 1;
+    let threads = if sequential { 1 } else { cfg.threads };
+    let policy_name = policy.name();
     let layer_times = LayerTimes::new();
     let val_len = validation_len(cfg, train_set);
     let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut stopped_early = false;
     let run_sw = Stopwatch::start();
+
+    let mut engine = if sequential {
+        Engine::Seq { params: net.init_params(cfg.seed), scratch: net.scratch() }
+    } else {
+        let init = net.init_params(cfg.seed);
+        Engine::Par { store: SharedParams::new(&init, &net.dims) }
+    };
 
     for epoch in 0..cfg.epochs {
         let eta = cfg.eta_at(epoch);
         let epoch_sw = Stopwatch::start();
-        // Training phase: same shuffle the parallel runs use.
+        // Training phase: both engines consume the same shuffle.
         let sampler = Sampler::shuffled(train_set.len(), cfg.seed, epoch);
-        let mut train_m = EvalMetrics::default();
-        while let Some(idx) = sampler.next() {
-            let (loss, correct) = net.sgd_step(
-                &mut params,
-                train_set.image(idx),
-                train_set.label(idx),
-                eta,
-                &mut scratch,
-                Some(&layer_times),
-            );
-            train_m.images += 1;
-            train_m.loss += loss as f64;
-            train_m.errors += usize::from(!correct);
-        }
+        let train_m = match &mut engine {
+            Engine::Seq { params, scratch } => {
+                let mut m = EvalMetrics::default();
+                while let Some(idx) = sampler.next() {
+                    let (loss, correct) = net.sgd_step(
+                        params,
+                        train_set.image(idx),
+                        train_set.label(idx),
+                        eta,
+                        scratch,
+                        Some(&layer_times),
+                    );
+                    m.images += 1;
+                    m.loss += loss as f64;
+                    m.errors += usize::from(!correct);
+                }
+                m
+            }
+            Engine::Par { store } => {
+                let ctx = EpochCtx { net, store: &*store, threads, eta, epoch };
+                train_phase_parallel(&ctx, train_set, &sampler, policy, &layer_times)
+            }
+        };
         let train_secs = epoch_sw.elapsed_secs();
 
-        let validation =
-            eval_seq(net, &params, train_set, val_len, &mut scratch, Some(&layer_times));
-        let test =
-            eval_seq(net, &params, test_set, test_set.len(), &mut scratch, Some(&layer_times));
-        epochs.push(EpochRecord {
+        // Publication milestone: cumulative count at the end of this
+        // epoch's training phase (parallel engines only).
+        if let Engine::Par { store } = &engine {
+            if !observers.is_empty() {
+                let total = store.publication_count();
+                let view = run_view(net, &policy_name, threads, cfg, &engine);
+                for obs in observers.iter_mut() {
+                    obs.on_publications(total, &view);
+                }
+            }
+        }
+
+        // Validation and testing phases.
+        let (validation, test) = match &mut engine {
+            Engine::Seq { params, scratch } => (
+                eval_seq(net, params, train_set, val_len, scratch, Some(&layer_times)),
+                eval_seq(net, params, test_set, test_set.len(), scratch, Some(&layer_times)),
+            ),
+            Engine::Par { store } => (
+                eval_parallel(net, store, train_set, val_len, threads, &layer_times),
+                eval_parallel(net, store, test_set, test_set.len(), threads, &layer_times),
+            ),
+        };
+
+        let record = EpochRecord {
             epoch,
             eta,
             train: train_m,
@@ -88,24 +291,97 @@ fn train_sequential(
             test,
             train_secs,
             total_secs: epoch_sw.elapsed_secs(),
-        });
+        };
+        if !observers.is_empty() {
+            let view = run_view(net, &policy_name, threads, cfg, &engine);
+            for obs in observers.iter_mut() {
+                if obs.on_epoch_end(&record, &view) == TrainControl::Stop {
+                    stopped_early = true;
+                }
+            }
+        }
+        epochs.push(record);
+        if stopped_early {
+            break;
+        }
     }
 
+    let (final_params, publications) = match engine {
+        Engine::Seq { params, .. } => (params, 0),
+        Engine::Par { store } => {
+            let count = store.publication_count();
+            (store.snapshot(), count)
+        }
+    };
     RunResult {
         arch: net.arch.name.clone(),
-        strategy: strategy.name().to_string(),
-        threads: 1,
+        strategy: policy_name,
+        threads,
         epochs,
-        final_params: params,
+        final_params,
         layer_times,
         wall_secs: run_sw.elapsed_secs(),
-        publications: 0,
+        publications,
+        stopped_early,
     }
+}
+
+fn run_view<'a>(
+    net: &'a Network,
+    policy_name: &'a str,
+    threads: usize,
+    cfg: &TrainConfig,
+    engine: &'a Engine,
+) -> RunView<'a> {
+    let (params, publications) = match engine {
+        Engine::Seq { params, .. } => (ParamsView::Seq(params.as_slice()), 0),
+        Engine::Par { store } => (ParamsView::Par(store), store.publication_count()),
+    };
+    RunView::new(&net.arch.name, policy_name, threads, cfg.epochs, publications, params)
+}
+
+/// One epoch's parallel training phase: every worker picks images from the
+/// shared pool, forward/backward-propagates against the shared store, and
+/// routes gradients through the policy's hooks.
+fn train_phase_parallel(
+    ctx: &EpochCtx<'_>,
+    data: &Dataset,
+    sampler: &Sampler,
+    policy: &dyn UpdatePolicy,
+    timers: &LayerTimes,
+) -> EvalMetrics {
+    let state = policy.epoch_state(ctx);
+    let metrics = Mutex::new(EvalMetrics::default());
+    std::thread::scope(|s| {
+        for worker_id in 0..ctx.threads {
+            let state = &state;
+            let metrics = &metrics;
+            s.spawn(move || {
+                let mut hooks = state.worker(ctx, worker_id);
+                let mut scratch = ctx.net.scratch();
+                let mut local = EvalMetrics::default();
+                while let Some(idx) = sampler.next() {
+                    let label = data.label(idx);
+                    ctx.net.forward(&ctx.store, data.image(idx), &mut scratch, Some(timers));
+                    local.images += 1;
+                    local.loss += ctx.net.loss(&scratch, label) as f64;
+                    local.errors += usize::from(ctx.net.prediction(&scratch) != label);
+                    ctx.net.backward(&ctx.store, label, &mut scratch, Some(timers), |l, d, g| {
+                        hooks.publish(ctx, l, d, g)
+                    });
+                    hooks.end_sample(ctx);
+                }
+                hooks.finish(ctx);
+                merge_metrics(metrics, &local);
+            });
+        }
+    });
+    metrics.into_inner().unwrap()
 }
 
 fn eval_seq(
     net: &Network,
-    params: &Vec<f32>,
+    params: &[f32],
     data: &Dataset,
     limit: usize,
     scratch: &mut Scratch,
@@ -113,284 +389,12 @@ fn eval_seq(
 ) -> EvalMetrics {
     let mut m = EvalMetrics::default();
     for idx in 0..limit.min(data.len()) {
-        net.forward(params, data.image(idx), scratch, timers);
+        net.forward(&params, data.image(idx), scratch, timers);
         m.images += 1;
         m.loss += net.loss(scratch, data.label(idx)) as f64;
         m.errors += usize::from(net.prediction(scratch) != data.label(idx));
     }
     m
-}
-
-// ---------------------------------------------------------------------------
-// Parallel strategies
-// ---------------------------------------------------------------------------
-
-fn train_parallel(
-    net: &Network,
-    train_set: &Dataset,
-    test_set: &Dataset,
-    cfg: &TrainConfig,
-    strategy: Strategy,
-) -> RunResult {
-    let init = net.init_params(cfg.seed);
-    let store = SharedParams::new(&init, &net.dims);
-    let layer_times = LayerTimes::new();
-    let val_len = validation_len(cfg, train_set);
-    let threads = cfg.threads;
-    let mut epochs = Vec::with_capacity(cfg.epochs);
-    let run_sw = Stopwatch::start();
-
-    for epoch in 0..cfg.epochs {
-        let eta = cfg.eta_at(epoch);
-        let epoch_sw = Stopwatch::start();
-        let sampler = Sampler::shuffled(train_set.len(), cfg.seed, epoch);
-        let train_metrics = Mutex::new(EvalMetrics::default());
-
-        match strategy {
-            Strategy::Chaos | Strategy::Hogwild => {
-                let locked = matches!(strategy, Strategy::Chaos);
-                std::thread::scope(|s| {
-                    for _ in 0..threads {
-                        s.spawn(|| {
-                            worker_chaos(
-                                net,
-                                &store,
-                                train_set,
-                                &sampler,
-                                eta,
-                                locked,
-                                &layer_times,
-                                &train_metrics,
-                            )
-                        });
-                    }
-                });
-            }
-            Strategy::DelayedRoundRobin => {
-                let turnstile = Turnstile::new();
-                std::thread::scope(|s| {
-                    for _ in 0..threads {
-                        s.spawn(|| {
-                            worker_delayed_rr(
-                                net,
-                                &store,
-                                train_set,
-                                &sampler,
-                                eta,
-                                &turnstile,
-                                &layer_times,
-                                &train_metrics,
-                            )
-                        });
-                    }
-                });
-            }
-            Strategy::Averaged { sync_every } => {
-                let accum = Mutex::new(vec![0.0f32; net.total_params]);
-                let round_samples = AtomicUsize::new(0);
-                let barrier = Barrier::new(threads);
-                let done = AtomicBool::new(false);
-                std::thread::scope(|s| {
-                    for _ in 0..threads {
-                        s.spawn(|| {
-                            worker_averaged(
-                                net,
-                                &store,
-                                train_set,
-                                &sampler,
-                                eta,
-                                sync_every.max(1),
-                                &accum,
-                                &round_samples,
-                                &barrier,
-                                &done,
-                                &layer_times,
-                                &train_metrics,
-                            )
-                        });
-                    }
-                });
-            }
-            Strategy::Sequential => unreachable!("handled by train()"),
-        }
-        let train_secs = epoch_sw.elapsed_secs();
-
-        let validation =
-            eval_parallel(net, &store, train_set, val_len, threads, &layer_times);
-        let test =
-            eval_parallel(net, &store, test_set, test_set.len(), threads, &layer_times);
-        epochs.push(EpochRecord {
-            epoch,
-            eta,
-            train: train_metrics.into_inner().unwrap(),
-            validation,
-            test,
-            train_secs,
-            total_secs: epoch_sw.elapsed_secs(),
-        });
-    }
-
-    RunResult {
-        arch: net.arch.name.clone(),
-        strategy: strategy.name().to_string(),
-        threads,
-        epochs,
-        final_params: store.snapshot(),
-        layer_times,
-        wall_secs: run_sw.elapsed_secs(),
-        publications: store.publication_count(),
-    }
-}
-
-/// CHAOS / HogWild! worker: forward + backward on the shared weights,
-/// publishing each layer's scaled gradients as soon as they are complete
-/// (per-layer lock for CHAOS, none for HogWild!).
-#[allow(clippy::too_many_arguments)]
-fn worker_chaos(
-    net: &Network,
-    store: &SharedParams,
-    data: &Dataset,
-    sampler: &Sampler,
-    eta: f32,
-    locked: bool,
-    timers: &LayerTimes,
-    metrics: &Mutex<EvalMetrics>,
-) {
-    let mut scratch = net.scratch();
-    let mut local = EvalMetrics::default();
-    while let Some(idx) = sampler.next() {
-        let label = data.label(idx);
-        net.forward(&store, data.image(idx), &mut scratch, Some(timers));
-        local.images += 1;
-        local.loss += net.loss(&scratch, label) as f64;
-        local.errors += usize::from(net.prediction(&scratch) != label);
-        net.backward(&store, label, &mut scratch, Some(timers), |l, d, grads| {
-            if locked {
-                store.publish_scaled(l, d.params.clone(), grads, -eta);
-            } else {
-                store.publish_scaled_unlocked(d.params.clone(), grads, -eta);
-            }
-        });
-    }
-    merge_metrics(metrics, &local);
-}
-
-/// Strategy C worker: gradients of the whole sample are gathered locally,
-/// then published in strict ticket order through the turnstile.
-#[allow(clippy::too_many_arguments)]
-fn worker_delayed_rr(
-    net: &Network,
-    store: &SharedParams,
-    data: &Dataset,
-    sampler: &Sampler,
-    eta: f32,
-    turnstile: &Turnstile,
-    timers: &LayerTimes,
-    metrics: &Mutex<EvalMetrics>,
-) {
-    let mut scratch = net.scratch();
-    let mut local = EvalMetrics::default();
-    let mut grads = vec![0.0f32; net.total_params];
-    let param_layers: Vec<usize> = net
-        .dims
-        .iter()
-        .enumerate()
-        .filter(|(_, d)| d.param_count() > 0)
-        .map(|(i, _)| i)
-        .collect();
-    while let Some(idx) = sampler.next() {
-        let label = data.label(idx);
-        net.forward(&store, data.image(idx), &mut scratch, Some(timers));
-        local.images += 1;
-        local.loss += net.loss(&scratch, label) as f64;
-        local.errors += usize::from(net.prediction(&scratch) != label);
-        net.backward(&store, label, &mut scratch, Some(timers), |_, d, g| {
-            grads[d.params.clone()].copy_from_slice(g);
-        });
-        turnstile.enter();
-        for &l in &param_layers {
-            let range = net.dims[l].params.clone();
-            // The turnstile already serializes all publishers.
-            store.publish_scaled_unlocked(range.clone(), &grads[range], -eta);
-        }
-        turnstile.leave();
-    }
-    merge_metrics(metrics, &local);
-}
-
-/// Strategy B worker: accumulate gradients over up to `sync_every` samples,
-/// merge into the round accumulator, barrier, leader applies the averaged
-/// update, barrier, repeat until the sampler drains.
-#[allow(clippy::too_many_arguments)]
-fn worker_averaged(
-    net: &Network,
-    store: &SharedParams,
-    data: &Dataset,
-    sampler: &Sampler,
-    eta: f32,
-    sync_every: usize,
-    accum: &Mutex<Vec<f32>>,
-    round_samples: &AtomicUsize,
-    barrier: &Barrier,
-    done: &AtomicBool,
-    timers: &LayerTimes,
-    metrics: &Mutex<EvalMetrics>,
-) {
-    let mut scratch = net.scratch();
-    let mut local_metrics = EvalMetrics::default();
-    let mut local = vec![0.0f32; net.total_params];
-    loop {
-        local.fill(0.0);
-        let mut n_local = 0usize;
-        for _ in 0..sync_every {
-            let Some(idx) = sampler.next() else { break };
-            let label = data.label(idx);
-            net.forward(&store, data.image(idx), &mut scratch, Some(timers));
-            local_metrics.images += 1;
-            local_metrics.loss += net.loss(&scratch, label) as f64;
-            local_metrics.errors += usize::from(net.prediction(&scratch) != label);
-            net.backward(&store, label, &mut scratch, Some(timers), |_, d, g| {
-                for (a, &gv) in local[d.params.clone()].iter_mut().zip(g) {
-                    *a += gv;
-                }
-            });
-            n_local += 1;
-        }
-        if n_local > 0 {
-            let mut acc = accum.lock().unwrap();
-            for (a, &l) in acc.iter_mut().zip(&local) {
-                *a += l;
-            }
-            round_samples.fetch_add(n_local, Ordering::Relaxed);
-        }
-        let wait = barrier.wait();
-        if wait.is_leader() {
-            let n = round_samples.swap(0, Ordering::Relaxed);
-            if n == 0 {
-                done.store(true, Ordering::Release);
-            } else {
-                let mut acc = accum.lock().unwrap();
-                // Averaged master step (strategy B): each learner's
-                // contribution is the gradient *sum* over its batch; the
-                // master averages across learners and applies one step:
-                // w -= η · (Σ_batches g) / workers. Note n counts samples;
-                // workers ≈ ceil(n / sync_every).
-                let workers = n.div_ceil(sync_every).max(1);
-                let mut new_params = store.snapshot();
-                let scale = eta / workers as f32;
-                for (w, g) in new_params.iter_mut().zip(acc.iter()) {
-                    *w -= scale * g;
-                }
-                store.store_all(&new_params);
-                acc.fill(0.0);
-            }
-        }
-        barrier.wait();
-        if done.load(Ordering::Acquire) {
-            break;
-        }
-    }
-    merge_metrics(metrics, &local_metrics);
 }
 
 fn merge_metrics(metrics: &Mutex<EvalMetrics>, local: &EvalMetrics) {
@@ -435,8 +439,13 @@ pub fn eval_parallel(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chaos::observer::observer_fn;
+    use crate::chaos::policy::{AveragedPolicy, SequentialPolicy};
+    use crate::chaos::EarlyStop;
     use crate::config::ArchSpec;
     use crate::data::{generate_synthetic, SynthConfig};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     /// 13×13 resized synthetic digits for the tiny architecture.
     fn tiny_data(n: usize, seed: u64) -> Dataset {
@@ -455,12 +464,15 @@ mod tests {
         }
     }
 
+    fn tiny_trainer(threads: usize, epochs: usize) -> Trainer {
+        Trainer::new().arch(ArchSpec::tiny()).config(tiny_cfg(threads, epochs))
+    }
+
     #[test]
     fn sequential_training_reduces_loss_and_errors() {
-        let net = Network::new(ArchSpec::tiny());
         let trn = tiny_data(300, 1);
         let tst = tiny_data(100, 2);
-        let r = train_sequential(&net, &trn, &tst, &tiny_cfg(1, 6), Strategy::Sequential);
+        let r = tiny_trainer(1, 6).policy(SequentialPolicy).run(&trn, &tst).unwrap();
         let first = &r.epochs[0];
         let last = r.final_epoch();
         assert!(last.train.loss < first.train.loss, "training loss must fall");
@@ -473,6 +485,7 @@ mod tests {
         assert_eq!(first.validation.images, 75);
         assert_eq!(first.test.images, 100);
         assert_eq!(r.publications, 0);
+        assert!(!r.stopped_early);
     }
 
     #[test]
@@ -480,11 +493,10 @@ mod tests {
         // The paper's Result 4: parallel CHAOS training reaches accuracy
         // comparable to sequential (Table 7's deviations are tens of
         // images out of 60k). Here: same data/seed, small tolerance.
-        let net = Network::new(ArchSpec::tiny());
         let trn = tiny_data(400, 3);
         let tst = tiny_data(150, 4);
-        let seq = train(&net, &trn, &tst, &tiny_cfg(1, 3), Strategy::Sequential).unwrap();
-        let par = train(&net, &trn, &tst, &tiny_cfg(4, 3), Strategy::Chaos).unwrap();
+        let seq = tiny_trainer(1, 3).policy(SequentialPolicy).run(&trn, &tst).unwrap();
+        let par = tiny_trainer(4, 3).policy(ChaosPolicy).run(&trn, &tst).unwrap();
         let seq_err = seq.final_epoch().test.error_rate();
         let par_err = par.final_epoch().test.error_rate();
         assert!(
@@ -496,40 +508,145 @@ mod tests {
     }
 
     #[test]
-    fn all_parallel_strategies_run_and_learn() {
-        let net = Network::new(ArchSpec::tiny());
+    fn all_parallel_policies_run_and_learn() {
         let trn = tiny_data(240, 5);
         let tst = tiny_data(80, 6);
-        for strategy in [
-            Strategy::Chaos,
-            Strategy::Hogwild,
-            Strategy::DelayedRoundRobin,
-            Strategy::Averaged { sync_every: 16 },
-        ] {
-            let r = train(&net, &trn, &tst, &tiny_cfg(3, 3), strategy).unwrap();
-            assert_eq!(r.strategy, strategy.name());
+        for name in ["chaos", "hogwild", "delayed-rr", "averaged:16"] {
+            let r = tiny_trainer(3, 3).policy_name(name).unwrap().run(&trn, &tst).unwrap();
             let first = &r.epochs[0];
             let last = r.final_epoch();
-            assert_eq!(first.train.images, 240, "{}: all images trained", strategy.name());
+            assert_eq!(first.train.images, 240, "{name}: all images trained");
             assert!(
                 last.train.loss < first.train.loss,
-                "{}: loss should fall ({} -> {})",
-                strategy.name(),
+                "{name}: loss should fall ({} -> {})",
                 first.train.loss,
                 last.train.loss
             );
-            assert!(last.test.error_rate() < 0.7, "{}: learns something", strategy.name());
+            assert!(last.test.error_rate() < 0.7, "{name}: learns something");
         }
     }
 
     #[test]
     fn thread_one_falls_back_to_sequential_engine() {
-        let net = Network::new(ArchSpec::tiny());
         let trn = tiny_data(60, 7);
         let tst = tiny_data(30, 8);
-        let r = train(&net, &trn, &tst, &tiny_cfg(1, 1), Strategy::Chaos).unwrap();
+        let r = tiny_trainer(1, 1).policy(ChaosPolicy).run(&trn, &tst).unwrap();
         assert_eq!(r.threads, 1);
         assert_eq!(r.publications, 0, "sequential path bypasses the store");
+    }
+
+    #[test]
+    fn every_policy_is_bit_identical_to_sequential_at_one_thread() {
+        // The 1-thread run of any policy routes through the in-place
+        // sequential engine, so metrics and final weights must be
+        // bit-identical across policies from the same seed.
+        let trn = tiny_data(120, 11);
+        let tst = tiny_data(40, 12);
+        let base = tiny_trainer(1, 2).policy(SequentialPolicy).run(&trn, &tst).unwrap();
+        for name in ["chaos", "hogwild", "delayed-rr", "averaged:16"] {
+            let r = tiny_trainer(1, 2).policy_name(name).unwrap().run(&trn, &tst).unwrap();
+            assert_eq!(r.threads, 1);
+            assert_eq!(r.final_params, base.final_params, "{name}: weights diverged");
+            for (a, b) in r.epochs.iter().zip(&base.epochs) {
+                assert_eq!(a.train, b.train, "{name}");
+                assert_eq!(a.validation, b.validation, "{name}");
+                assert_eq!(a.test, b.test, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn builder_validation_errors() {
+        let d = tiny_data(10, 1);
+        // No architecture.
+        let e = Trainer::new().run(&d, &d).unwrap_err().to_string();
+        assert!(e.contains("no architecture"), "{e}");
+        // Bad config fields.
+        let e = tiny_trainer(0, 1).validate().unwrap_err().to_string();
+        assert!(e.contains("threads"), "{e}");
+        let e = tiny_trainer(1, 0).validate().unwrap_err().to_string();
+        assert!(e.contains("epochs"), "{e}");
+        assert!(tiny_trainer(1, 1).eta(-1.0, 0.9).validate().is_err());
+        assert!(tiny_trainer(1, 1).validation_fraction(2.0).validate().is_err());
+        // Invalid policy parameterization caught at build time.
+        assert!(tiny_trainer(2, 1).policy(AveragedPolicy { sync_every: 0 }).validate().is_err());
+        // Registry errors surface through the builder too.
+        assert!(tiny_trainer(2, 1).policy_name("averaged:0").is_err());
+        // A valid build passes.
+        tiny_trainer(2, 1).validate().unwrap();
+    }
+
+    #[test]
+    fn observers_are_invoked_and_can_stop_the_run() {
+        let trn = tiny_data(80, 21);
+        let tst = tiny_data(30, 22);
+        let epoch_calls = Arc::new(AtomicUsize::new(0));
+        let c = epoch_calls.clone();
+        let r = tiny_trainer(1, 3)
+            .policy(SequentialPolicy)
+            .observer(observer_fn(move |_rec, _run| {
+                c.fetch_add(1, Ordering::Relaxed);
+                TrainControl::Continue
+            }))
+            .run(&trn, &tst)
+            .unwrap();
+        assert_eq!(epoch_calls.load(Ordering::Relaxed), 3);
+        assert_eq!(r.epochs.len(), 3);
+        assert!(!r.stopped_early);
+
+        // EarlyStop with an always-met target ends the run after epoch 1.
+        let r = tiny_trainer(1, 5)
+            .policy(SequentialPolicy)
+            .observer(EarlyStop::at_test_error(1.0))
+            .run(&trn, &tst)
+            .unwrap();
+        assert_eq!(r.epochs.len(), 1);
+        assert!(r.stopped_early);
+    }
+
+    #[test]
+    fn publication_milestones_fire_on_parallel_runs_only() {
+        let trn = tiny_data(60, 31);
+        let tst = tiny_data(20, 32);
+
+        struct PubCounter(Arc<AtomicUsize>, Arc<AtomicUsize>);
+        impl EpochObserver for PubCounter {
+            fn on_publications(&mut self, total: u64, _run: &RunView<'_>) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                self.1.store(total as usize, Ordering::Relaxed);
+            }
+        }
+
+        let calls = Arc::new(AtomicUsize::new(0));
+        let last_total = Arc::new(AtomicUsize::new(0));
+        let r = tiny_trainer(3, 2)
+            .policy(ChaosPolicy)
+            .observer(PubCounter(calls.clone(), last_total.clone()))
+            .run(&trn, &tst)
+            .unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 2, "one milestone per epoch");
+        assert_eq!(last_total.load(Ordering::Relaxed) as u64, r.publications);
+
+        let calls_seq = Arc::new(AtomicUsize::new(0));
+        tiny_trainer(1, 2)
+            .policy(SequentialPolicy)
+            .observer(PubCounter(calls_seq.clone(), Arc::new(AtomicUsize::new(0))))
+            .run(&trn, &tst)
+            .unwrap();
+        assert_eq!(calls_seq.load(Ordering::Relaxed), 0, "sequential engine never publishes");
+    }
+
+    #[test]
+    fn deprecated_train_shim_matches_builder() {
+        let net = Network::new(ArchSpec::tiny());
+        let trn = tiny_data(90, 41);
+        let tst = tiny_data(30, 42);
+        #[allow(deprecated)]
+        let old = train(&net, &trn, &tst, &tiny_cfg(1, 2), Strategy::Sequential).unwrap();
+        let new = tiny_trainer(1, 2).policy(SequentialPolicy).run(&trn, &tst).unwrap();
+        assert_eq!(old.final_params, new.final_params);
+        assert_eq!(old.strategy, new.strategy);
+        assert_eq!(old.final_epoch().test.errors, new.final_epoch().test.errors);
     }
 
     #[test]
@@ -561,4 +678,3 @@ mod tests {
         assert!((par.loss - seq.loss).abs() < 1e-3 * seq.loss.abs().max(1.0));
     }
 }
-

@@ -36,6 +36,39 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
+    /// The defaults, as a fluent starting point:
+    /// `TrainConfig::new().with_epochs(5).with_threads(4)`.
+    pub fn new() -> TrainConfig {
+        TrainConfig::default()
+    }
+
+    pub fn with_epochs(mut self, epochs: usize) -> TrainConfig {
+        self.epochs = epochs;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> TrainConfig {
+        self.threads = threads;
+        self
+    }
+
+    /// Learning-rate schedule: η₀ and the per-epoch decay factor.
+    pub fn with_eta(mut self, eta0: f64, eta_decay: f64) -> TrainConfig {
+        self.eta0 = eta0;
+        self.eta_decay = eta_decay;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> TrainConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_validation_fraction(mut self, fraction: f64) -> TrainConfig {
+        self.validation_fraction = fraction;
+        self
+    }
+
     /// η at the given 0-based epoch: η₀ · decay^epoch.
     pub fn eta_at(&self, epoch: usize) -> f32 {
         (self.eta0 * self.eta_decay.powi(epoch as i32)) as f32
@@ -91,6 +124,23 @@ mod tests {
         assert!(TrainConfig { threads: 0, ..Default::default() }.validate().is_err());
         assert!(TrainConfig { eta0: -1.0, ..Default::default() }.validate().is_err());
         assert!(TrainConfig { eta_decay: 1.5, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn fluent_setters_compose() {
+        let c = TrainConfig::new()
+            .with_epochs(5)
+            .with_threads(4)
+            .with_eta(0.01, 0.8)
+            .with_seed(7)
+            .with_validation_fraction(0.25);
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.eta0, 0.01);
+        assert_eq!(c.eta_decay, 0.8);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.validation_fraction, 0.25);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -10,24 +10,42 @@ use super::{Dataset, IMAGE_PIXELS, IMAGE_SIDE};
 use std::io::Read;
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MnistError {
-    #[error("io error reading {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
-    #[error("{path}: bad magic {found:#x}, expected {expected:#x}")]
+    Io { path: String, source: std::io::Error },
     BadMagic { path: String, found: u32, expected: u32 },
-    #[error("{path}: unsupported image size {rows}x{cols} (expected 28x28)")]
     BadSize { path: String, rows: u32, cols: u32 },
-    #[error("{path}: truncated file")]
     Truncated { path: String },
-    #[error("image/label count mismatch: {images} images vs {labels} labels")]
     CountMismatch { images: usize, labels: usize },
-    #[error("missing file: {0} (nor {0}.gz)")]
     Missing(String),
+}
+
+impl std::fmt::Display for MnistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MnistError::Io { path, source } => write!(f, "io error reading {path}: {source}"),
+            MnistError::BadMagic { path, found, expected } => {
+                write!(f, "{path}: bad magic {found:#x}, expected {expected:#x}")
+            }
+            MnistError::BadSize { path, rows, cols } => {
+                write!(f, "{path}: unsupported image size {rows}x{cols} (expected 28x28)")
+            }
+            MnistError::Truncated { path } => write!(f, "{path}: truncated file"),
+            MnistError::CountMismatch { images, labels } => {
+                write!(f, "image/label count mismatch: {images} images vs {labels} labels")
+            }
+            MnistError::Missing(path) => write!(f, "missing file: {path} (nor {path}.gz)"),
+        }
+    }
+}
+
+impl std::error::Error for MnistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MnistError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 const IMAGE_MAGIC: u32 = 0x0000_0803;

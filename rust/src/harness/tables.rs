@@ -4,7 +4,7 @@
 //! tables run the real CHAOS trainer on this host.
 
 use super::report::{fnum, fpct, Table};
-use crate::chaos::{self, RunResult, Strategy};
+use crate::chaos::{ChaosPolicy, RunResult, SequentialPolicy, Trainer};
 use crate::config::{ArchSpec, LayerSpec, TrainConfig, PAPER_ARCHS};
 use crate::data;
 use crate::nn::{compute_dims, Network};
@@ -49,7 +49,11 @@ pub fn table1(scale: RealRunScale) -> anyhow::Result<Table> {
         seed: 1,
         validation_fraction: 0.0,
     };
-    let run = chaos::train(&net, &train, &test, &cfg, Strategy::Sequential)?;
+    let run = Trainer::new()
+        .network(net)
+        .config(cfg)
+        .policy(SequentialPolicy)
+        .run(&train, &test)?;
     let t = &run.layer_times;
     let total = t.total_secs();
     let mut tab = Table::new(
@@ -302,11 +306,21 @@ pub fn parity_runs(
         seed: 0xC4A05,
         validation_fraction: 0.25,
     };
-    let baseline = chaos::train(&net, &train, &test, &cfg, Strategy::Sequential)?;
+    let baseline = Trainer::new()
+        .network(net.clone())
+        .config(cfg.clone())
+        .policy(SequentialPolicy)
+        .run(&train, &test)?;
     let mut runs = Vec::new();
     for &t in threads {
         let cfg_t = TrainConfig { threads: t, ..cfg.clone() };
-        runs.push(chaos::train(&net, &train, &test, &cfg_t, Strategy::Chaos)?);
+        runs.push(
+            Trainer::new()
+                .network(net.clone())
+                .config(cfg_t)
+                .policy(ChaosPolicy)
+                .run(&train, &test)?,
+        );
     }
     Ok((baseline, runs))
 }

@@ -5,7 +5,41 @@
 //! Pllana, Abraham — Journal of Supercomputing, 2017) as a three-layer
 //! Rust + JAX + Pallas stack.
 //!
-//! Layers:
+//! ## Training: the `Trainer` builder
+//!
+//! The public entry point is [`chaos::Trainer`] — configure a network, the
+//! hyper-parameters, an update policy and optional observers, then run:
+//!
+//! ```ignore
+//! use chaos_phi::chaos::{ChaosPolicy, EarlyStop, Trainer};
+//! use chaos_phi::config::ArchSpec;
+//!
+//! let run = Trainer::new()
+//!     .arch(ArchSpec::small())
+//!     .epochs(10)
+//!     .threads(4)
+//!     .eta(0.001, 0.9)
+//!     .policy(ChaosPolicy)                       // or .policy_name("averaged:64")?
+//!     .observer(EarlyStop::at_test_error(0.02))  // stop criteria, live checkpoints…
+//!     .run(&train_set, &test_set)?;
+//! ```
+//!
+//! The update scheme — the paper's *interchangeable* part (§4.1) — is the
+//! open [`chaos::UpdatePolicy`] trait. The five paper strategies ship as
+//! impls (sequential baseline, averaged SGD, delayed round-robin,
+//! HogWild!, and CHAOS itself), all resolvable by name through the
+//! [`chaos::policy`] registry; custom schemes plug in via
+//! `chaos::policy::register` and are then selectable from the CLI and
+//! benchmarked automatically. In-flight runs can be watched (and stopped,
+//! or checkpointed live via [`chaos::Checkpoint`]) through
+//! [`chaos::EpochObserver`].
+//!
+//! The old free function `chaos::train(net, train, test, cfg, strategy)`
+//! is deprecated and delegates to the builder; it will be removed after
+//! one release.
+//!
+//! ## Layers
+//!
 //! - **L3 (this crate)** — the CHAOS coordinator: shared-weight store with
 //!   controlled-Hogwild delayed updates, worker pool, epoch driver, the
 //!   paper's strategy baselines, the analytic performance model, and a
@@ -13,11 +47,12 @@
 //!   discontinued hardware (DESIGN.md §2).
 //! - **L2/L1 (python/, build time only)** — JAX model + Pallas kernels,
 //!   AOT-lowered to HLO text, loaded and executed here through
-//!   [`runtime`] via the PJRT CPU client. Python is never on the
-//!   request path.
+//!   [`runtime`] via the PJRT CPU client (behind the `xla-runtime`
+//!   feature; the default build substitutes a stub). Python is never on
+//!   the request path.
 //!
 //! Start with [`config::ArchSpec`] (the paper's Table 2 networks),
-//! [`chaos::train`] (the parallel trainer), and [`harness`] (regenerates
+//! [`chaos::Trainer`] (the parallel trainer), and [`harness`] (regenerates
 //! every table and figure of the paper's evaluation).
 
 pub mod bench;

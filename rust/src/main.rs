@@ -10,7 +10,7 @@
 //!   serve      batched-inference serving demo over the AOT artifacts
 //!   info       architecture/manifest inventory
 
-use chaos_phi::chaos::{self, Strategy};
+use chaos_phi::chaos::{self, policy};
 use chaos_phi::config::{ArchSpec, TrainConfig};
 use chaos_phi::data;
 use chaos_phi::harness::{self, RealRunScale};
@@ -29,6 +29,8 @@ USAGE: chaos <command> [flags]
   train     --arch small|medium|large|tiny --threads N --strategy chaos|sequential|hogwild|delayed-rr|averaged[:n]
             --epochs E --train-n N --test-n N --eta F --seed S --data-dir DIR
             --out FILE.json --weights-out FILE.ckpt
+            --stop-at-test-error R   (early-stop once test error rate <= R)
+            (--strategy also accepts any policy registered via chaos::policy)
   table N   [--quick|--full] [--threads 2,4,8] [--arch small]    (N in 1..9)
   fig N     [--quick|--full] [--threads 2,4,8] [--arch small]    (N in 5..13)
   report    --out FILE.md [--quick]
@@ -69,13 +71,28 @@ fn main() {
 fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
     let a = Args::parse(
         raw,
-        &["arch", "threads", "strategy", "epochs", "train-n", "test-n", "eta", "seed", "data-dir", "out", "weights-out", "validation-fraction"],
+        &[
+            "arch",
+            "threads",
+            "strategy",
+            "epochs",
+            "train-n",
+            "test-n",
+            "eta",
+            "seed",
+            "data-dir",
+            "out",
+            "weights-out",
+            "validation-fraction",
+            "stop-at-test-error",
+        ],
     )?;
     let arch_name = a.get_str("arch", "small");
     let arch = ArchSpec::by_name(&arch_name)
         .ok_or_else(|| anyhow::anyhow!("unknown arch '{arch_name}'"))?;
     let net = Network::new(arch.clone());
-    let strategy = Strategy::parse(&a.get_str("strategy", "chaos"))?;
+    let update_policy = policy::from_name(&a.get_str("strategy", "chaos"))?;
+    let policy_name = update_policy.name();
     let cfg = TrainConfig {
         epochs: a.get_usize("epochs", arch.paper_epochs)?,
         threads: a.get_usize("threads", 4)?,
@@ -98,15 +115,22 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
         test_set = test_set.resize(side);
     }
     println!(
-        "training {arch_name} with {} ({} threads) on {} train / {} test images, {} epochs",
-        strategy.name(),
+        "training {arch_name} with {policy_name} ({} threads) on {} train / {} test images, {} epochs",
         cfg.threads,
         train_set.len(),
         test_set.len(),
         cfg.epochs
     );
+    let mut trainer = chaos::Trainer::new()
+        .network(net)
+        .config(cfg.clone())
+        .policy_boxed(update_policy);
+    if a.get("stop-at-test-error").is_some() {
+        let rate = a.get_f64("stop-at-test-error", 0.0)?;
+        trainer = trainer.observer(chaos::EarlyStop::at_test_error(rate));
+    }
     let sw = Stopwatch::start();
-    let run = chaos::train(&net, &train_set, &test_set, &cfg, strategy)?;
+    let run = trainer.run(&train_set, &test_set)?;
     for e in &run.epochs {
         println!(
             "epoch {:>3}  eta {:.5}  train loss {:>10.2}  train err {:>6}  val err-rate {:>6.3}%  test err-rate {:>6.3}%  ({:.1}s)",
@@ -120,11 +144,12 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
         );
     }
     println!(
-        "done in {:.1}s; publications={}  final test errors {}/{}",
+        "done in {:.1}s; publications={}  final test errors {}/{}{}",
         sw.elapsed_secs(),
         run.publications,
         run.final_epoch().test.errors,
-        run.final_epoch().test.images
+        run.final_epoch().test.images,
+        if run.stopped_early { "  (stopped early)" } else { "" }
     );
     if let Some(out) = a.get("out") {
         run.save(out)?;

@@ -1,0 +1,118 @@
+//! API-compatible stand-in for the PJRT executor, used when the crate is
+//! built without the `xla-runtime` feature (the default — the external
+//! `xla` bindings crate is not available in the offline build environment).
+//!
+//! Every loader returns a descriptive error, so the serving and runtime
+//! paths degrade gracefully at run time while the rest of the crate (CHAOS
+//! trainer, harness, simulator) is fully functional. The integration tests
+//! and benches that need artifacts skip before touching this module.
+
+use super::manifest::{ArchManifest, Manifest};
+
+fn unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "PJRT runtime unavailable: built without the `xla-runtime` feature \
+         (rebuild with `--features xla-runtime` in an environment that \
+         provides the `xla` bindings crate)"
+    )
+}
+
+/// Stub PJRT client; construction always fails.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load_artifact(&self, _path: &std::path::Path) -> anyhow::Result<Executable> {
+        Err(unavailable())
+    }
+}
+
+/// Stub compiled artifact (never constructed).
+pub struct Executable {
+    /// Wall-clock seconds spent compiling (reported by examples/benches).
+    pub compile_secs: f64,
+}
+
+/// Stub single-image forward engine.
+pub struct ForwardEngine {
+    pub arch: ArchManifest,
+}
+
+impl ForwardEngine {
+    pub fn load(_rt: &Runtime, _manifest: &Manifest, _arch: &str) -> anyhow::Result<ForwardEngine> {
+        Err(unavailable())
+    }
+
+    pub fn run(&self, _flat_params: &[f32], _image: &[f32]) -> anyhow::Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub batched forward engine (serving path).
+pub struct BatchForwardEngine {
+    pub arch: ArchManifest,
+    pub batch: usize,
+}
+
+impl BatchForwardEngine {
+    pub fn load(
+        _rt: &Runtime,
+        _manifest: &Manifest,
+        _arch: &str,
+    ) -> anyhow::Result<BatchForwardEngine> {
+        Err(unavailable())
+    }
+
+    pub fn run(&self, _flat_params: &[f32], _images: &[f32]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub train-step engine.
+pub struct TrainEngine {
+    pub arch: ArchManifest,
+}
+
+/// Result of one AOT train step.
+#[derive(Debug)]
+pub struct TrainStepOut {
+    pub loss: f32,
+    pub probs: Vec<f32>,
+    /// Flat gradient vector in the shared parameter order.
+    pub grads: Vec<f32>,
+}
+
+impl TrainEngine {
+    pub fn load(_rt: &Runtime, _manifest: &Manifest, _arch: &str) -> anyhow::Result<TrainEngine> {
+        Err(unavailable())
+    }
+
+    pub fn run(
+        &self,
+        _flat_params: &[f32],
+        _image: &[f32],
+        _label: i32,
+    ) -> anyhow::Result<TrainStepOut> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = Runtime::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla-runtime"), "{e}");
+    }
+}

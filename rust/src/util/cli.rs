@@ -16,17 +16,28 @@ pub struct Args {
     known: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("flag --{0}: cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
-    #[error("missing required flag --{0}")]
     MissingFlag(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(name) => write!(f, "unknown flag --{name}"),
+            CliError::MissingValue(name) => write!(f, "flag --{name} expects a value"),
+            CliError::BadValue(name, value, ty) => {
+                write!(f, "flag --{name}: cannot parse '{value}' as {ty}")
+            }
+            CliError::MissingFlag(name) => write!(f, "missing required flag --{name}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw args (without argv[0]/subcommand). `known_flags` lists the

@@ -1,0 +1,201 @@
+//! Integration coverage for the redesigned coordinator API: the `Trainer`
+//! builder, the open `UpdatePolicy` trait + registry, the observer
+//! callbacks, and the deprecated `chaos::train` shim.
+//!
+//! The toy-policy test is the acceptance check for the open API: a policy
+//! defined *outside* the crate, registered by name, and selected through
+//! the same path the CLI uses — without touching `trainer.rs`.
+
+use chaos_phi::chaos::{
+    observer_fn, policy, ChaosPolicy, EpochCtx, EpochState, SequentialPolicy, Strategy,
+    TrainControl, Trainer, UpdatePolicy, WorkerHooks,
+};
+use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::data::{generate_synthetic, Dataset, SynthConfig};
+use chaos_phi::nn::LayerDims;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn tiny_data(n: usize, seed: u64) -> Dataset {
+    generate_synthetic(n, seed, &SynthConfig::default()).resize(13)
+}
+
+fn tiny_trainer(threads: usize, epochs: usize) -> Trainer {
+    Trainer::new().arch(ArchSpec::tiny()).config(TrainConfig {
+        epochs,
+        threads,
+        eta0: 0.05,
+        eta_decay: 0.95,
+        seed: 42,
+        validation_fraction: 0.25,
+    })
+}
+
+#[test]
+fn builder_validates_before_running() {
+    let d = tiny_data(10, 1);
+    // Missing architecture fails fast.
+    assert!(Trainer::new().run(&d, &d).is_err());
+    // Config errors surface through validate() without training.
+    assert!(tiny_trainer(0, 1).validate().is_err());
+    assert!(tiny_trainer(1, 0).validate().is_err());
+    assert!(tiny_trainer(1, 1).eta(0.0, 0.9).validate().is_err());
+    // Policy parameterization errors too.
+    assert!(tiny_trainer(2, 1).policy_name("averaged:0").is_err());
+    assert!(tiny_trainer(2, 1).policy_name("nope").is_err());
+    // And a complete build passes.
+    tiny_trainer(2, 1).policy(ChaosPolicy).validate().unwrap();
+}
+
+#[test]
+fn quickstart_parity_through_trainer() {
+    // The quickstart's headline assertion, as a test: sequential and
+    // 4-thread CHAOS from the same seed reach comparable accuracy.
+    // Unlike the unit-level parity test this goes through the *registry*
+    // selection path (the CLI's route), at a smaller scale.
+    let train_set = tiny_data(240, 3);
+    let test_set = tiny_data(90, 4);
+    let seq = tiny_trainer(1, 3)
+        .policy_name("sequential")
+        .unwrap()
+        .run(&train_set, &test_set)
+        .unwrap();
+    let par = tiny_trainer(4, 3)
+        .policy_name("chaos")
+        .unwrap()
+        .run(&train_set, &test_set)
+        .unwrap();
+    let gap = (seq.final_epoch().test.error_rate() - par.final_epoch().test.error_rate()).abs();
+    assert!(gap < 0.2, "parity violated: gap {gap}");
+    assert!(par.publications > 0);
+    assert_eq!(seq.strategy, "sequential");
+    assert_eq!(par.strategy, "chaos");
+}
+
+#[test]
+fn observers_count_and_stop() {
+    let train_set = tiny_data(80, 5);
+    let test_set = tiny_data(30, 6);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c = calls.clone();
+    // Stop after the second epoch of five.
+    let r = tiny_trainer(1, 5)
+        .policy(SequentialPolicy)
+        .observer(observer_fn(move |rec, _run| {
+            c.fetch_add(1, Ordering::Relaxed);
+            if rec.epoch >= 1 {
+                TrainControl::Stop
+            } else {
+                TrainControl::Continue
+            }
+        }))
+        .run(&train_set, &test_set)
+        .unwrap();
+    assert_eq!(calls.load(Ordering::Relaxed), 2, "observer fires once per completed epoch");
+    assert_eq!(r.epochs.len(), 2);
+    assert!(r.stopped_early);
+}
+
+// ---------------------------------------------------------------------------
+// The open-API acceptance check: a toy policy, defined here, registered by
+// name, selected through the registry — trainer.rs untouched.
+// ---------------------------------------------------------------------------
+
+/// Publishes locked like CHAOS but at a scaled-down learning rate, and
+/// counts every publication it routes.
+struct TimidPolicy {
+    scale: f32,
+    published: Arc<AtomicUsize>,
+}
+
+struct TimidState {
+    scale: f32,
+    published: Arc<AtomicUsize>,
+}
+
+struct TimidHooks<'a> {
+    state: &'a TimidState,
+}
+
+impl UpdatePolicy for TimidPolicy {
+    fn name(&self) -> String {
+        "timid".to_string()
+    }
+
+    fn epoch_state(&self, _ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        Box::new(TimidState { scale: self.scale, published: self.published.clone() })
+    }
+}
+
+impl EpochState for TimidState {
+    fn worker(&self, _ctx: &EpochCtx<'_>, _worker_id: usize) -> Box<dyn WorkerHooks + '_> {
+        Box::new(TimidHooks { state: self })
+    }
+}
+
+impl WorkerHooks for TimidHooks<'_> {
+    fn publish(&mut self, ctx: &EpochCtx<'_>, layer: usize, dims: &LayerDims, grads: &[f32]) {
+        self.state.published.fetch_add(1, Ordering::Relaxed);
+        ctx.store.publish_scaled(layer, dims.params.clone(), grads, -ctx.eta * self.state.scale);
+    }
+}
+
+#[test]
+fn custom_policy_registers_and_runs_by_name() {
+    let published = Arc::new(AtomicUsize::new(0));
+    let p = published.clone();
+    policy::register("timid", move |arg| {
+        let scale: f32 = match arg {
+            None => 0.5,
+            Some(a) => a
+                .parse()
+                .map_err(|_| anyhow::anyhow!("timid:<scale> — bad float '{a}'"))?,
+        };
+        Ok(Box::new(TimidPolicy { scale, published: p.clone() }))
+    })
+    .unwrap();
+
+    // Registered policies are listed next to the built-ins…
+    assert!(policy::names().iter().any(|n| n == "timid"));
+    // …and rejected on duplicate registration.
+    assert!(policy::register("timid", |_| Ok(Box::new(ChaosPolicy))).is_err());
+
+    // Select it exactly like the CLI does, argument included.
+    let train_set = tiny_data(90, 7);
+    let test_set = tiny_data(30, 8);
+    let r = tiny_trainer(3, 1)
+        .policy_name("timid:0.25")
+        .unwrap()
+        .run(&train_set, &test_set)
+        .unwrap();
+    assert_eq!(r.strategy, "timid");
+    assert_eq!(r.epochs[0].train.images, 90);
+    assert!(r.publications > 0);
+    assert_eq!(
+        published.load(Ordering::Relaxed) as u64,
+        r.publications,
+        "every publication went through the custom hooks"
+    );
+    // Factory argument errors propagate.
+    assert!(tiny_trainer(2, 1).policy_name("timid:zap").is_err());
+}
+
+#[test]
+fn deprecated_train_shim_still_works() {
+    let net = chaos_phi::nn::Network::new(ArchSpec::tiny());
+    let train_set = tiny_data(60, 9);
+    let test_set = tiny_data(20, 10);
+    let cfg = TrainConfig {
+        epochs: 1,
+        threads: 2,
+        eta0: 0.05,
+        eta_decay: 0.95,
+        seed: 1,
+        validation_fraction: 0.0,
+    };
+    #[allow(deprecated)]
+    let run = chaos_phi::chaos::train(&net, &train_set, &test_set, &cfg, Strategy::Chaos).unwrap();
+    assert_eq!(run.strategy, "chaos");
+    assert_eq!(run.epochs.len(), 1);
+    assert!(run.publications > 0);
+}

@@ -1,8 +1,10 @@
 //! End-to-end training integration: data generation → CHAOS coordinator →
-//! reporter, across strategies and architectures, plus failure-mode
-//! coverage (bad configs).
+//! reporter, across policies and architectures, plus failure-mode
+//! coverage (bad configs). All entry points go through the `Trainer`
+//! builder; `deprecated_shim.rs`-style back-compat for the old free
+//! function lives in `trainer_api.rs`.
 
-use chaos_phi::chaos::{train, Strategy};
+use chaos_phi::chaos::{ChaosPolicy, SequentialPolicy, Trainer};
 use chaos_phi::config::{ArchSpec, TrainConfig};
 use chaos_phi::data::{generate_synthetic, load_or_generate, SynthConfig};
 use chaos_phi::nn::Network;
@@ -22,7 +24,12 @@ fn cfg(threads: usize, epochs: usize) -> TrainConfig {
 fn small_arch_learns_synthetic_digits() {
     let net = Network::new(ArchSpec::small());
     let (train_set, test_set) = load_or_generate("data/mnist", 600, 200, 7);
-    let run = train(&net, &train_set, &test_set, &cfg(1, 3), Strategy::Sequential).unwrap();
+    let run = Trainer::new()
+        .network(net)
+        .config(cfg(1, 3))
+        .policy(SequentialPolicy)
+        .run(&train_set, &test_set)
+        .unwrap();
     let first = &run.epochs[0];
     let last = run.final_epoch();
     assert!(last.train.loss < first.train.loss * 0.8, "loss must fall substantially");
@@ -39,8 +46,18 @@ fn chaos_accuracy_parity_on_small_arch() {
     // at 4 workers vs sequential; final error rates must be comparable.
     let net = Network::new(ArchSpec::small());
     let (train_set, test_set) = load_or_generate("data/mnist", 500, 200, 9);
-    let seq = train(&net, &train_set, &test_set, &cfg(1, 2), Strategy::Sequential).unwrap();
-    let par = train(&net, &train_set, &test_set, &cfg(4, 2), Strategy::Chaos).unwrap();
+    let seq = Trainer::new()
+        .network(net.clone())
+        .config(cfg(1, 2))
+        .policy(SequentialPolicy)
+        .run(&train_set, &test_set)
+        .unwrap();
+    let par = Trainer::new()
+        .network(net)
+        .config(cfg(4, 2))
+        .policy(ChaosPolicy)
+        .run(&train_set, &test_set)
+        .unwrap();
     let d = (seq.final_epoch().test.error_rate() - par.final_epoch().test.error_rate()).abs();
     assert!(
         d < 0.12,
@@ -59,12 +76,18 @@ fn epoch_metrics_account_every_image() {
     let net = Network::new(ArchSpec::tiny());
     let train_set = generate_synthetic(150, 3, &SynthConfig::default()).resize(13);
     let test_set = generate_synthetic(50, 4, &SynthConfig::default()).resize(13);
-    for strategy in [Strategy::Chaos, Strategy::Hogwild, Strategy::Averaged { sync_every: 8 }] {
-        let run = train(&net, &train_set, &test_set, &cfg(3, 2), strategy).unwrap();
+    for name in ["chaos", "hogwild", "averaged:8"] {
+        let run = Trainer::new()
+            .network(net.clone())
+            .config(cfg(3, 2))
+            .policy_name(name)
+            .unwrap()
+            .run(&train_set, &test_set)
+            .unwrap();
         for e in &run.epochs {
-            assert_eq!(e.train.images, 150, "{}", strategy.name());
-            assert_eq!(e.validation.images, 30, "{}", strategy.name());
-            assert_eq!(e.test.images, 50, "{}", strategy.name());
+            assert_eq!(e.train.images, 150, "{name}");
+            assert_eq!(e.validation.images, 30, "{name}");
+            assert_eq!(e.test.images, 50, "{name}");
         }
         assert_eq!(run.epochs.len(), 2);
         assert_eq!(run.final_params.len(), net.total_params);
@@ -76,7 +99,12 @@ fn run_result_round_trips_through_json_file() {
     let net = Network::new(ArchSpec::tiny());
     let train_set = generate_synthetic(60, 5, &SynthConfig::default()).resize(13);
     let test_set = generate_synthetic(30, 6, &SynthConfig::default()).resize(13);
-    let run = train(&net, &train_set, &test_set, &cfg(2, 1), Strategy::Chaos).unwrap();
+    let run = Trainer::new()
+        .network(net)
+        .config(cfg(2, 1))
+        .policy(ChaosPolicy)
+        .run(&train_set, &test_set)
+        .unwrap();
     let path = std::env::temp_dir().join(format!("chaos_run_{}.json", std::process::id()));
     run.save(path.to_str().unwrap()).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
@@ -84,6 +112,7 @@ fn run_result_round_trips_through_json_file() {
     assert_eq!(j.get("arch").unwrap().as_str(), Some("tiny"));
     assert_eq!(j.get("threads").unwrap().as_usize(), Some(2));
     assert_eq!(j.get("epochs").unwrap().as_arr().unwrap().len(), 1);
+    assert_eq!(j.get("stopped_early").unwrap().as_bool(), Some(false));
     std::fs::remove_file(&path).unwrap();
 }
 
@@ -98,7 +127,12 @@ fn invalid_configs_rejected() {
         TrainConfig { eta_decay: 0.0, ..cfg(1, 1) },
         TrainConfig { validation_fraction: 2.0, ..cfg(1, 1) },
     ] {
-        assert!(train(&net, &d, &d, &bad, Strategy::Chaos).is_err());
+        let r = Trainer::new()
+            .network(net.clone())
+            .config(bad)
+            .policy(ChaosPolicy)
+            .run(&d, &d);
+        assert!(r.is_err());
     }
 }
 

@@ -1,0 +1,226 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline (no crates.io registry), so this
+//! vendored crate implements exactly the subset chaos-phi uses: the
+//! [`Error`] type with source-chain `{:#}` formatting, the [`Result`]
+//! alias, the `anyhow!` / `bail!` / `ensure!` macros, and the [`Context`]
+//! extension trait. Code written against it compiles unchanged against
+//! real `anyhow`. One deliberate simplification: [`Error::context`]
+//! flattens the wrapped error into the rendered message (the real crate
+//! keeps the source chain walkable behind the context layer), so
+//! `chain()`/downcast-based inspection stops at a contextualized error.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Inner {
+    /// A free-standing message (`anyhow!("...")`).
+    Msg(String),
+    /// A wrapped concrete error (`?` conversion).
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+/// A dynamic error with an optional source chain.
+///
+/// Like the real `anyhow::Error`, this deliberately does **not** implement
+/// `std::error::Error`, which is what makes the blanket `From` impl below
+/// coherent.
+pub struct Error {
+    inner: Inner,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Inner::Msg(message.to_string()) }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Inner::Boxed(Box::new(error)) }
+    }
+
+    /// Prefix this error with higher-level context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error::msg(format!("{context}: {self:#}"))
+    }
+
+    /// The chain of sources below the top-level error, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        let next = match &self.inner {
+            Inner::Msg(_) => None,
+            Inner::Boxed(e) => e.source(),
+        };
+        Chain { next }
+    }
+}
+
+/// Iterator over an [`Error`]'s source chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            Inner::Msg(m) => f.write_str(m)?,
+            Inner::Boxed(e) => write!(f, "{e}")?,
+        }
+        // `{:#}` appends the full cause chain, `: cause: cause: ...`.
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")?;
+        let mut first = true;
+        for cause in self.chain() {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait attaching context to `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_concrete_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing file"), "{e}");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let e2 = anyhow!("bad value {}", x + 1);
+        assert_eq!(e2.to_string(), "bad value 8");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable for true? no: always bails at {}", 42);
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert!(f(true).unwrap_err().to_string().contains("42"));
+    }
+
+    #[test]
+    fn alternate_format_appends_sources() {
+        let e = Error::new(io_err()).context("loading config");
+        let plain = format!("{e}");
+        assert!(plain.starts_with("loading config"), "{plain}");
+        assert!(plain.contains("missing file"), "{plain}");
+    }
+
+    #[test]
+    fn context_trait_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("empty").unwrap_err().to_string(), "empty");
+        let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "during load").unwrap_err();
+        assert!(e.to_string().starts_with("during load"), "{e}");
+    }
+}

@@ -1,0 +1,697 @@
+//! Minimal, dependency-free stand-in for the `flate2` crate.
+//!
+//! The build environment is fully offline (no crates.io registry), so this
+//! vendored crate implements the subset chaos-phi uses:
+//!
+//! * [`Crc`] — the CRC32 (IEEE, reflected) checksum used by the checkpoint
+//!   format;
+//! * [`write::GzEncoder`] — a gzip writer. It emits *stored* (uncompressed)
+//!   DEFLATE blocks: byte-identical data, valid RFC 1951/1952 streams, no
+//!   compression. Every standard gzip reader accepts the output;
+//! * [`read::GzDecoder`] — a gzip reader with a complete DEFLATE
+//!   decompressor (stored, fixed-Huffman and dynamic-Huffman blocks; the
+//!   decoder follows zlib's reference `puff.c` structure), so real
+//!   gzip-compressed files (e.g. the distributed MNIST IDX archives) load
+//!   correctly.
+
+/// Compression level knob. Accepted for API compatibility; the encoder
+/// always writes stored blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC32
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// Running CRC32 (IEEE polynomial, reflected — the gzip/zlib checksum).
+#[derive(Debug, Clone, Default)]
+pub struct Crc {
+    state: u32,
+    amount: u32,
+}
+
+impl Crc {
+    pub fn new() -> Crc {
+        Crc::default()
+    }
+
+    /// Feed bytes into the checksum.
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = !self.state;
+        for &b in data {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = !c;
+        self.amount = self.amount.wrapping_add(data.len() as u32);
+    }
+
+    /// The checksum of everything fed so far.
+    pub fn sum(&self) -> u32 {
+        self.state
+    }
+
+    /// Number of bytes fed so far (mod 2³²).
+    pub fn amount(&self) -> u32 {
+        self.amount
+    }
+
+    pub fn reset(&mut self) {
+        self.state = 0;
+        self.amount = 0;
+    }
+}
+
+fn crc32(data: &[u8]) -> u32 {
+    let mut c = Crc::new();
+    c.update(data);
+    c.sum()
+}
+
+// ---------------------------------------------------------------------------
+// Gzip writer (stored DEFLATE blocks)
+// ---------------------------------------------------------------------------
+
+pub mod write {
+    use super::{crc32, Compression};
+    use std::io::{self, Write};
+
+    /// Gzip encoder over any [`Write`] sink. Input is buffered and written
+    /// as a single gzip member on [`GzEncoder::finish`].
+    pub struct GzEncoder<W: Write> {
+        inner: Option<W>,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(writer: W, _level: Compression) -> GzEncoder<W> {
+            GzEncoder { inner: Some(writer), buf: Vec::new() }
+        }
+
+        /// Write the complete gzip stream and return the underlying writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            let mut w = self.inner.take().expect("encoder already finished");
+            // RFC 1952 header: magic, CM=deflate, FLG=0, MTIME=0, XFL=0,
+            // OS=255 (unknown).
+            w.write_all(&[0x1f, 0x8b, 0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xff])?;
+            // RFC 1951 stored blocks: 3-bit header (BFINAL, BTYPE=00) padded
+            // to the byte boundary, then LEN / NLEN / raw bytes. The writer
+            // is byte-aligned at every block start, so the header is one
+            // whole byte.
+            let mut chunks = self.buf.chunks(0xFFFF).peekable();
+            if chunks.peek().is_none() {
+                // Empty input still needs one final (empty) stored block.
+                w.write_all(&[0x01, 0x00, 0x00, 0xFF, 0xFF])?;
+            } else {
+                while let Some(chunk) = chunks.next() {
+                    let last = chunks.peek().is_none();
+                    let len = chunk.len() as u16;
+                    w.write_all(&[u8::from(last)])?;
+                    w.write_all(&len.to_le_bytes())?;
+                    w.write_all(&(!len).to_le_bytes())?;
+                    w.write_all(chunk)?;
+                }
+            }
+            // RFC 1952 trailer: CRC32 and ISIZE of the uncompressed data.
+            w.write_all(&crc32(&self.buf).to_le_bytes())?;
+            w.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            w.flush()?;
+            Ok(w)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gzip reader
+// ---------------------------------------------------------------------------
+
+pub mod read {
+    use std::io::{self, Read};
+
+    /// Gzip decoder over any [`Read`] source. The whole member is read and
+    /// inflated on first use; subsequent reads serve from the buffer.
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        out: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(reader: R) -> GzDecoder<R> {
+            GzDecoder { inner: Some(reader), out: Vec::new(), pos: 0 }
+        }
+
+        fn decode_all(&mut self, mut reader: R) -> io::Result<()> {
+            let mut raw = Vec::new();
+            reader.read_to_end(&mut raw)?;
+            self.out = super::gunzip(&raw).map_err(|e| {
+                io::Error::new(io::ErrorKind::InvalidData, e.to_string())
+            })?;
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if let Some(reader) = self.inner.take() {
+                self.decode_all(reader)?;
+            }
+            let remaining = &self.out[self.pos..];
+            let n = remaining.len().min(buf.len());
+            buf[..n].copy_from_slice(&remaining[..n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+/// Decode one gzip member (header + DEFLATE stream + trailer).
+fn gunzip(raw: &[u8]) -> Result<Vec<u8>, InflateError> {
+    let body = parse_gzip_header(raw)?;
+    let (out, consumed) = inflate::inflate(&raw[body..])?;
+    // Trailer: CRC32 then ISIZE, little-endian, byte-aligned after the
+    // DEFLATE stream.
+    let trailer = body + consumed;
+    if raw.len() < trailer + 8 {
+        return Err(InflateError::new("truncated gzip trailer"));
+    }
+    let le32 = |off: usize| {
+        u32::from_le_bytes([raw[off], raw[off + 1], raw[off + 2], raw[off + 3]])
+    };
+    let want_crc = le32(trailer);
+    let want_len = le32(trailer + 4);
+    if crc32(&out) != want_crc {
+        return Err(InflateError::new("gzip crc mismatch"));
+    }
+    if out.len() as u32 != want_len {
+        return Err(InflateError::new("gzip length mismatch"));
+    }
+    Ok(out)
+}
+
+/// Validate the RFC 1952 header; returns the offset of the DEFLATE stream.
+fn parse_gzip_header(raw: &[u8]) -> Result<usize, InflateError> {
+    if raw.len() < 10 {
+        return Err(InflateError::new("truncated gzip header"));
+    }
+    if raw[0] != 0x1f || raw[1] != 0x8b {
+        return Err(InflateError::new("not a gzip stream (bad magic)"));
+    }
+    if raw[2] != 8 {
+        return Err(InflateError::new("unsupported gzip compression method"));
+    }
+    let flg = raw[3];
+    let mut pos = 10usize;
+    if flg & 0x04 != 0 {
+        // FEXTRA: 2-byte little-endian length, then that many bytes.
+        if raw.len() < pos + 2 {
+            return Err(InflateError::new("truncated FEXTRA field"));
+        }
+        let xlen = u16::from_le_bytes([raw[pos], raw[pos + 1]]) as usize;
+        pos += 2 + xlen;
+    }
+    for flag in [0x08u8, 0x10] {
+        // FNAME / FCOMMENT: zero-terminated strings.
+        if flg & flag != 0 {
+            let end = raw[pos.min(raw.len())..]
+                .iter()
+                .position(|&b| b == 0)
+                .ok_or_else(|| InflateError::new("unterminated gzip header string"))?;
+            pos += end + 1;
+        }
+    }
+    if flg & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    if pos > raw.len() {
+        return Err(InflateError::new("truncated gzip header fields"));
+    }
+    Ok(pos)
+}
+
+/// DEFLATE decoding error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InflateError {
+    msg: &'static str,
+}
+
+impl InflateError {
+    fn new(msg: &'static str) -> InflateError {
+        InflateError { msg }
+    }
+}
+
+impl std::fmt::Display for InflateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.msg)
+    }
+}
+
+impl std::error::Error for InflateError {}
+
+mod inflate {
+    //! RFC 1951 DEFLATE decoder, structured after zlib's reference
+    //! implementation `contrib/puff/puff.c` (bit-at-a-time canonical
+    //! Huffman decoding — slow but simple and exact).
+
+    use super::InflateError;
+
+    const MAX_BITS: usize = 15;
+    const MAX_LIT_CODES: usize = 286;
+    const MAX_DIST_CODES: usize = 30;
+
+    fn err(msg: &'static str) -> InflateError {
+        InflateError::new(msg)
+    }
+
+    struct Bits<'a> {
+        data: &'a [u8],
+        pos: usize,
+        bitbuf: u32,
+        bitcnt: u32,
+    }
+
+    impl<'a> Bits<'a> {
+        fn new(data: &'a [u8]) -> Bits<'a> {
+            Bits { data, pos: 0, bitbuf: 0, bitcnt: 0 }
+        }
+
+        /// Take `need` bits, LSB-first (need ≤ 13 in DEFLATE).
+        fn bits(&mut self, need: u32) -> Result<u32, InflateError> {
+            let mut val = self.bitbuf;
+            while self.bitcnt < need {
+                let byte = *self
+                    .data
+                    .get(self.pos)
+                    .ok_or_else(|| err("unexpected end of deflate stream"))?
+                    as u32;
+                self.pos += 1;
+                val |= byte << self.bitcnt;
+                self.bitcnt += 8;
+            }
+            self.bitbuf = val >> need;
+            self.bitcnt -= need;
+            Ok(val & ((1u32 << need) - 1))
+        }
+    }
+
+    struct Huffman {
+        /// count[len] = number of codes of bit length `len`.
+        count: [u16; MAX_BITS + 1],
+        /// Symbols in canonical order.
+        symbol: Vec<u16>,
+    }
+
+    impl Huffman {
+        /// Build from per-symbol code lengths. Returns (table, left) where
+        /// `left` > 0 marks an incomplete code and < 0 an over-subscribed
+        /// one (matching puff's `construct`).
+        fn construct(lengths: &[u16]) -> (Huffman, i32) {
+            let mut count = [0u16; MAX_BITS + 1];
+            for &l in lengths {
+                count[l as usize] += 1;
+            }
+            let mut left: i32 = 1;
+            if count[0] as usize != lengths.len() {
+                for c in count.iter().skip(1) {
+                    left <<= 1;
+                    left -= *c as i32;
+                    if left < 0 {
+                        return (Huffman { count, symbol: Vec::new() }, left);
+                    }
+                }
+            } else {
+                left = 0; // no codes at all: treat as complete-and-empty
+            }
+            let mut offs = [0u16; MAX_BITS + 1];
+            for len in 1..MAX_BITS {
+                offs[len + 1] = offs[len] + count[len];
+            }
+            let mut symbol = vec![0u16; lengths.len()];
+            for (sym, &l) in lengths.iter().enumerate() {
+                if l != 0 {
+                    symbol[offs[l as usize] as usize] = sym as u16;
+                    offs[l as usize] += 1;
+                }
+            }
+            (Huffman { count, symbol }, left)
+        }
+    }
+
+    /// Decode one symbol (puff's `decode`).
+    fn decode(br: &mut Bits<'_>, h: &Huffman) -> Result<u16, InflateError> {
+        let mut code: i32 = 0;
+        let mut first: i32 = 0;
+        let mut index: i32 = 0;
+        for len in 1..=MAX_BITS {
+            code |= br.bits(1)? as i32;
+            let count = h.count[len] as i32;
+            if code - count < first {
+                return Ok(h.symbol[(index + (code - first)) as usize]);
+            }
+            index += count;
+            first += count;
+            first <<= 1;
+            code <<= 1;
+        }
+        Err(err("invalid huffman code"))
+    }
+
+    const LEN_BASE: [u16; 29] = [
+        3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99,
+        115, 131, 163, 195, 227, 258,
+    ];
+    const LEN_EXTRA: [u32; 29] = [
+        0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+    ];
+    const DIST_BASE: [u16; 30] = [
+        1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025,
+        1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+    ];
+    const DIST_EXTRA: [u32; 30] = [
+        0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12,
+        12, 13, 13,
+    ];
+
+    /// Decode literal/length + distance codes until end-of-block.
+    fn codes(
+        br: &mut Bits<'_>,
+        out: &mut Vec<u8>,
+        lencode: &Huffman,
+        distcode: &Huffman,
+    ) -> Result<(), InflateError> {
+        loop {
+            let sym = decode(br, lencode)?;
+            if sym < 256 {
+                out.push(sym as u8);
+            } else if sym == 256 {
+                return Ok(());
+            } else {
+                let sym = (sym - 257) as usize;
+                if sym >= 29 {
+                    return Err(err("invalid length symbol"));
+                }
+                let len = LEN_BASE[sym] as usize + br.bits(LEN_EXTRA[sym])? as usize;
+                let dsym = decode(br, distcode)? as usize;
+                if dsym >= 30 {
+                    return Err(err("invalid distance symbol"));
+                }
+                let dist = DIST_BASE[dsym] as usize + br.bits(DIST_EXTRA[dsym])? as usize;
+                if dist > out.len() {
+                    return Err(err("distance too far back"));
+                }
+                let start = out.len() - dist;
+                for i in 0..len {
+                    let b = out[start + i];
+                    out.push(b);
+                }
+            }
+        }
+    }
+
+    fn stored(br: &mut Bits<'_>, out: &mut Vec<u8>) -> Result<(), InflateError> {
+        // Discard bits to the byte boundary.
+        br.bitbuf = 0;
+        br.bitcnt = 0;
+        if br.data.len() < br.pos + 4 {
+            return Err(err("truncated stored block header"));
+        }
+        let len = u16::from_le_bytes([br.data[br.pos], br.data[br.pos + 1]]) as usize;
+        let nlen = u16::from_le_bytes([br.data[br.pos + 2], br.data[br.pos + 3]]);
+        if nlen != !(len as u16) {
+            return Err(err("stored block length check failed"));
+        }
+        br.pos += 4;
+        if br.data.len() < br.pos + len {
+            return Err(err("truncated stored block data"));
+        }
+        out.extend_from_slice(&br.data[br.pos..br.pos + len]);
+        br.pos += len;
+        Ok(())
+    }
+
+    fn fixed_tables() -> (Huffman, Huffman) {
+        let mut lengths = [0u16; 288];
+        for (sym, l) in lengths.iter_mut().enumerate() {
+            *l = match sym {
+                0..=143 => 8,
+                144..=255 => 9,
+                256..=279 => 7,
+                _ => 8,
+            };
+        }
+        let (lencode, _) = Huffman::construct(&lengths);
+        let dist_lengths = [5u16; MAX_DIST_CODES];
+        let (distcode, _) = Huffman::construct(&dist_lengths);
+        (lencode, distcode)
+    }
+
+    fn dynamic_tables(br: &mut Bits<'_>) -> Result<(Huffman, Huffman), InflateError> {
+        const ORDER: [usize; 19] =
+            [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+        let hlit = br.bits(5)? as usize + 257;
+        let hdist = br.bits(5)? as usize + 1;
+        let hclen = br.bits(4)? as usize + 4;
+        if hlit > MAX_LIT_CODES || hdist > MAX_DIST_CODES {
+            return Err(err("too many dynamic codes"));
+        }
+
+        let mut cl_lengths = [0u16; 19];
+        for &idx in ORDER.iter().take(hclen) {
+            cl_lengths[idx] = br.bits(3)? as u16;
+        }
+        let (clcode, left) = Huffman::construct(&cl_lengths);
+        if left != 0 {
+            return Err(err("bad code-length huffman code"));
+        }
+
+        let mut lengths = vec![0u16; hlit + hdist];
+        let mut index = 0usize;
+        while index < lengths.len() {
+            let sym = decode(br, &clcode)?;
+            match sym {
+                0..=15 => {
+                    lengths[index] = sym;
+                    index += 1;
+                }
+                16 => {
+                    if index == 0 {
+                        return Err(err("repeat with no previous length"));
+                    }
+                    let prev = lengths[index - 1];
+                    let rep = 3 + br.bits(2)? as usize;
+                    if index + rep > lengths.len() {
+                        return Err(err("repeat past end of lengths"));
+                    }
+                    for _ in 0..rep {
+                        lengths[index] = prev;
+                        index += 1;
+                    }
+                }
+                17 | 18 => {
+                    let rep = if sym == 17 {
+                        3 + br.bits(3)? as usize
+                    } else {
+                        11 + br.bits(7)? as usize
+                    };
+                    if index + rep > lengths.len() {
+                        return Err(err("repeat past end of lengths"));
+                    }
+                    index += rep; // already zero
+                }
+                _ => return Err(err("invalid code-length symbol")),
+            }
+        }
+        if lengths[256] == 0 {
+            return Err(err("missing end-of-block code"));
+        }
+
+        let (lencode, left) = Huffman::construct(&lengths[..hlit]);
+        if left < 0 || (left > 0 && hlit != (lencode.count[0] + lencode.count[1]) as usize) {
+            return Err(err("bad literal/length huffman code"));
+        }
+        let (distcode, left) = Huffman::construct(&lengths[hlit..]);
+        if left < 0 || (left > 0 && hdist != (distcode.count[0] + distcode.count[1]) as usize) {
+            return Err(err("bad distance huffman code"));
+        }
+        Ok((lencode, distcode))
+    }
+
+    /// Inflate a DEFLATE stream; returns (output, bytes consumed). The
+    /// stream's trailing partial byte counts as consumed.
+    pub fn inflate(data: &[u8]) -> Result<(Vec<u8>, usize), InflateError> {
+        let mut br = Bits::new(data);
+        let mut out = Vec::new();
+        loop {
+            let last = br.bits(1)?;
+            match br.bits(2)? {
+                0 => stored(&mut br, &mut out)?,
+                1 => {
+                    let (lencode, distcode) = fixed_tables();
+                    codes(&mut br, &mut out, &lencode, &distcode)?;
+                }
+                2 => {
+                    let (lencode, distcode) = dynamic_tables(&mut br)?;
+                    codes(&mut br, &mut out, &lencode, &distcode)?;
+                }
+                _ => return Err(err("invalid block type")),
+            }
+            if last == 1 {
+                break;
+            }
+        }
+        Ok((out, br.pos))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn crc32_known_vector() {
+        // The canonical CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        let mut c = Crc::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.sum(), 0xCBF4_3926);
+        assert_eq!(c.amount(), 9);
+    }
+
+    fn gz_roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let compressed = enc.finish().unwrap();
+        let mut out = Vec::new();
+        read::GzDecoder::new(&compressed[..]).read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let data = b"hello, stored gzip world";
+        assert_eq!(gz_roundtrip(data), data);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        assert_eq!(gz_roundtrip(b""), b"");
+    }
+
+    #[test]
+    fn roundtrip_multi_block() {
+        // > 65535 bytes forces multiple stored blocks.
+        let data: Vec<u8> = (0..200_000u32).map(|i| (i * 7 + i / 251) as u8).collect();
+        assert_eq!(gz_roundtrip(&data), data);
+    }
+
+    #[test]
+    fn header_with_fname_accepted() {
+        // Hand-built member: FLG=FNAME, name "x\0", empty final stored block.
+        let mut raw = vec![0x1f, 0x8b, 0x08, 0x08, 0, 0, 0, 0, 0, 0xff];
+        raw.extend_from_slice(b"x\0");
+        raw.extend_from_slice(&[0x01, 0x00, 0x00, 0xFF, 0xFF]);
+        raw.extend_from_slice(&crc32(b"").to_le_bytes());
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        let mut out = Vec::new();
+        read::GzDecoder::new(&raw[..]).read_to_end(&mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn corrupt_crc_rejected() {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(b"payload").unwrap();
+        let mut compressed = enc.finish().unwrap();
+        let n = compressed.len();
+        compressed[n - 5] ^= 0xFF; // flip a CRC byte
+        let mut out = Vec::new();
+        let e = read::GzDecoder::new(&compressed[..]).read_to_end(&mut out).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut out = Vec::new();
+        assert!(read::GzDecoder::new(&b"not gzip at all"[..]).read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn fixed_huffman_block_decodes() {
+        // Hand-assembled fixed-Huffman block containing the single literal
+        // 'a' (97). Fixed code for 97: 8 bits, value 0x30 + 97 = 0x91,
+        // emitted MSB-first; end-of-block (256): 7 bits, 0000000.
+        // Bit stream (LSB-first packing): BFINAL=1, BTYPE=01, then codes.
+        let mut bits: Vec<u8> = Vec::new(); // individual bits, in write order
+        bits.push(1); // BFINAL
+        bits.extend_from_slice(&[1, 0]); // BTYPE=01, LSB first
+        for i in (0..8).rev() {
+            bits.push((0x91u8 >> i) & 1); // literal 'a', MSB first
+        }
+        bits.extend_from_slice(&[0, 0, 0, 0, 0, 0, 0]); // EOB, 7 zero bits
+        let mut packed = Vec::new();
+        for chunk in bits.chunks(8) {
+            let mut byte = 0u8;
+            for (i, b) in chunk.iter().enumerate() {
+                byte |= b << i;
+            }
+            packed.push(byte);
+        }
+        let (out, _) = inflate::inflate(&packed).unwrap();
+        assert_eq!(out, b"a");
+    }
+}
