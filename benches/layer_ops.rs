@@ -1,0 +1,105 @@
+//! Bench: per-op forward/backward microbenchmarks for every registered
+//! layer kind at paper-architecture shapes.
+//!
+//! Each compiled op is driven directly (the orchestrator stripped away), so
+//! the numbers are the per-layer-class costs the performance model's
+//! parameters (perfmodel::LayerCosts) are meant to predict — compare the
+//! reported ns/op against the per-layer MAC-style operation counts in the
+//! notes. The "zoo" architecture exercises the kinds absent from the paper
+//! networks (padded/strided conv, ReLU, average pooling, dropout).
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::config::{Act, ArchSpec, LayerSpec};
+use chaos_phi::nn::{Acts, Network, OpScratch};
+use chaos_phi::perfmodel::LayerCosts;
+use chaos_phi::util::Pcg32;
+
+fn zoo_arch() -> ArchSpec {
+    ArchSpec {
+        name: "zoo".into(),
+        layers: vec![
+            LayerSpec::Input { side: 29 },
+            LayerSpec::conv_ex(8, 5, 2, 2, Act::Relu), // 15x15
+            LayerSpec::AvgPool { kernel: 3 },          // 5x5
+            LayerSpec::Dropout { rate: 0.25 },
+            LayerSpec::fc_act(64, Act::Relu),
+            LayerSpec::Output { classes: 10 },
+        ],
+        paper_epochs: 1,
+    }
+}
+
+fn bench_net(report: &mut Report, net: &Network, iters: usize) {
+    let params = net.init_params(1);
+    let mut scratch = net.scratch();
+    scratch.train_mode = true;
+    let mut rng = Pcg32::seeded(7);
+    let side = net.arch.input_side();
+    let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    // Populate every layer's activations once so each op sees a realistic
+    // input distribution.
+    net.forward(&params.as_slice(), &img, &mut scratch, None);
+    let acts: Vec<Vec<f32>> = scratch.acts.clone();
+    let costs = LayerCosts::of(&net.arch);
+
+    for l in 1..net.dims.len() {
+        let d = &net.dims[l];
+        let op = &net.ops[l];
+        let label = format!("{}/L{l}:{}({}→{})", net.arch.name, op.kind(), d.in_len(), d.out_len());
+        let layer_params = params[d.params.clone()].to_vec();
+        let input = acts[l - 1].clone();
+        let output = acts[l].clone();
+
+        let mut out = vec![0.0f32; d.out_len()];
+        let mut aux = vec![0u32; op.aux_len()];
+        let mut op_rng = Pcg32::seeded(3);
+        report.add(Bench::new(format!("{label}/fwd")).warmup(2).iters(iters).run(|| {
+            op.forward(
+                &layer_params,
+                &input,
+                &mut out,
+                &mut OpScratch { aux: &mut aux, rng: &mut op_rng, train: true },
+            );
+            out[0]
+        }));
+
+        let mut delta_out_proto = vec![0.0f32; d.out_len()];
+        for (v, seed) in delta_out_proto.iter_mut().zip(0..) {
+            *v = ((seed % 13) as f32 - 6.0) * 1e-3;
+        }
+        let mut delta_out = delta_out_proto.clone();
+        let mut delta_in = vec![0.0f32; d.in_len()];
+        let mut grads = vec![0.0f32; d.param_count()];
+        report.add(Bench::new(format!("{label}/bwd")).warmup(2).iters(iters).run(|| {
+            delta_out.copy_from_slice(&delta_out_proto);
+            grads.fill(0.0);
+            op.backward(
+                &layer_params,
+                Acts { input: &input, output: &output },
+                &mut delta_out,
+                &mut delta_in,
+                &mut grads,
+                &mut OpScratch { aux: &mut aux, rng: &mut op_rng, train: true },
+            );
+            delta_in[0]
+        }));
+
+        let (fwd_ops, bwd_ops) = costs.per_layer[l];
+        report.note(format!(
+            "{label}: perfmodel cost weights fwd {fwd_ops:.0} / bwd {bwd_ops:.0} ops"
+        ));
+    }
+}
+
+fn main() {
+    let mut report =
+        Report::new("layer_ops — per-kind forward/backward at paper-architecture shapes");
+    println!("registered layer kinds: {}", chaos_phi::nn::layer::names().join(", "));
+    for name in ["small", "medium", "large"] {
+        let net = Network::from_name(name).unwrap();
+        let iters = if name == "large" { 6 } else { 20 };
+        bench_net(&mut report, &net, iters);
+    }
+    bench_net(&mut report, &Network::new(zoo_arch()), 20);
+    report.print();
+}

@@ -14,10 +14,7 @@ fn main() {
         let net = Network::new(ArchSpec::by_name(name).unwrap());
         let mut params = net.init_params(1);
         let mut scratch = net.scratch();
-        let side = match net.arch.layers[0] {
-            chaos_phi::config::LayerSpec::Input { side } => side,
-            _ => unreachable!(),
-        };
+        let side = net.arch.input_side();
         let mut rng = Pcg32::seeded(2);
         let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
 

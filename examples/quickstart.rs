@@ -1,22 +1,29 @@
 //! Quickstart: train a CNN with CHAOS in ~30 seconds, through the
 //! [`Trainer`] builder — the public face of the coordinator.
 //!
-//! Builds the paper's "small" architecture, generates a synthetic MNIST
-//! stand-in (or loads the real IDX files from `data/mnist/` if present),
-//! trains sequentially and with CHAOS on 4 threads from the same seed, and
-//! compares accuracy — the paper's core claim: asynchronous parallel
-//! training matches sequential accuracy.
+//! Four stops:
+//!  1. the paper's "small" network, sequential baseline;
+//!  2. the same network under CHAOS on 4 threads (accuracy parity — the
+//!     paper's core claim);
+//!  3. a custom architecture defined in JSON using the open layer
+//!     vocabulary (strided/padded conv, ReLU, average pooling, dropout);
+//!  4. a brand-new layer kind (`softsign`) registered from user code and
+//!     trained end-to-end — no changes inside the crate.
 //!
-//! The update scheme is a pluggable policy: swap `.policy(ChaosPolicy)`
-//! for `.policy_name("averaged:64")?` (or any policy registered through
+//! The update scheme is just as pluggable: swap `.policy(ChaosPolicy)` for
+//! `.policy_name("averaged:64")?` (or any policy registered through
 //! `chaos::policy::register`) and nothing else changes.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use chaos_phi::chaos::{ChaosPolicy, SequentialPolicy, Trainer};
-use chaos_phi::config::ArchSpec;
+use chaos_phi::config::{ArchSpec, LayerSpec};
 use chaos_phi::data::load_or_generate;
-use chaos_phi::nn::Network;
+use chaos_phi::nn::layer::{self, LayerCtx, LayerKind};
+use chaos_phi::nn::{Acts, LayerOp, Network, OpScratch, Shape};
+use chaos_phi::util::Json;
+use std::ops::Range;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let net = Network::new(ArchSpec::small());
@@ -68,7 +75,161 @@ fn main() -> anyhow::Result<()> {
         "CHAOS published {} per-layer updates through the shared store",
         par.publications
     );
+
+    // -----------------------------------------------------------------------
+    // 3. A custom architecture from JSON: every layer object's key selects a
+    //    registered kind, so the vocabulary below (strided+padded conv,
+    //    ReLU, avgpool, dropout) needs no code.
+    // -----------------------------------------------------------------------
+    println!("\n== custom JSON architecture (new layer kinds) ==");
+    let custom = ArchSpec::from_json(&Json::parse(
+        r#"{
+          "name": "json-custom", "epochs": 2, "layers": [
+            {"input": 29},
+            {"conv": {"maps": 6, "kernel": 5, "stride": 2, "pad": 2, "act": "relu"}},
+            {"avgpool": 3},
+            {"dropout": 0.25},
+            {"fc": {"neurons": 32, "act": "relu"}},
+            {"output": 10}
+        ]}"#,
+    )?)?;
+    let run = Trainer::new()
+        .arch(custom)
+        .epochs(2)
+        .threads(2)
+        .eta(0.01, 0.9)
+        .seed(7)
+        .policy(ChaosPolicy)
+        .run(&train_set, &test_set)?;
+    println!(
+        "  json-custom: test error {:.2}% after {} epochs",
+        run.final_epoch().test.error_rate() * 100.0,
+        run.epochs.len()
+    );
+
+    // -----------------------------------------------------------------------
+    // 4. A brand-new layer kind from user code: softsign x/(1+|x|). One
+    //    LayerKind (parse/validate/compile) + one LayerOp (kernels), one
+    //    register call — then it is selectable from JSON like a built-in
+    //    and trains under every update policy.
+    // -----------------------------------------------------------------------
+    println!("\n== runtime-registered custom layer kind: softsign ==");
+    // Ignore the duplicate error if the example runs twice in one process.
+    let _ = layer::register(Arc::new(SoftsignKind));
+    let softy = ArchSpec::from_json(&Json::parse(
+        r#"{
+          "name": "softy", "epochs": 2, "layers": [
+            {"input": 29},
+            {"conv": {"maps": 5, "kernel": 4}},
+            {"pool": 2},
+            {"softsign": {}},
+            {"fc": 30},
+            {"output": 10}
+        ]}"#,
+    )?)?;
+    let run = Trainer::new()
+        .arch(softy)
+        .epochs(2)
+        .threads(2)
+        .eta(0.01, 0.9)
+        .seed(7)
+        .policy(ChaosPolicy)
+        .run(&train_set, &test_set)?;
+    println!(
+        "  softy: test error {:.2}% after {} epochs (kinds: {})",
+        run.final_epoch().test.error_rate() * 100.0,
+        run.epochs.len(),
+        layer::names().join(", ")
+    );
+
     println!("\n(accuracy parity is the paper's Result 4; wall-clock speedup");
     println!(" needs >1 physical core — see `chaos simulate` for the Phi model)");
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The custom kind: an elementwise softsign activation layer.
+// ---------------------------------------------------------------------------
+
+struct SoftsignKind;
+
+impl LayerKind for SoftsignKind {
+    fn name(&self) -> &'static str {
+        "softsign"
+    }
+
+    fn from_json(&self, _body: &Json) -> anyhow::Result<LayerSpec> {
+        Ok(LayerSpec::custom("softsign", vec![]))
+    }
+
+    fn to_json(&self, _spec: &LayerSpec) -> Json {
+        Json::obj(vec![])
+    }
+
+    fn out_shape(
+        &self,
+        _spec: &LayerSpec,
+        input: Shape,
+        _ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        Ok(input) // elementwise: geometry passes through
+    }
+
+    fn compile(
+        &self,
+        _spec: &LayerSpec,
+        dims: &chaos_phi::nn::LayerDims,
+    ) -> anyhow::Result<Box<dyn LayerOp>> {
+        Ok(Box::new(SoftsignOp {
+            shape: Shape { maps: dims.out_maps, side: dims.out_side, flat: dims.flat },
+        }))
+    }
+}
+
+#[derive(Debug)]
+struct SoftsignOp {
+    shape: Shape,
+}
+
+impl LayerOp for SoftsignOp {
+    fn kind(&self) -> &'static str {
+        "softsign"
+    }
+
+    fn in_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn out_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        0..0
+    }
+
+    fn forward(&self, _: &[f32], input: &[f32], out: &mut [f32], _: &mut OpScratch<'_>) {
+        for (o, &x) in out.iter_mut().zip(input) {
+            *o = x / (1.0 + x.abs());
+        }
+    }
+
+    fn backward(
+        &self,
+        _: &[f32],
+        acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        _: &mut [f32],
+        _: &mut OpScratch<'_>,
+    ) {
+        if delta_in.is_empty() {
+            return;
+        }
+        // dy/dx expressed through the output: (1 − |y|)².
+        for ((di, &d), &y) in delta_in.iter_mut().zip(delta_out.iter()).zip(acts.output) {
+            let g = 1.0 - y.abs();
+            *di = d * g * g;
+        }
+    }
 }

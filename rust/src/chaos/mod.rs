@@ -45,5 +45,3 @@ pub use sampler::Sampler;
 pub use shared::SharedParams;
 pub use strategies::{Strategy, Turnstile};
 pub use trainer::{eval_parallel, Trainer};
-#[allow(deprecated)]
-pub use trainer::train;

@@ -45,6 +45,10 @@ pub struct EpochCtx<'a> {
     pub eta: f32,
     /// 0-based epoch index.
     pub epoch: usize,
+    /// The run's PRNG seed (`TrainConfig::seed`) — mixed into per-worker
+    /// scratch streams so stochastic ops (dropout masks) differ across
+    /// differently-seeded runs.
+    pub seed: u64,
 }
 
 /// An update policy: how worker gradients reach the shared weights.
@@ -606,7 +610,7 @@ mod tests {
         let net = crate::nn::Network::new(ArchSpec::tiny());
         let params = net.init_params(1);
         let store = SharedParams::new(&params, &net.dims);
-        let ctx = EpochCtx { net: &net, store: &store, threads: 2, eta: 0.01, epoch: 0 };
+        let ctx = EpochCtx { net: &net, store: &store, threads: 2, eta: 0.01, epoch: 0, seed: 0 };
         let state = DelayedRoundRobinPolicy.epoch_state(&ctx);
         // Drive one worker through a fake sample: publish into every
         // parameterized layer, then end_sample must push it to the store.

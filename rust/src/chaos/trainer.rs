@@ -28,7 +28,6 @@ use super::policy::{self, ChaosPolicy, EpochCtx, UpdatePolicy};
 use super::reporter::{EpochRecord, EvalMetrics, RunResult};
 use super::sampler::Sampler;
 use super::shared::SharedParams;
-use super::strategies::Strategy;
 use crate::config::{ArchSpec, TrainConfig};
 use crate::data::Dataset;
 use crate::nn::{Network, Scratch};
@@ -45,6 +44,9 @@ use std::sync::Mutex;
 /// inconsistent build.
 pub struct Trainer {
     net: Option<Network>,
+    /// An architecture awaiting compilation — kept as a spec so an invalid
+    /// one surfaces as an error from `validate`/`run`, never a panic.
+    pending_arch: Option<ArchSpec>,
     cfg: TrainConfig,
     policy: Box<dyn UpdatePolicy>,
     observers: Vec<Box<dyn EpochObserver>>,
@@ -62,21 +64,26 @@ impl Trainer {
     pub fn new() -> Trainer {
         Trainer {
             net: None,
+            pending_arch: None,
             cfg: TrainConfig::default(),
             policy: Box::new(ChaosPolicy),
             observers: Vec::new(),
         }
     }
 
-    /// Train the given architecture (compiles it into a [`Network`]).
+    /// Train the given architecture (compiled through the layer-kind
+    /// registry when the run starts; an invalid spec errors from
+    /// [`Trainer::validate`]/[`Trainer::run`]).
     pub fn arch(mut self, arch: ArchSpec) -> Trainer {
-        self.net = Some(Network::new(arch));
+        self.pending_arch = Some(arch);
+        self.net = None;
         self
     }
 
     /// Train an already-compiled network.
     pub fn network(mut self, net: Network) -> Trainer {
         self.net = Some(net);
+        self.pending_arch = None;
         self
     }
 
@@ -146,9 +153,12 @@ impl Trainer {
     /// policy parameterization valid.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
-            self.net.is_some(),
+            self.net.is_some() || self.pending_arch.is_some(),
             "Trainer: no architecture set (use .arch(..) or .network(..))"
         );
+        if let Some(arch) = &self.pending_arch {
+            arch.validate()?;
+        }
         self.cfg.validate()?;
         self.policy.validate()?;
         Ok(())
@@ -159,6 +169,9 @@ impl Trainer {
     /// epoch.
     pub fn run(mut self, train_set: &Dataset, test_set: &Dataset) -> anyhow::Result<RunResult> {
         self.validate()?;
+        if let Some(arch) = self.pending_arch.take() {
+            self.net = Some(Network::compile(arch)?);
+        }
         let net = self.net.take().expect("validated above");
         Ok(run_epochs(
             &net,
@@ -169,26 +182,6 @@ impl Trainer {
             &mut self.observers,
         ))
     }
-}
-
-/// Deprecated closed-enum entry point, kept for one release.
-#[deprecated(
-    since = "0.2.0",
-    note = "use the Trainer builder: chaos::Trainer::new().network(net.clone())\
-            .config(cfg.clone()).policy_boxed(strategy.into_policy()).run(train, test)"
-)]
-pub fn train(
-    net: &Network,
-    train_set: &Dataset,
-    test_set: &Dataset,
-    cfg: &TrainConfig,
-    strategy: Strategy,
-) -> anyhow::Result<RunResult> {
-    Trainer::new()
-        .network(net.clone())
-        .config(cfg.clone())
-        .policy_boxed(strategy.into_policy())
-        .run(train_set, test_set)
 }
 
 /// Number of validation images given the config.
@@ -223,7 +216,10 @@ fn run_epochs(
     let run_sw = Stopwatch::start();
 
     let mut engine = if sequential {
-        Engine::Seq { params: net.init_params(cfg.seed), scratch: net.scratch() }
+        // Seed the scratch PRNG streams (dropout masks) from the run seed;
+        // paper archs draw nothing from them, so this preserves the
+        // 1-thread bit-identity guarantee.
+        Engine::Seq { params: net.init_params(cfg.seed), scratch: net.scratch_seeded(cfg.seed) }
     } else {
         let init = net.init_params(cfg.seed);
         Engine::Par { store: SharedParams::new(&init, &net.dims) }
@@ -253,7 +249,7 @@ fn run_epochs(
                 m
             }
             Engine::Par { store } => {
-                let ctx = EpochCtx { net, store: &*store, threads, eta, epoch };
+                let ctx = EpochCtx { net, store: &*store, threads, eta, epoch, seed: cfg.seed };
                 train_phase_parallel(&ctx, train_set, &sampler, policy, &layer_times)
             }
         };
@@ -358,7 +354,14 @@ fn train_phase_parallel(
             let metrics = &metrics;
             s.spawn(move || {
                 let mut hooks = state.worker(ctx, worker_id);
-                let mut scratch = ctx.net.scratch();
+                // Distinct per-worker PRNG streams (dropout masks), mixed
+                // with the run seed so differently-seeded runs draw
+                // independent masks — a thread-private concern, like the
+                // rest of the scratch.
+                let mut scratch = ctx
+                    .net
+                    .scratch_seeded(ctx.seed ^ (((ctx.epoch as u64) << 32) | worker_id as u64));
+                scratch.train_mode = true;
                 let mut local = EvalMetrics::default();
                 while let Some(idx) = sampler.next() {
                     let label = data.label(idx);
@@ -637,16 +640,19 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_train_shim_matches_builder() {
-        let net = Network::new(ArchSpec::tiny());
+    fn strategy_into_policy_runs_through_builder() {
+        // `Strategy` (the paper's closed strategy enum) remains a thin
+        // front-end over the policy registry now that the deprecated
+        // `chaos::train` shim is gone.
         let trn = tiny_data(90, 41);
         let tst = tiny_data(30, 42);
-        #[allow(deprecated)]
-        let old = train(&net, &trn, &tst, &tiny_cfg(1, 2), Strategy::Sequential).unwrap();
-        let new = tiny_trainer(1, 2).policy(SequentialPolicy).run(&trn, &tst).unwrap();
-        assert_eq!(old.final_params, new.final_params);
-        assert_eq!(old.strategy, new.strategy);
-        assert_eq!(old.final_epoch().test.errors, new.final_epoch().test.errors);
+        let via_strategy = tiny_trainer(1, 2)
+            .policy_boxed(crate::chaos::Strategy::Sequential.into_policy())
+            .run(&trn, &tst)
+            .unwrap();
+        let direct = tiny_trainer(1, 2).policy(SequentialPolicy).run(&trn, &tst).unwrap();
+        assert_eq!(via_strategy.final_params, direct.final_params);
+        assert_eq!(via_strategy.strategy, direct.strategy);
     }
 
     #[test]

@@ -1,29 +1,110 @@
-//! CNN architecture specifications — paper Table 2, exactly.
+//! CNN architecture specifications — paper Table 2, exactly, plus the open
+//! layer vocabulary that grew out of it.
 //!
-//! All three networks take a 29×29 single-channel input. Convolutions are
-//! "valid" with stride 1 and full map-to-map connectivity plus one bias per
-//! output map (weights = maps·(prev_maps·k² + 1), matching every weight
-//! count in Table 2). Max-pooling uses kernel k with stride k, except the
-//! large network's third pooling, where 6×6 is pooled by 2×2 to 3×3 — the
-//! only reading consistent with the 135,150 fully-connected weights the
-//! paper states (DESIGN.md §5 documents the Table 2 inconsistency).
+//! All three paper networks take a 29×29 single-channel input. Their
+//! convolutions are "valid" with stride 1 and full map-to-map connectivity
+//! plus one bias per output map (weights = maps·(prev_maps·k² + 1), matching
+//! every weight count in Table 2). Max-pooling uses kernel k with stride k,
+//! except the large network's third pooling, where 6×6 is pooled by 2×2 to
+//! 3×3 — the only reading consistent with the 135,150 fully-connected
+//! weights the paper states (DESIGN.md §5 documents the Table 2
+//! inconsistency).
+//!
+//! [`LayerSpec`] is the *data* of one layer; all behaviour — JSON parsing
+//! and serialization, structural validation, geometry/parameter layout and
+//! compilation into an executable op — lives with the layer *kind*
+//! registered in [`crate::nn::layer`]. [`ArchSpec::from_json`],
+//! [`ArchSpec::to_json`] and [`ArchSpec::validate`] all delegate to the
+//! registered kinds, so a kind registered at runtime
+//! ([`crate::nn::layer::register`]) is immediately loadable from JSON and
+//! trainable, with no changes here.
 
 use crate::util::Json;
 
-/// One layer of a network specification.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Activation selected per conv / fully-connected layer (JSON `"act"`
+/// field; scaled tanh is the paper's default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Act {
+    /// LeCun-scaled tanh `1.7159·tanh(2x/3)` (the Cireşan default).
+    #[default]
+    ScaledTanh,
+    /// Rectified linear unit, `max(0, x)`.
+    Relu,
+    /// No activation (linear layer).
+    Identity,
+}
+
+impl Act {
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::ScaledTanh => "tanh",
+            Act::Relu => "relu",
+            Act::Identity => "identity",
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Act> {
+        Ok(match text {
+            "tanh" | "scaled-tanh" => Act::ScaledTanh,
+            "relu" => Act::Relu,
+            "identity" | "linear" | "none" => Act::Identity,
+            other => anyhow::bail!("unknown activation '{other}' (tanh|relu|identity)"),
+        })
+    }
+}
+
+/// One layer of a network specification (pure data — see module docs).
+#[derive(Debug, Clone, PartialEq)]
 pub enum LayerSpec {
     /// Square single-channel input of side `side`.
     Input { side: usize },
     /// Convolution: `maps` output feature maps, `kernel`×`kernel` receptive
-    /// field, valid padding, stride 1, fully connected to all input maps.
-    Conv { maps: usize, kernel: usize },
+    /// field, zero padding `pad`, stride `stride`, fully connected to all
+    /// input maps. The paper's convolutions are `stride: 1, pad: 0` —
+    /// construct those with [`LayerSpec::conv`].
+    Conv { maps: usize, kernel: usize, stride: usize, pad: usize, act: Act },
     /// Max pooling with `kernel`×`kernel` windows and stride = kernel.
     MaxPool { kernel: usize },
+    /// Average pooling with `kernel`×`kernel` windows and stride = kernel.
+    AvgPool { kernel: usize },
     /// Fully connected layer with `neurons` outputs.
-    FullyConnected { neurons: usize },
+    FullyConnected { neurons: usize, act: Act },
+    /// Inverted dropout: keeps each activation with probability `1 - rate`
+    /// (scaled by `1/(1-rate)`); identity at `rate == 0` and during
+    /// evaluation. Masks are drawn from the per-worker scratch PRNG.
+    Dropout { rate: f32 },
     /// Output layer: fully connected + softmax over `classes`.
     Output { classes: usize },
+    /// A layer kind registered at runtime via [`crate::nn::layer::register`]:
+    /// the kind name plus its (key, value) arguments.
+    Custom { kind: String, args: Vec<(String, f64)> },
+}
+
+impl LayerSpec {
+    /// Paper-style convolution: valid padding, stride 1, scaled tanh.
+    pub fn conv(maps: usize, kernel: usize) -> LayerSpec {
+        LayerSpec::Conv { maps, kernel, stride: 1, pad: 0, act: Act::ScaledTanh }
+    }
+
+    /// General convolution with explicit stride / zero padding / activation.
+    pub fn conv_ex(maps: usize, kernel: usize, stride: usize, pad: usize, act: Act) -> LayerSpec {
+        LayerSpec::Conv { maps, kernel, stride, pad, act }
+    }
+
+    /// Fully-connected layer with the default scaled-tanh activation.
+    pub fn fc(neurons: usize) -> LayerSpec {
+        LayerSpec::FullyConnected { neurons, act: Act::ScaledTanh }
+    }
+
+    /// Fully-connected layer with an explicit activation.
+    pub fn fc_act(neurons: usize, act: Act) -> LayerSpec {
+        LayerSpec::FullyConnected { neurons, act }
+    }
+
+    /// A runtime-registered custom layer kind.
+    pub fn custom(kind: impl Into<String>, args: Vec<(String, f64)>) -> LayerSpec {
+        LayerSpec::Custom { kind: kind.into(), args }
+    }
 }
 
 /// A named architecture (an ordered stack of layers).
@@ -45,11 +126,11 @@ impl ArchSpec {
             name: "small".into(),
             layers: vec![
                 LayerSpec::Input { side: 29 },
-                LayerSpec::Conv { maps: 5, kernel: 4 },
+                LayerSpec::conv(5, 4),
                 LayerSpec::MaxPool { kernel: 2 },
-                LayerSpec::Conv { maps: 10, kernel: 5 },
+                LayerSpec::conv(10, 5),
                 LayerSpec::MaxPool { kernel: 3 },
-                LayerSpec::FullyConnected { neurons: 50 },
+                LayerSpec::fc(50),
                 LayerSpec::Output { classes: 10 },
             ],
             paper_epochs: 70,
@@ -62,11 +143,11 @@ impl ArchSpec {
             name: "medium".into(),
             layers: vec![
                 LayerSpec::Input { side: 29 },
-                LayerSpec::Conv { maps: 20, kernel: 4 },
+                LayerSpec::conv(20, 4),
                 LayerSpec::MaxPool { kernel: 2 },
-                LayerSpec::Conv { maps: 40, kernel: 5 },
+                LayerSpec::conv(40, 5),
                 LayerSpec::MaxPool { kernel: 3 },
-                LayerSpec::FullyConnected { neurons: 150 },
+                LayerSpec::fc(150),
                 LayerSpec::Output { classes: 10 },
             ],
             paper_epochs: 70,
@@ -74,19 +155,21 @@ impl ArchSpec {
     }
 
     /// Table 2 "large": 29² → C(20,4×4) → P1 → C(60,5×5) → P2 → C(100,6×6)
-    /// → P2 → FC150 → 10. (Third pooling is 2×2: see module docs.)
+    /// → P2 → FC150 → 10. (Third pooling is 2×2: see module docs. The P1
+    /// identity pool is faithful to the paper and is the one architecture
+    /// the validator's identity-pool rejection carves out.)
     pub fn large() -> ArchSpec {
         ArchSpec {
             name: "large".into(),
             layers: vec![
                 LayerSpec::Input { side: 29 },
-                LayerSpec::Conv { maps: 20, kernel: 4 },
+                LayerSpec::conv(20, 4),
                 LayerSpec::MaxPool { kernel: 1 },
-                LayerSpec::Conv { maps: 60, kernel: 5 },
+                LayerSpec::conv(60, 5),
                 LayerSpec::MaxPool { kernel: 2 },
-                LayerSpec::Conv { maps: 100, kernel: 6 },
+                LayerSpec::conv(100, 6),
                 LayerSpec::MaxPool { kernel: 2 },
-                LayerSpec::FullyConnected { neurons: 150 },
+                LayerSpec::fc(150),
                 LayerSpec::Output { classes: 10 },
             ],
             paper_epochs: 15,
@@ -101,11 +184,11 @@ impl ArchSpec {
             name: "tiny".into(),
             layers: vec![
                 LayerSpec::Input { side: 13 },
-                LayerSpec::Conv { maps: 3, kernel: 4 }, // 10x10
-                LayerSpec::MaxPool { kernel: 2 },       // 5x5
-                LayerSpec::Conv { maps: 4, kernel: 2 }, // 4x4
-                LayerSpec::MaxPool { kernel: 2 },       // 2x2
-                LayerSpec::FullyConnected { neurons: 8 },
+                LayerSpec::conv(3, 4),            // 10x10
+                LayerSpec::MaxPool { kernel: 2 }, // 5x5
+                LayerSpec::conv(4, 2),            // 4x4
+                LayerSpec::MaxPool { kernel: 2 }, // 2x2
+                LayerSpec::fc(8),
                 LayerSpec::Output { classes: 10 },
             ],
             paper_epochs: 1,
@@ -124,9 +207,23 @@ impl ArchSpec {
         }
     }
 
+    /// Side of the square input layer. Panics on an arch without a leading
+    /// input layer (which [`Self::validate`] rejects).
+    pub fn input_side(&self) -> usize {
+        match self.layers.first() {
+            Some(LayerSpec::Input { side }) => *side,
+            _ => panic!("architecture '{}' has no input layer", self.name),
+        }
+    }
+
     /// Parse an architecture from a JSON description, e.g.
-    /// `{"name":"custom","epochs":10,"layers":[{"input":29},{"conv":{"maps":5,"kernel":4}},
-    /// {"pool":2},{"fc":50},{"output":10}]}`.
+    /// `{"name":"custom","epochs":10,"layers":[{"input":29},
+    /// {"conv":{"maps":5,"kernel":4,"act":"relu"}},{"pool":2},{"avgpool":2},
+    /// {"dropout":0.25},{"fc":50},{"output":10}]}`.
+    ///
+    /// Each layer object's single key selects the registered kind
+    /// ([`crate::nn::layer`]); the value is handed to that kind's parser,
+    /// so runtime-registered kinds are loadable with no changes here.
     pub fn from_json(j: &Json) -> anyhow::Result<ArchSpec> {
         let name = j.req("name")?.as_str().ok_or_else(|| anyhow::anyhow!("name must be string"))?;
         let epochs = j.get("epochs").and_then(|e| e.as_usize()).unwrap_or(10);
@@ -138,29 +235,12 @@ impl ArchSpec {
         for l in layers_json {
             let obj = l.as_obj().ok_or_else(|| anyhow::anyhow!("layer must be an object"))?;
             let (key, val) = obj.iter().next().ok_or_else(|| anyhow::anyhow!("empty layer"))?;
-            let layer = match key.as_str() {
-                "input" => LayerSpec::Input {
-                    side: val.as_usize().ok_or_else(|| anyhow::anyhow!("input side"))?,
-                },
-                "conv" => LayerSpec::Conv {
-                    maps: val.req("maps")?.as_usize().ok_or_else(|| anyhow::anyhow!("conv maps"))?,
-                    kernel: val
-                        .req("kernel")?
-                        .as_usize()
-                        .ok_or_else(|| anyhow::anyhow!("conv kernel"))?,
-                },
-                "pool" => LayerSpec::MaxPool {
-                    kernel: val.as_usize().ok_or_else(|| anyhow::anyhow!("pool kernel"))?,
-                },
-                "fc" => LayerSpec::FullyConnected {
-                    neurons: val.as_usize().ok_or_else(|| anyhow::anyhow!("fc neurons"))?,
-                },
-                "output" => LayerSpec::Output {
-                    classes: val.as_usize().ok_or_else(|| anyhow::anyhow!("output classes"))?,
-                },
-                other => anyhow::bail!("unknown layer type '{other}'"),
-            };
-            layers.push(layer);
+            anyhow::ensure!(
+                obj.len() == 1,
+                "layer object must have exactly one key (the kind), got {:?}",
+                obj.keys().collect::<Vec<_>>()
+            );
+            layers.push(crate::nn::layer::from_json(key, val)?);
         }
         let spec = ArchSpec { name: name.to_string(), layers, paper_epochs: epochs };
         spec.validate()?;
@@ -174,27 +254,24 @@ impl ArchSpec {
         Self::from_json(&j)
     }
 
-    /// Serialize to JSON (inverse of [`Self::from_json`]).
+    /// Serialize to JSON (inverse of [`Self::from_json`]); each layer's
+    /// body is produced by its registered kind.
     pub fn to_json(&self) -> Json {
         let layers: Vec<Json> = self
             .layers
             .iter()
-            .map(|l| match *l {
-                LayerSpec::Input { side } => Json::obj(vec![("input", Json::num(side as f64))]),
-                LayerSpec::Conv { maps, kernel } => Json::obj(vec![(
-                    "conv",
-                    Json::obj(vec![
-                        ("maps", Json::num(maps as f64)),
-                        ("kernel", Json::num(kernel as f64)),
-                    ]),
-                )]),
-                LayerSpec::MaxPool { kernel } => Json::obj(vec![("pool", Json::num(kernel as f64))]),
-                LayerSpec::FullyConnected { neurons } => {
-                    Json::obj(vec![("fc", Json::num(neurons as f64))])
-                }
-                LayerSpec::Output { classes } => {
-                    Json::obj(vec![("output", Json::num(classes as f64))])
-                }
+            .map(|l| {
+                let body = match crate::nn::layer::kind_for(l) {
+                    Ok(kind) => kind.to_json(l),
+                    // A Custom spec whose kind is not (or no longer)
+                    // registered still serializes faithfully from its own
+                    // data; built-in kinds are always registered.
+                    Err(_) => match l {
+                        LayerSpec::Custom { args, .. } => crate::nn::layer::args_to_json(args),
+                        _ => unreachable!("builtin layer kinds are always registered"),
+                    },
+                };
+                Json::obj(vec![(crate::nn::layer::kind_of(l), body)])
             })
             .collect();
         Json::obj(vec![
@@ -204,69 +281,12 @@ impl ArchSpec {
         ])
     }
 
-    /// Structural validation: starts with input, ends with output, pooling
-    /// divides evenly, convolutions fit.
+    /// Structural validation: starts with input, ends with output, every
+    /// layer's geometry folds cleanly through its registered kind (pooling
+    /// divides evenly, convolutions fit, no feature-map layers after the
+    /// flatten, no identity pools outside the paper's "large" network…).
     pub fn validate(&self) -> anyhow::Result<()> {
-        if !matches!(self.layers.first(), Some(LayerSpec::Input { .. })) {
-            anyhow::bail!("architecture must start with an input layer");
-        }
-        if !matches!(self.layers.last(), Some(LayerSpec::Output { .. })) {
-            anyhow::bail!("architecture must end with an output layer");
-        }
-        let mut side = match self.layers[0] {
-            LayerSpec::Input { side } => side,
-            _ => unreachable!(),
-        };
-        let mut seen_fc = false;
-        for (i, l) in self.layers.iter().enumerate().skip(1) {
-            match *l {
-                LayerSpec::Input { .. } => anyhow::bail!("layer {i}: input after start"),
-                LayerSpec::Conv { maps, kernel } => {
-                    if seen_fc {
-                        anyhow::bail!("layer {i}: conv after fully-connected");
-                    }
-                    if kernel == 0 || maps == 0 || kernel > side {
-                        anyhow::bail!(
-                            "layer {i}: conv kernel {kernel} invalid for side {side}"
-                        );
-                    }
-                    side = side - kernel + 1;
-                }
-                LayerSpec::MaxPool { kernel } => {
-                    if seen_fc {
-                        anyhow::bail!("layer {i}: pool after fully-connected");
-                    }
-                    if kernel == 0 || kernel > side {
-                        anyhow::bail!("layer {i}: pool kernel {kernel} invalid for side {side}");
-                    }
-                    // Stride = kernel; require at least one full window and
-                    // allow a truncated tail only when it is empty.
-                    if side % kernel != 0 && side >= kernel {
-                        // e.g. 6x6 pooled by 2 -> 3 is fine (6%2==0); what we
-                        // reject is a remainder, like 9 pooled by 2.
-                        anyhow::bail!(
-                            "layer {i}: pool kernel {kernel} does not evenly divide side {side}"
-                        );
-                    }
-                    side /= kernel;
-                }
-                LayerSpec::FullyConnected { neurons } => {
-                    if neurons == 0 {
-                        anyhow::bail!("layer {i}: fc with zero neurons");
-                    }
-                    seen_fc = true;
-                }
-                LayerSpec::Output { classes } => {
-                    if classes == 0 {
-                        anyhow::bail!("layer {i}: output with zero classes");
-                    }
-                    if i != self.layers.len() - 1 {
-                        anyhow::bail!("layer {i}: output before the end");
-                    }
-                }
-            }
-        }
-        Ok(())
+        crate::nn::dims::try_compute_dims(self).map(|_| ())
     }
 }
 
@@ -291,6 +311,46 @@ mod tests {
             let b = ArchSpec::from_json(&j).unwrap();
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn json_roundtrip_new_layer_kinds() {
+        let a = ArchSpec {
+            name: "zoo".into(),
+            layers: vec![
+                LayerSpec::Input { side: 29 },
+                LayerSpec::conv_ex(8, 5, 2, 2, Act::Relu),
+                LayerSpec::AvgPool { kernel: 3 },
+                LayerSpec::conv(12, 2),
+                LayerSpec::MaxPool { kernel: 2 },
+                LayerSpec::Dropout { rate: 0.25 },
+                LayerSpec::fc_act(64, Act::Relu),
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 3,
+        };
+        a.validate().unwrap();
+        let b = ArchSpec::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fc_json_accepts_both_shorthand_and_object() {
+        let j = Json::parse(
+            r#"{"name":"x","layers":[{"input":8},{"fc":5},
+                {"fc":{"neurons":4,"act":"relu"}},{"output":10}]}"#,
+        )
+        .unwrap();
+        let a = ArchSpec::from_json(&j).unwrap();
+        assert_eq!(a.layers[1], LayerSpec::fc(5));
+        assert_eq!(a.layers[2], LayerSpec::fc_act(4, Act::Relu));
+    }
+
+    #[test]
+    fn unknown_layer_kind_lists_registry() {
+        let j = Json::parse(r#"{"name":"x","layers":[{"warp":3}]}"#).unwrap();
+        let e = ArchSpec::from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("unknown layer kind 'warp'") && e.contains("conv"), "{e}");
     }
 
     #[test]
@@ -328,13 +388,46 @@ mod tests {
             name: "x".into(),
             layers: vec![
                 LayerSpec::Input { side: 9 },
-                LayerSpec::FullyConnected { neurons: 5 },
-                LayerSpec::Conv { maps: 2, kernel: 2 },
+                LayerSpec::fc(5),
+                LayerSpec::conv(2, 2),
                 LayerSpec::Output { classes: 10 },
             ],
             paper_epochs: 1,
         };
         assert!(conv_after_fc.validate().is_err());
+
+        let bad_dropout = ArchSpec {
+            name: "x".into(),
+            layers: vec![
+                LayerSpec::Input { side: 9 },
+                LayerSpec::Dropout { rate: 1.0 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        assert!(bad_dropout.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_identity_pools_except_paper_large() {
+        let p1 = |name: &str| ArchSpec {
+            name: name.into(),
+            layers: vec![
+                LayerSpec::Input { side: 9 },
+                LayerSpec::MaxPool { kernel: 1 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        let e = p1("user-net").validate().unwrap_err().to_string();
+        assert!(e.contains("identity pool"), "{e}");
+        // The carve-out keys on the paper's exact layer stack, not the
+        // name: naming an unrelated P1 stack "large" does not bypass it…
+        assert!(p1("large").validate().is_err());
+        // …while the paper stack passes under any name.
+        ArchSpec::large().validate().unwrap();
+        let renamed = ArchSpec { name: "large-v2".into(), ..ArchSpec::large() };
+        renamed.validate().unwrap();
     }
 
     #[test]
@@ -342,5 +435,13 @@ mod tests {
         assert_eq!(ArchSpec::small().paper_epochs, 70);
         assert_eq!(ArchSpec::medium().paper_epochs, 70);
         assert_eq!(ArchSpec::large().paper_epochs, 15);
+    }
+
+    #[test]
+    fn act_parse_roundtrip() {
+        for act in [Act::ScaledTanh, Act::Relu, Act::Identity] {
+            assert_eq!(Act::parse(act.name()).unwrap(), act);
+        }
+        assert!(Act::parse("gelu").is_err());
     }
 }

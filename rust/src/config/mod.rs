@@ -5,5 +5,5 @@
 mod arch;
 mod training;
 
-pub use arch::{ArchSpec, LayerSpec, PAPER_ARCHS};
+pub use arch::{Act, ArchSpec, LayerSpec, PAPER_ARCHS};
 pub use training::TrainConfig;

@@ -96,16 +96,21 @@ pub fn table2() -> Table {
         let arch = ArchSpec::by_name(name).unwrap();
         let dims = compute_dims(&arch);
         for d in &dims {
-            let (ty, maps, kernel): (&str, String, String) = match d.spec {
+            let (ty, maps, kernel): (&str, String, String) = match &d.spec {
                 LayerSpec::Input { .. } => ("Input", "-".into(), "-".into()),
-                LayerSpec::Conv { maps, kernel } => {
+                LayerSpec::Conv { maps, kernel, .. } => {
                     ("Convolutional", maps.to_string(), format!("{kernel}x{kernel}"))
                 }
                 LayerSpec::MaxPool { kernel } => {
                     ("Max-pooling", d.out_maps.to_string(), format!("{kernel}x{kernel}"))
                 }
+                LayerSpec::AvgPool { kernel } => {
+                    ("Avg-pooling", d.out_maps.to_string(), format!("{kernel}x{kernel}"))
+                }
                 LayerSpec::FullyConnected { .. } => ("Fully connected", "-".into(), "-".into()),
+                LayerSpec::Dropout { .. } => ("Dropout", "-".into(), "-".into()),
                 LayerSpec::Output { .. } => ("Output", "-".into(), "-".into()),
+                LayerSpec::Custom { kind, .. } => (kind.as_str(), "-".into(), "-".into()),
             };
             tab.row(vec![
                 name.into(),

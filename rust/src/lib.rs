@@ -34,11 +34,37 @@
 //! or checkpointed live via [`chaos::Checkpoint`]) through
 //! [`chaos::EpochObserver`].
 //!
-//! The old free function `chaos::train(net, train, test, cfg, strategy)`
-//! is deprecated and delegates to the builder; it will be removed after
-//! one release.
+//! ## The open layer API
 //!
-//! ## Layers
+//! The model side is open in the same way: [`config::ArchSpec`] is a stack
+//! of [`config::LayerSpec`] *data*, and all behaviour lives with the layer
+//! **kind** registered in [`nn::layer`] — JSON parse/serialize, geometry
+//! validation, parameter layout, and compilation into the executable
+//! [`nn::LayerOp`] pipeline that [`nn::Network`] drives. Built-in kinds
+//! cover the paper's vocabulary plus zero-padded/strided convolution,
+//! selectable per-layer activations (`"act": "relu"`), average pooling and
+//! dropout; architectures load from JSON:
+//!
+//! ```ignore
+//! let arch = chaos_phi::config::ArchSpec::from_json(&Json::parse(r#"{
+//!   "name": "custom", "epochs": 5, "layers": [
+//!     {"input": 29},
+//!     {"conv": {"maps": 8, "kernel": 5, "stride": 2, "pad": 2, "act": "relu"}},
+//!     {"avgpool": 3}, {"dropout": 0.25},
+//!     {"fc": {"neurons": 64, "act": "relu"}},
+//!     {"output": 10}
+//! ]}"#)?)?;
+//! ```
+//!
+//! A kind registered at runtime (`nn::layer::register(Arc::new(MyKind))`)
+//! is immediately loadable from JSON, validated like a built-in, and
+//! trains end-to-end through [`chaos::Trainer`] under every update policy
+//! — the orchestrator never matches on layer types. See
+//! `examples/quickstart.rs` for a complete custom-kind walkthrough, and
+//! `chaos arch validate <file.json>` to check architecture files from the
+//! CLI.
+//!
+//! ## Layers (system stack)
 //!
 //! - **L3 (this crate)** — the CHAOS coordinator: shared-weight store with
 //!   controlled-Hogwild delayed updates, worker pool, epoch driver, the

@@ -37,6 +37,9 @@ USAGE: chaos <command> [flags]
   predict   --arch A --threads 1,15,30,...  [--images N --test-n N --epochs E]
   simulate  --arch A --threads 1,15,30,...
   serve     --arch tiny --requests N --clients C --artifacts DIR --weights FILE.ckpt
+  arch      validate FILE.json...   (parse + structurally validate + compile)
+            show NAME [--out FILE.json]   (export a built-in arch as JSON)
+            kinds   (list registered layer kinds)
   info      [--artifacts DIR]
 ";
 
@@ -56,6 +59,7 @@ fn main() {
         "predict" => cmd_predict(rest),
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "arch" => cmd_arch(rest),
         "info" => cmd_info(rest),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");
@@ -106,10 +110,7 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
     let data_dir = a.get_str("data-dir", "data/mnist");
     let (mut train_set, mut test_set) = data::load_or_generate(&data_dir, train_n, test_n, cfg.seed);
     // Match the network's input geometry (e.g. the 13x13 tiny arch).
-    let side = match arch.layers[0] {
-        chaos_phi::config::LayerSpec::Input { side } => side,
-        _ => unreachable!(),
-    };
+    let side = arch.input_side();
     if train_set.image_len() != side * side {
         train_set = train_set.resize(side);
         test_set = test_set.resize(side);
@@ -310,10 +311,7 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         ..Default::default()
     };
     let server = Server::spawn(artifacts, arch.clone(), params, cfg)?;
-    let side = match net.arch.layers[0] {
-        chaos_phi::config::LayerSpec::Input { side } => side,
-        _ => unreachable!(),
-    };
+    let side = net.arch.input_side();
     let images = data::generate_synthetic(requests, 5, &data::SynthConfig::default()).resize(side);
 
     let sw = Stopwatch::start();
@@ -342,6 +340,56 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch_fill
     );
     Ok(())
+}
+
+fn cmd_arch(raw: &[String]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !raw.is_empty(),
+        "usage: chaos arch validate FILE.json... | show NAME [--out FILE.json] | kinds"
+    );
+    match raw[0].as_str() {
+        "validate" => {
+            anyhow::ensure!(raw.len() > 1, "usage: chaos arch validate FILE.json...");
+            for path in &raw[1..] {
+                let arch = ArchSpec::from_file(path)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+                let net = Network::compile(arch)
+                    .map_err(|e| anyhow::anyhow!("{path}: compile: {e:#}"))?;
+                let kinds: Vec<&str> = net.ops.iter().map(|op| op.kind()).collect();
+                println!(
+                    "{path}: ok — '{}', {} layers ({}), {} parameters, input {}x{}",
+                    net.arch.name,
+                    net.dims.len(),
+                    kinds.join(">"),
+                    net.total_params,
+                    net.arch.input_side(),
+                    net.arch.input_side(),
+                );
+            }
+            Ok(())
+        }
+        "show" => {
+            anyhow::ensure!(raw.len() > 1, "usage: chaos arch show NAME [--out FILE.json]");
+            let a = Args::parse(&raw[2..], &["out"])?;
+            let name = &raw[1];
+            let arch = ArchSpec::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown arch '{name}'"))?;
+            let text = arch.to_json().pretty();
+            match a.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)?;
+                    println!("wrote {path}");
+                }
+                None => println!("{text}"),
+            }
+            Ok(())
+        }
+        "kinds" => {
+            println!("registered layer kinds: {}", chaos_phi::nn::layer::names().join(", "));
+            Ok(())
+        }
+        other => anyhow::bail!("unknown arch subcommand '{other}' (validate|show|kinds)"),
+    }
 }
 
 fn cmd_info(raw: &[String]) -> anyhow::Result<()> {

@@ -1,8 +1,12 @@
 //! Activation functions.
 //!
-//! Hidden layers use the LeCun-scaled tanh `f(x) = 1.7159·tanh(2x/3)`
+//! Hidden layers default to the LeCun-scaled tanh `f(x) = 1.7159·tanh(2x/3)`
 //! (the activation of the Cireşan reference implementation the paper builds
-//! on); the output layer applies softmax, trained with cross-entropy.
+//! on); conv and fully-connected layers can select ReLU or identity through
+//! their `act` field ([`Act`]); the output layer applies softmax, trained
+//! with cross-entropy.
+
+use crate::config::Act;
 
 /// Scale A of the LeCun tanh.
 pub const TANH_A: f32 = 1.7159;
@@ -29,6 +33,46 @@ pub fn scaled_tanh_deriv_from_y(y: f32) -> f32 {
 pub fn apply_scaled_tanh(xs: &mut [f32]) {
     for v in xs.iter_mut() {
         *v = scaled_tanh(*v);
+    }
+}
+
+impl Act {
+    /// Apply the activation elementwise to pre-activations.
+    #[inline]
+    pub fn apply(self, xs: &mut [f32]) {
+        match self {
+            Act::ScaledTanh => apply_scaled_tanh(xs),
+            Act::Relu => {
+                for v in xs.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            Act::Identity => {}
+        }
+    }
+
+    /// Convert ∂L/∂(output) into ∂L/∂(pre-activation) in place, using the
+    /// stored *outputs* `ys` (every provided activation's derivative is
+    /// expressible through its output, so backward never needs the
+    /// pre-activations).
+    #[inline]
+    pub fn scale_delta(self, delta: &mut [f32], ys: &[f32]) {
+        debug_assert_eq!(delta.len(), ys.len());
+        match self {
+            Act::ScaledTanh => {
+                for (dv, &y) in delta.iter_mut().zip(ys.iter()) {
+                    *dv *= scaled_tanh_deriv_from_y(y);
+                }
+            }
+            Act::Relu => {
+                for (dv, &y) in delta.iter_mut().zip(ys.iter()) {
+                    if y <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+            }
+            Act::Identity => {}
+        }
     }
 }
 

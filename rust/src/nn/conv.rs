@@ -180,6 +180,195 @@ pub fn conv_backward(
     }
 }
 
+/// Geometry for a general convolution: zero padding `pad` on every border
+/// and stride `stride`. `stride == 1 && pad == 0` degenerates to the
+/// "valid" convolution above ([`ConvGeom::is_plain`]); the compiled conv op
+/// dispatches to the vectorized [`conv_forward`]/[`conv_backward`] pair on
+/// that fast path and to the general (bounds-checked) loops below
+/// otherwise.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    pub in_maps: usize,
+    pub in_side: usize,
+    pub out_maps: usize,
+    pub out_side: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    /// Output side of a `kernel`/`stride`/`pad` convolution over `in_side`,
+    /// or `None` when the window does not fit.
+    pub fn out_side(in_side: usize, kernel: usize, stride: usize, pad: usize) -> Option<usize> {
+        if kernel == 0 || stride == 0 || in_side + 2 * pad < kernel {
+            return None;
+        }
+        Some((in_side + 2 * pad - kernel) / stride + 1)
+    }
+
+    pub fn new(
+        in_maps: usize,
+        in_side: usize,
+        out_maps: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Option<ConvGeom> {
+        let out_side = Self::out_side(in_side, kernel, stride, pad)?;
+        Some(ConvGeom { in_maps, in_side, out_maps, out_side, kernel, stride, pad })
+    }
+
+    /// Plain "valid" stride-1 convolution (the paper's only kind).
+    pub fn is_plain(&self) -> bool {
+        self.stride == 1 && self.pad == 0
+    }
+
+    /// View as the stride-1 valid-conv shape (callers check `is_plain`).
+    pub fn as_plain(&self) -> ConvShape {
+        debug_assert!(self.is_plain());
+        ConvShape {
+            in_maps: self.in_maps,
+            in_side: self.in_side,
+            out_maps: self.out_maps,
+            out_side: self.out_side,
+            kernel: self.kernel,
+        }
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.in_maps * self.in_side * self.in_side
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_maps * self.out_side * self.out_side
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.out_maps * self.in_maps * self.kernel * self.kernel
+    }
+}
+
+/// General forward convolution (zero padding, arbitrary stride), producing
+/// pre-activations. Same weight layout as [`conv_forward`].
+pub fn conv_forward_general(
+    g: &ConvGeom,
+    input: &[f32],
+    weights: &[f32],
+    biases: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(input.len(), g.in_len());
+    debug_assert_eq!(weights.len(), g.weight_len());
+    debug_assert_eq!(biases.len(), g.out_maps);
+    debug_assert_eq!(out.len(), g.out_len());
+
+    let k = g.kernel;
+    let is = g.in_side;
+    let os = g.out_side;
+    let imap_len = is * is;
+    let omap_len = os * os;
+
+    for m in 0..g.out_maps {
+        let out_map = &mut out[m * omap_len..(m + 1) * omap_len];
+        let wm = &weights[m * g.in_maps * k * k..];
+        for oy in 0..os {
+            for ox in 0..os {
+                let mut acc = biases[m];
+                for j in 0..g.in_maps {
+                    let in_map = &input[j * imap_len..(j + 1) * imap_len];
+                    let wj = &wm[j * k * k..(j + 1) * k * k];
+                    for ky in 0..k {
+                        // Zero padding: out-of-range taps contribute 0.
+                        let iy = (oy * g.stride + ky).wrapping_sub(g.pad);
+                        if iy >= is {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * g.stride + kx).wrapping_sub(g.pad);
+                            if ix >= is {
+                                continue;
+                            }
+                            acc += wj[ky * k + kx] * in_map[iy * is + ix];
+                        }
+                    }
+                }
+                out_map[oy * os + ox] = acc;
+            }
+        }
+    }
+}
+
+/// General backward convolution: accumulates weight/bias gradients and
+/// (unless `dinput` is empty) overwrites `dinput` with ∂L/∂input. Same
+/// contract as [`conv_backward`].
+pub fn conv_backward_general(
+    g: &ConvGeom,
+    input: &[f32],
+    weights: &[f32],
+    delta: &[f32],
+    wgrads: &mut [f32],
+    bgrads: &mut [f32],
+    dinput: &mut [f32],
+) {
+    debug_assert_eq!(input.len(), g.in_len());
+    debug_assert_eq!(weights.len(), g.weight_len());
+    debug_assert_eq!(delta.len(), g.out_len());
+    debug_assert_eq!(wgrads.len(), g.weight_len());
+    debug_assert_eq!(bgrads.len(), g.out_maps);
+    let want_dinput = !dinput.is_empty();
+    if want_dinput {
+        debug_assert_eq!(dinput.len(), g.in_len());
+        dinput.fill(0.0);
+    }
+
+    let k = g.kernel;
+    let is = g.in_side;
+    let os = g.out_side;
+    let imap_len = is * is;
+    let omap_len = os * os;
+
+    for m in 0..g.out_maps {
+        let d_map = &delta[m * omap_len..(m + 1) * omap_len];
+        let mut bsum = 0.0f32;
+        for &d in d_map {
+            bsum += d;
+        }
+        bgrads[m] += bsum;
+
+        let wm_base = m * g.in_maps * k * k;
+        for j in 0..g.in_maps {
+            let in_map = &input[j * imap_len..(j + 1) * imap_len];
+            let wj = &weights[wm_base + j * k * k..wm_base + (j + 1) * k * k];
+            let gj = &mut wgrads[wm_base + j * k * k..wm_base + (j + 1) * k * k];
+            for ky in 0..k {
+                for kx in 0..k {
+                    let w = wj[ky * k + kx];
+                    let mut acc = 0.0f32;
+                    for oy in 0..os {
+                        let iy = (oy * g.stride + ky).wrapping_sub(g.pad);
+                        if iy >= is {
+                            continue;
+                        }
+                        for ox in 0..os {
+                            let ix = (ox * g.stride + kx).wrapping_sub(g.pad);
+                            if ix >= is {
+                                continue;
+                            }
+                            let d = d_map[oy * os + ox];
+                            acc += in_map[iy * is + ix] * d;
+                            if want_dinput {
+                                dinput[j * imap_len + iy * is + ix] += w * d;
+                            }
+                        }
+                    }
+                    gj[ky * k + kx] += acc;
+                }
+            }
+        }
+    }
+}
+
 /// Reference (naive, index-arithmetic) forward used only by tests to pin the
 /// optimized loops down.
 #[cfg(test)]
@@ -330,6 +519,99 @@ mod tests {
                 din[idx]
             );
         }
+    }
+
+    #[test]
+    fn general_matches_plain_when_unpadded_unit_stride() {
+        proptest::run(
+            proptest::Config { cases: 30, max_size: 6, ..Default::default() },
+            |rng, size| {
+                let in_maps = rng.range(1, 3);
+                let out_maps = rng.range(1, 3);
+                let kernel = rng.range(1, 4.min(size + 1) + 1);
+                let in_side = kernel + rng.range(0, size + 1);
+                let s = ConvShape::valid(in_maps, in_side, out_maps, kernel);
+                let input = rand_vec(rng, s.in_len());
+                let weights = rand_vec(rng, s.weight_len());
+                let biases = rand_vec(rng, s.out_maps);
+                (s, input, weights, biases)
+            },
+            |(s, input, weights, biases)| {
+                let g = ConvGeom::new(s.in_maps, s.in_side, s.out_maps, s.kernel, 1, 0).unwrap();
+                assert!(g.is_plain());
+                assert_eq!(g.out_side, s.out_side);
+                let mut plain = vec![0.0; s.out_len()];
+                let mut general = vec![0.0; s.out_len()];
+                conv_forward(s, input, weights, biases, &mut plain);
+                conv_forward_general(&g, input, weights, biases, &mut general);
+                proptest::check_close(&general, &plain, 1e-5, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn general_backward_matches_finite_difference() {
+        // Padded (pad=1) strided (stride=2) convolution, FD on weights and
+        // inputs with loss = Σ out.
+        let mut rng = Pcg32::seeded(17);
+        let g = ConvGeom::new(2, 7, 3, 3, 2, 1).unwrap();
+        assert_eq!(g.out_side, (7 + 2 - 3) / 2 + 1);
+        let mut input = rand_vec(&mut rng, g.in_len());
+        let mut weights = rand_vec(&mut rng, g.weight_len());
+        let biases = rand_vec(&mut rng, g.out_maps);
+        let delta = vec![1.0f32; g.out_len()];
+        let mut wg = vec![0.0; g.weight_len()];
+        let mut bg = vec![0.0; g.out_maps];
+        let mut din = vec![0.0; g.in_len()];
+        conv_backward_general(&g, &input, &weights, &delta, &mut wg, &mut bg, &mut din);
+
+        let loss = |w: &[f32], inp: &[f32]| -> f32 {
+            let mut out = vec![0.0; g.out_len()];
+            conv_forward_general(&g, inp, w, &biases, &mut out);
+            out.iter().sum()
+        };
+        let h = 1e-3;
+        for idx in [0, 4, g.weight_len() / 2, g.weight_len() - 1] {
+            let orig = weights[idx];
+            weights[idx] = orig + h;
+            let lp = loss(&weights, &input);
+            weights[idx] = orig - h;
+            let lm = loss(&weights, &input);
+            weights[idx] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (fd - wg[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "w[{idx}]: fd={fd} analytic={}",
+                wg[idx]
+            );
+        }
+        for idx in [0, 5, g.in_len() / 2, g.in_len() - 1] {
+            let orig = input[idx];
+            input[idx] = orig + h;
+            let lp = loss(&weights, &input);
+            input[idx] = orig - h;
+            let lm = loss(&weights, &input);
+            input[idx] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (fd - din[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "din[{idx}]: fd={fd} analytic={}",
+                din[idx]
+            );
+        }
+        // With delta = 1, bias grads count output pixels per map.
+        for m in 0..g.out_maps {
+            assert!((bg[m] - (g.out_side * g.out_side) as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn geom_rejects_impossible_windows() {
+        assert!(ConvGeom::new(1, 3, 1, 5, 1, 0).is_none(), "kernel larger than padded input");
+        assert!(ConvGeom::new(1, 3, 1, 2, 0, 0).is_none(), "zero stride");
+        assert!(ConvGeom::new(1, 3, 1, 0, 1, 0).is_none(), "zero kernel");
+        // Padding rescues an otherwise too-large kernel.
+        assert_eq!(ConvGeom::new(1, 3, 1, 5, 1, 1).unwrap().out_side, 1);
     }
 
     #[test]

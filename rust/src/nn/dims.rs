@@ -5,23 +5,32 @@
 //! single flat parameter vector. The flat layout is what makes CHAOS's
 //! per-layer publication cheap: a layer's weights are one contiguous span,
 //! shared between workers, updated with one pass.
+//!
+//! Geometry and parameter counts are *not* hard-coded per layer type: every
+//! layer is folded through its registered kind
+//! ([`crate::nn::layer::LayerKind`]), so a kind registered at runtime lays
+//! out exactly like a built-in one.
 
+use super::layer::{self, LayerCtx, Shape};
 use crate::config::{ArchSpec, LayerSpec};
 use std::ops::Range;
 
 /// Geometry + parameter layout for one layer.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerDims {
     pub spec: LayerSpec,
-    /// Input feature maps (1 for the input layer itself).
+    /// Input feature maps (1 for the input layer itself). For kinds that
+    /// flatten their input (fc/output), this is the flattened neuron count.
     pub in_maps: usize,
-    /// Input side length (square maps). For FC/Output this is 1 and
-    /// `in_maps` carries the flattened neuron count.
+    /// Input side length (square maps; 1 for flattened input).
     pub in_side: usize,
-    /// Output feature maps.
+    /// Output feature maps (the neuron count for flat outputs).
     pub out_maps: usize,
     /// Output side length.
     pub out_side: usize,
+    /// Whether the output is a flattened vector (post-fc stage) — lets
+    /// pass-through kinds compile a faithful [`Shape`] without guessing.
+    pub flat: bool,
     /// Number of weights (excluding biases).
     pub weights: usize,
     /// Number of biases.
@@ -63,100 +72,57 @@ impl LayerDims {
     }
 }
 
-/// Compute dims for every layer of an architecture. The returned vector is
-/// parallel to `arch.layers`.
-pub fn compute_dims(arch: &ArchSpec) -> Vec<LayerDims> {
-    arch.validate().expect("invalid architecture");
-    let mut dims = Vec::with_capacity(arch.layers.len());
-    let mut maps = 1usize;
-    let mut side = 0usize;
+/// Compute dims for every layer of an architecture, or the first structural
+/// error. The returned vector is parallel to `arch.layers`. This is also
+/// the engine behind [`ArchSpec::validate`].
+pub fn try_compute_dims(arch: &ArchSpec) -> anyhow::Result<Vec<LayerDims>> {
+    let n = arch.layers.len();
+    anyhow::ensure!(n > 0, "architecture must start with an input layer");
+    let mut dims = Vec::with_capacity(n);
+    let mut shape = Shape::input(0);
     let mut offset = 0usize;
-    for spec in &arch.layers {
-        let d = match *spec {
-            LayerSpec::Input { side: s } => {
-                side = s;
-                LayerDims {
-                    spec: *spec,
-                    in_maps: 1,
-                    in_side: s,
-                    out_maps: 1,
-                    out_side: s,
-                    weights: 0,
-                    biases: 0,
-                    params: offset..offset,
-                }
-            }
-            LayerSpec::Conv { maps: m, kernel } => {
-                let out_side = side - kernel + 1;
-                let weights = m * maps * kernel * kernel;
-                let d = LayerDims {
-                    spec: *spec,
-                    in_maps: maps,
-                    in_side: side,
-                    out_maps: m,
-                    out_side,
-                    weights,
-                    biases: m,
-                    params: offset..offset + weights + m,
-                };
-                maps = m;
-                side = out_side;
-                d
-            }
-            LayerSpec::MaxPool { kernel } => {
-                let out_side = side / kernel;
-                let d = LayerDims {
-                    spec: *spec,
-                    in_maps: maps,
-                    in_side: side,
-                    out_maps: maps,
-                    out_side,
-                    weights: 0,
-                    biases: 0,
-                    params: offset..offset,
-                };
-                side = out_side;
-                d
-            }
-            LayerSpec::FullyConnected { neurons } => {
-                let inputs = maps * side * side;
-                let weights = neurons * inputs;
-                let d = LayerDims {
-                    spec: *spec,
-                    in_maps: inputs,
-                    in_side: 1,
-                    out_maps: neurons,
-                    out_side: 1,
-                    weights,
-                    biases: neurons,
-                    params: offset..offset + weights + neurons,
-                };
-                maps = neurons;
-                side = 1;
-                d
-            }
-            LayerSpec::Output { classes } => {
-                let inputs = maps * side * side;
-                let weights = classes * inputs;
-                let d = LayerDims {
-                    spec: *spec,
-                    in_maps: inputs,
-                    in_side: 1,
-                    out_maps: classes,
-                    out_side: 1,
-                    weights,
-                    biases: classes,
-                    params: offset..offset + weights + classes,
-                };
-                maps = classes;
-                side = 1;
-                d
-            }
+    let mut last_terminal = false;
+    for (i, spec) in arch.layers.iter().enumerate() {
+        let kind = layer::kind_for(spec)?;
+        if i == 0 {
+            anyhow::ensure!(kind.is_input(), "architecture must start with an input layer");
+        } else {
+            anyhow::ensure!(!kind.is_input(), "layer {i}: input after start");
+        }
+        if kind.is_terminal() && i != n - 1 {
+            anyhow::bail!("layer {i}: output before the end");
+        }
+        last_terminal = kind.is_terminal();
+        let ctx = LayerCtx { arch, index: i };
+        let out = kind.out_shape(spec, shape, &ctx)?;
+        // Kinds that flatten see their input through the fully-connected
+        // layout convention (in_maps = element count, side 1).
+        let input = if kind.flattens_input() { Shape::vector(shape.len()) } else { shape };
+        let (weights, biases) = kind.param_counts(spec, shape);
+        let d = LayerDims {
+            spec: spec.clone(),
+            in_maps: if i == 0 { 1 } else { input.maps },
+            in_side: if i == 0 { out.side } else { input.side },
+            out_maps: out.maps,
+            out_side: out.side,
+            flat: out.flat,
+            weights,
+            biases,
+            params: offset..offset + weights + biases,
         };
         offset = d.params.end;
         dims.push(d);
+        shape = out;
     }
-    dims
+    anyhow::ensure!(last_terminal, "architecture must end with an output layer");
+    Ok(dims)
+}
+
+/// Compute dims for every layer of an architecture. The returned vector is
+/// parallel to `arch.layers`. Panics on an invalid architecture (use
+/// [`try_compute_dims`] or [`ArchSpec::validate`] for fallible checking).
+pub fn compute_dims(arch: &ArchSpec) -> Vec<LayerDims> {
+    try_compute_dims(arch).expect("invalid architecture")
 }
 
 /// Total parameter count of an architecture.
@@ -233,5 +199,30 @@ mod tests {
         let (w, b) = conv1.split_params(&buf);
         assert_eq!(w.len(), 80);
         assert_eq!(b.len(), 5);
+    }
+
+    #[test]
+    fn padded_strided_conv_dims() {
+        use crate::config::{Act, LayerSpec};
+        let arch = ArchSpec {
+            name: "padded".into(),
+            layers: vec![
+                LayerSpec::Input { side: 29 },
+                LayerSpec::conv_ex(8, 5, 2, 2, Act::Relu), // (29+4-5)/2+1 = 15
+                LayerSpec::AvgPool { kernel: 3 },          // 5
+                LayerSpec::Dropout { rate: 0.5 },          // 5
+                LayerSpec::fc(20),
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        let dims = try_compute_dims(&arch).unwrap();
+        assert_eq!(dims[1].out_side, 15);
+        assert_eq!(dims[1].weights, 8 * 1 * 5 * 5);
+        assert_eq!(dims[2].out_side, 5);
+        assert_eq!(dims[3].out_len(), 8 * 5 * 5);
+        assert_eq!(dims[3].param_count(), 0);
+        assert_eq!(dims[4].in_maps, 8 * 5 * 5);
+        assert_eq!(dims[4].weights, 20 * 8 * 5 * 5);
     }
 }

@@ -6,20 +6,20 @@
 //! paper's accuracy-parity comparison (Table 7).
 
 use super::dims::LayerDims;
-use crate::config::LayerSpec;
 use crate::util::Pcg32;
 
-/// Per-layer fan-in/fan-out used for the init scale.
+/// Per-layer fan-in/fan-out used for the init scale, derived from the
+/// parameter layout alone so runtime-registered layer kinds initialize
+/// like built-ins. For a conv layer `weights = out_maps·in_maps·k²`, so
+/// `weights/out_maps = in_maps·k²` (fan-in) and `weights/in_maps =
+/// out_maps·k²` (fan-out); for a fully-connected layer the same quotients
+/// give `inputs` and `neurons` — both identical to the classic per-type
+/// formulas.
 fn fans(d: &LayerDims) -> (usize, usize) {
-    match d.spec {
-        LayerSpec::Conv { maps: _, kernel } => {
-            let fan_in = d.in_maps * kernel * kernel;
-            let fan_out = d.out_maps * kernel * kernel;
-            (fan_in, fan_out)
-        }
-        LayerSpec::FullyConnected { .. } | LayerSpec::Output { .. } => (d.in_maps, d.out_maps),
-        _ => (1, 1),
+    if d.weights == 0 || d.in_maps == 0 || d.out_maps == 0 {
+        return (1, 1);
     }
+    (d.weights / d.out_maps, d.weights / d.in_maps)
 }
 
 /// Initialize a flat parameter vector for the given layer dims.

@@ -1,0 +1,1115 @@
+//! The open layer API: kinds, compiled ops, and the kind registry.
+//!
+//! A **kind** ([`LayerKind`]) is everything the system knows about one layer
+//! vocabulary entry — how to parse/serialize its JSON body, how its output
+//! geometry and parameter counts derive from the input geometry, and how to
+//! compile a [`LayerSpec`] into an executable op. Kinds live in a string
+//! registry ([`register`]/[`lookup`], mirroring `chaos::policy`), so
+//! `ArchSpec::from_json`, `validate` and `to_json` are open-ended: a kind
+//! registered at runtime is immediately loadable, validatable and trainable
+//! through `chaos::Trainer` under every update policy.
+//!
+//! An **op** ([`LayerOp`]) is one compiled layer of one network: it owns its
+//! geometry ([`LayerOp::in_shape`]/[`LayerOp::out_shape`]), its span in the
+//! flat parameter vector ([`LayerOp::param_range`] — the contiguous block
+//! CHAOS publishes per layer), and the forward/backward kernels. The
+//! orchestrator ([`super::Network`]) is a loop over ops — it loads each
+//! op's parameter span on demand through `ParamSource`, hands finished
+//! gradient blocks to `on_grads` back-to-front (the CHAOS publication
+//! hook), and never matches on layer types.
+//!
+//! ### Backward contract
+//!
+//! The delta handed to [`LayerOp::backward`] is ∂L/∂(this op's *output*,
+//! post-activation); an op that owns an activation first converts it to the
+//! pre-activation delta in place using its stored outputs
+//! ([`Act::scale_delta`]). The op writes ∂L/∂(its *input*) — again w.r.t.
+//! the previous op's post-activation output — into `delta_in`, unless
+//! `delta_in` is empty (first layer above the input: nobody consumes it).
+//! The one exception is the softmax output op, whose incoming delta is
+//! already the pre-activation `p − onehot` because softmax and
+//! cross-entropy fuse in the loss.
+
+use super::conv::{conv_backward, conv_backward_general, conv_forward, conv_forward_general, ConvGeom};
+use super::dims::LayerDims;
+use super::fc::{fc_backward, fc_forward, FcShape};
+use super::pool::{avg_pool_backward, avg_pool_forward, pool_backward, pool_forward, PoolShape};
+use crate::config::{Act, ArchSpec, LayerSpec};
+use crate::util::timer::LayerClass;
+use crate::util::{Json, Pcg32};
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Activation geometry flowing between layers: `maps` square feature maps
+/// of side `side`. `flat` marks the post-flatten (fully-connected) stage —
+/// feature-map layers (conv/pool) reject flat input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub maps: usize,
+    pub side: usize,
+    pub flat: bool,
+}
+
+impl Shape {
+    /// The input layer's shape: one map of side `side`.
+    pub fn input(side: usize) -> Shape {
+        Shape { maps: 1, side, flat: false }
+    }
+
+    /// A flattened vector of `n` neurons.
+    pub fn vector(n: usize) -> Shape {
+        Shape { maps: n, side: 1, flat: true }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.maps * self.side * self.side
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Context handed to [`LayerKind::out_shape`] during validation/compilation.
+pub struct LayerCtx<'a> {
+    /// The architecture being validated (name and full layer list).
+    pub arch: &'a ArchSpec,
+    /// Index of the layer under consideration.
+    pub index: usize,
+}
+
+/// Per-op view of the per-worker scratch: this layer's auxiliary `u32`
+/// words (pool switches, dropout masks — sized by [`LayerOp::aux_len`]),
+/// this layer's thread-private PRNG, and whether the pass is a training
+/// pass (dropout is identity outside training).
+pub struct OpScratch<'a> {
+    pub aux: &'a mut [u32],
+    pub rng: &'a mut Pcg32,
+    pub train: bool,
+}
+
+/// The stored activations an op may consult during backward: its forward
+/// input (the previous op's output) and its own forward output.
+pub struct Acts<'a> {
+    pub input: &'a [f32],
+    pub output: &'a [f32],
+}
+
+/// One compiled layer of one network. Implementations are stateless between
+/// calls — all mutable per-sample state lives in the worker's scratch, so a
+/// single op is shared by every CHAOS worker thread.
+pub trait LayerOp: Send + Sync + std::fmt::Debug {
+    /// Registry name of the kind this op was compiled from.
+    fn kind(&self) -> &'static str;
+
+    fn in_shape(&self) -> Shape;
+
+    fn out_shape(&self) -> Shape;
+
+    /// This op's span in the flat parameter vector (empty for
+    /// parameter-free ops). Weights come first, then biases.
+    fn param_range(&self) -> Range<usize>;
+
+    /// Auxiliary `u32` words this op needs in the per-worker scratch.
+    fn aux_len(&self) -> usize {
+        0
+    }
+
+    /// Timer class for the forward (`backward == false`) or backward pass.
+    /// Custom kinds default to the generic `Other` pair.
+    fn class(&self, backward: bool) -> LayerClass {
+        if backward {
+            LayerClass::OtherBackward
+        } else {
+            LayerClass::OtherForward
+        }
+    }
+
+    /// Forward one sample: read `input`, write `out` (this op's
+    /// post-activation output). `params` is this op's already-loaded
+    /// parameter span.
+    fn forward(&self, params: &[f32], input: &[f32], out: &mut [f32], scratch: &mut OpScratch<'_>);
+
+    /// Backward one sample — see the module docs for the delta contract.
+    /// `grads` is this op's gradient span (zeroed by the driver;
+    /// accumulate into it as `[weights..., biases...]`).
+    fn backward(
+        &self,
+        params: &[f32],
+        acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        grads: &mut [f32],
+        scratch: &mut OpScratch<'_>,
+    );
+}
+
+/// A registered layer kind — the parse/validate/compile behaviour behind
+/// one `LayerSpec` vocabulary entry. See the module docs.
+pub trait LayerKind: Send + Sync {
+    /// Registry name (the JSON key selecting this kind).
+    fn name(&self) -> &'static str;
+
+    /// Parse this kind's JSON body (the value under the kind key).
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec>;
+
+    /// Serialize a spec of this kind back to its JSON body.
+    fn to_json(&self, spec: &LayerSpec) -> Json;
+
+    /// Validate the spec against the input geometry and derive the output
+    /// geometry. All structural errors ("pool does not divide", "conv
+    /// after fully-connected", …) surface here.
+    fn out_shape(&self, spec: &LayerSpec, input: Shape, ctx: &LayerCtx<'_>)
+        -> anyhow::Result<Shape>;
+
+    /// (weights, biases) this layer owns in the flat parameter vector.
+    fn param_counts(&self, _spec: &LayerSpec, _input: Shape) -> (usize, usize) {
+        (0, 0)
+    }
+
+    /// Whether this kind consumes its input as a flattened vector (its
+    /// `LayerDims` then reports `in_maps = input.len(), in_side = 1`, the
+    /// layout convention of the fully-connected kernels).
+    fn flattens_input(&self) -> bool {
+        false
+    }
+
+    /// The (single, leading) input kind.
+    fn is_input(&self) -> bool {
+        false
+    }
+
+    /// A terminal kind (must be — and only be — the last layer).
+    fn is_terminal(&self) -> bool {
+        false
+    }
+
+    /// Compile a spec of this kind into an executable op for the given
+    /// geometry/parameter layout.
+    fn compile(&self, spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>>;
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+fn registry() -> &'static Mutex<BTreeMap<String, Arc<dyn LayerKind>>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Arc<dyn LayerKind>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut map: BTreeMap<String, Arc<dyn LayerKind>> = BTreeMap::new();
+        let builtins: [Arc<dyn LayerKind>; 7] = [
+            Arc::new(InputKind),
+            Arc::new(ConvKind),
+            Arc::new(MaxPoolKind),
+            Arc::new(AvgPoolKind),
+            Arc::new(FcKind),
+            Arc::new(DropoutKind),
+            Arc::new(OutputKind),
+        ];
+        for kind in builtins {
+            map.insert(kind.name().to_string(), kind);
+        }
+        Mutex::new(map)
+    })
+}
+
+/// Register a custom layer kind, making it selectable from architecture
+/// JSON ([`ArchSpec::from_json`]) and compilable into trainable networks —
+/// without touching the orchestrator. Fails on duplicate or empty names.
+pub fn register(kind: Arc<dyn LayerKind>) -> anyhow::Result<()> {
+    let name = kind.name();
+    anyhow::ensure!(!name.is_empty(), "layer kind name must be non-empty");
+    let mut reg = registry().lock().unwrap();
+    anyhow::ensure!(!reg.contains_key(name), "layer kind '{name}' is already registered");
+    reg.insert(name.to_string(), kind);
+    Ok(())
+}
+
+/// Resolve a kind by registry name.
+pub fn lookup(name: &str) -> anyhow::Result<Arc<dyn LayerKind>> {
+    let reg = registry().lock().unwrap();
+    reg.get(name).cloned().ok_or_else(|| {
+        let known: Vec<&str> = reg.keys().map(|k| k.as_str()).collect();
+        anyhow::anyhow!("unknown layer kind '{name}' (available: {})", known.join("|"))
+    })
+}
+
+/// The registered kind names (built-ins plus [`register`]ed customs),
+/// sorted.
+pub fn names() -> Vec<String> {
+    registry().lock().unwrap().keys().cloned().collect()
+}
+
+/// Parse one layer from its JSON key/body pair — the entry point
+/// `ArchSpec::from_json` delegates to.
+pub fn from_json(key: &str, body: &Json) -> anyhow::Result<LayerSpec> {
+    lookup(key)?.from_json(body)
+}
+
+/// Registry name of the kind a spec belongs to.
+pub fn kind_of(spec: &LayerSpec) -> &str {
+    match spec {
+        LayerSpec::Input { .. } => "input",
+        LayerSpec::Conv { .. } => "conv",
+        LayerSpec::MaxPool { .. } => "pool",
+        LayerSpec::AvgPool { .. } => "avgpool",
+        LayerSpec::FullyConnected { .. } => "fc",
+        LayerSpec::Dropout { .. } => "dropout",
+        LayerSpec::Output { .. } => "output",
+        LayerSpec::Custom { kind, .. } => kind.as_str(),
+    }
+}
+
+/// Resolve the registered kind handling a spec.
+pub fn kind_for(spec: &LayerSpec) -> anyhow::Result<Arc<dyn LayerKind>> {
+    lookup(kind_of(spec))
+}
+
+/// Helpers for custom kinds carrying numeric (key, value) arguments.
+pub fn args_from_json(body: &Json) -> anyhow::Result<Vec<(String, f64)>> {
+    match body.as_obj() {
+        Some(obj) => obj
+            .iter()
+            .map(|(k, v)| {
+                v.as_f64()
+                    .map(|x| (k.clone(), x))
+                    .ok_or_else(|| anyhow::anyhow!("argument '{k}' must be a number"))
+            })
+            .collect(),
+        None => Ok(Vec::new()),
+    }
+}
+
+pub fn args_to_json(args: &[(String, f64)]) -> Json {
+    Json::obj(args.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Built-in kinds and their ops
+// ---------------------------------------------------------------------------
+
+fn expect_usize(body: &Json, what: &str) -> anyhow::Result<usize> {
+    body.as_usize().ok_or_else(|| anyhow::anyhow!("{what} must be a non-negative integer"))
+}
+
+fn parse_act(body: &Json) -> anyhow::Result<Act> {
+    match body.get("act") {
+        None => Ok(Act::ScaledTanh),
+        Some(a) => {
+            Act::parse(a.as_str().ok_or_else(|| anyhow::anyhow!("act must be a string"))?)
+        }
+    }
+}
+
+fn no_flat_input(kind: &str, input: Shape, ctx: &LayerCtx<'_>) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !input.flat,
+        "layer {}: {kind} after fully-connected",
+        ctx.index
+    );
+    Ok(())
+}
+
+// ----- input ----------------------------------------------------------------
+
+struct InputKind;
+
+impl LayerKind for InputKind {
+    fn name(&self) -> &'static str {
+        "input"
+    }
+
+    fn is_input(&self) -> bool {
+        true
+    }
+
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec> {
+        Ok(LayerSpec::Input { side: expect_usize(body, "input side")? })
+    }
+
+    fn to_json(&self, spec: &LayerSpec) -> Json {
+        let LayerSpec::Input { side } = spec else { unreachable!() };
+        Json::num(*side as f64)
+    }
+
+    fn out_shape(
+        &self,
+        spec: &LayerSpec,
+        _input: Shape,
+        ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        let LayerSpec::Input { side } = spec else { unreachable!() };
+        anyhow::ensure!(*side > 0, "layer {}: input side must be positive", ctx.index);
+        Ok(Shape::input(*side))
+    }
+
+    fn compile(&self, _spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        Ok(Box::new(InputOp { shape: Shape::input(dims.out_side) }))
+    }
+}
+
+/// Placeholder op for the input layer — the orchestrator's loops start at
+/// layer 1, so its kernels are never driven.
+#[derive(Debug)]
+struct InputOp {
+    shape: Shape,
+}
+
+impl LayerOp for InputOp {
+    fn kind(&self) -> &'static str {
+        "input"
+    }
+
+    fn in_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn out_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        0..0
+    }
+
+    fn forward(&self, _: &[f32], _: &[f32], _: &mut [f32], _: &mut OpScratch<'_>) {
+        unreachable!("input layer is never forwarded");
+    }
+
+    fn backward(
+        &self,
+        _: &[f32],
+        _: Acts<'_>,
+        _: &mut [f32],
+        _: &mut [f32],
+        _: &mut [f32],
+        _: &mut OpScratch<'_>,
+    ) {
+        unreachable!("input layer is never backpropagated");
+    }
+}
+
+// ----- conv ------------------------------------------------------------------
+
+struct ConvKind;
+
+impl LayerKind for ConvKind {
+    fn name(&self) -> &'static str {
+        "conv"
+    }
+
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec> {
+        let maps = body.req("maps")?.as_usize().ok_or_else(|| anyhow::anyhow!("conv maps"))?;
+        let kernel =
+            body.req("kernel")?.as_usize().ok_or_else(|| anyhow::anyhow!("conv kernel"))?;
+        let stride = match body.get("stride") {
+            None => 1,
+            Some(s) => s.as_usize().ok_or_else(|| anyhow::anyhow!("conv stride"))?,
+        };
+        let pad = match body.get("pad") {
+            None => 0,
+            Some(p) => p.as_usize().ok_or_else(|| anyhow::anyhow!("conv pad"))?,
+        };
+        Ok(LayerSpec::Conv { maps, kernel, stride, pad, act: parse_act(body)? })
+    }
+
+    fn to_json(&self, spec: &LayerSpec) -> Json {
+        let LayerSpec::Conv { maps, kernel, stride, pad, act } = spec else { unreachable!() };
+        let mut fields = vec![
+            ("maps", Json::num(*maps as f64)),
+            ("kernel", Json::num(*kernel as f64)),
+        ];
+        if *stride != 1 {
+            fields.push(("stride", Json::num(*stride as f64)));
+        }
+        if *pad != 0 {
+            fields.push(("pad", Json::num(*pad as f64)));
+        }
+        if *act != Act::ScaledTanh {
+            fields.push(("act", Json::str(act.name().to_string())));
+        }
+        Json::obj(fields)
+    }
+
+    fn out_shape(
+        &self,
+        spec: &LayerSpec,
+        input: Shape,
+        ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        let LayerSpec::Conv { maps, kernel, stride, pad, .. } = spec else { unreachable!() };
+        no_flat_input("conv", input, ctx)?;
+        let i = ctx.index;
+        anyhow::ensure!(*maps > 0, "layer {i}: conv with zero maps");
+        anyhow::ensure!(*stride > 0, "layer {i}: conv stride must be ≥ 1");
+        anyhow::ensure!(
+            *kernel == 0 || *pad < *kernel,
+            "layer {i}: conv pad {pad} must be smaller than kernel {kernel}"
+        );
+        let out_side = ConvGeom::out_side(input.side, *kernel, *stride, *pad).ok_or_else(|| {
+            anyhow::anyhow!(
+                "layer {i}: conv kernel {kernel} invalid for side {} (stride {stride}, pad {pad})",
+                input.side
+            )
+        })?;
+        Ok(Shape { maps: *maps, side: out_side, flat: false })
+    }
+
+    fn param_counts(&self, spec: &LayerSpec, input: Shape) -> (usize, usize) {
+        let LayerSpec::Conv { maps, kernel, .. } = spec else { unreachable!() };
+        (maps * input.maps * kernel * kernel, *maps)
+    }
+
+    fn compile(&self, spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        let LayerSpec::Conv { maps, kernel, stride, pad, act } = spec else { unreachable!() };
+        let geom = ConvGeom::new(dims.in_maps, dims.in_side, *maps, *kernel, *stride, *pad)
+            .ok_or_else(|| anyhow::anyhow!("conv geometry does not fit"))?;
+        debug_assert_eq!(geom.out_side, dims.out_side);
+        debug_assert_eq!(geom.weight_len(), dims.weights);
+        Ok(Box::new(ConvOp { geom, act: *act, weights: dims.weights, params: dims.params.clone() }))
+    }
+}
+
+#[derive(Debug)]
+struct ConvOp {
+    geom: ConvGeom,
+    act: Act,
+    weights: usize,
+    params: Range<usize>,
+}
+
+impl LayerOp for ConvOp {
+    fn kind(&self) -> &'static str {
+        "conv"
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape { maps: self.geom.in_maps, side: self.geom.in_side, flat: false }
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape { maps: self.geom.out_maps, side: self.geom.out_side, flat: false }
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        self.params.clone()
+    }
+
+    fn class(&self, backward: bool) -> LayerClass {
+        if backward {
+            LayerClass::ConvBackward
+        } else {
+            LayerClass::ConvForward
+        }
+    }
+
+    fn forward(&self, params: &[f32], input: &[f32], out: &mut [f32], _: &mut OpScratch<'_>) {
+        let (w, b) = params.split_at(self.weights);
+        if self.geom.is_plain() {
+            conv_forward(&self.geom.as_plain(), input, w, b, out);
+        } else {
+            conv_forward_general(&self.geom, input, w, b, out);
+        }
+        self.act.apply(out);
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        grads: &mut [f32],
+        _: &mut OpScratch<'_>,
+    ) {
+        self.act.scale_delta(delta_out, acts.output);
+        let (w, _b) = params.split_at(self.weights);
+        let (wg, bg) = grads.split_at_mut(self.weights);
+        if self.geom.is_plain() {
+            conv_backward(&self.geom.as_plain(), acts.input, w, delta_out, wg, bg, delta_in);
+        } else {
+            conv_backward_general(&self.geom, acts.input, w, delta_out, wg, bg, delta_in);
+        }
+    }
+}
+
+// ----- max pool --------------------------------------------------------------
+
+struct MaxPoolKind;
+
+fn pool_out_shape(
+    kind: &str,
+    kernel: usize,
+    input: Shape,
+    ctx: &LayerCtx<'_>,
+) -> anyhow::Result<Shape> {
+    no_flat_input(kind, input, ctx)?;
+    let i = ctx.index;
+    let side = input.side;
+    anyhow::ensure!(
+        kernel > 0 && kernel <= side,
+        "layer {i}: pool kernel {kernel} invalid for side {side}"
+    );
+    // Identity pools are almost always a config mistake; the paper's
+    // "large" network legitimately uses P1 (Table 2), so that exact layer
+    // stack — whatever the arch is called — is carved out.
+    anyhow::ensure!(
+        kernel != 1 || ctx.arch.layers == ArchSpec::large().layers,
+        "layer {i}: pool kernel 1 is an identity pool (only the paper's 'large' network uses P1)"
+    );
+    // Stride = kernel; the window grid must tile the input exactly.
+    anyhow::ensure!(
+        side % kernel == 0,
+        "layer {i}: pool kernel {kernel} does not evenly divide side {side}"
+    );
+    Ok(Shape { maps: input.maps, side: side / kernel, flat: false })
+}
+
+impl LayerKind for MaxPoolKind {
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec> {
+        Ok(LayerSpec::MaxPool { kernel: expect_usize(body, "pool kernel")? })
+    }
+
+    fn to_json(&self, spec: &LayerSpec) -> Json {
+        let LayerSpec::MaxPool { kernel } = spec else { unreachable!() };
+        Json::num(*kernel as f64)
+    }
+
+    fn out_shape(
+        &self,
+        spec: &LayerSpec,
+        input: Shape,
+        ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        let LayerSpec::MaxPool { kernel } = spec else { unreachable!() };
+        pool_out_shape("pool", *kernel, input, ctx)
+    }
+
+    fn compile(&self, spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        let LayerSpec::MaxPool { kernel } = spec else { unreachable!() };
+        Ok(Box::new(MaxPoolOp {
+            shape: PoolShape {
+                maps: dims.in_maps,
+                in_side: dims.in_side,
+                out_side: dims.out_side,
+                kernel: *kernel,
+            },
+        }))
+    }
+}
+
+#[derive(Debug)]
+struct MaxPoolOp {
+    shape: PoolShape,
+}
+
+impl LayerOp for MaxPoolOp {
+    fn kind(&self) -> &'static str {
+        "pool"
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape { maps: self.shape.maps, side: self.shape.in_side, flat: false }
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape { maps: self.shape.maps, side: self.shape.out_side, flat: false }
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        0..0
+    }
+
+    fn aux_len(&self) -> usize {
+        self.shape.out_len()
+    }
+
+    fn class(&self, backward: bool) -> LayerClass {
+        if backward {
+            LayerClass::PoolBackward
+        } else {
+            LayerClass::PoolForward
+        }
+    }
+
+    fn forward(&self, _: &[f32], input: &[f32], out: &mut [f32], scratch: &mut OpScratch<'_>) {
+        pool_forward(&self.shape, input, out, scratch.aux);
+    }
+
+    fn backward(
+        &self,
+        _: &[f32],
+        _acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        _: &mut [f32],
+        scratch: &mut OpScratch<'_>,
+    ) {
+        if delta_in.is_empty() {
+            return; // pool directly above the input: nobody consumes deltas
+        }
+        pool_backward(&self.shape, delta_out, scratch.aux, delta_in);
+    }
+}
+
+// ----- avg pool --------------------------------------------------------------
+
+struct AvgPoolKind;
+
+impl LayerKind for AvgPoolKind {
+    fn name(&self) -> &'static str {
+        "avgpool"
+    }
+
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec> {
+        Ok(LayerSpec::AvgPool { kernel: expect_usize(body, "avgpool kernel")? })
+    }
+
+    fn to_json(&self, spec: &LayerSpec) -> Json {
+        let LayerSpec::AvgPool { kernel } = spec else { unreachable!() };
+        Json::num(*kernel as f64)
+    }
+
+    fn out_shape(
+        &self,
+        spec: &LayerSpec,
+        input: Shape,
+        ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        let LayerSpec::AvgPool { kernel } = spec else { unreachable!() };
+        pool_out_shape("avgpool", *kernel, input, ctx)
+    }
+
+    fn compile(&self, spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        let LayerSpec::AvgPool { kernel } = spec else { unreachable!() };
+        Ok(Box::new(AvgPoolOp {
+            shape: PoolShape {
+                maps: dims.in_maps,
+                in_side: dims.in_side,
+                out_side: dims.out_side,
+                kernel: *kernel,
+            },
+        }))
+    }
+}
+
+#[derive(Debug)]
+struct AvgPoolOp {
+    shape: PoolShape,
+}
+
+impl LayerOp for AvgPoolOp {
+    fn kind(&self) -> &'static str {
+        "avgpool"
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape { maps: self.shape.maps, side: self.shape.in_side, flat: false }
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape { maps: self.shape.maps, side: self.shape.out_side, flat: false }
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        0..0
+    }
+
+    fn class(&self, backward: bool) -> LayerClass {
+        if backward {
+            LayerClass::PoolBackward
+        } else {
+            LayerClass::PoolForward
+        }
+    }
+
+    fn forward(&self, _: &[f32], input: &[f32], out: &mut [f32], _: &mut OpScratch<'_>) {
+        avg_pool_forward(&self.shape, input, out);
+    }
+
+    fn backward(
+        &self,
+        _: &[f32],
+        _acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        _: &mut [f32],
+        _: &mut OpScratch<'_>,
+    ) {
+        if delta_in.is_empty() {
+            return;
+        }
+        avg_pool_backward(&self.shape, delta_out, delta_in);
+    }
+}
+
+// ----- fully connected -------------------------------------------------------
+
+struct FcKind;
+
+impl LayerKind for FcKind {
+    fn name(&self) -> &'static str {
+        "fc"
+    }
+
+    fn flattens_input(&self) -> bool {
+        true
+    }
+
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec> {
+        // Shorthand `{"fc": 50}` or object `{"fc": {"neurons": 50, "act": "relu"}}`.
+        if let Some(n) = body.as_usize() {
+            return Ok(LayerSpec::fc(n));
+        }
+        let neurons =
+            body.req("neurons")?.as_usize().ok_or_else(|| anyhow::anyhow!("fc neurons"))?;
+        Ok(LayerSpec::FullyConnected { neurons, act: parse_act(body)? })
+    }
+
+    fn to_json(&self, spec: &LayerSpec) -> Json {
+        let LayerSpec::FullyConnected { neurons, act } = spec else { unreachable!() };
+        if *act == Act::ScaledTanh {
+            Json::num(*neurons as f64)
+        } else {
+            Json::obj(vec![
+                ("neurons", Json::num(*neurons as f64)),
+                ("act", Json::str(act.name().to_string())),
+            ])
+        }
+    }
+
+    fn out_shape(
+        &self,
+        spec: &LayerSpec,
+        input: Shape,
+        ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        let LayerSpec::FullyConnected { neurons, .. } = spec else { unreachable!() };
+        anyhow::ensure!(*neurons > 0, "layer {}: fc with zero neurons", ctx.index);
+        anyhow::ensure!(!input.is_empty(), "layer {}: fc on empty input", ctx.index);
+        Ok(Shape::vector(*neurons))
+    }
+
+    fn param_counts(&self, spec: &LayerSpec, input: Shape) -> (usize, usize) {
+        let LayerSpec::FullyConnected { neurons, .. } = spec else { unreachable!() };
+        (neurons * input.len(), *neurons)
+    }
+
+    fn compile(&self, spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        let LayerSpec::FullyConnected { neurons, act } = spec else { unreachable!() };
+        Ok(Box::new(FcOp {
+            shape: FcShape { inputs: dims.in_maps, outputs: *neurons },
+            act: *act,
+            output_softmax: false,
+            weights: dims.weights,
+            params: dims.params.clone(),
+        }))
+    }
+}
+
+// ----- output ----------------------------------------------------------------
+
+struct OutputKind;
+
+impl LayerKind for OutputKind {
+    fn name(&self) -> &'static str {
+        "output"
+    }
+
+    fn flattens_input(&self) -> bool {
+        true
+    }
+
+    fn is_terminal(&self) -> bool {
+        true
+    }
+
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec> {
+        Ok(LayerSpec::Output { classes: expect_usize(body, "output classes")? })
+    }
+
+    fn to_json(&self, spec: &LayerSpec) -> Json {
+        let LayerSpec::Output { classes } = spec else { unreachable!() };
+        Json::num(*classes as f64)
+    }
+
+    fn out_shape(
+        &self,
+        spec: &LayerSpec,
+        input: Shape,
+        ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        let LayerSpec::Output { classes } = spec else { unreachable!() };
+        anyhow::ensure!(*classes > 0, "layer {}: output with zero classes", ctx.index);
+        anyhow::ensure!(!input.is_empty(), "layer {}: output on empty input", ctx.index);
+        Ok(Shape::vector(*classes))
+    }
+
+    fn param_counts(&self, spec: &LayerSpec, input: Shape) -> (usize, usize) {
+        let LayerSpec::Output { classes } = spec else { unreachable!() };
+        (classes * input.len(), *classes)
+    }
+
+    fn compile(&self, spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        let LayerSpec::Output { classes } = spec else { unreachable!() };
+        Ok(Box::new(FcOp {
+            shape: FcShape { inputs: dims.in_maps, outputs: *classes },
+            act: Act::Identity,
+            output_softmax: true,
+            weights: dims.weights,
+            params: dims.params.clone(),
+        }))
+    }
+}
+
+/// Fully-connected op, shared by the hidden `fc` kind and the softmax
+/// `output` kind. With `output_softmax`, forward applies softmax and
+/// backward consumes the already-fused softmax/cross-entropy delta
+/// `p − onehot` without any activation-derivative scaling.
+#[derive(Debug)]
+struct FcOp {
+    shape: FcShape,
+    act: Act,
+    output_softmax: bool,
+    weights: usize,
+    params: Range<usize>,
+}
+
+impl LayerOp for FcOp {
+    fn kind(&self) -> &'static str {
+        if self.output_softmax {
+            "output"
+        } else {
+            "fc"
+        }
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape::vector(self.shape.inputs)
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape::vector(self.shape.outputs)
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        self.params.clone()
+    }
+
+    fn class(&self, backward: bool) -> LayerClass {
+        match (self.output_softmax, backward) {
+            (false, false) => LayerClass::FcForward,
+            (false, true) => LayerClass::FcBackward,
+            (true, false) => LayerClass::OutputForward,
+            (true, true) => LayerClass::OutputBackward,
+        }
+    }
+
+    fn forward(&self, params: &[f32], input: &[f32], out: &mut [f32], _: &mut OpScratch<'_>) {
+        let (w, b) = params.split_at(self.weights);
+        fc_forward(&self.shape, input, w, b, out);
+        if self.output_softmax {
+            super::activation::softmax(out);
+        } else {
+            self.act.apply(out);
+        }
+    }
+
+    fn backward(
+        &self,
+        params: &[f32],
+        acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        grads: &mut [f32],
+        _: &mut OpScratch<'_>,
+    ) {
+        if !self.output_softmax {
+            self.act.scale_delta(delta_out, acts.output);
+        }
+        let (w, _b) = params.split_at(self.weights);
+        let (wg, bg) = grads.split_at_mut(self.weights);
+        fc_backward(&self.shape, acts.input, w, delta_out, wg, bg, delta_in);
+    }
+}
+
+// ----- dropout ---------------------------------------------------------------
+
+struct DropoutKind;
+
+impl LayerKind for DropoutKind {
+    fn name(&self) -> &'static str {
+        "dropout"
+    }
+
+    fn from_json(&self, body: &Json) -> anyhow::Result<LayerSpec> {
+        let rate =
+            body.as_f64().ok_or_else(|| anyhow::anyhow!("dropout rate must be a number"))?;
+        Ok(LayerSpec::Dropout { rate: rate as f32 })
+    }
+
+    fn to_json(&self, spec: &LayerSpec) -> Json {
+        let LayerSpec::Dropout { rate } = spec else { unreachable!() };
+        Json::num(*rate as f64)
+    }
+
+    fn out_shape(
+        &self,
+        spec: &LayerSpec,
+        input: Shape,
+        ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        let LayerSpec::Dropout { rate } = spec else { unreachable!() };
+        anyhow::ensure!(
+            (0.0..1.0).contains(rate),
+            "layer {}: dropout rate {rate} must be in [0, 1)",
+            ctx.index
+        );
+        Ok(input)
+    }
+
+    fn compile(&self, spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        let LayerSpec::Dropout { rate } = spec else { unreachable!() };
+        Ok(Box::new(DropoutOp {
+            shape: Shape { maps: dims.out_maps, side: dims.out_side, flat: dims.flat },
+            rate: *rate,
+            keep_scale: 1.0 / (1.0 - rate),
+        }))
+    }
+}
+
+/// Inverted dropout (identity at `rate == 0` or outside training passes).
+/// Every worker draws masks from its own scratch PRNG, so CHAOS workers
+/// mask independently without any shared state.
+#[derive(Debug)]
+struct DropoutOp {
+    shape: Shape,
+    rate: f32,
+    keep_scale: f32,
+}
+
+impl LayerOp for DropoutOp {
+    fn kind(&self) -> &'static str {
+        "dropout"
+    }
+
+    fn in_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn out_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        0..0
+    }
+
+    fn aux_len(&self) -> usize {
+        self.shape.len()
+    }
+
+    fn class(&self, backward: bool) -> LayerClass {
+        if backward {
+            LayerClass::DropoutBackward
+        } else {
+            LayerClass::DropoutForward
+        }
+    }
+
+    fn forward(&self, _: &[f32], input: &[f32], out: &mut [f32], scratch: &mut OpScratch<'_>) {
+        if !scratch.train || self.rate == 0.0 {
+            // Identity pass-through; the mask is not written because the
+            // eval-mode backward path never reads it.
+            out.copy_from_slice(input);
+            return;
+        }
+        for ((o, &x), m) in out.iter_mut().zip(input).zip(scratch.aux.iter_mut()) {
+            let keep = scratch.rng.next_f32() >= self.rate;
+            *m = keep as u32;
+            *o = if keep { x * self.keep_scale } else { 0.0 };
+        }
+    }
+
+    fn backward(
+        &self,
+        _: &[f32],
+        _acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        _: &mut [f32],
+        scratch: &mut OpScratch<'_>,
+    ) {
+        if delta_in.is_empty() {
+            return;
+        }
+        if !scratch.train || self.rate == 0.0 {
+            delta_in.copy_from_slice(delta_out);
+            return;
+        }
+        for ((di, &d), &m) in delta_in.iter_mut().zip(delta_out.iter()).zip(scratch.aux.iter()) {
+            *di = if m != 0 { d * self.keep_scale } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_kinds_are_registered() {
+        let names = names();
+        for n in ["input", "conv", "pool", "avgpool", "fc", "dropout", "output"] {
+            assert!(names.iter().any(|x| x == n), "missing builtin kind {n}");
+        }
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn lookup_unknown_kind_lists_registry() {
+        let e = lookup("bogus").unwrap_err().to_string();
+        assert!(e.contains("unknown layer kind 'bogus'") && e.contains("pool"), "{e}");
+    }
+
+    #[test]
+    fn kind_of_covers_every_builtin_spec() {
+        for (spec, want) in [
+            (LayerSpec::Input { side: 9 }, "input"),
+            (LayerSpec::conv(2, 3), "conv"),
+            (LayerSpec::MaxPool { kernel: 2 }, "pool"),
+            (LayerSpec::AvgPool { kernel: 2 }, "avgpool"),
+            (LayerSpec::fc(4), "fc"),
+            (LayerSpec::Dropout { rate: 0.5 }, "dropout"),
+            (LayerSpec::Output { classes: 10 }, "output"),
+            (LayerSpec::custom("warp", vec![]), "warp"),
+        ] {
+            assert_eq!(kind_of(&spec), want);
+        }
+    }
+
+    #[test]
+    fn custom_args_json_roundtrip() {
+        let args = vec![("alpha".to_string(), 0.5), ("beta".to_string(), 2.0)];
+        let j = args_to_json(&args);
+        assert_eq!(args_from_json(&j).unwrap(), args);
+    }
+
+    #[test]
+    fn shape_helpers() {
+        let s = Shape::input(29);
+        assert_eq!(s.len(), 841);
+        assert!(!s.flat);
+        let v = Shape::vector(50);
+        assert_eq!(v.len(), 50);
+        assert!(v.flat);
+    }
+}

@@ -1,17 +1,21 @@
 //! From-scratch CNN substrate (the analogue of the Cireşan C++ network the
-//! paper parallelizes): convolution, max-pooling, fully-connected and
-//! softmax-output layers over flat f32 buffers, with per-layer gradient
-//! emission hooks that the CHAOS coordinator uses for its controlled
-//! Hogwild updates.
+//! paper parallelizes): an open, registry-driven layer vocabulary
+//! ([`layer`] — convolution with optional zero padding/stride, max and
+//! average pooling, fully-connected with selectable activations, dropout,
+//! softmax output, plus anything registered at runtime) compiled into flat
+//! f32 op pipelines, with per-layer gradient emission hooks that the CHAOS
+//! coordinator uses for its controlled Hogwild updates.
 
 pub mod activation;
 pub mod conv;
 pub mod dims;
 pub mod fc;
 pub mod init;
+pub mod layer;
 pub mod network;
 pub mod pool;
 pub mod simd;
 
 pub use dims::{compute_dims, total_params, LayerDims};
+pub use layer::{Acts, LayerCtx, LayerKind, LayerOp, OpScratch, Shape};
 pub use network::{Network, ParamSource, Scratch};

@@ -1,22 +1,24 @@
-//! The network orchestrator: forward/backward over an architecture's layer
-//! stack, with pluggable parameter sources so the same code path serves
-//! the sequential engine (plain `Vec<f32>`) and the CHAOS workers (shared
-//! atomic store, read on demand — §4.1 "reads are performed on demand").
+//! The network orchestrator: forward/backward over an architecture's
+//! compiled op pipeline, with pluggable parameter sources so the same code
+//! path serves the sequential engine (plain `Vec<f32>`) and the CHAOS
+//! workers (shared atomic store, read on demand — §4.1 "reads are performed
+//! on demand").
 //!
-//! Backward emits each layer's gradients through a callback **as soon as
-//! that layer's computation finishes** — the hook CHAOS uses to publish
-//! non-instant, per-layer updates without waiting for the whole sample
-//! (§4.1 "Controlled HogWild").
+//! [`Network::new`] compiles the [`ArchSpec`] into a `Vec<Box<dyn
+//! LayerOp>>` through the layer-kind registry ([`super::layer`]); the
+//! orchestrator itself is layer-type-blind — it loads each op's parameter
+//! span on demand, drives the op's kernels, and emits each layer's
+//! gradients through a callback **as soon as that layer's computation
+//! finishes** — the hook CHAOS uses to publish non-instant, per-layer
+//! updates without waiting for the whole sample (§4.1 "Controlled
+//! HogWild").
 
-use super::activation::{
-    apply_scaled_tanh, cross_entropy, scaled_tanh_deriv_from_y, softmax,
-};
-use super::conv::{conv_backward, conv_forward, ConvShape};
-use super::dims::{compute_dims, total_params, LayerDims};
-use super::fc::{fc_backward, fc_forward, FcShape};
-use super::pool::{pool_backward, pool_forward, PoolShape};
-use crate::config::{ArchSpec, LayerSpec};
-use crate::util::timer::{LayerClass, LayerTimes};
+use super::activation::cross_entropy;
+use super::dims::{total_params, try_compute_dims, LayerDims};
+use super::layer::{Acts, LayerOp, OpScratch};
+use crate::config::ArchSpec;
+use crate::util::timer::LayerTimes;
+use crate::util::Pcg32;
 use std::time::Instant;
 
 /// Read access to the flat parameter vector. Implementations copy the
@@ -38,19 +40,42 @@ impl ParamSource for Vec<f32> {
     }
 }
 
-/// A compiled network: architecture plus derived geometry.
-#[derive(Debug, Clone)]
+/// A compiled network: architecture, derived geometry, and the executable
+/// op pipeline.
+#[derive(Debug)]
 pub struct Network {
     pub arch: ArchSpec,
     pub dims: Vec<LayerDims>,
+    /// Compiled ops, parallel to `dims` (`ops[0]` is the inert input op).
+    pub ops: Vec<Box<dyn LayerOp>>,
     pub total_params: usize,
 }
 
+impl Clone for Network {
+    fn clone(&self) -> Network {
+        // Ops are stateless (all mutable state lives in `Scratch`), so a
+        // recompile of the same spec is an exact clone.
+        Network::compile(self.arch.clone()).expect("previously compiled architecture")
+    }
+}
+
 impl Network {
-    pub fn new(arch: ArchSpec) -> Network {
-        let dims = compute_dims(&arch);
+    /// Compile an architecture into an executable network, resolving every
+    /// layer through the kind registry.
+    pub fn compile(arch: ArchSpec) -> anyhow::Result<Network> {
+        let dims = try_compute_dims(&arch)?;
+        let mut ops: Vec<Box<dyn LayerOp>> = Vec::with_capacity(dims.len());
+        for d in &dims {
+            ops.push(super::layer::kind_for(&d.spec)?.compile(&d.spec, d)?);
+        }
         let total_params = total_params(&dims);
-        Network { arch, dims, total_params }
+        Ok(Network { arch, dims, ops, total_params })
+    }
+
+    /// Compile, panicking on an invalid architecture (use
+    /// [`Network::compile`] for fallible construction).
+    pub fn new(arch: ArchSpec) -> Network {
+        Network::compile(arch).expect("invalid architecture")
     }
 
     pub fn from_name(name: &str) -> anyhow::Result<Network> {
@@ -68,22 +93,28 @@ impl Network {
         self.dims.last().unwrap().out_maps
     }
 
-    /// Allocate per-worker scratch buffers for this network.
+    /// Allocate per-worker scratch buffers for this network (PRNG stream 0;
+    /// see [`Network::scratch_seeded`]).
     pub fn scratch(&self) -> Scratch {
+        self.scratch_seeded(0)
+    }
+
+    /// Per-worker scratch with an explicit PRNG seed. Ops that draw
+    /// randomness (dropout masks) draw from these thread-private streams,
+    /// so every CHAOS worker passes a distinct seed and masks
+    /// independently with no shared state.
+    pub fn scratch_seeded(&self, seed: u64) -> Scratch {
         let acts: Vec<Vec<f32>> = self.dims.iter().map(|d| vec![0.0; d.out_len()]).collect();
-        let switches: Vec<Vec<u32>> = self
-            .dims
-            .iter()
-            .map(|d| match d.spec {
-                LayerSpec::MaxPool { .. } => vec![0u32; d.out_len()],
-                _ => Vec::new(),
-            })
-            .collect();
+        let aux: Vec<Vec<u32>> = self.ops.iter().map(|op| vec![0u32; op.aux_len()]).collect();
+        let rngs: Vec<Pcg32> =
+            (0..self.ops.len()).map(|l| Pcg32::new(seed, l as u64)).collect();
         let max_act = self.dims.iter().map(|d| d.out_len()).max().unwrap_or(0);
         let max_params = self.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
         Scratch {
             acts,
-            switches,
+            aux,
+            rngs,
+            train_mode: false,
             delta_a: vec![0.0; max_act],
             delta_b: vec![0.0; max_act],
             param_buf: vec![0.0; max_params],
@@ -106,59 +137,27 @@ impl Network {
 
         for l in 1..n_layers {
             let d = &self.dims[l];
+            let op = &self.ops[l];
             let t0 = timers.map(|_| Instant::now());
+            let pc = d.param_count();
+            let pbuf = &mut scratch.param_buf[..pc];
+            if pc > 0 {
+                params.load(d.params.clone(), pbuf);
+            }
             // Split so we can borrow acts[l-1] and acts[l] simultaneously.
             let (prev_acts, rest) = scratch.acts.split_at_mut(l);
-            let input = &prev_acts[l - 1];
-            let out = &mut rest[0];
-            let class = match d.spec {
-                LayerSpec::Input { .. } => unreachable!("input after layer 0"),
-                LayerSpec::Conv { maps, kernel } => {
-                    let shape = ConvShape {
-                        in_maps: d.in_maps,
-                        in_side: d.in_side,
-                        out_maps: maps,
-                        out_side: d.out_side,
-                        kernel,
-                    };
-                    let pbuf = &mut scratch.param_buf[..d.param_count()];
-                    params.load(d.params.clone(), pbuf);
-                    let (w, b) = pbuf.split_at(d.weights);
-                    conv_forward(&shape, input, w, b, out);
-                    apply_scaled_tanh(out);
-                    LayerClass::ConvForward
-                }
-                LayerSpec::MaxPool { kernel } => {
-                    let shape = PoolShape {
-                        maps: d.in_maps,
-                        in_side: d.in_side,
-                        out_side: d.out_side,
-                        kernel,
-                    };
-                    pool_forward(&shape, input, out, &mut scratch.switches[l]);
-                    LayerClass::PoolForward
-                }
-                LayerSpec::FullyConnected { neurons } => {
-                    let shape = FcShape { inputs: d.in_maps, outputs: neurons };
-                    let pbuf = &mut scratch.param_buf[..d.param_count()];
-                    params.load(d.params.clone(), pbuf);
-                    let (w, b) = pbuf.split_at(d.weights);
-                    fc_forward(&shape, input, w, b, out);
-                    apply_scaled_tanh(out);
-                    LayerClass::FcForward
-                }
-                LayerSpec::Output { classes } => {
-                    let shape = FcShape { inputs: d.in_maps, outputs: classes };
-                    let pbuf = &mut scratch.param_buf[..d.param_count()];
-                    params.load(d.params.clone(), pbuf);
-                    let (w, b) = pbuf.split_at(d.weights);
-                    fc_forward(&shape, input, w, b, out);
-                    softmax(out);
-                    LayerClass::OutputForward
-                }
-            };
+            op.forward(
+                &scratch.param_buf[..pc],
+                &prev_acts[l - 1],
+                &mut rest[0],
+                &mut OpScratch {
+                    aux: &mut scratch.aux[l],
+                    rng: &mut scratch.rngs[l],
+                    train: scratch.train_mode,
+                },
+            );
             if let (Some(t), Some(start)) = (timers, t0) {
-                t.add(class, start.elapsed().as_nanos() as u64);
+                t.add(op.class(false), start.elapsed().as_nanos() as u64);
             }
         }
         &scratch.acts[n_layers - 1]
@@ -189,7 +188,8 @@ impl Network {
         let n_layers = self.dims.len();
         debug_assert!(label < self.num_classes());
 
-        // delta at the output layer: softmax + cross-entropy ⇒ p − onehot
+        // Delta at the output layer: softmax + cross-entropy ⇒ p − onehot
+        // (already the pre-activation delta — the output op's contract).
         {
             let probs = scratch.acts.last().unwrap();
             let delta = &mut scratch.delta_a[..probs.len()];
@@ -197,100 +197,43 @@ impl Network {
             delta[label] -= 1.0;
         }
 
-        // Walking back: `delta_a[..d.out_len()]` holds ∂L/∂(pre-activation)
-        // for conv/fc/output layers and ∂L/∂(output) for pool layers.
+        // Walking back: on entry to layer l, `delta_a[..d.out_len()]` holds
+        // ∂L/∂(output of layer l); the op converts to its pre-activation
+        // delta itself and writes ∂L/∂(its input) into `delta_b`.
         for l in (1..n_layers).rev() {
-            let d = self.dims[l].clone();
+            let d = &self.dims[l];
+            let op = &self.ops[l];
             let t0 = timers.map(|_| Instant::now());
             let is_first = l == 1; // layer below is the input layer
-            let input_len = d.in_len();
-
-            let class = match d.spec {
-                LayerSpec::Input { .. } => unreachable!(),
-                LayerSpec::Conv { maps, kernel } => {
-                    let shape = ConvShape {
-                        in_maps: d.in_maps,
-                        in_side: d.in_side,
-                        out_maps: maps,
-                        out_side: d.out_side,
-                        kernel,
-                    };
-                    let pbuf = &mut scratch.param_buf[..d.param_count()];
-                    params.load(d.params.clone(), pbuf);
-                    let (w, _b) = pbuf.split_at(d.weights);
-                    let gbuf = &mut scratch.grad_buf[..d.param_count()];
-                    gbuf.fill(0.0);
-                    let (wg, bg) = gbuf.split_at_mut(d.weights);
-                    let delta = &scratch.delta_a[..d.out_len()];
-                    let dinput: &mut [f32] = if is_first {
-                        &mut []
-                    } else {
-                        &mut scratch.delta_b[..input_len]
-                    };
-                    conv_backward(&shape, &scratch.acts[l - 1], w, delta, wg, bg, dinput);
-                    on_grads(l, &d, &scratch.grad_buf[..d.param_count()]);
-                    LayerClass::ConvBackward
-                }
-                LayerSpec::MaxPool { kernel } => {
-                    let shape = PoolShape {
-                        maps: d.in_maps,
-                        in_side: d.in_side,
-                        out_side: d.out_side,
-                        kernel,
-                    };
-                    let delta = &scratch.delta_a[..d.out_len()];
-                    pool_backward(
-                        &shape,
-                        delta,
-                        &scratch.switches[l],
-                        &mut scratch.delta_b[..input_len],
-                    );
-                    LayerClass::PoolBackward
-                }
-                LayerSpec::FullyConnected { neurons } | LayerSpec::Output { classes: neurons } => {
-                    let shape = FcShape { inputs: d.in_maps, outputs: neurons };
-                    let pbuf = &mut scratch.param_buf[..d.param_count()];
-                    params.load(d.params.clone(), pbuf);
-                    let (w, _b) = pbuf.split_at(d.weights);
-                    let gbuf = &mut scratch.grad_buf[..d.param_count()];
-                    gbuf.fill(0.0);
-                    let (wg, bg) = gbuf.split_at_mut(d.weights);
-                    let delta = &scratch.delta_a[..d.out_len()];
-                    let dinput: &mut [f32] = if is_first {
-                        &mut []
-                    } else {
-                        &mut scratch.delta_b[..input_len]
-                    };
-                    fc_backward(&shape, &scratch.acts[l - 1], w, delta, wg, bg, dinput);
-                    on_grads(l, &d, &scratch.grad_buf[..d.param_count()]);
-                    if matches!(d.spec, LayerSpec::Output { .. }) {
-                        LayerClass::OutputBackward
-                    } else {
-                        LayerClass::FcBackward
-                    }
-                }
-            };
-
-            // Convert ∂L/∂(output of layer l−1) into ∂L/∂(pre-activation)
-            // when layer l−1 owns a tanh; pools pass through unchanged.
+            let pc = d.param_count();
+            let pbuf = &mut scratch.param_buf[..pc];
+            if pc > 0 {
+                params.load(d.params.clone(), pbuf);
+            }
+            scratch.grad_buf[..pc].fill(0.0);
+            let delta_in: &mut [f32] =
+                if is_first { &mut [] } else { &mut scratch.delta_b[..d.in_len()] };
+            op.backward(
+                &scratch.param_buf[..pc],
+                Acts { input: &scratch.acts[l - 1], output: &scratch.acts[l] },
+                &mut scratch.delta_a[..d.out_len()],
+                delta_in,
+                &mut scratch.grad_buf[..pc],
+                &mut OpScratch {
+                    aux: &mut scratch.aux[l],
+                    rng: &mut scratch.rngs[l],
+                    train: scratch.train_mode,
+                },
+            );
+            if pc > 0 {
+                on_grads(l, d, &scratch.grad_buf[..pc]);
+            }
             if !is_first {
-                let prev_spec = self.dims[l - 1].spec;
-                let prev_has_tanh = matches!(
-                    prev_spec,
-                    LayerSpec::Conv { .. } | LayerSpec::FullyConnected { .. }
-                );
-                if prev_has_tanh {
-                    let prev_acts = &scratch.acts[l - 1];
-                    let din = &mut scratch.delta_b[..input_len];
-                    for (dv, &y) in din.iter_mut().zip(prev_acts.iter()) {
-                        *dv *= scaled_tanh_deriv_from_y(y);
-                    }
-                }
                 std::mem::swap(&mut scratch.delta_a, &mut scratch.delta_b);
             }
 
             if let (Some(t), Some(start)) = (timers, t0) {
-                t.add(class, start.elapsed().as_nanos() as u64);
+                t.add(op.class(true), start.elapsed().as_nanos() as u64);
             }
         }
     }
@@ -315,6 +258,8 @@ impl Network {
         let ptr = params.as_mut_ptr();
         let len = params.len();
         let src = ParamsPtr(ptr, len);
+        let was_training = scratch.train_mode;
+        scratch.train_mode = true;
         let probs = self.forward(&src, image, scratch, timers);
         let loss = cross_entropy(probs, label);
         let correct = crate::tensor::argmax(probs) == label;
@@ -328,6 +273,7 @@ impl Network {
                 *w -= eta * g;
             }
         });
+        scratch.train_mode = was_training;
         (loss, correct)
     }
 }
@@ -346,15 +292,22 @@ impl ParamSource for ParamsPtr {
     }
 }
 
-/// Per-worker mutable state: activations, pool switches, delta ping-pong
-/// buffers, and staging buffers for on-demand parameter reads and per-layer
-/// gradient accumulation. Everything here is thread-private in CHAOS
-/// (§4.2(5): "most of the variables thread private to achieve data
-/// locality").
+/// Per-worker mutable state: activations, per-op auxiliary words (pool
+/// switches, dropout masks), per-op PRNG streams, delta ping-pong buffers,
+/// and staging buffers for on-demand parameter reads and per-layer gradient
+/// accumulation. Everything here is thread-private in CHAOS (§4.2(5):
+/// "most of the variables thread private to achieve data locality").
 #[derive(Debug, Clone)]
 pub struct Scratch {
     pub acts: Vec<Vec<f32>>,
-    pub switches: Vec<Vec<u32>>,
+    /// Auxiliary per-op `u32` words (see [`LayerOp::aux_len`]).
+    pub aux: Vec<Vec<u32>>,
+    /// Per-op thread-private PRNG streams (dropout masks).
+    pub rngs: Vec<Pcg32>,
+    /// Whether forward/backward run as a training pass (dropout masks
+    /// active). `sgd_step` and the trainer's workers set this; evaluation
+    /// leaves it false.
+    pub train_mode: bool,
     delta_a: Vec<f32>,
     delta_b: Vec<f32>,
     param_buf: Vec<f32>,
@@ -366,12 +319,21 @@ impl Scratch {
     pub fn probs(&self) -> &[f32] {
         self.acts.last().unwrap()
     }
+
+    /// Reset every per-op PRNG stream to a fixed seed — a fixed-mask knob
+    /// for tests (gradient checks reseed before every forward so dropout
+    /// draws the same mask).
+    pub fn reseed(&mut self, seed: u64) {
+        for (l, rng) in self.rngs.iter_mut().enumerate() {
+            *rng = Pcg32::new(seed, l as u64);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ArchSpec;
+    use crate::config::{Act, ArchSpec, LayerSpec};
     use crate::util::Pcg32;
 
     fn tiny_arch() -> ArchSpec {
@@ -394,6 +356,18 @@ mod tests {
         let sum: f32 = probs.iter().sum();
         assert!((sum - 1.0).abs() < 1e-5, "softmax sums to 1, got {sum}");
         assert!(probs.iter().all(|&p| p >= 0.0));
+    }
+
+    #[test]
+    fn compiled_ops_mirror_dims() {
+        for name in ["tiny", "small", "medium", "large"] {
+            let net = Network::from_name(name).unwrap();
+            assert_eq!(net.ops.len(), net.dims.len());
+            for (op, d) in net.ops.iter().zip(&net.dims).skip(1) {
+                assert_eq!(op.param_range(), d.params, "{name}: {}", op.kind());
+                assert_eq!(op.out_shape().len(), d.out_len(), "{name}: {}", op.kind());
+            }
+        }
     }
 
     #[test]
@@ -446,6 +420,133 @@ mod tests {
             }
         }
         assert!(checked >= 24);
+    }
+
+    #[test]
+    fn full_network_gradcheck_mixed_new_ops() {
+        // Gradcheck over an architecture exercising every op the open API
+        // shipped with: padded + strided conv, ReLU activations (conv and
+        // fc), average pooling, and dropout with a fixed mask.
+        let arch = ArchSpec {
+            name: "mixed".into(),
+            layers: vec![
+                LayerSpec::Input { side: 13 },
+                LayerSpec::conv_ex(5, 4, 1, 1, Act::Relu), // (13+2-4)+1 = 12
+                LayerSpec::AvgPool { kernel: 2 },          // 6
+                LayerSpec::conv_ex(6, 2, 2, 0, Act::ScaledTanh), // (6-2)/2+1 = 3
+                LayerSpec::Dropout { rate: 0.3 },          // 3
+                LayerSpec::fc_act(12, Act::Relu),
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        let net = Network::new(arch);
+        let mut params = net.init_params(11);
+        let mut scratch = net.scratch();
+        // Train mode with a reseed before every pass → the dropout mask is
+        // fixed across the analytic and both finite-difference passes.
+        scratch.train_mode = true;
+        let mut rng = Pcg32::seeded(12);
+        let img = rand_image(&mut rng, 13 * 13);
+        let label = 6usize;
+
+        scratch.reseed(0xA5);
+        net.forward(&params.as_slice(), &img, &mut scratch, None);
+        let mut analytic = vec![0.0f32; net.total_params];
+        net.backward(&params.as_slice(), label, &mut scratch, None, |_, d, grads| {
+            analytic[d.params.clone()].copy_from_slice(grads);
+        });
+
+        let h = 1e-3f32;
+        let mut rng2 = Pcg32::seeded(77);
+        let mut checked = 0;
+        for d in net.dims.clone() {
+            if d.param_count() == 0 {
+                continue;
+            }
+            for _ in 0..8 {
+                let idx = d.params.start + rng2.range(0, d.param_count());
+                let orig = params[idx];
+                params[idx] = orig + h;
+                scratch.reseed(0xA5);
+                net.forward(&params.as_slice(), &img, &mut scratch, None);
+                let lp = net.loss(&scratch, label) as f64;
+                params[idx] = orig - h;
+                scratch.reseed(0xA5);
+                net.forward(&params.as_slice(), &img, &mut scratch, None);
+                let lm = net.loss(&scratch, label) as f64;
+                params[idx] = orig;
+                let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+                let an = analytic[idx];
+                // ReLU kinks near zero make FD noisier than the tanh net.
+                assert!(
+                    (fd - an).abs() < 6e-3 + 0.06 * fd.abs().max(an.abs()),
+                    "param {idx} (layer {:?}): fd={fd} analytic={an}",
+                    d.spec
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 32);
+    }
+
+    #[test]
+    fn dropout_is_identity_outside_training() {
+        let arch = ArchSpec {
+            name: "drop".into(),
+            layers: vec![
+                LayerSpec::Input { side: 6 },
+                LayerSpec::conv(2, 3), // 4x4
+                LayerSpec::Dropout { rate: 0.5 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        let net = Network::new(arch);
+        let params = net.init_params(1);
+        let mut scratch = net.scratch();
+        let mut rng = Pcg32::seeded(2);
+        let img = rand_image(&mut rng, 36);
+        // Eval mode: two passes agree bitwise (no stochastic masking) and
+        // dropout passes activations through unchanged.
+        let p1 = net.forward(&params.as_slice(), &img, &mut scratch, None).to_vec();
+        assert_eq!(scratch.acts[1], scratch.acts[2], "eval dropout must be identity");
+        let p2 = net.forward(&params.as_slice(), &img, &mut scratch, None).to_vec();
+        assert_eq!(p1, p2);
+        // Train mode: some activations are dropped, survivors are scaled.
+        scratch.train_mode = true;
+        net.forward(&params.as_slice(), &img, &mut scratch, None);
+        let dropped = scratch.acts[2].iter().filter(|&&v| v == 0.0).count();
+        assert!(dropped > 0, "rate-0.5 dropout should zero something over 16 values");
+        for (y, x) in scratch.acts[2].iter().zip(&scratch.acts[1]) {
+            assert!(*y == 0.0 || (*y - x * 2.0).abs() < 1e-6, "survivor not scaled by 1/(1-p)");
+        }
+    }
+
+    #[test]
+    fn worker_seeds_give_independent_dropout_masks() {
+        let arch = ArchSpec {
+            name: "drop".into(),
+            layers: vec![
+                LayerSpec::Input { side: 6 },
+                LayerSpec::conv(3, 3), // 4x4 x3 maps
+                LayerSpec::Dropout { rate: 0.5 },
+                LayerSpec::Output { classes: 10 },
+            ],
+            paper_epochs: 1,
+        };
+        let net = Network::new(arch);
+        let params = net.init_params(1);
+        let mut rng = Pcg32::seeded(9);
+        let img = rand_image(&mut rng, 36);
+        let mask_of = |seed: u64| {
+            let mut s = net.scratch_seeded(seed);
+            s.train_mode = true;
+            net.forward(&params.as_slice(), &img, &mut s, None);
+            s.aux[2].clone()
+        };
+        assert_eq!(mask_of(1), mask_of(1), "same seed → same mask");
+        assert_ne!(mask_of(1), mask_of(2), "different workers → different masks");
     }
 
     #[test]

@@ -1,9 +1,10 @@
-//! Max-pooling layer (kernel k, stride k — LeNet-style non-overlapping
-//! windows; the large network's 1×1 pooling degenerates to identity).
+//! Pooling layers (kernel k, stride k — LeNet-style non-overlapping
+//! windows; the large network's 1×1 max pooling degenerates to identity).
 //!
-//! Forward records the argmax position of every window so backward can
-//! route deltas to the winning input ("switches", as in the original
-//! LeNet/Cireşan code).
+//! Max-pool forward records the argmax position of every window so backward
+//! can route deltas to the winning input ("switches", as in the original
+//! LeNet/Cireşan code). Average pooling needs no switches: backward spreads
+//! each delta uniformly over its window.
 
 /// Geometry for one pooling layer.
 #[derive(Debug, Clone, Copy)]
@@ -76,6 +77,65 @@ pub fn pool_backward(s: &PoolShape, delta: &[f32], switches: &[u32], dinput: &mu
     dinput.fill(0.0);
     for (o, &d) in delta.iter().enumerate() {
         dinput[switches[o] as usize] += d;
+    }
+}
+
+/// Forward average-pool: each output is the mean of its window.
+pub fn avg_pool_forward(s: &PoolShape, input: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(input.len(), s.in_len());
+    debug_assert_eq!(out.len(), s.out_len());
+
+    let k = s.kernel;
+    let is = s.in_side;
+    let os = s.out_side;
+    let imap = is * is;
+    let omap = os * os;
+    let inv = 1.0 / (k * k) as f32;
+
+    for m in 0..s.maps {
+        let in_map = &input[m * imap..(m + 1) * imap];
+        for oy in 0..os {
+            for ox in 0..os {
+                let mut sum = 0.0f32;
+                for ky in 0..k {
+                    let row = (oy * k + ky) * is + ox * k;
+                    for kx in 0..k {
+                        sum += in_map[row + kx];
+                    }
+                }
+                out[m * omap + oy * os + ox] = sum * inv;
+            }
+        }
+    }
+}
+
+/// Backward average-pool: spread each output delta uniformly over its
+/// window. `dinput` is overwritten.
+pub fn avg_pool_backward(s: &PoolShape, delta: &[f32], dinput: &mut [f32]) {
+    debug_assert_eq!(delta.len(), s.out_len());
+    debug_assert_eq!(dinput.len(), s.in_len());
+
+    let k = s.kernel;
+    let is = s.in_side;
+    let os = s.out_side;
+    let imap = is * is;
+    let omap = os * os;
+    let inv = 1.0 / (k * k) as f32;
+
+    dinput.fill(0.0);
+    for m in 0..s.maps {
+        let din_map = &mut dinput[m * imap..(m + 1) * imap];
+        for oy in 0..os {
+            for ox in 0..os {
+                let d = delta[m * omap + oy * os + ox] * inv;
+                for ky in 0..k {
+                    let row = (oy * k + ky) * is + ox * k;
+                    for kx in 0..k {
+                        din_map[row + kx] += d;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -197,6 +257,45 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn avg_forward_known_values() {
+        let s = PoolShape::new(1, 4, 2);
+        #[rustfmt::skip]
+        let input = [
+            1.0, 2.0,   5.0, 1.0,
+            3.0, 4.0,   0.0, 2.0,
+            9.0, 0.0,   1.0, 1.0,
+            0.0, 0.0,   1.0, 8.0,
+        ];
+        let mut out = [0.0; 4];
+        avg_pool_forward(&s, &input, &mut out);
+        assert_eq!(out, [2.5, 2.0, 2.25, 2.75]);
+    }
+
+    #[test]
+    fn avg_backward_spreads_uniformly_and_conserves_mass() {
+        let mut rng = Pcg32::seeded(4);
+        let s = PoolShape::new(2, 6, 3);
+        let delta: Vec<f32> = (0..s.out_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut din = vec![0.0; s.in_len()];
+        avg_pool_backward(&s, &delta, &mut din);
+        let sum_d: f32 = delta.iter().sum();
+        let sum_i: f32 = din.iter().sum();
+        assert!((sum_d - sum_i).abs() < 1e-4, "delta mass must be conserved");
+        // Every input in one window gets delta/k².
+        assert!((din[0] - delta[0] / 9.0).abs() < 1e-6);
+        assert!((din[2 * 6 + 1] - delta[0] / 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn avg_identity_pool_is_identity() {
+        let s = PoolShape::new(2, 3, 1);
+        let input: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let mut out = vec![0.0; 18];
+        avg_pool_forward(&s, &input, &mut out);
+        assert_eq!(out, input);
     }
 
     #[test]

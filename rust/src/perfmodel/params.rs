@@ -117,21 +117,29 @@ impl LayerCosts {
         let dims = compute_dims(arch);
         let per_layer = dims
             .iter()
-            .map(|d| match d.spec {
+            .map(|d| match &d.spec {
                 LayerSpec::Input { .. } => (0.0, 0.0),
-                LayerSpec::Conv { maps, kernel } => {
+                LayerSpec::Conv { maps, kernel, .. } => {
                     let macs =
                         (maps * d.out_side * d.out_side * d.in_maps * kernel * kernel) as f64;
                     // backward = weight grads + input deltas ≈ 2× forward
                     (macs, 2.0 * macs)
                 }
-                LayerSpec::MaxPool { kernel } => {
+                LayerSpec::MaxPool { kernel } | LayerSpec::AvgPool { kernel } => {
                     let cmp = (d.out_len() * kernel * kernel) as f64;
                     (cmp, d.out_len() as f64)
                 }
                 LayerSpec::FullyConnected { .. } | LayerSpec::Output { .. } => {
                     let macs = (d.in_maps * d.out_maps) as f64;
                     (macs, 2.0 * macs)
+                }
+                // Elementwise pass over the outputs.
+                LayerSpec::Dropout { .. } => (d.out_len() as f64, d.out_len() as f64),
+                // No structural knowledge: weight count (if any) or an
+                // elementwise pass is the best generic MAC proxy.
+                LayerSpec::Custom { .. } => {
+                    let ops = d.weights.max(d.out_len()) as f64;
+                    (ops, 2.0 * ops)
                 }
             })
             .collect();

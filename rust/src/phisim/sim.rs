@@ -120,7 +120,7 @@ impl SimResult {
         use crate::config::LayerSpec;
         let mut out = LayerClassSecs::default();
         for (d, b) in self.dims.iter().zip(&self.layers) {
-            match d.spec {
+            match &d.spec {
                 LayerSpec::Conv { .. } => {
                     out.fpc += b.forward;
                     out.bpc += b.backward + b.publish;
@@ -129,9 +129,19 @@ impl SimResult {
                     out.fpf += b.forward;
                     out.bpf += b.backward + b.publish;
                 }
-                LayerSpec::MaxPool { .. } => {
+                // Dropout is a parameter-free elementwise pass; fold it
+                // into the pool bucket (absent from paper archs).
+                LayerSpec::MaxPool { .. }
+                | LayerSpec::AvgPool { .. }
+                | LayerSpec::Dropout { .. } => {
                     out.pool_fwd += b.forward;
                     out.pool_bwd += b.backward;
+                }
+                // Custom kinds may own parameters, so their CHAOS
+                // publication time must stay in the totals.
+                LayerSpec::Custom { .. } => {
+                    out.pool_fwd += b.forward;
+                    out.pool_bwd += b.backward + b.publish;
                 }
                 LayerSpec::Input { .. } => {}
             }

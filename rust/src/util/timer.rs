@@ -24,10 +24,13 @@ impl Stopwatch {
     }
 }
 
-/// The four layer-time classes the paper reports (Table 5): forward and
-/// backward, split into convolutional and fully-connected. Pooling is folded
-/// into its adjacent class in Table 5; we track it separately and let the
-/// harness aggregate.
+/// Per-op-kind time classes. The first eight are the classes the paper's
+/// evaluation reports (Table 5 splits forward/backward into convolutional
+/// and fully-connected; pooling is folded into its adjacent class there —
+/// we track it separately and let the harness aggregate). Max- and
+/// average-pooling share the pool classes; dropout/identity ops get their
+/// own pair; layer kinds registered from user code default to the `Other`
+/// pair unless their ops override [`crate::nn::LayerOp::class`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerClass {
     ConvForward,
@@ -38,9 +41,13 @@ pub enum LayerClass {
     FcBackward,
     OutputForward,
     OutputBackward,
+    DropoutForward,
+    DropoutBackward,
+    OtherForward,
+    OtherBackward,
 }
 
-pub const LAYER_CLASSES: [LayerClass; 8] = [
+pub const LAYER_CLASSES: [LayerClass; 12] = [
     LayerClass::ConvForward,
     LayerClass::ConvBackward,
     LayerClass::PoolForward,
@@ -49,6 +56,10 @@ pub const LAYER_CLASSES: [LayerClass; 8] = [
     LayerClass::FcBackward,
     LayerClass::OutputForward,
     LayerClass::OutputBackward,
+    LayerClass::DropoutForward,
+    LayerClass::DropoutBackward,
+    LayerClass::OtherForward,
+    LayerClass::OtherBackward,
 ];
 
 impl LayerClass {
@@ -62,6 +73,10 @@ impl LayerClass {
             LayerClass::FcBackward => 5,
             LayerClass::OutputForward => 6,
             LayerClass::OutputBackward => 7,
+            LayerClass::DropoutForward => 8,
+            LayerClass::DropoutBackward => 9,
+            LayerClass::OtherForward => 10,
+            LayerClass::OtherBackward => 11,
         }
     }
 
@@ -75,6 +90,10 @@ impl LayerClass {
             LayerClass::FcBackward => "fc/bwd",
             LayerClass::OutputForward => "out/fwd",
             LayerClass::OutputBackward => "out/bwd",
+            LayerClass::DropoutForward => "drop/fwd",
+            LayerClass::DropoutBackward => "drop/bwd",
+            LayerClass::OtherForward => "other/fwd",
+            LayerClass::OtherBackward => "other/bwd",
         }
     }
 }
@@ -83,7 +102,7 @@ impl LayerClass {
 /// workers (relaxed atomics: we only need sum integrity, not ordering).
 #[derive(Debug, Default)]
 pub struct LayerTimes {
-    nanos: [AtomicU64; 8],
+    nanos: [AtomicU64; 12],
 }
 
 impl LayerTimes {

@@ -1,0 +1,383 @@
+//! Acceptance coverage for the open layer API.
+//!
+//! 1. **Bit-parity**: a frozen reimplementation of the enum-era
+//!    orchestrator (the closed `match`-on-`LayerSpec` dispatch that
+//!    `Network::forward`/`backward` shipped before the `LayerOp` pipeline),
+//!    built on the same public kernels, must produce *bit-identical*
+//!    probabilities, per-layer gradients and SGD trajectories on every
+//!    paper architecture at threads=1.
+//! 2. **Openness**: a layer kind registered at runtime from this (external)
+//!    test crate trains end-to-end through `chaos::Trainer` under every
+//!    registered update policy — no crate-internal changes.
+
+use chaos_phi::chaos::{policy, Trainer};
+use chaos_phi::config::{Act, ArchSpec, LayerSpec, TrainConfig};
+use chaos_phi::data::{generate_synthetic, SynthConfig};
+use chaos_phi::nn::activation::{apply_scaled_tanh, scaled_tanh_deriv_from_y, softmax};
+use chaos_phi::nn::conv::{conv_backward, conv_forward, ConvShape};
+use chaos_phi::nn::fc::{fc_backward, fc_forward, FcShape};
+use chaos_phi::nn::layer::{self, LayerCtx, LayerKind};
+use chaos_phi::nn::pool::{pool_backward, pool_forward, PoolShape};
+use chaos_phi::nn::{Acts, LayerDims, LayerOp, Network, OpScratch, Shape};
+use chaos_phi::util::Pcg32;
+use std::ops::Range;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// The frozen enum-era reference implementation (paper layer kinds only).
+// ---------------------------------------------------------------------------
+
+struct Legacy<'a> {
+    dims: &'a [LayerDims],
+    acts: Vec<Vec<f32>>,
+    switches: Vec<Vec<u32>>,
+    delta_a: Vec<f32>,
+    delta_b: Vec<f32>,
+}
+
+fn conv_shape(d: &LayerDims, maps: usize, kernel: usize) -> ConvShape {
+    ConvShape {
+        in_maps: d.in_maps,
+        in_side: d.in_side,
+        out_maps: maps,
+        out_side: d.out_side,
+        kernel,
+    }
+}
+
+impl<'a> Legacy<'a> {
+    fn new(dims: &'a [LayerDims]) -> Legacy<'a> {
+        let max_act = dims.iter().map(|d| d.out_len()).max().unwrap();
+        Legacy {
+            dims,
+            acts: dims.iter().map(|d| vec![0.0; d.out_len()]).collect(),
+            switches: dims
+                .iter()
+                .map(|d| match d.spec {
+                    LayerSpec::MaxPool { .. } => vec![0u32; d.out_len()],
+                    _ => Vec::new(),
+                })
+                .collect(),
+            delta_a: vec![0.0; max_act],
+            delta_b: vec![0.0; max_act],
+        }
+    }
+
+    /// The pre-refactor forward: one `match` per layer.
+    fn forward(&mut self, params: &[f32], image: &[f32]) -> &[f32] {
+        self.acts[0].copy_from_slice(image);
+        for l in 1..self.dims.len() {
+            let d = &self.dims[l];
+            let (prev, rest) = self.acts.split_at_mut(l);
+            let input = &prev[l - 1];
+            let out = &mut rest[0];
+            match d.spec {
+                LayerSpec::Conv { maps, kernel, stride, pad, act } => {
+                    assert_eq!((stride, pad, act), (1, 0, Act::ScaledTanh), "paper conv only");
+                    let p = &params[d.params.clone()];
+                    let (w, b) = p.split_at(d.weights);
+                    conv_forward(&conv_shape(d, maps, kernel), input, w, b, out);
+                    apply_scaled_tanh(out);
+                }
+                LayerSpec::MaxPool { kernel } => {
+                    let shape = PoolShape {
+                        maps: d.in_maps,
+                        in_side: d.in_side,
+                        out_side: d.out_side,
+                        kernel,
+                    };
+                    pool_forward(&shape, input, out, &mut self.switches[l]);
+                }
+                LayerSpec::FullyConnected { neurons, act } => {
+                    assert_eq!(act, Act::ScaledTanh, "paper fc only");
+                    let shape = FcShape { inputs: d.in_maps, outputs: neurons };
+                    let p = &params[d.params.clone()];
+                    let (w, b) = p.split_at(d.weights);
+                    fc_forward(&shape, input, w, b, out);
+                    apply_scaled_tanh(out);
+                }
+                LayerSpec::Output { classes } => {
+                    let shape = FcShape { inputs: d.in_maps, outputs: classes };
+                    let p = &params[d.params.clone()];
+                    let (w, b) = p.split_at(d.weights);
+                    fc_forward(&shape, input, w, b, out);
+                    softmax(out);
+                }
+                ref other => panic!("legacy reference cannot run {other:?}"),
+            }
+        }
+        self.acts.last().unwrap()
+    }
+
+    /// The pre-refactor backward: delta seeded with p − onehot, one `match`
+    /// per layer walking back, the *previous* layer's tanh derivative
+    /// applied after each step, grads emitted per parameterized layer.
+    fn backward(&mut self, params: &mut [f32], label: usize, eta: Option<f32>) -> Vec<f32> {
+        let n = self.dims.len();
+        let mut all_grads = vec![0.0f32; self.dims.last().unwrap().params.end];
+        {
+            let probs = self.acts.last().unwrap();
+            let delta = &mut self.delta_a[..probs.len()];
+            delta.copy_from_slice(probs);
+            delta[label] -= 1.0;
+        }
+        for l in (1..n).rev() {
+            let d = self.dims[l].clone();
+            let is_first = l == 1;
+            let input_len = d.in_len();
+            match d.spec {
+                LayerSpec::Conv { maps, kernel, .. } => {
+                    let p: Vec<f32> = params[d.params.clone()].to_vec();
+                    let (w, _b) = p.split_at(d.weights);
+                    let gbuf = &mut all_grads[d.params.clone()];
+                    let (wg, bg) = gbuf.split_at_mut(d.weights);
+                    let delta = &self.delta_a[..d.out_len()];
+                    let dinput: &mut [f32] =
+                        if is_first { &mut [] } else { &mut self.delta_b[..input_len] };
+                    conv_backward(
+                        &conv_shape(&d, maps, kernel),
+                        &self.acts[l - 1],
+                        w,
+                        delta,
+                        wg,
+                        bg,
+                        dinput,
+                    );
+                    if let Some(eta) = eta {
+                        // The sequential engine's instant local update.
+                        for (w, g) in params[d.params.clone()].iter_mut().zip(gbuf.iter()) {
+                            *w -= eta * g;
+                        }
+                    }
+                }
+                LayerSpec::MaxPool { kernel } => {
+                    let shape = PoolShape {
+                        maps: d.in_maps,
+                        in_side: d.in_side,
+                        out_side: d.out_side,
+                        kernel,
+                    };
+                    let delta = &self.delta_a[..d.out_len()];
+                    pool_backward(&shape, delta, &self.switches[l], &mut self.delta_b[..input_len]);
+                }
+                LayerSpec::FullyConnected { neurons: outs, .. }
+                | LayerSpec::Output { classes: outs } => {
+                    let shape = FcShape { inputs: d.in_maps, outputs: outs };
+                    let p: Vec<f32> = params[d.params.clone()].to_vec();
+                    let (w, _b) = p.split_at(d.weights);
+                    let gbuf = &mut all_grads[d.params.clone()];
+                    let (wg, bg) = gbuf.split_at_mut(d.weights);
+                    let delta = &self.delta_a[..d.out_len()];
+                    let dinput: &mut [f32] =
+                        if is_first { &mut [] } else { &mut self.delta_b[..input_len] };
+                    fc_backward(&shape, &self.acts[l - 1], w, delta, wg, bg, dinput);
+                    if let Some(eta) = eta {
+                        for (w, g) in params[d.params.clone()].iter_mut().zip(gbuf.iter()) {
+                            *w -= eta * g;
+                        }
+                    }
+                }
+                ref other => panic!("legacy reference cannot run {other:?}"),
+            }
+            if !is_first {
+                let prev_has_tanh = matches!(
+                    self.dims[l - 1].spec,
+                    LayerSpec::Conv { .. } | LayerSpec::FullyConnected { .. }
+                );
+                if prev_has_tanh {
+                    let prev_acts = &self.acts[l - 1];
+                    let din = &mut self.delta_b[..input_len];
+                    for (dv, &y) in din.iter_mut().zip(prev_acts.iter()) {
+                        *dv *= scaled_tanh_deriv_from_y(y);
+                    }
+                }
+                std::mem::swap(&mut self.delta_a, &mut self.delta_b);
+            }
+        }
+        all_grads
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn compiled_pipeline_is_bit_identical_to_enum_dispatch_on_paper_archs() {
+    for name in ["tiny", "small", "medium", "large"] {
+        let net = Network::from_name(name).unwrap();
+        let mut params = net.init_params(5);
+        let mut legacy_params = params.clone();
+        let mut scratch = net.scratch();
+        let mut legacy = Legacy::new(&net.dims);
+        let mut rng = Pcg32::seeded(31);
+        let side = net.arch.input_side();
+        let steps = if name == "large" { 2 } else { 3 };
+
+        for step in 0..steps {
+            let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let label = rng.range(0, 10);
+
+            // Forward parity (no updates).
+            let probs = net.forward(&params.as_slice(), &img, &mut scratch, None).to_vec();
+            let legacy_probs = legacy.forward(&legacy_params, &img).to_vec();
+            assert_eq!(bits(&probs), bits(&legacy_probs), "{name} step {step}: forward probs");
+
+            // Gradient parity (no updates).
+            let mut grads = vec![0.0f32; net.total_params];
+            net.backward(&params.as_slice(), label, &mut scratch, None, |_, d, g| {
+                grads[d.params.clone()].copy_from_slice(g);
+            });
+            let legacy_grads = legacy.backward(&mut legacy_params, label, None);
+            assert_eq!(bits(&grads), bits(&legacy_grads), "{name} step {step}: gradients");
+
+            // SGD trajectory parity (instant per-layer updates, the
+            // sequential engine's path).
+            let eta = 0.01;
+            net.sgd_step(&mut params, &img, label, eta, &mut scratch, None);
+            legacy.forward(&legacy_params, &img);
+            legacy.backward(&mut legacy_params, label, Some(eta));
+            assert_eq!(
+                bits(&params),
+                bits(&legacy_params),
+                "{name} step {step}: parameters diverged after sgd_step"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Openness: a runtime-registered kind trains under every policy.
+// ---------------------------------------------------------------------------
+
+/// Elementwise abs layer: y = |x| (derivative from y is sign-of-input,
+/// recoverable from the stored input).
+struct AbsKind;
+
+#[derive(Debug)]
+struct AbsOp {
+    shape: Shape,
+}
+
+impl LayerKind for AbsKind {
+    fn name(&self) -> &'static str {
+        "abs"
+    }
+
+    fn from_json(&self, _body: &chaos_phi::util::Json) -> anyhow::Result<LayerSpec> {
+        Ok(LayerSpec::custom("abs", vec![]))
+    }
+
+    fn to_json(&self, _spec: &LayerSpec) -> chaos_phi::util::Json {
+        chaos_phi::util::Json::obj(vec![])
+    }
+
+    fn out_shape(
+        &self,
+        _spec: &LayerSpec,
+        input: Shape,
+        _ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        Ok(input)
+    }
+
+    fn compile(&self, _spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        Ok(Box::new(AbsOp {
+            shape: Shape { maps: dims.out_maps, side: dims.out_side, flat: dims.flat },
+        }))
+    }
+}
+
+impl LayerOp for AbsOp {
+    fn kind(&self) -> &'static str {
+        "abs"
+    }
+
+    fn in_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn out_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        0..0
+    }
+
+    fn forward(&self, _: &[f32], input: &[f32], out: &mut [f32], _: &mut OpScratch<'_>) {
+        for (o, &x) in out.iter_mut().zip(input) {
+            *o = x.abs();
+        }
+    }
+
+    fn backward(
+        &self,
+        _: &[f32],
+        acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        _: &mut [f32],
+        _: &mut OpScratch<'_>,
+    ) {
+        if delta_in.is_empty() {
+            return;
+        }
+        for ((di, &d), &x) in delta_in.iter_mut().zip(delta_out.iter()).zip(acts.input) {
+            *di = if x < 0.0 { -d } else { d };
+        }
+    }
+}
+
+#[test]
+fn runtime_registered_kind_trains_under_every_policy() {
+    // Ignore the duplicate error when the test binary runs this twice.
+    let _ = layer::register(Arc::new(AbsKind));
+    assert!(layer::names().iter().any(|n| n == "abs"));
+    assert!(layer::register(Arc::new(AbsKind)).is_err(), "duplicates rejected");
+
+    let arch = ArchSpec {
+        name: "absnet".into(),
+        layers: vec![
+            LayerSpec::Input { side: 13 },
+            LayerSpec::conv(3, 4), // 10x10
+            LayerSpec::MaxPool { kernel: 2 },
+            LayerSpec::custom("abs", vec![]),
+            LayerSpec::fc(8),
+            LayerSpec::Output { classes: 10 },
+        ],
+        paper_epochs: 1,
+    };
+    // Serializes and reloads like a built-in.
+    let round = ArchSpec::from_json(&arch.to_json()).unwrap();
+    assert_eq!(arch, round);
+
+    let train_set = generate_synthetic(120, 1, &SynthConfig::default()).resize(13);
+    let test_set = generate_synthetic(40, 2, &SynthConfig::default()).resize(13);
+    for name in policy::names() {
+        let r = Trainer::new()
+            .arch(arch.clone())
+            .config(TrainConfig {
+                epochs: 2,
+                threads: 3,
+                eta0: 0.05,
+                eta_decay: 0.95,
+                seed: 42,
+                validation_fraction: 0.25,
+            })
+            .policy_name(&name)
+            .unwrap()
+            .run(&train_set, &test_set)
+            .unwrap();
+        assert_eq!(r.epochs[0].train.images, 120, "{name}: trained every image");
+        let first = &r.epochs[0];
+        let last = r.epochs.last().unwrap();
+        assert!(last.train.loss.is_finite() && last.train.loss > 0.0, "{name}");
+        assert!(
+            last.train.loss < first.train.loss * 1.5,
+            "{name}: training is not exploding ({} -> {})",
+            first.train.loss,
+            last.train.loss
+        );
+    }
+}

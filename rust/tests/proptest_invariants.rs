@@ -21,18 +21,21 @@ fn random_arch(rng: &mut Pcg32, size: usize) -> ArchSpec {
         if kernel > side {
             break;
         }
-        layers.push(LayerSpec::Conv { maps: 1 + rng.range(0, 4), kernel });
+        layers.push(LayerSpec::conv(1 + rng.range(0, 4), kernel));
         side = side - kernel + 1;
-        // pool with a divisor kernel
-        let divisors: Vec<usize> = (1..=side.min(3)).filter(|d| side % d == 0).collect();
-        let k = divisors[rng.range(0, divisors.len())];
-        layers.push(LayerSpec::MaxPool { kernel: k });
-        side /= k;
+        // Pool with a non-trivial divisor kernel (identity P1 pools are
+        // rejected by the validator outside the paper's "large" net).
+        let divisors: Vec<usize> = (2..=side.min(3)).filter(|d| side % d == 0).collect();
+        if !divisors.is_empty() {
+            let k = divisors[rng.range(0, divisors.len())];
+            layers.push(LayerSpec::MaxPool { kernel: k });
+            side /= k;
+        }
         if side < 3 {
             break;
         }
     }
-    layers.push(LayerSpec::FullyConnected { neurons: 1 + rng.range(0, 12) });
+    layers.push(LayerSpec::fc(1 + rng.range(0, 12)));
     layers.push(LayerSpec::Output { classes: 10 });
     ArchSpec { name: "prop".into(), layers, paper_epochs: 1 }
 }
@@ -54,10 +57,7 @@ fn gradcheck_on_random_architectures() {
             let mut params = net.init_params(*seed);
             let mut scratch = net.scratch();
             let mut rng = Pcg32::seeded(*seed ^ 0x1234);
-            let side = match arch.layers[0] {
-                LayerSpec::Input { side } => side,
-                _ => unreachable!(),
-            };
+            let side = arch.input_side();
             let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
             let label = rng.range(0, 10);
 
@@ -240,10 +240,7 @@ fn forward_probs_always_a_distribution() {
             let net = Network::new(arch.clone());
             let params = net.init_params(*seed);
             let mut scratch = net.scratch();
-            let side = match arch.layers[0] {
-                LayerSpec::Input { side } => side,
-                _ => unreachable!(),
-            };
+            let side = arch.input_side();
             let mut rng = Pcg32::seeded(*seed);
             let img: Vec<f32> = (0..side * side).map(|_| rng.uniform(-1.0, 1.0)).collect();
             let probs = net.forward(&params.as_slice(), &img, &mut scratch, None).to_vec();

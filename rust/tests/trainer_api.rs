@@ -1,6 +1,6 @@
 //! Integration coverage for the redesigned coordinator API: the `Trainer`
-//! builder, the open `UpdatePolicy` trait + registry, the observer
-//! callbacks, and the deprecated `chaos::train` shim.
+//! builder, the open `UpdatePolicy` trait + registry, and the observer
+//! callbacks.
 //!
 //! The toy-policy test is the acceptance check for the open API: a policy
 //! defined *outside* the crate, registered by name, and selected through
@@ -181,7 +181,9 @@ fn custom_policy_registers_and_runs_by_name() {
 }
 
 #[test]
-fn deprecated_train_shim_still_works() {
+fn strategy_enum_still_selects_policies_through_the_builder() {
+    // Migrated from the removed `chaos::train` shim: `Strategy` remains a
+    // parseable front-end, but every run goes through the Trainer builder.
     let net = chaos_phi::nn::Network::new(ArchSpec::tiny());
     let train_set = tiny_data(60, 9);
     let test_set = tiny_data(20, 10);
@@ -193,8 +195,12 @@ fn deprecated_train_shim_still_works() {
         seed: 1,
         validation_fraction: 0.0,
     };
-    #[allow(deprecated)]
-    let run = chaos_phi::chaos::train(&net, &train_set, &test_set, &cfg, Strategy::Chaos).unwrap();
+    let run = Trainer::new()
+        .network(net)
+        .config(cfg)
+        .policy_boxed(Strategy::Chaos.into_policy())
+        .run(&train_set, &test_set)
+        .unwrap();
     assert_eq!(run.strategy, "chaos");
     assert_eq!(run.epochs.len(), 1);
     assert!(run.publications > 0);
