@@ -1,0 +1,198 @@
+//! Bench: per-sample vs batched forward-only evaluation, plus native-serve
+//! throughput, swept over batch sizes B ∈ {1, 8, 32} on the paper "small"
+//! architecture.
+//!
+//! This is the measurement behind the batched execution stack: the batched
+//! path loads every layer's parameters once per batch (weight-stationary
+//! kernels), so images/sec should rise with B while staying bit-identical
+//! to the per-sample path (enforced by rust/tests/batch_forward.rs — this
+//! bench asserts it once more on real data as a sanity gate).
+//!
+//! Output: a markdown report on stdout **and** machine-readable
+//! `BENCH_eval.json` (schema self-checked after writing, smoke-tested in
+//! CI):
+//!
+//! ```json
+//! {
+//!   "bench": "eval_batched", "arch": "small", "images": 256,
+//!   "per_sample": {"mean_secs": s, "images_per_sec": r},
+//!   "batched": [{"batch": B, "mean_secs": s, "images_per_sec": r,
+//!                "speedup_vs_per_sample": x}, ...],
+//!   "serve": [{"batch": B, "requests": n, "clients": c, "req_per_sec": r}, ...]
+//! }
+//! ```
+//!
+//! Run: `cargo bench --bench eval_batched [-- --smoke] [-- --out FILE]`
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::data::{generate_synthetic, Dataset, SynthConfig};
+use chaos_phi::nn::Network;
+use chaos_phi::serve::{Engine, Server, ServerConfig};
+use chaos_phi::util::{Json, Stopwatch};
+
+const BATCH_SIZES: [usize; 3] = [1, 8, 32];
+
+fn eval_per_sample(net: &Network, params: &[f32], data: &Dataset) -> usize {
+    let mut scratch = net.scratch();
+    let mut errors = 0;
+    for i in 0..data.len() {
+        let probs = net.forward(&params, data.image(i), &mut scratch, None);
+        errors += usize::from(chaos_phi::tensor::argmax(probs) != data.label(i));
+    }
+    errors
+}
+
+fn eval_batched(net: &Network, params: &[f32], data: &Dataset, batch: usize) -> usize {
+    let plan = net.batch_plan(batch).unwrap();
+    let mut scratch = plan.scratch();
+    let classes = net.num_classes();
+    let mut errors = 0;
+    let mut idx = 0;
+    while idx < data.len() {
+        let b = batch.min(data.len() - idx);
+        for slot in 0..b {
+            plan.stage_image(&mut scratch, slot, data.image(idx + slot));
+        }
+        let probs = plan.forward_staged(&params, b, &mut scratch, None);
+        for (s, row) in probs.chunks_exact(classes).enumerate() {
+            errors += usize::from(chaos_phi::tensor::argmax(row) != data.label(idx + s));
+        }
+        idx += b;
+    }
+    errors
+}
+
+fn serve_throughput(net: &Network, params: &[f32], batch: usize, requests: usize) -> (f64, usize) {
+    let clients = 8usize;
+    let server = Server::spawn(
+        Engine::Native { net: net.clone(), params: params.to_vec(), batch },
+        ServerConfig { max_delay: std::time::Duration::from_millis(1), ..Default::default() },
+    )
+    .expect("native server");
+    let side = net.arch.input_side();
+    let images = generate_synthetic(requests, 17, &SynthConfig::default()).resize(side);
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let handle = server.handle();
+            let images = &images;
+            s.spawn(move || {
+                let mut i = c;
+                while i < requests {
+                    handle.predict(images.image(i)).expect("predict");
+                    i += clients;
+                }
+            });
+        }
+    });
+    (requests as f64 / sw.elapsed_secs(), clients)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_eval.json".to_string());
+
+    let (images_n, iters, serve_requests) = if smoke { (32, 2, 32) } else { (256, 8, 1024) };
+
+    let net = Network::from_name("small").unwrap();
+    let params = net.init_params(1);
+    let side = net.arch.input_side();
+    let data = generate_synthetic(images_n, 7, &SynthConfig::default()).resize(side);
+
+    let mut report = Report::new(format!(
+        "eval_batched — per-sample vs batched eval over {images_n} images (arch small)"
+    ));
+
+    // Sanity gate: both paths must classify identically (bit-identity).
+    let base_errors = eval_per_sample(&net, &params, &data);
+    for b in BATCH_SIZES {
+        assert_eq!(
+            eval_batched(&net, &params, &data, b),
+            base_errors,
+            "batched eval (B={b}) diverged from per-sample predictions"
+        );
+    }
+
+    let per_sample = Bench::new("eval/per-sample")
+        .warmup(1)
+        .iters(iters)
+        .run(|| eval_per_sample(&net, &params, &data));
+    let per_sample_rate = images_n as f64 / per_sample.mean_secs;
+    report.add(per_sample.clone());
+
+    let mut batched_rows: Vec<Json> = Vec::new();
+    for b in BATCH_SIZES {
+        let r = Bench::new(format!("eval/batched/B={b}"))
+            .warmup(1)
+            .iters(iters)
+            .run(|| eval_batched(&net, &params, &data, b));
+        let rate = images_n as f64 / r.mean_secs;
+        let speedup = per_sample.mean_secs / r.mean_secs;
+        report.note(format!(
+            "B={b}: {rate:.0} images/s, {speedup:.2}× vs per-sample ({:.0} images/s)",
+            per_sample_rate
+        ));
+        batched_rows.push(Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("mean_secs", Json::num(r.mean_secs)),
+            ("images_per_sec", Json::num(rate)),
+            ("speedup_vs_per_sample", Json::num(speedup)),
+        ]));
+        report.add(r);
+    }
+
+    let mut serve_rows: Vec<Json> = Vec::new();
+    for b in BATCH_SIZES {
+        let sw = Stopwatch::start();
+        let (req_per_sec, clients) = serve_throughput(&net, &params, b, serve_requests);
+        report.note(format!(
+            "serve B={b}: {req_per_sec:.0} req/s ({serve_requests} requests, {clients} clients, \
+             {:.2}s)",
+            sw.elapsed_secs()
+        ));
+        serve_rows.push(Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("requests", Json::num(serve_requests as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("req_per_sec", Json::num(req_per_sec)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("eval_batched")),
+        ("arch", Json::str("small")),
+        ("smoke", Json::num(u32::from(smoke))),
+        ("images", Json::num(images_n as f64)),
+        (
+            "per_sample",
+            Json::obj(vec![
+                ("mean_secs", Json::num(per_sample.mean_secs)),
+                ("images_per_sec", Json::num(per_sample_rate)),
+            ]),
+        ),
+        ("batched", Json::arr(batched_rows)),
+        ("serve", Json::arr(serve_rows)),
+    ]);
+    std::fs::write(&out_path, doc.pretty()).expect("write BENCH_eval.json");
+
+    // Schema self-check: re-parse what we wrote so CI catches rot without
+    // external tooling.
+    let parsed = Json::parse(&std::fs::read_to_string(&out_path).unwrap()).expect("valid JSON");
+    assert_eq!(parsed.req("bench").unwrap().as_str(), Some("eval_batched"));
+    assert!(parsed.req("per_sample").unwrap().req("images_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    let batched = parsed.req("batched").unwrap().as_arr().expect("batched array");
+    assert_eq!(batched.len(), BATCH_SIZES.len());
+    for row in batched {
+        assert!(row.req("speedup_vs_per_sample").unwrap().as_f64().unwrap() > 0.0);
+    }
+    assert_eq!(parsed.req("serve").unwrap().as_arr().map(|a| a.len()), Some(BATCH_SIZES.len()));
+    println!("\nwrote {out_path}");
+
+    report.print();
+}

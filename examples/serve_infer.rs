@@ -1,24 +1,24 @@
-//! Serving example: load the AOT-compiled batched-forward artifact through
-//! PJRT and serve concurrent prediction requests with dynamic batching,
-//! reporting latency percentiles and throughput.
+//! Serving example: spawn the batched-inference server on the **native**
+//! engine (no PJRT artifacts needed) and serve concurrent prediction
+//! requests with dynamic batching, reporting latency percentiles and
+//! throughput.
 //!
-//! Requires `make artifacts` (tiny arch). Run:
-//! `cargo run --release --example serve_infer -- [requests] [clients]`
+//! Run: `cargo run --release --example serve_infer -- [requests] [clients] [batch]`
+//!
+//! To serve through the AOT/PJRT path instead, build the artifacts
+//! (`make artifacts`) and spawn with `serve::Engine::Pjrt` — the client
+//! side of this example is engine-agnostic.
 
 use chaos_phi::data::{generate_synthetic, SynthConfig};
 use chaos_phi::nn::Network;
-use chaos_phi::runtime::{artifacts_available, ARTIFACT_DIR};
-use chaos_phi::serve::{Server, ServerConfig};
+use chaos_phi::serve::{Engine, Server, ServerConfig};
 use chaos_phi::util::Stopwatch;
 
 fn main() -> anyhow::Result<()> {
-    if !artifacts_available(ARTIFACT_DIR) {
-        eprintln!("artifacts not built — run `make artifacts` first");
-        std::process::exit(1);
-    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
     let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
 
     // Weights would normally come from a CHAOS training run
     // (`RunResult::final_params`); deterministic init keeps the example
@@ -26,12 +26,10 @@ fn main() -> anyhow::Result<()> {
     let net = Network::from_name("tiny")?;
     let params = net.init_params(1);
     let server = Server::spawn(
-        ARTIFACT_DIR.to_string(),
-        "tiny".to_string(),
-        params,
+        Engine::Native { net, params, batch },
         ServerConfig { max_delay: std::time::Duration::from_millis(1), ..Default::default() },
     )?;
-    println!("server up (PJRT CPU, batched-forward artifact)");
+    println!("server up (native batched engine, batch cap {batch})");
 
     let images = generate_synthetic(requests, 11, &SynthConfig::default()).resize(13);
     let sw = Stopwatch::start();
@@ -69,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         "latency: p50 {:.0} µs   p99 {:.0} µs   max {:.0} µs",
         m.p50_us, m.p99_us, m.max_us
     );
-    println!("batches: {} (mean fill {:.2} / {})", m.batches, m.mean_batch_fill, 4);
+    println!("batches: {} (mean fill {:.2} / {batch})", m.batches, m.mean_batch_fill);
     println!(
         "predictions from untrained weights: {}/{} correct (≈ chance, as expected)",
         correct, requests

@@ -269,9 +269,9 @@ fn run_epochs(
 
         // Validation and testing phases.
         let (validation, test) = match &mut engine {
-            Engine::Seq { params, scratch } => (
-                eval_seq(net, params, train_set, val_len, scratch, Some(&layer_times)),
-                eval_seq(net, params, test_set, test_set.len(), scratch, Some(&layer_times)),
+            Engine::Seq { params, .. } => (
+                eval_seq(net, params, train_set, val_len, Some(&layer_times)),
+                eval_seq(net, params, test_set, test_set.len(), Some(&layer_times)),
             ),
             Engine::Par { store } => (
                 eval_parallel(net, store, train_set, val_len, threads, &layer_times),
@@ -382,20 +382,46 @@ fn train_phase_parallel(
     metrics.into_inner().unwrap()
 }
 
+/// Evaluation batch size: each worker forwards chunks of up to this many
+/// images per scratch reuse, so every layer's parameter span is read once
+/// per chunk instead of once per image (`nn::BatchPlan`). The batched path
+/// is bit-identical to per-image forwards, so metrics are unchanged.
+const EVAL_BATCH: usize = 32;
+
+/// Accumulate metrics for one probability row — the single definition of
+/// the evaluation metric, shared by the sequential and parallel phases.
+fn tally_row(row: &[f32], label: usize, m: &mut EvalMetrics) {
+    m.images += 1;
+    m.loss += crate::nn::activation::cross_entropy(row, label) as f64;
+    m.errors += usize::from(crate::tensor::argmax(row) != label);
+}
+
 fn eval_seq(
     net: &Network,
     params: &[f32],
     data: &Dataset,
     limit: usize,
-    scratch: &mut Scratch,
     timers: Option<&LayerTimes>,
 ) -> EvalMetrics {
+    let n = limit.min(data.len());
     let mut m = EvalMetrics::default();
-    for idx in 0..limit.min(data.len()) {
-        net.forward(&params, data.image(idx), scratch, timers);
-        m.images += 1;
-        m.loss += net.loss(scratch, data.label(idx)) as f64;
-        m.errors += usize::from(net.prediction(scratch) != data.label(idx));
+    if n == 0 {
+        return m;
+    }
+    let plan = net.batch_plan(EVAL_BATCH.min(n)).expect("non-zero eval batch");
+    let mut scratch = plan.scratch();
+    let classes = net.num_classes();
+    let mut idx = 0;
+    while idx < n {
+        let b = plan.cap().min(n - idx);
+        for slot in 0..b {
+            plan.stage_image(&mut scratch, slot, data.image(idx + slot));
+        }
+        let probs = plan.forward_staged(&params, b, &mut scratch, timers);
+        for (s, row) in probs.chunks_exact(classes).enumerate() {
+            tally_row(row, data.label(idx + s), &mut m);
+        }
+        idx += b;
     }
     m
 }
@@ -408,7 +434,9 @@ fn merge_metrics(metrics: &Mutex<EvalMetrics>, local: &EvalMetrics) {
 }
 
 /// Parallel forward-only evaluation (validation/testing phases — each
-/// worker picks images and forward-propagates, results are cumulated,
+/// worker claims chunks of up to `EVAL_BATCH` images from the shared
+/// pool and forward-propagates them in one batched pass per chunk, so the
+/// shared store is read once per layer per chunk; results are cumulated,
 /// paper Fig 4b).
 pub fn eval_parallel(
     net: &Network,
@@ -420,17 +448,36 @@ pub fn eval_parallel(
 ) -> EvalMetrics {
     let sampler = Sampler::sequential(limit.min(data.len()));
     let metrics = Mutex::new(EvalMetrics::default());
+    let classes = net.num_classes();
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| {
-                let mut scratch = net.scratch();
+                let plan = net.batch_plan(EVAL_BATCH).expect("non-zero eval batch");
+                let mut scratch = plan.scratch();
                 let mut local = EvalMetrics::default();
-                while let Some(idx) = sampler.next() {
-                    let label = data.label(idx);
-                    net.forward(&store, data.image(idx), &mut scratch, Some(timers));
-                    local.images += 1;
-                    local.loss += net.loss(&scratch, label) as f64;
-                    local.errors += usize::from(net.prediction(&scratch) != label);
+                let mut idxs = Vec::with_capacity(EVAL_BATCH);
+                loop {
+                    // The sequential sampler hands out consecutive
+                    // indices, so each worker's claim is a contiguous run
+                    // only by accident — stage per slot, tally per index.
+                    idxs.clear();
+                    while idxs.len() < EVAL_BATCH {
+                        match sampler.next() {
+                            Some(idx) => idxs.push(idx),
+                            None => break,
+                        }
+                    }
+                    if idxs.is_empty() {
+                        break;
+                    }
+                    for (slot, &idx) in idxs.iter().enumerate() {
+                        plan.stage_image(&mut scratch, slot, data.image(idx));
+                    }
+                    let probs =
+                        plan.forward_staged(&store, idxs.len(), &mut scratch, Some(timers));
+                    for (row, &idx) in probs.chunks_exact(classes).zip(&idxs) {
+                        tally_row(row, data.label(idx), &mut local);
+                    }
                 }
                 merge_metrics(&metrics, &local);
             });
@@ -678,8 +725,7 @@ mod tests {
         let store = SharedParams::new(&params, &net.dims);
         let timers = LayerTimes::new();
         let par = eval_parallel(&net, &store, &data, data.len(), 4, &timers);
-        let mut scratch = net.scratch();
-        let seq = eval_seq(&net, &params, &data, data.len(), &mut scratch, None);
+        let seq = eval_seq(&net, &params, &data, data.len(), None);
         assert_eq!(par.errors, seq.errors, "same weights ⇒ same predictions");
         assert!((par.loss - seq.loss).abs() < 1e-3 * seq.loss.abs().max(1.0));
     }

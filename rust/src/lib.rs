@@ -77,6 +77,17 @@
 //!   feature; the default build substitutes a stub). Python is never on
 //!   the request path.
 //!
+//! ## Batched execution and serving
+//!
+//! Forward-only consumers run whole batches through [`nn::BatchPlan`]:
+//! every layer's parameters load **once per batch** into weight-stationary
+//! kernels ([`nn::LayerOp::forward_batch`]), bit-identical to per-sample
+//! forwards. The trainer's validation/testing phases evaluate in batched
+//! chunks, and [`serve::Server`] serves predictions from any compiled
+//! network + weight snapshot on the native engine
+//! ([`serve::Engine::Native`], no artifacts required) or from the AOT
+//! PJRT artifact ([`serve::Engine::Pjrt`]).
+//!
 //! Start with [`config::ArchSpec`] (the paper's Table 2 networks),
 //! [`chaos::Trainer`] (the parallel trainer), and [`harness`] (regenerates
 //! every table and figure of the paper's evaluation).

@@ -7,7 +7,7 @@
 //!   report     regenerate every table and figure into one markdown file
 //!   predict    analytic performance model (Listing 2)
 //!   simulate   Xeon Phi discrete-event simulator
-//!   serve      batched-inference serving demo over the AOT artifacts
+//!   serve      batched-inference serving demo (native engine or AOT artifacts)
 //!   info       architecture/manifest inventory
 
 use chaos_phi::chaos::{self, policy};
@@ -17,7 +17,7 @@ use chaos_phi::harness::{self, RealRunScale};
 use chaos_phi::nn::Network;
 use chaos_phi::perfmodel::{PerfModel, Scenario};
 use chaos_phi::phisim::{simulate, SimConfig};
-use chaos_phi::serve::{Server, ServerConfig};
+use chaos_phi::serve::{Engine, Server, ServerConfig};
 use chaos_phi::util::cli::Args;
 use chaos_phi::util::Stopwatch;
 
@@ -36,7 +36,8 @@ USAGE: chaos <command> [flags]
   report    --out FILE.md [--quick]
   predict   --arch A --threads 1,15,30,...  [--images N --test-n N --epochs E]
   simulate  --arch A --threads 1,15,30,...
-  serve     --arch tiny --requests N --clients C --artifacts DIR --weights FILE.ckpt
+  serve     --arch tiny --requests N --clients C --engine native|pjrt --batch B
+            --artifacts DIR --weights FILE.ckpt   (pjrt needs `make artifacts`)
   arch      validate FILE.json...   (parse + structurally validate + compile)
             show NAME [--out FILE.json]   (export a built-in arch as JSON)
             kinds   (list registered layer kinds)
@@ -294,12 +295,17 @@ fn cmd_simulate(raw: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
-    let a = Args::parse(raw, &["arch", "requests", "clients", "artifacts", "delay-us", "weights"])?;
+    let a = Args::parse(
+        raw,
+        &["arch", "requests", "clients", "artifacts", "delay-us", "weights", "engine", "batch"],
+    )?;
     let arch = a.get_str("arch", "tiny");
     let requests = a.get_usize("requests", 256)?;
     let clients = a.get_usize("clients", 4)?;
     let artifacts = a.get_str("artifacts", chaos_phi::runtime::ARTIFACT_DIR);
     let delay_us = a.get_u64("delay-us", 2000)?;
+    let engine_name = a.get_str("engine", "native");
+    let batch = a.get_usize("batch", 8)?;
 
     let net = Network::from_name(&arch)?;
     let params = match a.get("weights") {
@@ -310,7 +316,12 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         max_delay: std::time::Duration::from_micros(delay_us),
         ..Default::default()
     };
-    let server = Server::spawn(artifacts, arch.clone(), params, cfg)?;
+    let engine = match engine_name.as_str() {
+        "native" => Engine::Native { net: net.clone(), params, batch },
+        "pjrt" => Engine::Pjrt { artifact_dir: artifacts, arch: arch.clone(), params },
+        other => anyhow::bail!("unknown engine '{other}' (native|pjrt)"),
+    };
+    let server = Server::spawn(engine, cfg)?;
     let side = net.arch.input_side();
     let images = data::generate_synthetic(requests, 5, &data::SynthConfig::default()).resize(side);
 

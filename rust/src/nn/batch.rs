@@ -1,0 +1,246 @@
+//! Batched forward execution: [`BatchPlan`] + [`BatchScratch`].
+//!
+//! The per-sample orchestrator ([`super::Network::forward`]) re-loads every
+//! layer's parameter span through [`ParamSource`] once **per image** — fine
+//! for training (backward dominates), wasteful for forward-only consumers.
+//! A [`BatchPlan`] drives the same compiled op pipeline over `[B][len]`
+//! flat activation arenas and loads each layer's span exactly **once per
+//! batch**, handing the ops their weight-stationary
+//! [`LayerOp::forward_batch`] kernels. This is the data-parallel batching
+//! of Krizhevsky's "one weird trick" (arXiv:1404.5997) applied to the
+//! paper's SIMD story: contiguous activation rows across the batch keep
+//! the inner loops auto-vectorizer-friendly while weight traffic amortizes.
+//!
+//! Arenas live in 64-byte-aligned buffers ([`crate::tensor::AlignedBuf`],
+//! the paper's `_mm_malloc(…, 64)` discipline). Consumers:
+//! [`crate::runtime::NativeBatchEngine`] (serving) and the trainer's
+//! validation/testing phases (`chaos::trainer`).
+//!
+//! Bit-identity: `plan.forward(params, images, n, …)` produces, row for
+//! row, exactly the bits of `n` independent [`super::Network::forward`]
+//! calls — enforced by `rust/tests/batch_forward.rs`.
+
+use super::layer::{LayerOp, OpScratch};
+use super::network::{Network, ParamSource};
+use crate::tensor::AlignedBuf;
+use crate::util::timer::LayerTimes;
+use crate::util::Pcg32;
+use std::time::Instant;
+
+/// A batched-forward execution plan over a compiled network: just the
+/// network reference plus the batch capacity. Cheap to construct — all
+/// heavy state lives in the [`BatchScratch`] it allocates.
+pub struct BatchPlan<'n> {
+    net: &'n Network,
+    cap: usize,
+}
+
+impl<'n> BatchPlan<'n> {
+    /// Plan batches of up to `cap` samples. `cap == 0` is rejected — it
+    /// would make every downstream buffer zero-length and turn the serve
+    /// loop into a busy spin.
+    pub fn new(net: &'n Network, cap: usize) -> anyhow::Result<BatchPlan<'n>> {
+        anyhow::ensure!(cap > 0, "batch capacity must be ≥ 1");
+        Ok(BatchPlan { net, cap })
+    }
+
+    /// Batch capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// The network this plan executes.
+    pub fn network(&self) -> &Network {
+        self.net
+    }
+
+    /// Flat length of one input image.
+    pub fn image_len(&self) -> usize {
+        self.net.dims[0].out_len()
+    }
+
+    /// Allocate the activation/aux arenas (PRNG stream 0, eval mode).
+    pub fn scratch(&self) -> BatchScratch {
+        self.scratch_seeded(0)
+    }
+
+    /// Arenas with an explicit PRNG seed for ops that draw randomness
+    /// (train-mode dropout masks) — mirrors
+    /// [`Network::scratch_seeded`].
+    pub fn scratch_seeded(&self, seed: u64) -> BatchScratch {
+        let acts: Vec<AlignedBuf> =
+            self.net.dims.iter().map(|d| AlignedBuf::zeroed(self.cap * d.out_len())).collect();
+        let aux: Vec<Vec<u32>> =
+            self.net.ops.iter().map(|op| vec![0u32; self.cap * op.aux_len()]).collect();
+        let rngs: Vec<Pcg32> =
+            (0..self.net.ops.len()).map(|l| Pcg32::new(seed, l as u64)).collect();
+        let max_params = self.net.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
+        BatchScratch {
+            cap: self.cap,
+            acts,
+            aux,
+            rngs,
+            train_mode: false,
+            param_buf: AlignedBuf::zeroed(max_params),
+        }
+    }
+
+    /// Stage one image into batch slot `slot` (for callers gathering
+    /// non-contiguous images, e.g. dataset evaluation); run with
+    /// [`BatchPlan::forward_staged`].
+    pub fn stage_image(&self, scratch: &mut BatchScratch, slot: usize, image: &[f32]) {
+        let il = self.image_len();
+        debug_assert!(slot < self.cap, "slot {slot} out of range (cap {})", self.cap);
+        debug_assert_eq!(image.len(), il, "input size mismatch");
+        scratch.acts[0][slot * il..(slot + 1) * il].copy_from_slice(image);
+    }
+
+    /// Forward `n ≤ cap` contiguous images (`[n][image_len]` flat);
+    /// returns the `[n][classes]` flat probability block.
+    pub fn forward<'s, P: ParamSource>(
+        &self,
+        params: &P,
+        images: &[f32],
+        n: usize,
+        scratch: &'s mut BatchScratch,
+        timers: Option<&LayerTimes>,
+    ) -> &'s [f32] {
+        let il = self.image_len();
+        debug_assert_eq!(images.len(), n * il, "input size mismatch");
+        scratch.acts[0][..n * il].copy_from_slice(images);
+        self.forward_staged(params, n, scratch, timers)
+    }
+
+    /// Forward the first `n` already-staged slots (see
+    /// [`BatchPlan::stage_image`]); returns the `[n][classes]` flat
+    /// probability block. Each layer's parameter span is loaded **once**
+    /// for the whole batch.
+    pub fn forward_staged<'s, P: ParamSource>(
+        &self,
+        params: &P,
+        n: usize,
+        scratch: &'s mut BatchScratch,
+        timers: Option<&LayerTimes>,
+    ) -> &'s [f32] {
+        assert!(n <= self.cap, "batch {n} exceeds plan capacity {}", self.cap);
+        let n_layers = self.net.dims.len();
+        for l in 1..n_layers {
+            let d = &self.net.dims[l];
+            let op: &dyn LayerOp = self.net.ops[l].as_ref();
+            let t0 = timers.map(|_| Instant::now());
+            let pc = d.param_count();
+            if pc > 0 {
+                // The batched path's defining property: one on-demand load
+                // per layer per batch, not per image.
+                params.load(d.params.clone(), &mut scratch.param_buf[..pc]);
+            }
+            let al = op.aux_len();
+            let (prev_acts, rest) = scratch.acts.split_at_mut(l);
+            op.forward_batch(
+                &scratch.param_buf[..pc],
+                &prev_acts[l - 1][..n * d.in_len()],
+                &mut rest[0][..n * d.out_len()],
+                n,
+                &mut OpScratch {
+                    aux: &mut scratch.aux[l][..n * al],
+                    rng: &mut scratch.rngs[l],
+                    train: scratch.train_mode,
+                },
+            );
+            if let (Some(t), Some(start)) = (timers, t0) {
+                t.add(op.class(false), start.elapsed().as_nanos() as u64);
+            }
+        }
+        let classes = self.net.num_classes();
+        &scratch.acts[n_layers - 1][..n * classes]
+    }
+}
+
+/// Arenas for one batched-forward worker: per-layer `[cap][out_len]`
+/// activation blocks, per-op `[cap][aux_len]` auxiliary words, per-op PRNG
+/// streams, and the single staging buffer for on-demand parameter loads.
+/// Thread-private, like the per-sample [`super::Scratch`].
+pub struct BatchScratch {
+    cap: usize,
+    /// `acts[l]` holds layer `l`'s outputs for every batch slot.
+    acts: Vec<AlignedBuf>,
+    aux: Vec<Vec<u32>>,
+    rngs: Vec<Pcg32>,
+    /// Whether forward runs as a training pass (dropout masks active).
+    pub train_mode: bool,
+    param_buf: AlignedBuf,
+}
+
+impl BatchScratch {
+    /// Batch capacity these arenas were sized for.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Reset every per-op PRNG stream (fixed-mask knob for tests, mirrors
+    /// [`super::Scratch::reseed`]).
+    pub fn reseed(&mut self, seed: u64) {
+        for (l, rng) in self.rngs.iter_mut().enumerate() {
+            *rng = Pcg32::new(seed, l as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    #[test]
+    fn zero_capacity_is_rejected() {
+        let net = Network::new(ArchSpec::tiny());
+        let e = BatchPlan::new(&net, 0).unwrap_err().to_string();
+        assert!(e.contains("batch capacity"), "{e}");
+    }
+
+    #[test]
+    fn batched_probs_are_distributions() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(3);
+        let plan = BatchPlan::new(&net, 4).unwrap();
+        let mut scratch = plan.scratch();
+        let mut rng = Pcg32::seeded(9);
+        let il = plan.image_len();
+        let images: Vec<f32> = (0..3 * il).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        // Partial batch (3 of 4 slots).
+        let probs = plan.forward(&params, &images, 3, &mut scratch, None);
+        assert_eq!(probs.len(), 3 * net.num_classes());
+        for row in probs.chunks_exact(net.num_classes()) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "softmax row sums to 1, got {sum}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds plan capacity")]
+    fn oversized_batch_panics() {
+        let net = Network::new(ArchSpec::tiny());
+        let plan = BatchPlan::new(&net, 2).unwrap();
+        let mut scratch = plan.scratch();
+        let params = net.init_params(1);
+        plan.forward_staged(&params, 3, &mut scratch, None);
+    }
+
+    #[test]
+    fn staged_equals_contiguous() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(5);
+        let plan = BatchPlan::new(&net, 3).unwrap();
+        let mut rng = Pcg32::seeded(11);
+        let il = plan.image_len();
+        let images: Vec<f32> = (0..3 * il).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut s1 = plan.scratch();
+        let contiguous = plan.forward(&params, &images, 3, &mut s1, None).to_vec();
+        let mut s2 = plan.scratch();
+        for slot in 0..3 {
+            plan.stage_image(&mut s2, slot, &images[slot * il..(slot + 1) * il]);
+        }
+        let staged = plan.forward_staged(&params, 3, &mut s2, None);
+        assert_eq!(contiguous, staged);
+    }
+}

@@ -88,6 +88,67 @@ pub fn conv_forward(
     }
 }
 
+/// Batched forward convolution over `batch` samples laid out `[b][in_len]`
+/// → `[b][out_len]` — the weight-stationary variant of [`conv_forward`]:
+/// each kernel tap is loaded once per **batch** and swept across every
+/// sample's rows, so at batch ≥ 8 the weight traffic amortizes away and
+/// the inner saxpy rows stay contiguous for the auto-vectorizer.
+///
+/// Bit-identity contract: every output element receives its additions in
+/// exactly the order of the per-sample kernel (bias, then `j → ky → kx`
+/// taps), so the result equals `batch` independent [`conv_forward`] calls
+/// bitwise (enforced by `rust/tests/batch_forward.rs`).
+pub fn conv_forward_batch(
+    s: &ConvShape,
+    inputs: &[f32],
+    weights: &[f32],
+    biases: &[f32],
+    outs: &mut [f32],
+    batch: usize,
+) {
+    let in_len = s.in_len();
+    let out_len = s.out_len();
+    debug_assert_eq!(inputs.len(), batch * in_len);
+    debug_assert_eq!(weights.len(), s.weight_len());
+    debug_assert_eq!(biases.len(), s.out_maps);
+    debug_assert_eq!(outs.len(), batch * out_len);
+
+    let os = s.out_side;
+    let is = s.in_side;
+    let k = s.kernel;
+    let omap_len = os * os;
+    let imap_len = is * is;
+
+    for m in 0..s.out_maps {
+        for b in 0..batch {
+            outs[b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len].fill(biases[m]);
+        }
+        let wm = &weights[m * s.in_maps * k * k..];
+        for j in 0..s.in_maps {
+            let wj = &wm[j * k * k..(j + 1) * k * k];
+            for ky in 0..k {
+                for kx in 0..k {
+                    // One scalar weight, stationary across the whole batch.
+                    let w = wj[ky * k + kx];
+                    for b in 0..batch {
+                        let in_map =
+                            &inputs[b * in_len + j * imap_len..b * in_len + (j + 1) * imap_len];
+                        let out_map = &mut outs
+                            [b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len];
+                        for y in 0..os {
+                            let in_row = &in_map[(y + ky) * is + kx..(y + ky) * is + kx + os];
+                            let out_row = &mut out_map[y * os..y * os + os];
+                            for x in 0..os {
+                                out_row[x] += w * in_row[x];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Backward convolution: accumulates weight/bias gradients and computes the
 /// gradient w.r.t. the layer input.
 ///
@@ -603,6 +664,39 @@ mod tests {
         for m in 0..g.out_maps {
             assert!((bg[m] - (g.out_side * g.out_side) as f32).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn batched_forward_bit_identical_to_per_sample() {
+        proptest::run(
+            proptest::Config { cases: 30, max_size: 6, ..Default::default() },
+            |rng, size| {
+                let in_maps = rng.range(1, 4);
+                let out_maps = rng.range(1, 4);
+                let kernel = rng.range(1, 4.min(size + 1) + 1);
+                let in_side = kernel + rng.range(0, size + 1);
+                let batch = rng.range(1, 6);
+                let s = ConvShape::valid(in_maps, in_side, out_maps, kernel);
+                let inputs = rand_vec(rng, batch * s.in_len());
+                let weights = rand_vec(rng, s.weight_len());
+                let biases = rand_vec(rng, s.out_maps);
+                (s, inputs, weights, biases, batch)
+            },
+            |(s, inputs, weights, biases, batch)| {
+                let mut batched = vec![0.0; batch * s.out_len()];
+                conv_forward_batch(s, inputs, weights, biases, &mut batched, *batch);
+                for b in 0..*batch {
+                    let mut single = vec![0.0; s.out_len()];
+                    let input = &inputs[b * s.in_len()..(b + 1) * s.in_len()];
+                    conv_forward(s, input, weights, biases, &mut single);
+                    let row = &batched[b * s.out_len()..(b + 1) * s.out_len()];
+                    if row != single.as_slice() {
+                        return Err(format!("sample {b} not bit-identical"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

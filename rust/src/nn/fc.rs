@@ -35,6 +35,36 @@ pub fn fc_forward(s: &FcShape, input: &[f32], weights: &[f32], biases: &[f32], o
     }
 }
 
+/// Batched forward over `batch` samples laid out `[b][inputs]` →
+/// `[b][outputs]` — the weight-stationary variant of [`fc_forward`]: each
+/// weight row is loaded once per batch and dotted against every sample
+/// (row-stationary GEMV → GEMM), instead of streaming the whole weight
+/// matrix through the cache once per sample.
+///
+/// Bit-identical to `batch` independent [`fc_forward`] calls: each output
+/// element is the same `dot(row, input) + bias` expression.
+pub fn fc_forward_batch(
+    s: &FcShape,
+    inputs: &[f32],
+    weights: &[f32],
+    biases: &[f32],
+    outs: &mut [f32],
+    batch: usize,
+) {
+    debug_assert_eq!(inputs.len(), batch * s.inputs);
+    debug_assert_eq!(weights.len(), s.weight_len());
+    debug_assert_eq!(biases.len(), s.outputs);
+    debug_assert_eq!(outs.len(), batch * s.outputs);
+    for n in 0..s.outputs {
+        let row = &weights[n * s.inputs..(n + 1) * s.inputs];
+        let bias = biases[n];
+        for b in 0..batch {
+            let input = &inputs[b * s.inputs..(b + 1) * s.inputs];
+            outs[b * s.outputs + n] = super::simd::dot(row, input) + bias;
+        }
+    }
+}
+
 /// Backward: accumulate `wgrads[n][i] += delta[n]·in[i]`,
 /// `bgrads[n] += delta[n]`, and compute `dinput[i] = Σ_n w[n][i]·delta[n]`
 /// (w.r.t. this layer's input; caller applies the previous activation's
@@ -133,6 +163,24 @@ mod tests {
         }
         for (b, c) in bg.iter().zip(&coeff) {
             assert!((b - c).abs() < 1e-6, "bias grad equals delta");
+        }
+    }
+
+    #[test]
+    fn batched_forward_bit_identical_to_per_sample() {
+        let mut rng = Pcg32::seeded(21);
+        let s = FcShape::new(13, 5);
+        let batch = 4;
+        let inputs: Vec<f32> =
+            (0..batch * s.inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let weights: Vec<f32> = (0..s.weight_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let biases: Vec<f32> = (0..s.outputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut batched = vec![0.0; batch * s.outputs];
+        fc_forward_batch(&s, &inputs, &weights, &biases, &mut batched, batch);
+        for b in 0..batch {
+            let mut single = vec![0.0; s.outputs];
+            fc_forward(&s, &inputs[b * s.inputs..(b + 1) * s.inputs], &weights, &biases, &mut single);
+            assert_eq!(&batched[b * s.outputs..(b + 1) * s.outputs], single.as_slice());
         }
     }
 

@@ -132,6 +132,43 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
     /// parameter span.
     fn forward(&self, params: &[f32], input: &[f32], out: &mut [f32], scratch: &mut OpScratch<'_>);
 
+    /// Forward `batch` samples at once: `inputs` is `[batch][in_len]` flat,
+    /// `outs` is `[batch][out_len]` flat, and `scratch.aux` holds
+    /// `batch · aux_len()` words sliced `[batch][aux_len]`. `params` is
+    /// still this op's single already-loaded span — the whole point of the
+    /// batched path is that the caller loads it **once per batch** (see
+    /// [`super::batch::BatchPlan`]).
+    ///
+    /// Contract: the result must be bit-identical to `batch` successive
+    /// [`LayerOp::forward`] calls sharing `scratch.rng` (enforced for every
+    /// registered kind by `rust/tests/batch_forward.rs`). The default impl
+    /// guarantees this by looping the per-sample kernel; the built-in
+    /// conv/fc ops override it with weight-stationary kernels that keep the
+    /// per-element accumulation order.
+    fn forward_batch(
+        &self,
+        params: &[f32],
+        inputs: &[f32],
+        outs: &mut [f32],
+        batch: usize,
+        scratch: &mut OpScratch<'_>,
+    ) {
+        let il = self.in_shape().len();
+        let ol = self.out_shape().len();
+        let al = self.aux_len();
+        debug_assert_eq!(inputs.len(), batch * il);
+        debug_assert_eq!(outs.len(), batch * ol);
+        debug_assert_eq!(scratch.aux.len(), batch * al);
+        for b in 0..batch {
+            let mut per = OpScratch {
+                aux: &mut scratch.aux[b * al..(b + 1) * al],
+                rng: &mut *scratch.rng,
+                train: scratch.train,
+            };
+            self.forward(params, &inputs[b * il..(b + 1) * il], &mut outs[b * ol..(b + 1) * ol], &mut per);
+        }
+    }
+
     /// Backward one sample — see the module docs for the delta contract.
     /// `grads` is this op's gradient span (zeroed by the driver;
     /// accumulate into it as `[weights..., biases...]`).
@@ -515,6 +552,36 @@ impl LayerOp for ConvOp {
         self.act.apply(out);
     }
 
+    fn forward_batch(
+        &self,
+        params: &[f32],
+        inputs: &[f32],
+        outs: &mut [f32],
+        batch: usize,
+        _: &mut OpScratch<'_>,
+    ) {
+        let (w, b) = params.split_at(self.weights);
+        if self.geom.is_plain() {
+            super::conv::conv_forward_batch(&self.geom.as_plain(), inputs, w, b, outs, batch);
+        } else {
+            // Padded/strided path: the general kernel is gather-heavy, so
+            // batching buys only the amortized param load — tile it.
+            let il = self.geom.in_len();
+            let ol = self.geom.out_len();
+            for s in 0..batch {
+                conv_forward_general(
+                    &self.geom,
+                    &inputs[s * il..(s + 1) * il],
+                    w,
+                    b,
+                    &mut outs[s * ol..(s + 1) * ol],
+                );
+            }
+        }
+        // Elementwise activation over the whole [batch][out_len] block.
+        self.act.apply(outs);
+    }
+
     fn backward(
         &self,
         params: &[f32],
@@ -642,6 +709,17 @@ impl LayerOp for MaxPoolOp {
         pool_forward(&self.shape, input, out, scratch.aux);
     }
 
+    fn forward_batch(
+        &self,
+        _: &[f32],
+        inputs: &[f32],
+        outs: &mut [f32],
+        batch: usize,
+        scratch: &mut OpScratch<'_>,
+    ) {
+        super::pool::pool_forward_batch(&self.shape, inputs, outs, scratch.aux, batch);
+    }
+
     fn backward(
         &self,
         _: &[f32],
@@ -731,6 +809,17 @@ impl LayerOp for AvgPoolOp {
 
     fn forward(&self, _: &[f32], input: &[f32], out: &mut [f32], _: &mut OpScratch<'_>) {
         avg_pool_forward(&self.shape, input, out);
+    }
+
+    fn forward_batch(
+        &self,
+        _: &[f32],
+        inputs: &[f32],
+        outs: &mut [f32],
+        batch: usize,
+        _: &mut OpScratch<'_>,
+    ) {
+        super::pool::avg_pool_forward_batch(&self.shape, inputs, outs, batch);
     }
 
     fn backward(
@@ -921,6 +1010,26 @@ impl LayerOp for FcOp {
         }
     }
 
+    fn forward_batch(
+        &self,
+        params: &[f32],
+        inputs: &[f32],
+        outs: &mut [f32],
+        batch: usize,
+        _: &mut OpScratch<'_>,
+    ) {
+        let (w, b) = params.split_at(self.weights);
+        super::fc::fc_forward_batch(&self.shape, inputs, w, b, outs, batch);
+        if self.output_softmax {
+            // Softmax normalizes per sample, never across the batch.
+            for row in outs.chunks_exact_mut(self.shape.outputs) {
+                super::activation::softmax(row);
+            }
+        } else {
+            self.act.apply(outs);
+        }
+    }
+
     fn backward(
         &self,
         params: &[f32],
@@ -1034,6 +1143,33 @@ impl LayerOp for DropoutOp {
             let keep = scratch.rng.next_f32() >= self.rate;
             *m = keep as u32;
             *o = if keep { x * self.keep_scale } else { 0.0 };
+        }
+    }
+
+    fn forward_batch(
+        &self,
+        _: &[f32],
+        inputs: &[f32],
+        outs: &mut [f32],
+        batch: usize,
+        scratch: &mut OpScratch<'_>,
+    ) {
+        if !scratch.train || self.rate == 0.0 {
+            // Eval-mode fast path: one block copy instead of B pass-throughs.
+            outs.copy_from_slice(inputs);
+            return;
+        }
+        // Train mode: loop the per-sample kernel (like the trait default)
+        // so the mask logic exists exactly once; draws advance the shared
+        // stream sample-by-sample, same as B successive forwards.
+        let len = self.shape.len();
+        for b in 0..batch {
+            let mut per = OpScratch {
+                aux: &mut scratch.aux[b * len..(b + 1) * len],
+                rng: &mut *scratch.rng,
+                train: scratch.train,
+            };
+            self.forward(&[], &inputs[b * len..(b + 1) * len], &mut outs[b * len..(b + 1) * len], &mut per);
         }
     }
 

@@ -4,9 +4,13 @@
 //! average pooling, fully-connected with selectable activations, dropout,
 //! softmax output, plus anything registered at runtime) compiled into flat
 //! f32 op pipelines, with per-layer gradient emission hooks that the CHAOS
-//! coordinator uses for its controlled Hogwild updates.
+//! coordinator uses for its controlled Hogwild updates. Forward-only
+//! consumers (evaluation phases, the native serving engine) run the same
+//! pipeline over whole batches through [`batch::BatchPlan`], amortizing
+//! parameter loads across `[B][len]` activation arenas.
 
 pub mod activation;
+pub mod batch;
 pub mod conv;
 pub mod dims;
 pub mod fc;
@@ -16,6 +20,7 @@ pub mod network;
 pub mod pool;
 pub mod simd;
 
+pub use batch::{BatchPlan, BatchScratch};
 pub use dims::{compute_dims, total_params, LayerDims};
 pub use layer::{Acts, LayerCtx, LayerKind, LayerOp, OpScratch, Shape};
 pub use network::{Network, ParamSource, Scratch};

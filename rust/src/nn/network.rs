@@ -122,6 +122,13 @@ impl Network {
         }
     }
 
+    /// A batched-forward plan over this network (see
+    /// [`super::batch::BatchPlan`]): parameters load once per layer per
+    /// batch instead of once per image.
+    pub fn batch_plan(&self, cap: usize) -> anyhow::Result<super::batch::BatchPlan<'_>> {
+        super::batch::BatchPlan::new(self, cap)
+    }
+
     /// Forward-propagate one image; returns the softmax probabilities
     /// (stored in the scratch's last activation buffer).
     pub fn forward<'s, P: ParamSource>(

@@ -68,6 +68,34 @@ pub fn pool_forward(s: &PoolShape, input: &[f32], out: &mut [f32], switches: &mu
     }
 }
 
+/// Batched forward max-pool over samples laid out `[b][in_len]` →
+/// `[b][out_len]`, `switches` laid out `[b][out_len]`. Each sample's
+/// switches hold flat indices into *that sample's* input (the per-sample
+/// convention), so backward routing per sample is unchanged. Pooling has no
+/// parameters — the batched win is scratch/arena reuse, so this simply
+/// tiles the per-sample kernel.
+pub fn pool_forward_batch(
+    s: &PoolShape,
+    inputs: &[f32],
+    outs: &mut [f32],
+    switches: &mut [u32],
+    batch: usize,
+) {
+    let in_len = s.in_len();
+    let out_len = s.out_len();
+    debug_assert_eq!(inputs.len(), batch * in_len);
+    debug_assert_eq!(outs.len(), batch * out_len);
+    debug_assert_eq!(switches.len(), batch * out_len);
+    for b in 0..batch {
+        pool_forward(
+            s,
+            &inputs[b * in_len..(b + 1) * in_len],
+            &mut outs[b * out_len..(b + 1) * out_len],
+            &mut switches[b * out_len..(b + 1) * out_len],
+        );
+    }
+}
+
 /// Backward max-pool: route each output delta to the recorded argmax input.
 /// `dinput` is overwritten.
 pub fn pool_backward(s: &PoolShape, delta: &[f32], switches: &[u32], dinput: &mut [f32]) {
@@ -106,6 +134,22 @@ pub fn avg_pool_forward(s: &PoolShape, input: &[f32], out: &mut [f32]) {
                 out[m * omap + oy * os + ox] = sum * inv;
             }
         }
+    }
+}
+
+/// Batched forward average-pool (`[b][in_len]` → `[b][out_len]`); see
+/// [`pool_forward_batch`] for the layout convention.
+pub fn avg_pool_forward_batch(s: &PoolShape, inputs: &[f32], outs: &mut [f32], batch: usize) {
+    let in_len = s.in_len();
+    let out_len = s.out_len();
+    debug_assert_eq!(inputs.len(), batch * in_len);
+    debug_assert_eq!(outs.len(), batch * out_len);
+    for b in 0..batch {
+        avg_pool_forward(
+            s,
+            &inputs[b * in_len..(b + 1) * in_len],
+            &mut outs[b * out_len..(b + 1) * out_len],
+        );
     }
 }
 

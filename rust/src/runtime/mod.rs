@@ -1,13 +1,25 @@
-//! Runtime layer: loads the AOT-lowered HLO artifacts (`make artifacts`)
-//! and executes them on the PJRT CPU client from the rust request path.
+//! Runtime layer: the execution engines behind serving and
+//! cross-validation.
 //!
-//! The interchange format is HLO **text** — xla_extension 0.5.1 rejects
-//! jax ≥ 0.5 serialized protos (64-bit instruction ids), while the text
-//! parser reassigns ids (see DESIGN.md §4 and /opt/xla-example/README.md).
+//! Two engine families live here, selected at the serving layer through
+//! `serve::Engine`:
 //!
-//! Cross-validation between this path and the native [`crate::nn`] engine
-//! lives in `rust/tests/runtime_roundtrip.rs`: both implement the same
-//! math, so probabilities and gradients must agree to float tolerance.
+//! * **Native** ([`NativeBatchEngine`]) — drives the compiled
+//!   [`crate::nn::Network`] op pipeline through a batched forward plan
+//!   ([`crate::nn::BatchPlan`]). No artifacts, no external crates, works
+//!   in every build, accepts partial batches, and serves weights straight
+//!   from a CHAOS training run. This is the default serving path.
+//! * **PJRT** ([`ForwardEngine`]/[`BatchForwardEngine`]/[`TrainEngine`]) —
+//!   loads the AOT-lowered HLO artifacts (`make artifacts`) and executes
+//!   them on the PJRT CPU client. The interchange format is HLO **text** —
+//!   xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit
+//!   instruction ids), while the text parser reassigns ids (see DESIGN.md
+//!   §4 and /opt/xla-example/README.md). Requires the `xla-runtime`
+//!   feature; the default build substitutes a stub whose loaders error.
+//!
+//! Cross-validation between the two paths lives in
+//! `rust/tests/runtime_roundtrip.rs`: both implement the same math, so
+//! probabilities and gradients must agree to float tolerance.
 
 // The real executor needs the external `xla` bindings crate; the default
 // build substitutes an API-compatible stub whose loaders return an error
@@ -18,11 +30,13 @@ mod executor;
 #[path = "executor_stub.rs"]
 mod executor;
 mod manifest;
+mod native;
 
 pub use executor::{
     BatchForwardEngine, Executable, ForwardEngine, Runtime, TrainEngine, TrainStepOut,
 };
 pub use manifest::{ArchManifest, ArtifactSpec, Manifest, ParamSpec};
+pub use native::NativeBatchEngine;
 
 /// Default artifact directory (relative to the repo root).
 pub const ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,124 @@
+//! The native batched inference engine: serve predictions from any
+//! compiled [`Network`] + parameter snapshot, **no PJRT artifacts
+//! required**.
+//!
+//! This is the in-process counterpart of the AOT
+//! [`super::BatchForwardEngine`]: where the PJRT engine executes a
+//! statically-batched HLO artifact (and therefore must pad every batch to
+//! the compiled `B`), the native engine drives the
+//! [`crate::nn::BatchPlan`] pipeline directly, so it accepts partial
+//! batches, works in the default (stub) build, and serves weights straight
+//! out of a CHAOS training run (`RunResult::final_params`) with no
+//! artifact round-trip. `serve::Engine::{Native, Pjrt}` selects between
+//! the two.
+
+use crate::nn::{BatchScratch, Network};
+
+/// Batched forward execution over the native op pipeline. Owns the
+/// network, a parameter snapshot, and the reusable batch arenas — one
+/// engine per serving thread (the arenas are thread-private).
+pub struct NativeBatchEngine {
+    net: Network,
+    params: Vec<f32>,
+    batch: usize,
+    scratch: BatchScratch,
+}
+
+impl NativeBatchEngine {
+    /// Build an engine serving `params` through `net` in batches of up to
+    /// `batch`. Rejects a zero batch size and a parameter snapshot that
+    /// does not match the network's layout.
+    pub fn new(net: Network, params: Vec<f32>, batch: usize) -> anyhow::Result<NativeBatchEngine> {
+        anyhow::ensure!(batch > 0, "native engine: batch size must be ≥ 1");
+        anyhow::ensure!(
+            params.len() == net.total_params,
+            "native engine: parameter snapshot has {} values, network '{}' needs {}",
+            params.len(),
+            net.arch.name,
+            net.total_params
+        );
+        let scratch = net.batch_plan(batch)?.scratch();
+        Ok(NativeBatchEngine { net, params, batch, scratch })
+    }
+
+    /// Maximum samples per [`NativeBatchEngine::run`] call.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Flat length of one input image.
+    pub fn image_len(&self) -> usize {
+        let side = self.net.arch.input_side();
+        side * side
+    }
+
+    /// Number of output classes per prediction row.
+    pub fn num_classes(&self) -> usize {
+        self.net.num_classes()
+    }
+
+    /// Run the first `n` images of a `[≥n][image_len]` flat buffer and
+    /// return one probability row per image. Unlike the PJRT engine there
+    /// is no padding requirement: a partial batch costs only the rows it
+    /// contains.
+    pub fn run(&mut self, images: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(n > 0, "native engine: empty batch");
+        anyhow::ensure!(
+            n <= self.batch,
+            "native engine: batch {n} exceeds capacity {}",
+            self.batch
+        );
+        let il = self.image_len();
+        anyhow::ensure!(images.len() >= n * il, "native engine: image buffer too short");
+        let plan = self.net.batch_plan(self.batch)?;
+        let probs = plan.forward(&self.params, &images[..n * il], n, &mut self.scratch, None);
+        let classes = self.net.num_classes();
+        Ok(probs.chunks_exact(classes).map(|row| row.to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn rejects_bad_construction() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        let e = NativeBatchEngine::new(net.clone(), params.clone(), 0).unwrap_err().to_string();
+        assert!(e.contains("batch size"), "{e}");
+        let e = NativeBatchEngine::new(net, vec![0.0; 3], 4).unwrap_err().to_string();
+        assert!(e.contains("parameter snapshot"), "{e}");
+    }
+
+    #[test]
+    fn partial_batch_matches_per_sample_forward() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(7);
+        let mut engine = NativeBatchEngine::new(net.clone(), params.clone(), 8).unwrap();
+        let il = engine.image_len();
+        let mut rng = Pcg32::seeded(2);
+        let images: Vec<f32> = (0..3 * il).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let rows = engine.run(&images, 3).unwrap();
+        assert_eq!(rows.len(), 3);
+        let mut scratch = net.scratch();
+        for (i, row) in rows.iter().enumerate() {
+            let expect =
+                net.forward(&params.as_slice(), &images[i * il..(i + 1) * il], &mut scratch, None);
+            assert_eq!(row.as_slice(), expect, "row {i} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn oversized_batch_is_an_error() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        let il = 13 * 13;
+        let mut engine = NativeBatchEngine::new(net, params, 2).unwrap();
+        let images = vec![0.0; 3 * il];
+        assert!(engine.run(&images, 3).is_err());
+        assert!(engine.run(&images, 0).is_err());
+    }
+}

@@ -1,13 +1,21 @@
 //! Dynamic batcher + serving loop.
 //!
 //! Requests arrive on an mpsc channel; the collector drains up to `B`
-//! requests, waiting at most `max_delay` for stragglers, pads the batch to
-//! `B` with zeros (the compiled HLO has a static batch dimension), executes,
-//! and replies per-request. This is the standard router/batcher shape of
-//! serving systems (vLLM-style), sized down to the paper's models.
+//! requests, waiting at most `max_delay` for stragglers, executes the
+//! batch on the selected [`Engine`], and replies per-request. This is the
+//! standard router/batcher shape of serving systems (vLLM-style), sized
+//! down to the paper's models.
+//!
+//! Two execution engines ([`Engine`]):
+//! * `Native` — [`crate::runtime::NativeBatchEngine`] over any compiled
+//!   network + parameter snapshot; partial batches run at their actual
+//!   size.
+//! * `Pjrt` — the AOT artifact path; the compiled HLO has a static batch
+//!   dimension, so partial batches are zero-padded to `B`.
 
 use super::metrics::ServeMetrics;
-use crate::runtime::BatchForwardEngine;
+use crate::nn::Network;
+use crate::runtime::{BatchForwardEngine, NativeBatchEngine};
 use crate::util::Stopwatch;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
@@ -28,6 +36,64 @@ impl Default for ServerConfig {
     }
 }
 
+/// Which execution engine a [`Server`] runs — the serving-side analogue of
+/// the runtime's native/PJRT split (see [`crate::runtime`]).
+pub enum Engine {
+    /// In-process batched execution of a compiled network; no artifacts
+    /// required. `batch` is the collector's batch cap.
+    Native { net: Network, params: Vec<f32>, batch: usize },
+    /// AOT-compiled PJRT artifact (requires `make artifacts` and the
+    /// `xla-runtime` feature). The batch cap is the artifact's compiled
+    /// batch dimension.
+    Pjrt { artifact_dir: String, arch: String, params: Vec<f32> },
+}
+
+/// What the serve loop needs from either engine. `images` is the
+/// collector's `[cap][image_len]` zero-padded staging buffer; `n` is how
+/// many leading rows are real.
+trait ServeEngine {
+    fn batch_cap(&self) -> usize;
+    fn image_len(&self) -> usize;
+    fn run(&mut self, images: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>>;
+}
+
+impl ServeEngine for NativeBatchEngine {
+    fn batch_cap(&self) -> usize {
+        self.batch()
+    }
+
+    fn image_len(&self) -> usize {
+        NativeBatchEngine::image_len(self)
+    }
+
+    fn run(&mut self, images: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        NativeBatchEngine::run(self, images, n)
+    }
+}
+
+/// PJRT engine + the parameter snapshot its `run` signature expects.
+struct PjrtServe {
+    engine: BatchForwardEngine,
+    params: Vec<f32>,
+}
+
+impl ServeEngine for PjrtServe {
+    fn batch_cap(&self) -> usize {
+        self.engine.batch
+    }
+
+    fn image_len(&self) -> usize {
+        let side = self.engine.arch.input_side;
+        side * side
+    }
+
+    fn run(&mut self, images: &[f32], _n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        // The compiled HLO batch dimension is static: always execute the
+        // full padded buffer; the caller uses the first `n` rows.
+        self.engine.run(&self.params, images)
+    }
+}
+
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
@@ -40,6 +106,9 @@ pub struct ServerHandle {
     tx: SyncSender<Request>,
     image_len: usize,
     pub metrics: Arc<ServeMetrics>,
+    /// Liveness token: `Server::drop` counts strong references to decide
+    /// between joining the worker (no external handles) and detaching.
+    alive: Arc<()>,
 }
 
 impl ServerHandle {
@@ -55,38 +124,55 @@ impl ServerHandle {
     }
 }
 
-/// The serving loop owner. Dropping `Server` (after all handles are gone)
-/// stops the worker thread.
+/// The serving loop owner. Dropping `Server` closes its own sender: with
+/// no outstanding [`ServerHandle`]s the worker exits and is joined; with
+/// handles still alive the worker is **detached** and keeps serving them,
+/// exiting on its own once the last handle disconnects.
 pub struct Server {
     handle: ServerHandle,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn the serving thread. The PJRT client and executable are
-    /// created *inside* the worker (the xla crate's handles are not
-    /// `Send`); load errors are reported back before this returns.
-    pub fn spawn(
-        artifact_dir: String,
-        arch: String,
-        params: Vec<f32>,
-        cfg: ServerConfig,
-    ) -> anyhow::Result<Server> {
+    /// Validate the config and spawn the serving thread. The engine is
+    /// built *inside* the worker (the xla crate's PJRT handles are not
+    /// `Send`); build errors — including a zero batch cap from the engine
+    /// — are reported back before this returns.
+    pub fn spawn(engine: Engine, cfg: ServerConfig) -> anyhow::Result<Server> {
+        anyhow::ensure!(
+            cfg.queue_depth > 0,
+            "serve: queue_depth must be ≥ 1 (a zero-capacity channel deadlocks every sender)"
+        );
+        if let Engine::Native { batch, .. } = &engine {
+            anyhow::ensure!(*batch > 0, "serve: native engine batch size must be ≥ 1");
+        }
         let metrics = Arc::new(ServeMetrics::new());
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<usize>>();
         let m2 = metrics.clone();
         let worker = std::thread::spawn(move || {
-            let load = (|| -> anyhow::Result<BatchForwardEngine> {
-                let manifest = crate::runtime::Manifest::load(&artifact_dir)?;
-                let rt = crate::runtime::Runtime::cpu()?;
-                BatchForwardEngine::load(&rt, &manifest, &arch)
+            let built = (|| -> anyhow::Result<Box<dyn ServeEngine>> {
+                let built: Box<dyn ServeEngine> = match engine {
+                    Engine::Native { net, params, batch } => {
+                        Box::new(NativeBatchEngine::new(net, params, batch)?)
+                    }
+                    Engine::Pjrt { artifact_dir, arch, params } => {
+                        let manifest = crate::runtime::Manifest::load(&artifact_dir)?;
+                        let rt = crate::runtime::Runtime::cpu()?;
+                        let engine = BatchForwardEngine::load(&rt, &manifest, &arch)?;
+                        Box::new(PjrtServe { engine, params })
+                    }
+                };
+                anyhow::ensure!(
+                    built.batch_cap() > 0,
+                    "serve: engine reports a zero batch capacity"
+                );
+                Ok(built)
             })();
-            match load {
+            match built {
                 Ok(engine) => {
-                    let side = engine.arch.input_side;
-                    let _ = ready_tx.send(Ok(side * side));
-                    serve_loop(engine, params, cfg, rx, m2);
+                    let _ = ready_tx.send(Ok(engine.image_len()));
+                    serve_loop(engine, cfg, rx, m2);
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -96,7 +182,20 @@ impl Server {
         let image_len = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server thread died during load"))??;
-        Ok(Server { handle: ServerHandle { tx, image_len, metrics }, worker: Some(worker) })
+        Ok(Server {
+            handle: ServerHandle { tx, image_len, metrics, alive: Arc::new(()) },
+            worker: Some(worker),
+        })
+    }
+
+    /// Convenience: spawn on the native engine.
+    pub fn spawn_native(
+        net: Network,
+        params: Vec<f32>,
+        batch: usize,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Server> {
+        Server::spawn(Engine::Native { net, params, batch }, cfg)
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -106,28 +205,31 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        // Close our handle's sender by replacing it with a dummy channel,
-        // then join once all external handles are dropped. We cannot force
-        // external handles closed; join only if the channel is already
-        // disconnected, otherwise detach.
         if let Some(w) = self.worker.take() {
+            // Close our own sender by replacing it with a dummy channel.
             let (dummy_tx, _) = mpsc::sync_channel(1);
             self.handle.tx = dummy_tx;
-            // If no other handles exist the loop will exit promptly.
-            let _ = w.join();
+            // Join only when no external handle can feed the loop any
+            // more; otherwise detach — joining here would block until
+            // every outstanding clone is dropped (possibly forever).
+            // A handle dropped between the count and the join only makes
+            // the join return sooner; no new handle can appear because
+            // cloning requires an existing one.
+            if Arc::strong_count(&self.handle.alive) == 1 {
+                let _ = w.join();
+            }
         }
     }
 }
 
 fn serve_loop(
-    engine: BatchForwardEngine,
-    params: Vec<f32>,
+    mut engine: Box<dyn ServeEngine>,
     cfg: ServerConfig,
     rx: Receiver<Request>,
     metrics: Arc<ServeMetrics>,
 ) {
-    let image_len = engine.arch.input_side * engine.arch.input_side;
-    let batch_cap = engine.batch;
+    let image_len = engine.image_len();
+    let batch_cap = engine.batch_cap();
     let mut batch: Vec<Request> = Vec::with_capacity(batch_cap);
     let mut images = vec![0.0f32; batch_cap * image_len];
 
@@ -153,18 +255,30 @@ fn serve_loop(
             }
         }
 
-        // Pad and execute.
+        // Stage (zero-padding the tail for the static-batch engine) and
+        // execute.
         images.fill(0.0);
         for (i, r) in batch.iter().enumerate() {
             images[i * image_len..(i + 1) * image_len].copy_from_slice(&r.image);
         }
         metrics.record_batch(batch.len());
         let sw = Stopwatch::start();
-        let result = engine.run(&params, &images);
+        let result = engine.run(&images, batch.len());
         let _exec_secs = sw.elapsed_secs();
 
         match result {
             Ok(rows) => {
+                if rows.len() < batch.len() {
+                    let msg = format!(
+                        "engine returned {} rows for a batch of {}",
+                        rows.len(),
+                        batch.len()
+                    );
+                    for r in batch.drain(..) {
+                        let _ = r.reply.send(Err(anyhow::anyhow!("{msg}")));
+                    }
+                    continue;
+                }
                 for (i, r) in batch.drain(..).enumerate() {
                     metrics
                         .record_latency_us(r.enqueued.elapsed().as_secs_f64() * 1e6);
@@ -183,15 +297,42 @@ fn serve_loop(
 
 #[cfg(test)]
 mod tests {
-    // The full server path needs compiled artifacts; integration coverage
-    // lives in rust/tests/serving.rs and examples/serve_infer.rs. Unit
-    // tests here cover config defaults.
+    // Engine-driven integration coverage (native partial batches,
+    // straggler flushes, drop semantics) lives in rust/tests/serving.rs
+    // and examples/serve_infer.rs. Unit tests here cover config defaults
+    // and spawn-time validation.
     use super::*;
+    use crate::config::ArchSpec;
 
     #[test]
     fn config_defaults_sane() {
         let c = ServerConfig::default();
         assert!(c.max_delay >= Duration::from_micros(100));
         assert!(c.queue_depth >= 16);
+    }
+
+    #[test]
+    fn spawn_rejects_zero_queue_depth() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        let e = Server::spawn_native(
+            net,
+            params,
+            4,
+            ServerConfig { queue_depth: 0, ..Default::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("queue_depth"), "{e}");
+    }
+
+    #[test]
+    fn spawn_rejects_zero_batch() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        let e = Server::spawn_native(net, params, 0, ServerConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("batch size"), "{e}");
     }
 }

@@ -1,16 +1,28 @@
-//! Batched inference service over the AOT executable — the deployment-side
-//! complement of the trainer: once CHAOS has produced weights, this module
-//! serves predictions from the PJRT path with dynamic batching.
+//! Batched inference service — the deployment-side complement of the
+//! trainer: once CHAOS has produced weights, this module serves
+//! predictions with dynamic batching.
 //!
 //! Architecture (std threads + channels; tokio is not in the vendored
 //! registry): callers submit images through [`ServerHandle::predict`]; a
-//! collector thread groups them into batches of up to `B` (the artifact's
-//! compiled batch size), flushing on size or on `max_delay`; the executor
-//! runs the batched HLO and routes each row back through the caller's
-//! oneshot channel.
+//! collector thread groups them into batches of up to `B`, flushing on
+//! size or on `max_delay`; the engine runs the batch and routes each row
+//! back through the caller's oneshot channel.
+//!
+//! ## Engine choice ([`Engine`])
+//!
+//! * **`Engine::Native`** (default choice) — executes the compiled
+//!   [`crate::nn::Network`] through the batched forward plan
+//!   ([`crate::nn::BatchPlan`]) via
+//!   [`crate::runtime::NativeBatchEngine`]. Works in every build, needs no
+//!   artifacts, runs partial batches at their actual size, and serves
+//!   weights straight from a training run.
+//! * **`Engine::Pjrt`** — executes the AOT-compiled batched-forward HLO
+//!   artifact on the PJRT CPU client (requires `make artifacts` and the
+//!   `xla-runtime` feature). The artifact's batch dimension is static, so
+//!   partial batches are zero-padded to the compiled `B`.
 
 mod batcher;
 mod metrics;
 
-pub use batcher::{Server, ServerConfig, ServerHandle};
+pub use batcher::{Engine, Server, ServerConfig, ServerHandle};
 pub use metrics::ServeMetrics;

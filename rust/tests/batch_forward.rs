@@ -1,0 +1,174 @@
+//! Bit-identity of the batched forward path.
+//!
+//! The contract behind every batched consumer (native serving engine,
+//! batched evaluation phases): `BatchPlan::forward` over `n` images
+//! produces, bit for bit, the probabilities of `n` successive per-sample
+//! `Network::forward` calls — across **every registered layer kind**,
+//! including the padded/strided conv fast-path split, eval-mode dropout,
+//! and train-mode dropout when the per-sample baseline shares the same
+//! PRNG stream.
+
+use chaos_phi::config::{Act, ArchSpec, LayerSpec};
+use chaos_phi::nn::{layer, Network};
+use chaos_phi::util::{proptest, Pcg32};
+
+fn rand_images(rng: &mut Pcg32, n: usize, len: usize) -> Vec<f32> {
+    (0..n * len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+/// Every kind the test architectures below exercise; the coverage test
+/// asserts this set matches the registry, so a newly registered built-in
+/// kind fails loudly until it is covered here.
+const COVERED_KINDS: &[&str] = &["input", "conv", "pool", "avgpool", "fc", "dropout", "output"];
+
+/// An architecture touching every built-in kind, including the general
+/// (padded + strided) conv path and both activations.
+fn zoo_arch() -> ArchSpec {
+    ArchSpec {
+        name: "batch-zoo".into(),
+        layers: vec![
+            LayerSpec::Input { side: 13 },
+            LayerSpec::conv_ex(4, 4, 1, 1, Act::Relu), // padded: 12x12
+            LayerSpec::MaxPool { kernel: 2 },          // 6x6
+            LayerSpec::conv_ex(6, 2, 2, 0, Act::ScaledTanh), // strided: 3x3
+            LayerSpec::AvgPool { kernel: 3 },          // 1x1
+            LayerSpec::Dropout { rate: 0.4 },
+            LayerSpec::fc_act(17, Act::Relu),
+            LayerSpec::Output { classes: 10 },
+        ],
+        paper_epochs: 1,
+    }
+}
+
+/// Forward `n` samples one by one and return the concatenated probability
+/// rows, using a scratch seeded like the batched one.
+fn per_sample_probs(
+    net: &Network,
+    params: &[f32],
+    images: &[f32],
+    n: usize,
+    train: bool,
+    seed: u64,
+) -> Vec<f32> {
+    let il = net.dims[0].out_len();
+    let classes = net.num_classes();
+    let mut scratch = net.scratch_seeded(seed);
+    scratch.train_mode = train;
+    let mut out = Vec::with_capacity(n * classes);
+    for i in 0..n {
+        let probs = net.forward(&params, &images[i * il..(i + 1) * il], &mut scratch, None);
+        out.extend_from_slice(probs);
+    }
+    out
+}
+
+fn batched_probs(
+    net: &Network,
+    params: &[f32],
+    images: &[f32],
+    n: usize,
+    cap: usize,
+    train: bool,
+    seed: u64,
+) -> Vec<f32> {
+    let plan = net.batch_plan(cap).unwrap();
+    let mut scratch = plan.scratch_seeded(seed);
+    scratch.train_mode = train;
+    let il = net.dims[0].out_len();
+    let mut out = Vec::new();
+    let mut idx = 0;
+    while idx < n {
+        let b = cap.min(n - idx);
+        let probs =
+            plan.forward(&params, &images[idx * il..(idx + b) * il], b, &mut scratch, None);
+        out.extend_from_slice(probs);
+        idx += b;
+    }
+    out
+}
+
+#[test]
+fn covered_kinds_match_registry() {
+    let mut covered: Vec<String> = COVERED_KINDS.iter().map(|s| s.to_string()).collect();
+    covered.sort();
+    let registered = layer::names();
+    assert_eq!(
+        registered, covered,
+        "a registered kind is missing from the batch bit-identity coverage"
+    );
+    // And the zoo arch really instantiates every non-input covered kind.
+    let net = Network::new(zoo_arch());
+    for kind in COVERED_KINDS.iter().filter(|k| **k != "input") {
+        assert!(
+            net.ops.iter().any(|op| op.kind() == *kind),
+            "zoo arch does not instantiate kind '{kind}'"
+        );
+    }
+}
+
+#[test]
+fn batched_forward_bit_identical_across_kinds_eval_mode() {
+    // Property: for random images, batch sizes and capacities, the batched
+    // probabilities equal the per-sample ones bitwise (eval mode: dropout
+    // is identity, so the baseline needs no PRNG coordination).
+    for arch in [ArchSpec::tiny(), ArchSpec::small(), zoo_arch()] {
+        let net = Network::new(arch);
+        let params = net.init_params(42);
+        let il = net.dims[0].out_len();
+        proptest::run(
+            proptest::Config { cases: 12, max_size: 9, ..Default::default() },
+            |rng, size| {
+                let n = 1 + rng.range(0, size.max(1) + 1);
+                let cap = 1 + rng.range(0, size.max(1) + 1);
+                let images = rand_images(rng, n, il);
+                (n, cap, images)
+            },
+            |(n, cap, images)| {
+                let single = per_sample_probs(&net, &params, images, *n, false, 0);
+                let batched = batched_probs(&net, &params, images, *n, *cap, false, 0);
+                if single != batched {
+                    return Err(format!(
+                        "{}: batched probs diverge (n={n}, cap={cap})",
+                        net.arch.name
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn batched_forward_bit_identical_with_train_mode_dropout() {
+    // Train mode: dropout draws masks. The per-sample baseline shares its
+    // PRNG stream across successive calls exactly like forward_batch's
+    // contract, so from the same seed both paths draw identical masks —
+    // the batch must match bitwise *only* when chunking matches (cap ≥ n,
+    // one chunk), because a second chunk reuses the same scratch stream.
+    let net = Network::new(zoo_arch());
+    let params = net.init_params(7);
+    let il = net.dims[0].out_len();
+    let mut rng = Pcg32::seeded(3);
+    for n in [1usize, 2, 5, 8] {
+        let images = rand_images(&mut rng, n, il);
+        let single = per_sample_probs(&net, &params, &images, n, true, 0xD0);
+        let batched = batched_probs(&net, &params, &images, n, n, true, 0xD0);
+        assert_eq!(single, batched, "train-mode dropout diverged at n={n}");
+    }
+}
+
+#[test]
+fn batched_forward_matches_paper_archs() {
+    // The paper networks end to end (29×29 inputs, conv/pool/fc/output).
+    let mut rng = Pcg32::seeded(9);
+    for name in ["small", "medium"] {
+        let net = Network::from_name(name).unwrap();
+        let params = net.init_params(5);
+        let il = net.dims[0].out_len();
+        let n = 5;
+        let images = rand_images(&mut rng, n, il);
+        let single = per_sample_probs(&net, &params, &images, n, false, 0);
+        let batched = batched_probs(&net, &params, &images, n, 3, false, 0);
+        assert_eq!(single, batched, "{name}: batched ≠ per-sample");
+    }
+}

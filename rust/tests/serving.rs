@@ -1,10 +1,149 @@
-//! Serving integration: dynamic batcher + PJRT batched executor under
-//! concurrent clients. Requires `make artifacts`; skips otherwise.
+//! Serving integration: dynamic batcher under concurrent clients.
+//!
+//! The native-engine tests run in every build (no artifacts needed) and
+//! cover correctness against per-sample forwards, partial batches, the
+//! `max_delay` straggler path, spawn-time validation, and the
+//! drop-while-handles-alive detach. The PJRT tests require
+//! `make artifacts` and skip otherwise.
 
 use chaos_phi::data::{generate_synthetic, SynthConfig};
 use chaos_phi::nn::Network;
 use chaos_phi::runtime::{artifacts_available, ForwardEngine, Manifest, Runtime};
-use chaos_phi::serve::{Server, ServerConfig};
+use chaos_phi::serve::{Engine, Server, ServerConfig};
+use std::time::Duration;
+
+fn tiny_server(batch: usize, max_delay: Duration, seed: u64) -> (Server, Network, Vec<f32>) {
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(seed);
+    let server = Server::spawn(
+        Engine::Native { net: net.clone(), params: params.clone(), batch },
+        ServerConfig { max_delay, ..Default::default() },
+    )
+    .unwrap();
+    (server, net, params)
+}
+
+#[test]
+fn native_server_matches_per_sample_forward_under_concurrency() {
+    let (server, net, params) = tiny_server(4, Duration::from_millis(1), 3);
+    let images = generate_synthetic(24, 8, &SynthConfig::default()).resize(13);
+    // Ground truth via the per-sample engine (bit-identity contract).
+    let mut scratch = net.scratch();
+    let expected: Vec<Vec<f32>> = (0..images.len())
+        .map(|i| net.forward(&params.as_slice(), images.image(i), &mut scratch, None).to_vec())
+        .collect();
+    std::thread::scope(|s| {
+        for c in 0..3usize {
+            let handle = server.handle();
+            let images = &images;
+            let expected = &expected;
+            s.spawn(move || {
+                let mut i = c;
+                while i < images.len() {
+                    let got = handle.predict(images.image(i)).unwrap();
+                    assert_eq!(got, expected[i], "batched vs per-sample mismatch on image {i}");
+                    i += 3;
+                }
+            });
+        }
+    });
+    let m = server.handle().metrics.snapshot();
+    assert_eq!(m.requests, 24);
+    assert!(m.batches >= 6, "batch cap is 4, so ≥6 batches for 24 requests");
+    assert!(m.mean_batch_fill <= 4.0);
+}
+
+#[test]
+fn native_server_flushes_partial_batch_after_max_delay() {
+    // One lone request against a cap-8 batcher: the straggler timer (not a
+    // full batch) must flush it.
+    let (server, net, params) = tiny_server(8, Duration::from_millis(20), 5);
+    let images = generate_synthetic(1, 4, &SynthConfig::default()).resize(13);
+    let start = std::time::Instant::now();
+    let probs = server.handle().predict(images.image(0)).unwrap();
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "partial batch must flush on max_delay, not wait for batch-mates"
+    );
+    let mut scratch = net.scratch();
+    let expected = net.forward(&params.as_slice(), images.image(0), &mut scratch, None);
+    assert_eq!(probs.as_slice(), expected, "partial batch row diverged");
+    let m = server.handle().metrics.snapshot();
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.batches, 1);
+    assert!(m.mean_batch_fill <= 1.0 + 1e-9, "lone request ⇒ batch of 1");
+}
+
+#[test]
+fn native_server_rejects_wrong_image_size() {
+    let (server, _, _) = tiny_server(4, Duration::from_millis(1), 1);
+    let err = server.handle().predict(&[0.0; 10]).unwrap_err();
+    assert!(err.to_string().contains("size"), "{err}");
+}
+
+#[test]
+fn dropping_server_with_live_handles_detaches() {
+    // Regression: Server::drop used to join unconditionally, deadlocking
+    // whenever an external ServerHandle outlived the Server. Now it must
+    // detach, and the surviving handle keeps being served.
+    let (server, _, _) = tiny_server(4, Duration::from_millis(1), 2);
+    let handle = server.handle();
+    let images = generate_synthetic(2, 6, &SynthConfig::default()).resize(13);
+
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        drop(server);
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("Server::drop must not block while external handles are alive");
+
+    // The detached worker is still serving the surviving handle.
+    let probs = handle.predict(images.image(0)).unwrap();
+    assert_eq!(probs.len(), 10);
+    drop(handle); // last sender gone → detached worker exits on its own
+}
+
+#[test]
+fn dropping_server_without_handles_joins_worker() {
+    // The complementary path: no external handles ⇒ drop joins promptly.
+    let (server, _, _) = tiny_server(4, Duration::from_millis(1), 2);
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        drop(server);
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("Server::drop must join once no handles remain");
+}
+
+#[test]
+fn spawn_validation_rejects_degenerate_configs() {
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(1);
+    assert!(Server::spawn(
+        Engine::Native { net: net.clone(), params: params.clone(), batch: 0 },
+        ServerConfig::default(),
+    )
+    .is_err());
+    assert!(Server::spawn(
+        Engine::Native { net: net.clone(), params: params.clone(), batch: 4 },
+        ServerConfig { queue_depth: 0, ..Default::default() },
+    )
+    .is_err());
+    // Parameter snapshot that does not match the network layout.
+    assert!(Server::spawn(
+        Engine::Native { net, params: vec![0.0; 5], batch: 4 },
+        ServerConfig::default(),
+    )
+    .is_err());
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-engine tests (need `make artifacts`; skip otherwise)
+// ---------------------------------------------------------------------------
 
 fn artifact_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
@@ -19,27 +158,25 @@ fn skip() -> bool {
 }
 
 #[test]
-fn server_answers_concurrent_clients_correctly() {
+fn pjrt_server_answers_concurrent_clients_correctly() {
     if skip() {
         return;
     }
     let net = Network::from_name("tiny").unwrap();
     let params = net.init_params(3);
     let server = Server::spawn(
-        artifact_dir(),
-        "tiny".into(),
-        params.clone(),
-        ServerConfig { max_delay: std::time::Duration::from_millis(1), ..Default::default() },
+        Engine::Pjrt { artifact_dir: artifact_dir(), arch: "tiny".into(), params: params.clone() },
+        ServerConfig { max_delay: Duration::from_millis(1), ..Default::default() },
     )
     .unwrap();
 
-    // Ground truth via the single-image engine.
+    // Ground truth via the single-image engine, precomputed on this thread
+    // (the PJRT handles are !Sync).
     let manifest = Manifest::load(artifact_dir()).unwrap();
     let rt = Runtime::cpu().unwrap();
     let single = ForwardEngine::load(&rt, &manifest, "tiny").unwrap();
 
     let images = generate_synthetic(24, 8, &SynthConfig::default()).resize(13);
-    // Ground truth precomputed on this thread (the PJRT handles are !Sync).
     let expected: Vec<Vec<f32>> =
         (0..images.len()).map(|i| single.run(&params, images.image(i)).unwrap()).collect();
     std::thread::scope(|s| {
@@ -64,37 +201,20 @@ fn server_answers_concurrent_clients_correctly() {
     });
     let m = server.handle().metrics.snapshot();
     assert_eq!(m.requests, 24);
-    assert!(m.batches >= 6, "batch cap is 4, so ≥6 batches for 24 requests");
-    assert!(m.mean_batch_fill <= 4.0);
 }
 
 #[test]
-fn server_rejects_wrong_image_size() {
-    if skip() {
-        return;
-    }
-    let net = Network::from_name("tiny").unwrap();
-    let server = Server::spawn(
-        artifact_dir(),
-        "tiny".into(),
-        net.init_params(1),
-        ServerConfig::default(),
-    )
-    .unwrap();
-    let err = server.handle().predict(&[0.0; 10]).unwrap_err();
-    assert!(err.to_string().contains("size"), "{err}");
-}
-
-#[test]
-fn server_load_error_is_reported() {
+fn pjrt_server_load_error_is_reported() {
     if skip() {
         return;
     }
     let net = Network::from_name("tiny").unwrap();
     let r = Server::spawn(
-        "/nonexistent/artifacts".into(),
-        "tiny".into(),
-        net.init_params(1),
+        Engine::Pjrt {
+            artifact_dir: "/nonexistent/artifacts".into(),
+            arch: "tiny".into(),
+            params: net.init_params(1),
+        },
         ServerConfig::default(),
     );
     assert!(r.is_err(), "missing artifact dir must fail spawn");
