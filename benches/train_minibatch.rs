@@ -1,0 +1,146 @@
+//! Bench: per-sample vs minibatched training throughput, B ∈ {8, 32}, on
+//! the paper "small" architecture.
+//!
+//! This is the measurement behind the minibatched back-propagation stack:
+//! a `minibatch:B` worker claims B-sample chunks and drives one
+//! `BatchPlan` forward/backward per chunk, so every layer's parameter span
+//! is read once per chunk (weight-stationary kernels in both directions)
+//! instead of once per image per pass. Throughput should rise with B while
+//! the gradients stay bit-identical to per-sample accumulation (enforced
+//! by rust/tests/batch_backward.rs).
+//!
+//! Output: a markdown report on stdout **and** machine-readable
+//! `BENCH_train.json` (schema self-checked after writing, smoke-tested in
+//! CI):
+//!
+//! ```json
+//! {
+//!   "bench": "train_minibatch", "arch": "small", "images": 256,
+//!   "epochs": 2, "threads": 4,
+//!   "per_sample": {"policy": "chaos", "train_secs": s, "images_per_sec": r},
+//!   "minibatch": [{"batch": B, "train_secs": s, "images_per_sec": r,
+//!                  "speedup_vs_per_sample": x, "final_train_loss": l}, ...]
+//! }
+//! ```
+//!
+//! Run: `cargo bench --bench train_minibatch [-- --smoke] [-- --out FILE]`
+
+use chaos_phi::chaos::Trainer;
+use chaos_phi::config::{ArchSpec, TrainConfig};
+use chaos_phi::data::{generate_synthetic, Dataset, SynthConfig};
+use chaos_phi::util::Json;
+
+const BATCH_SIZES: [usize; 2] = [8, 32];
+
+/// One training run; returns (summed training-phase seconds, final epoch's
+/// mean train loss). Eval phases are minimized (no validation split, tiny
+/// test set) so the measurement isolates the training phase.
+fn train_once(
+    policy: &str,
+    trn: &Dataset,
+    tst: &Dataset,
+    threads: usize,
+    epochs: usize,
+) -> (f64, f64) {
+    let cfg = TrainConfig {
+        epochs,
+        threads,
+        eta0: 0.001,
+        eta_decay: 0.9,
+        seed: 0xBE7C4,
+        validation_fraction: 0.0,
+    };
+    let run = Trainer::new()
+        .arch(ArchSpec::small())
+        .config(cfg)
+        .policy_name(policy)
+        .expect("policy resolves")
+        .run(trn, tst)
+        .expect("training run");
+    let train_secs: f64 = run.epochs.iter().map(|e| e.train_secs).sum();
+    let last = run.final_epoch();
+    (train_secs, last.train.loss / last.train.images.max(1) as f64)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_train.json".to_string());
+
+    let (images_n, epochs, threads) = if smoke { (48, 1, 2) } else { (256, 2, 4) };
+
+    let side = ArchSpec::small().input_side();
+    let trn = generate_synthetic(images_n, 7, &SynthConfig::default()).resize(side);
+    let tst = generate_synthetic(16, 8, &SynthConfig::default()).resize(side);
+
+    let mut report = chaos_phi::bench::Report::new(format!(
+        "train_minibatch — per-sample vs minibatch training over {images_n} images × {epochs} \
+         epochs (arch small, {threads} threads)"
+    ));
+
+    let (ps_secs, ps_loss) = train_once("chaos", &trn, &tst, threads, epochs);
+    let total_images = (images_n * epochs) as f64;
+    let ps_rate = total_images / ps_secs;
+    report.note(format!(
+        "per-sample (chaos): {ps_rate:.0} images/s ({ps_secs:.2}s train, mean loss {ps_loss:.3})"
+    ));
+
+    let mut rows: Vec<Json> = Vec::new();
+    for b in BATCH_SIZES {
+        let (secs, loss) = train_once(&format!("minibatch:{b}"), &trn, &tst, threads, epochs);
+        let rate = total_images / secs;
+        let speedup = ps_secs / secs;
+        assert!(loss.is_finite() && loss > 0.0, "minibatch:{b} training diverged");
+        report.note(format!(
+            "minibatch:{b}: {rate:.0} images/s, {speedup:.2}× vs per-sample (mean loss {loss:.3})"
+        ));
+        rows.push(Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("train_secs", Json::num(secs)),
+            ("images_per_sec", Json::num(rate)),
+            ("speedup_vs_per_sample", Json::num(speedup)),
+            ("final_train_loss", Json::num(loss)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("train_minibatch")),
+        ("arch", Json::str("small")),
+        ("smoke", Json::num(u32::from(smoke))),
+        ("images", Json::num(images_n as f64)),
+        ("epochs", Json::num(epochs as f64)),
+        ("threads", Json::num(threads as f64)),
+        (
+            "per_sample",
+            Json::obj(vec![
+                ("policy", Json::str("chaos")),
+                ("train_secs", Json::num(ps_secs)),
+                ("images_per_sec", Json::num(ps_rate)),
+            ]),
+        ),
+        ("minibatch", Json::arr(rows)),
+    ]);
+    std::fs::write(&out_path, doc.pretty()).expect("write BENCH_train.json");
+
+    // Schema self-check: re-parse what we wrote so CI catches rot without
+    // external tooling.
+    let parsed = Json::parse(&std::fs::read_to_string(&out_path).unwrap()).expect("valid JSON");
+    assert_eq!(parsed.req("bench").unwrap().as_str(), Some("train_minibatch"));
+    assert!(
+        parsed.req("per_sample").unwrap().req("images_per_sec").unwrap().as_f64().unwrap() > 0.0
+    );
+    let rows = parsed.req("minibatch").unwrap().as_arr().expect("minibatch array");
+    assert_eq!(rows.len(), BATCH_SIZES.len());
+    for row in rows {
+        assert!(row.req("speedup_vs_per_sample").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.req("final_train_loss").unwrap().as_f64().unwrap() > 0.0);
+    }
+    println!("\nwrote {out_path}");
+
+    report.print();
+}

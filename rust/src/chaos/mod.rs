@@ -16,12 +16,14 @@
 //!   no barrier anywhere in an epoch's training phase.
 //!
 //! The coordinator is driven through the [`Trainer`] builder; the update
-//! scheme — CHAOS itself or the strategies the paper contrasts with (B:
-//! averaged/synchronous SGD, C: delayed round-robin, D: pure HogWild!) —
-//! is an open [`UpdatePolicy`] trait over one shared worker framework, so
-//! new schemes plug in without touching the epoch driver (see [`policy`]).
-//! Runs can be observed in flight (early stopping, live checkpointing)
-//! through [`EpochObserver`].
+//! scheme — CHAOS itself, the strategies the paper contrasts with (B:
+//! averaged/synchronous SGD, C: delayed round-robin, D: pure HogWild!), or
+//! the minibatch policies (`minibatch:B` / `hogwild-batch:B`, training on
+//! B-sample chunks through the batched kernels) — is an open
+//! [`UpdatePolicy`] trait over one shared worker framework, so new schemes
+//! plug in without touching the epoch driver (see [`policy`]). Runs can be
+//! observed in flight (early stopping, live checkpointing) through
+//! [`EpochObserver`].
 
 mod checkpoint;
 mod observer;
@@ -37,8 +39,8 @@ pub use observer::{
     observer_fn, CheckpointEvery, EarlyStop, EpochObserver, FnObserver, RunView, TrainControl,
 };
 pub use policy::{
-    AveragedPolicy, ChaosPolicy, DelayedRoundRobinPolicy, EpochCtx, EpochState, HogwildPolicy,
-    SequentialPolicy, UpdatePolicy, WorkerHooks,
+    AveragedPolicy, ChaosPolicy, DelayedRoundRobinPolicy, EpochCtx, EpochState, HogwildBatchPolicy,
+    HogwildPolicy, MinibatchPolicy, SequentialPolicy, UpdatePolicy, WorkerHooks,
 };
 pub use reporter::{EpochRecord, EvalMetrics, RunResult};
 pub use sampler::Sampler;

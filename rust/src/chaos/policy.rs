@@ -24,6 +24,22 @@
 //! * [`ChaosPolicy`] — controlled HogWild: per-layer publication under a
 //!   per-layer lock, arbitrary order of implicit synchronization (the
 //!   paper's contribution).
+//!
+//! Two **minibatch** policies train on B-sample chunks through the batched
+//! kernels (the paper's per-sample SGD was a Phi-era constraint; minibatch
+//! data parallelism amortizes every weight load across the chunk,
+//! arXiv:1404.5997). Their workers claim whole chunks from the sampler and
+//! drive one `nn::BatchPlan` forward/backward per chunk — see
+//! [`UpdatePolicy::minibatch`] and [`WorkerHooks::publish_batch`]:
+//!
+//! * [`MinibatchPolicy`] (`"minibatch:B"`) — true averaged minibatch
+//!   gradients: one publication per layer per chunk under the per-layer
+//!   locks, scaled by η/n where n is the *actual* chunk size (the epoch's
+//!   final chunk may be smaller than B);
+//! * [`HogwildBatchPolicy`] (`"hogwild-batch:B"`) — per-layer delayed
+//!   publication of **batch-summed** gradients under the CHAOS-style
+//!   per-layer locks: equivalent to B per-sample CHAOS steps computed from
+//!   one weight snapshot, published together.
 
 use super::shared::SharedParams;
 use super::strategies::Turnstile;
@@ -72,6 +88,16 @@ pub trait UpdatePolicy: Send + Sync {
         Ok(())
     }
 
+    /// Minibatch-capable policies return `Some(B)`: the epoch driver then
+    /// claims B-sample chunks from the sampler and drives forward/backward
+    /// through one `nn::BatchPlan` per worker, handing each layer's
+    /// batch-summed gradients to [`WorkerHooks::publish_batch`]. `None`
+    /// (the default) trains per-sample through the per-worker
+    /// [`WorkerHooks::publish`] hook.
+    fn minibatch(&self) -> Option<usize> {
+        None
+    }
+
     /// Per-epoch shared state; called once per epoch before workers start.
     fn epoch_state(&self, ctx: &EpochCtx<'_>) -> Box<dyn EpochState>;
 }
@@ -94,6 +120,26 @@ pub trait WorkerHooks {
     /// The current sample's backward pass finished (sample-boundary sync
     /// point — turnstiles, chunk counting, barriers).
     fn end_sample(&mut self, _ctx: &EpochCtx<'_>) {}
+
+    /// Layer `layer`'s **batch-summed** gradients over `n` samples are
+    /// complete (back-to-front during the chunk's batched back-propagation
+    /// — only driven for policies whose [`UpdatePolicy::minibatch`] is
+    /// `Some`). `n` is the *actual* chunk size: the epoch's final chunk may
+    /// be smaller than the configured B, and averaging policies must
+    /// divide by `n`, not B.
+    fn publish_batch(
+        &mut self,
+        _ctx: &EpochCtx<'_>,
+        _layer: usize,
+        _dims: &LayerDims,
+        _grads: &[f32],
+        _n: usize,
+    ) {
+        unreachable!(
+            "publish_batch driven on a policy without minibatch support \
+             (override publish_batch alongside UpdatePolicy::minibatch)"
+        );
+    }
 
     /// The sampler drained; flush remaining state and join any collective
     /// shutdown (worker teardown). Called once, before the thread exits.
@@ -396,6 +442,134 @@ impl WorkerHooks for AveragedWorker<'_> {
 }
 
 // ---------------------------------------------------------------------------
+// Minibatch policies (batched kernels, B-sample chunks)
+// ---------------------------------------------------------------------------
+
+/// True minibatch SGD over the batched kernels: each worker claims
+/// B-sample chunks, computes batch-summed gradients through one
+/// `nn::BatchPlan`, and publishes every layer **once per chunk** under the
+/// per-layer locks, scaled by η/n — averaged minibatch gradients, the
+/// data-parallel variant of Krizhevsky's "one weird trick"
+/// (arXiv:1404.5997). `n` is the actual chunk size, so the epoch's final
+/// partial chunk still takes an exactly-averaged step.
+#[derive(Debug, Clone, Copy)]
+pub struct MinibatchPolicy {
+    /// Samples per chunk (the minibatch size B).
+    pub batch: usize,
+}
+
+impl MinibatchPolicy {
+    pub fn new(batch: usize) -> MinibatchPolicy {
+        MinibatchPolicy { batch }
+    }
+}
+
+impl Default for MinibatchPolicy {
+    fn default() -> MinibatchPolicy {
+        MinibatchPolicy { batch: 32 }
+    }
+}
+
+impl UpdatePolicy for MinibatchPolicy {
+    fn name(&self) -> String {
+        "minibatch".to_string()
+    }
+
+    fn minibatch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.batch > 0, "minibatch: batch size must be ≥ 1");
+        Ok(())
+    }
+
+    fn epoch_state(&self, _ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        Box::new(MinibatchState { average: true })
+    }
+}
+
+/// Batched CHAOS: batch-summed gradients published per layer under the
+/// per-layer locks at chunk boundaries ("delayed" by up to B samples),
+/// **without** averaging — equivalent to B per-sample CHAOS steps computed
+/// from one weight snapshot and published together, trading update
+/// freshness for amortized weight loads.
+#[derive(Debug, Clone, Copy)]
+pub struct HogwildBatchPolicy {
+    /// Samples per chunk (the minibatch size B).
+    pub batch: usize,
+}
+
+impl HogwildBatchPolicy {
+    pub fn new(batch: usize) -> HogwildBatchPolicy {
+        HogwildBatchPolicy { batch }
+    }
+}
+
+impl Default for HogwildBatchPolicy {
+    fn default() -> HogwildBatchPolicy {
+        HogwildBatchPolicy { batch: 32 }
+    }
+}
+
+impl UpdatePolicy for HogwildBatchPolicy {
+    fn name(&self) -> String {
+        "hogwild-batch".to_string()
+    }
+
+    fn minibatch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.batch > 0, "hogwild-batch: batch size must be ≥ 1");
+        Ok(())
+    }
+
+    fn epoch_state(&self, _ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
+        Box::new(MinibatchState { average: false })
+    }
+}
+
+struct MinibatchState {
+    /// Divide the batch-summed gradient by the chunk size (`minibatch`)
+    /// or publish the raw sum (`hogwild-batch`).
+    average: bool,
+}
+
+impl EpochState for MinibatchState {
+    fn worker(&self, _ctx: &EpochCtx<'_>, _worker_id: usize) -> Box<dyn WorkerHooks + '_> {
+        Box::new(MinibatchHooks { average: self.average })
+    }
+}
+
+struct MinibatchHooks {
+    average: bool,
+}
+
+impl WorkerHooks for MinibatchHooks {
+    fn publish(&mut self, ctx: &EpochCtx<'_>, layer: usize, dims: &LayerDims, grads: &[f32]) {
+        // Per-sample driving degenerates to a chunk of one: η/1 = η.
+        ctx.store.publish_scaled(layer, dims.params.clone(), grads, -ctx.eta);
+    }
+
+    fn publish_batch(
+        &mut self,
+        ctx: &EpochCtx<'_>,
+        layer: usize,
+        dims: &LayerDims,
+        grads: &[f32],
+        n: usize,
+    ) {
+        debug_assert!(n > 0, "empty chunks are never backpropagated");
+        // Averaging divides by the actual chunk size n — the epoch's final
+        // chunk may be smaller than the configured B.
+        let scale = if self.average { -(ctx.eta / n as f32) } else { -ctx.eta };
+        ctx.store.publish_scaled(layer, dims.params.clone(), grads, scale);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Name registry
 // ---------------------------------------------------------------------------
 
@@ -425,19 +599,34 @@ fn make_averaged(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
     Ok(Box::new(AveragedPolicy { sync_every: parse_sync_every(arg)? }))
 }
 
+fn make_minibatch(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    Ok(Box::new(MinibatchPolicy { batch: parse_batch("minibatch", arg)? }))
+}
+
+fn make_hogwild_batch(arg: Option<&str>) -> anyhow::Result<Box<dyn UpdatePolicy>> {
+    Ok(Box::new(HogwildBatchPolicy { batch: parse_batch("hogwild-batch", arg)? }))
+}
+
+/// Parse a `<policy>:<batch>` argument (`None` = the default 32).
+pub(crate) fn parse_batch(name: &str, arg: Option<&str>) -> anyhow::Result<usize> {
+    parse_positive_arg(&format!("{name}:<batch>"), arg, "")
+}
+
+/// Parse an optional positive-integer `:` argument (`None` = the default
+/// 32). `what` labels the flag in errors; `zero_note` explains why zero is
+/// rejected, if there is more to say.
+fn parse_positive_arg(what: &str, arg: Option<&str>, zero_note: &str) -> anyhow::Result<usize> {
+    let v: usize = match arg {
+        None => 32,
+        Some(a) => a.parse().map_err(|_| anyhow::anyhow!("{what} — bad integer '{a}'"))?,
+    };
+    anyhow::ensure!(v > 0, "{what} must be ≥ 1{zero_note}");
+    Ok(v)
+}
+
 /// Parse the `averaged:<sync_every>` argument (`None` = the default 32).
 pub(crate) fn parse_sync_every(arg: Option<&str>) -> anyhow::Result<usize> {
-    let sync_every: usize = match arg {
-        None => 32,
-        Some(a) => a
-            .parse()
-            .map_err(|_| anyhow::anyhow!("averaged:<sync_every> — bad integer '{a}'"))?,
-    };
-    anyhow::ensure!(
-        sync_every > 0,
-        "averaged:<sync_every> must be ≥ 1 (0 would deadlock the barrier rounds)"
-    );
-    Ok(sync_every)
+    parse_positive_arg("averaged:<sync_every>", arg, " (0 would deadlock the barrier rounds)")
 }
 
 fn no_arg(name: &str, arg: Option<&str>) -> anyhow::Result<()> {
@@ -456,6 +645,8 @@ fn registry() -> &'static Mutex<BTreeMap<String, Factory>> {
         map.insert("hogwild".to_string(), Arc::new(make_hogwild));
         map.insert("delayed-rr".to_string(), Arc::new(make_delayed_rr));
         map.insert("averaged".to_string(), Arc::new(make_averaged));
+        map.insert("minibatch".to_string(), Arc::new(make_minibatch));
+        map.insert("hogwild-batch".to_string(), Arc::new(make_hogwild_batch));
         Mutex::new(map)
     })
 }
@@ -466,6 +657,7 @@ fn canonical(head: &str) -> &str {
         "seq" => "sequential",
         "delayed" => "delayed-rr",
         "avg" => "averaged",
+        "mb" => "minibatch",
         other => other,
     }
 }
@@ -545,9 +737,72 @@ mod tests {
             ("averaged", "averaged"),
             ("avg:8", "averaged"),
             ("averaged:64", "averaged"),
+            ("minibatch", "minibatch"),
+            ("minibatch:32", "minibatch"),
+            ("mb:8", "minibatch"),
+            ("hogwild-batch:16", "hogwild-batch"),
         ] {
             assert_eq!(from_name(text).unwrap().name(), want, "{text}");
         }
+    }
+
+    #[test]
+    fn minibatch_names_carry_batch_size() {
+        assert_eq!(from_name("minibatch:8").unwrap().minibatch(), Some(8));
+        assert_eq!(from_name("minibatch").unwrap().minibatch(), Some(32), "default B");
+        assert_eq!(from_name("hogwild-batch:64").unwrap().minibatch(), Some(64));
+        // Per-sample policies stay per-sample.
+        assert_eq!(from_name("chaos").unwrap().minibatch(), None);
+        assert_eq!(from_name("averaged:16").unwrap().minibatch(), None);
+    }
+
+    #[test]
+    fn minibatch_arg_error_branches() {
+        let e = from_name("minibatch:x").unwrap_err().to_string();
+        assert!(e.contains("bad integer 'x'"), "{e}");
+        let e = from_name("minibatch:0").unwrap_err().to_string();
+        assert!(e.contains("must be ≥ 1"), "{e}");
+        let e = from_name("hogwild-batch:0").unwrap_err().to_string();
+        assert!(e.contains("must be ≥ 1"), "{e}");
+        assert!(MinibatchPolicy { batch: 0 }.validate().is_err());
+        assert!(HogwildBatchPolicy { batch: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn minibatch_publish_scales_by_actual_chunk_size() {
+        // The eta-scaling audit: a partial final chunk (n < configured B)
+        // must divide by n, not B — and hogwild-batch must not divide at
+        // all.
+        let net = crate::nn::Network::new(ArchSpec::tiny());
+        let params = net.init_params(3);
+        let store = SharedParams::new(&params, &net.dims);
+        let eta = 0.01f32;
+        let ctx = EpochCtx { net: &net, store: &store, threads: 1, eta, epoch: 0, seed: 0 };
+        let layer = 1;
+        let dims = &net.dims[layer];
+        let grads = vec![1.0f32; dims.param_count()];
+        let i = dims.params.start;
+
+        let state = MinibatchPolicy::new(32).epoch_state(&ctx);
+        let mut hooks = state.worker(&ctx, 0);
+        let before = store.get(i);
+        hooks.publish_batch(&ctx, layer, dims, &grads, 5);
+        let after = store.get(i);
+        assert!(
+            (before - after - eta / 5.0).abs() < 1e-7,
+            "minibatch must scale by η/n (n=5): {before} -> {after}"
+        );
+
+        let state = HogwildBatchPolicy::new(32).epoch_state(&ctx);
+        let mut hooks = state.worker(&ctx, 0);
+        let before = store.get(i);
+        hooks.publish_batch(&ctx, layer, dims, &grads, 5);
+        let after = store.get(i);
+        assert!(
+            (before - after - eta).abs() < 1e-7,
+            "hogwild-batch publishes the raw sum: {before} -> {after}"
+        );
+        assert_eq!(store.publication_count(), 2, "one publication per layer per chunk");
     }
 
     #[test]
@@ -569,7 +824,15 @@ mod tests {
     #[test]
     fn names_lists_builtins_sorted() {
         let names = names();
-        for n in ["averaged", "chaos", "delayed-rr", "hogwild", "sequential"] {
+        for n in [
+            "averaged",
+            "chaos",
+            "delayed-rr",
+            "hogwild",
+            "hogwild-batch",
+            "minibatch",
+            "sequential",
+        ] {
             assert!(names.iter().any(|x| x == n), "missing {n}");
         }
         let mut sorted = names.clone();
@@ -584,7 +847,7 @@ mod tests {
         assert!(register("a:b", make_chaos).is_err());
         // Alias heads are canonicalized before lookup, so registering one
         // would create an unreachable policy.
-        for alias in ["seq", "avg", "delayed"] {
+        for alias in ["seq", "avg", "delayed", "mb"] {
             let e = register(alias, make_chaos).unwrap_err().to_string();
             assert!(e.contains("reserved alias"), "{alias}: {e}");
         }
@@ -603,6 +866,8 @@ mod tests {
         assert!(!HogwildPolicy.is_sequential());
         assert!(!DelayedRoundRobinPolicy.is_sequential());
         assert!(!AveragedPolicy::default().is_sequential());
+        assert!(!MinibatchPolicy::default().is_sequential());
+        assert!(!HogwildBatchPolicy::default().is_sequential());
     }
 
     #[test]

@@ -37,6 +37,24 @@ impl Sampler {
         self.order.get(i).map(|&v| v as usize)
     }
 
+    /// Claim up to `max` indices in **one** atomic operation, replacing
+    /// `out`'s contents. An empty `out` afterwards means the pool is
+    /// drained; a partial fill means this claim got the epoch's tail (the
+    /// final chunk may be smaller than `max`). Minibatch workers use this
+    /// so claiming a B-sample chunk costs one `fetch_add` instead of B.
+    pub fn next_chunk(&self, max: usize, out: &mut Vec<usize>) {
+        out.clear();
+        if max == 0 {
+            return;
+        }
+        let start = self.cursor.fetch_add(max, Ordering::Relaxed);
+        if start >= self.order.len() {
+            return;
+        }
+        let end = start.saturating_add(max).min(self.order.len());
+        out.extend(self.order[start..end].iter().map(|&v| v as usize));
+    }
+
     /// Number of images in the pool.
     pub fn len(&self) -> usize {
         self.order.len()
@@ -108,6 +126,48 @@ mod tests {
         };
         assert_ne!(a, b, "different epochs must reshuffle");
         assert_eq!(a, a2, "same (seed, epoch) must reproduce");
+    }
+
+    #[test]
+    fn chunks_drain_exactly_once_multi_thread() {
+        let s = Sampler::shuffled(1000, 3, 2);
+        let issued: Vec<Vec<usize>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut mine = Vec::new();
+                        let mut chunk = Vec::new();
+                        loop {
+                            s.next_chunk(7, &mut chunk);
+                            if chunk.is_empty() {
+                                break;
+                            }
+                            mine.extend_from_slice(&chunk);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let all: Vec<usize> = issued.into_iter().flatten().collect();
+        assert_eq!(all.len(), 1000);
+        let set: HashSet<usize> = all.iter().copied().collect();
+        assert_eq!(set.len(), 1000, "duplicates issued");
+    }
+
+    #[test]
+    fn chunk_tail_is_partial_then_empty() {
+        let s = Sampler::sequential(10);
+        let mut chunk = Vec::new();
+        s.next_chunk(8, &mut chunk);
+        assert_eq!(chunk, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        s.next_chunk(8, &mut chunk);
+        assert_eq!(chunk, vec![8, 9], "tail chunk is partial");
+        s.next_chunk(8, &mut chunk);
+        assert!(chunk.is_empty(), "drained pool yields empty chunks");
+        s.next_chunk(0, &mut chunk);
+        assert!(chunk.is_empty());
     }
 
     #[test]

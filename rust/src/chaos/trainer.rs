@@ -24,7 +24,7 @@
 //! ```
 
 use super::observer::{EpochObserver, ParamsView, RunView, TrainControl};
-use super::policy::{self, ChaosPolicy, EpochCtx, UpdatePolicy};
+use super::policy::{self, ChaosPolicy, EpochCtx, UpdatePolicy, WorkerHooks};
 use super::reporter::{EpochRecord, EvalMetrics, RunResult};
 use super::sampler::Sampler;
 use super::shared::SharedParams;
@@ -206,7 +206,11 @@ fn run_epochs(
     policy: &dyn UpdatePolicy,
     observers: &mut [Box<dyn EpochObserver>],
 ) -> RunResult {
-    let sequential = policy.is_sequential() || cfg.threads == 1;
+    // Minibatch policies train through the batched engine even at one
+    // thread — the per-sample sequential engine would silently change
+    // their update semantics (η/n averaged chunks vs per-sample steps).
+    let sequential =
+        policy.is_sequential() || (cfg.threads == 1 && policy.minibatch().is_none());
     let threads = if sequential { 1 } else { cfg.threads };
     let policy_name = policy.name();
     let layer_times = LayerTimes::new();
@@ -336,9 +340,11 @@ fn run_view<'a>(
     RunView::new(&net.arch.name, policy_name, threads, cfg.epochs, publications, params)
 }
 
-/// One epoch's parallel training phase: every worker picks images from the
+/// One epoch's parallel training phase: every worker picks work from the
 /// shared pool, forward/backward-propagates against the shared store, and
-/// routes gradients through the policy's hooks.
+/// routes gradients through the policy's hooks. Per-sample policies pick
+/// single images; minibatch-capable policies ([`UpdatePolicy::minibatch`])
+/// claim whole B-sample chunks and drive one `BatchPlan` per worker.
 fn train_phase_parallel(
     ctx: &EpochCtx<'_>,
     data: &Dataset,
@@ -347,6 +353,7 @@ fn train_phase_parallel(
     timers: &LayerTimes,
 ) -> EvalMetrics {
     let state = policy.epoch_state(ctx);
+    let minibatch = policy.minibatch();
     let metrics = Mutex::new(EvalMetrics::default());
     std::thread::scope(|s| {
         for worker_id in 0..ctx.threads {
@@ -358,28 +365,90 @@ fn train_phase_parallel(
                 // with the run seed so differently-seeded runs draw
                 // independent masks — a thread-private concern, like the
                 // rest of the scratch.
-                let mut scratch = ctx
-                    .net
-                    .scratch_seeded(ctx.seed ^ (((ctx.epoch as u64) << 32) | worker_id as u64));
-                scratch.train_mode = true;
-                let mut local = EvalMetrics::default();
-                while let Some(idx) = sampler.next() {
-                    let label = data.label(idx);
-                    ctx.net.forward(&ctx.store, data.image(idx), &mut scratch, Some(timers));
-                    local.images += 1;
-                    local.loss += ctx.net.loss(&scratch, label) as f64;
-                    local.errors += usize::from(ctx.net.prediction(&scratch) != label);
-                    ctx.net.backward(&ctx.store, label, &mut scratch, Some(timers), |l, d, g| {
-                        hooks.publish(ctx, l, d, g)
-                    });
-                    hooks.end_sample(ctx);
-                }
+                let seed = ctx.seed ^ (((ctx.epoch as u64) << 32) | worker_id as u64);
+                let local = match minibatch {
+                    None => worker_per_sample(ctx, data, sampler, &mut *hooks, seed, timers),
+                    Some(b) => worker_minibatch(ctx, data, sampler, &mut *hooks, seed, b, timers),
+                };
                 hooks.finish(ctx);
                 merge_metrics(metrics, &local);
             });
         }
     });
     metrics.into_inner().unwrap()
+}
+
+/// Per-sample worker loop: pick one image at a time, publish per layer per
+/// sample through [`WorkerHooks::publish`].
+fn worker_per_sample(
+    ctx: &EpochCtx<'_>,
+    data: &Dataset,
+    sampler: &Sampler,
+    hooks: &mut dyn WorkerHooks,
+    seed: u64,
+    timers: &LayerTimes,
+) -> EvalMetrics {
+    let mut scratch = ctx.net.scratch_seeded(seed);
+    scratch.train_mode = true;
+    let mut local = EvalMetrics::default();
+    while let Some(idx) = sampler.next() {
+        let label = data.label(idx);
+        ctx.net.forward(&ctx.store, data.image(idx), &mut scratch, Some(timers));
+        local.images += 1;
+        local.loss += ctx.net.loss(&scratch, label) as f64;
+        local.errors += usize::from(ctx.net.prediction(&scratch) != label);
+        ctx.net.backward(&ctx.store, label, &mut scratch, Some(timers), |l, d, g| {
+            hooks.publish(ctx, l, d, g)
+        });
+        hooks.end_sample(ctx);
+    }
+    local
+}
+
+/// Minibatch worker loop: claim up-to-B-sample chunks from the sampler
+/// (one atomic op per chunk), forward/backward each chunk through one
+/// [`crate::nn::BatchPlan`] — every layer's parameter span reads once per
+/// chunk — and hand the batch-summed per-layer gradients to
+/// [`WorkerHooks::publish_batch`] with the *actual* chunk size (the
+/// epoch's final chunk may be smaller than B).
+fn worker_minibatch(
+    ctx: &EpochCtx<'_>,
+    data: &Dataset,
+    sampler: &Sampler,
+    hooks: &mut dyn WorkerHooks,
+    seed: u64,
+    batch: usize,
+    timers: &LayerTimes,
+) -> EvalMetrics {
+    let plan = ctx.net.batch_plan(batch).expect("minibatch size validated ≥ 1");
+    let mut scratch = plan.scratch_seeded(seed);
+    scratch.train_mode = true;
+    let classes = ctx.net.num_classes();
+    let mut local = EvalMetrics::default();
+    let mut idxs: Vec<usize> = Vec::with_capacity(batch);
+    let mut labels: Vec<usize> = Vec::with_capacity(batch);
+    loop {
+        sampler.next_chunk(batch, &mut idxs);
+        if idxs.is_empty() {
+            break;
+        }
+        labels.clear();
+        for (slot, &idx) in idxs.iter().enumerate() {
+            plan.stage_image(&mut scratch, slot, data.image(idx));
+            labels.push(data.label(idx));
+        }
+        let n = idxs.len();
+        {
+            let probs = plan.forward_staged(&ctx.store, n, &mut scratch, Some(timers));
+            for (row, &label) in probs.chunks_exact(classes).zip(&labels) {
+                tally_row(row, label, &mut local);
+            }
+        }
+        plan.backward(&ctx.store, &labels, n, &mut scratch, Some(timers), |l, d, g| {
+            hooks.publish_batch(ctx, l, d, g, n)
+        });
+    }
+    local
 }
 
 /// Evaluation batch size: each worker forwards chunks of up to this many
@@ -406,6 +475,8 @@ fn eval_seq(
     let n = limit.min(data.len());
     let mut m = EvalMetrics::default();
     if n == 0 {
+        // Empty validation/test split: `batch_plan(EVAL_BATCH.min(0))`
+        // would hit the zero-capacity rejection and panic mid-run.
         return m;
     }
     let plan = net.batch_plan(EVAL_BATCH.min(n)).expect("non-zero eval batch");
@@ -446,7 +517,15 @@ pub fn eval_parallel(
     threads: usize,
     timers: &LayerTimes,
 ) -> EvalMetrics {
-    let sampler = Sampler::sequential(limit.min(data.len()));
+    let n = limit.min(data.len());
+    if n == 0 {
+        // Empty validation/test split: nothing to evaluate. Returning
+        // early also keeps `batch_plan` away from degenerate capacities
+        // (mirrors eval_seq; regression-tested by
+        // `empty_eval_sets_evaluate_to_empty_stats`).
+        return EvalMetrics::default();
+    }
+    let sampler = Sampler::sequential(n);
     let metrics = Mutex::new(EvalMetrics::default());
     let classes = net.num_classes();
     std::thread::scope(|s| {
@@ -455,18 +534,12 @@ pub fn eval_parallel(
                 let plan = net.batch_plan(EVAL_BATCH).expect("non-zero eval batch");
                 let mut scratch = plan.scratch();
                 let mut local = EvalMetrics::default();
-                let mut idxs = Vec::with_capacity(EVAL_BATCH);
+                let mut idxs: Vec<usize> = Vec::with_capacity(EVAL_BATCH);
                 loop {
-                    // The sequential sampler hands out consecutive
-                    // indices, so each worker's claim is a contiguous run
-                    // only by accident — stage per slot, tally per index.
-                    idxs.clear();
-                    while idxs.len() < EVAL_BATCH {
-                        match sampler.next() {
-                            Some(idx) => idxs.push(idx),
-                            None => break,
-                        }
-                    }
+                    // next_chunk claims a contiguous run in one atomic op,
+                    // but staging stays per slot (and tallying per index)
+                    // so the loop is agnostic to the claim shape.
+                    sampler.next_chunk(EVAL_BATCH, &mut idxs);
                     if idxs.is_empty() {
                         break;
                     }
@@ -561,7 +634,7 @@ mod tests {
     fn all_parallel_policies_run_and_learn() {
         let trn = tiny_data(240, 5);
         let tst = tiny_data(80, 6);
-        for name in ["chaos", "hogwild", "delayed-rr", "averaged:16"] {
+        for name in ["chaos", "hogwild", "delayed-rr", "averaged:16", "hogwild-batch:8"] {
             let r = tiny_trainer(3, 3).policy_name(name).unwrap().run(&trn, &tst).unwrap();
             let first = &r.epochs[0];
             let last = r.final_epoch();
@@ -574,6 +647,133 @@ mod tests {
             );
             assert!(last.test.error_rate() < 0.7, "{name}: learns something");
         }
+    }
+
+    #[test]
+    fn minibatch_policies_train_end_to_end() {
+        // Averaged chunks take η-scaled mean-gradient steps, so the
+        // minibatch run gets a learning rate sized for averaged updates.
+        let trn = tiny_data(240, 5);
+        let tst = tiny_data(80, 6);
+        for threads in [1usize, 3] {
+            let r = tiny_trainer(threads, 5)
+                .eta(0.2, 0.95)
+                .policy_name("minibatch:4")
+                .unwrap()
+                .run(&trn, &tst)
+                .unwrap();
+            let first = &r.epochs[0];
+            let last = r.final_epoch();
+            assert_eq!(first.train.images, 240, "{threads} threads: every image trained");
+            assert!(
+                last.train.loss < first.train.loss,
+                "{threads} threads: loss should fall ({} -> {})",
+                first.train.loss,
+                last.train.loss
+            );
+            assert!(last.test.error_rate() < 0.7, "{threads} threads: learns something");
+            assert!(
+                r.publications > 0,
+                "{threads} threads: minibatch publishes through the store even at one thread"
+            );
+        }
+    }
+
+    #[test]
+    fn minibatch_partial_chunk_matches_per_sample_reference() {
+        // End-to-end eta-scaling audit on a dataset whose size is NOT a
+        // multiple of B: the final chunk of each epoch has n = 50 % 16 = 2
+        // samples and must be averaged by 2, not 16. The reference
+        // replays the exact chunk schedule with per-sample kernels
+        // (bit-identical to the batched path) and applies
+        // w += −(η/n)·Σg per chunk.
+        let n_images = 50usize;
+        let batch = 16usize;
+        let epochs = 2usize;
+        let trn = tiny_data(n_images, 61);
+        let tst = tiny_data(10, 62);
+        let cfg = tiny_cfg(1, epochs);
+        let r = Trainer::new()
+            .arch(ArchSpec::tiny())
+            .config(cfg.clone())
+            .policy_name(&format!("minibatch:{batch}"))
+            .unwrap()
+            .run(&trn, &tst)
+            .unwrap();
+
+        let net = Network::new(ArchSpec::tiny());
+        let mut params = net.init_params(cfg.seed);
+        let mut scratch = net.scratch();
+        scratch.train_mode = true;
+        for epoch in 0..epochs {
+            let eta = cfg.eta_at(epoch);
+            let sampler = Sampler::shuffled(n_images, cfg.seed, epoch);
+            let mut chunk = Vec::new();
+            loop {
+                sampler.next_chunk(batch, &mut chunk);
+                if chunk.is_empty() {
+                    break;
+                }
+                let mut acc = vec![0.0f32; net.total_params];
+                for &idx in &chunk {
+                    net.forward(&params.as_slice(), trn.image(idx), &mut scratch, None);
+                    net.backward(&params.as_slice(), trn.label(idx), &mut scratch, None, |_, d, g| {
+                        for (a, &v) in acc[d.params.clone()].iter_mut().zip(g) {
+                            *a += v;
+                        }
+                    });
+                }
+                let scale = -(eta / chunk.len() as f32);
+                for d in &net.dims {
+                    if d.param_count() == 0 {
+                        continue;
+                    }
+                    for (w, &g) in
+                        params[d.params.clone()].iter_mut().zip(&acc[d.params.clone()])
+                    {
+                        *w += scale * g;
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            r.final_params, params,
+            "trainer minibatch weights must match the per-sample reference bitwise"
+        );
+    }
+
+    #[test]
+    fn empty_eval_sets_evaluate_to_empty_stats() {
+        // Regression: an empty validation split (validation_fraction 0) or
+        // an empty test set used to panic mid-run in the batched eval
+        // phases (`batch_plan(EVAL_BATCH.min(0))` rejects zero capacity).
+        let trn = tiny_data(40, 71);
+        let empty = tiny_data(0, 72);
+        // Sequential engine.
+        let r = tiny_trainer(1, 1)
+            .policy(SequentialPolicy)
+            .validation_fraction(0.0)
+            .run(&trn, &empty)
+            .unwrap();
+        assert_eq!(r.final_epoch().validation.images, 0);
+        assert_eq!(r.final_epoch().test.images, 0);
+        assert_eq!(r.final_epoch().test.errors, 0);
+        // Parallel engine.
+        let r = tiny_trainer(3, 1)
+            .policy(ChaosPolicy)
+            .validation_fraction(0.0)
+            .run(&trn, &empty)
+            .unwrap();
+        assert_eq!(r.final_epoch().validation.images, 0);
+        assert_eq!(r.final_epoch().test.images, 0);
+        // Direct phase-level checks.
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        assert_eq!(eval_seq(&net, &params, &empty, empty.len(), None).images, 0);
+        let store = SharedParams::new(&params, &net.dims);
+        let timers = LayerTimes::new();
+        assert_eq!(eval_parallel(&net, &store, &empty, empty.len(), 2, &timers).images, 0);
+        assert_eq!(eval_parallel(&net, &store, &trn, 0, 2, &timers).images, 0);
     }
 
     #[test]

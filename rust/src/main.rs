@@ -26,11 +26,13 @@ chaos — CHAOS parallel CNN training (Viebke et al. 2017 reproduction)
 
 USAGE: chaos <command> [flags]
 
-  train     --arch small|medium|large|tiny --threads N --strategy chaos|sequential|hogwild|delayed-rr|averaged[:n]
+  train     --arch small|medium|large|tiny --threads N
+            --strategy chaos|sequential|hogwild|delayed-rr|averaged[:n]|minibatch[:B]|hogwild-batch[:B]
             --epochs E --train-n N --test-n N --eta F --seed S --data-dir DIR
             --out FILE.json --weights-out FILE.ckpt
             --stop-at-test-error R   (early-stop once test error rate <= R)
-            (--strategy also accepts any policy registered via chaos::policy)
+            (--strategy also accepts any policy registered via chaos::policy;
+             minibatch:B trains on B-sample chunks with averaged gradients)
   table N   [--quick|--full] [--threads 2,4,8] [--arch small]    (N in 1..9)
   fig N     [--quick|--full] [--threads 2,4,8] [--arch small]    (N in 5..13)
   report    --out FILE.md [--quick]

@@ -54,7 +54,9 @@ impl Act {
     /// Convert ∂L/∂(output) into ∂L/∂(pre-activation) in place, using the
     /// stored *outputs* `ys` (every provided activation's derivative is
     /// expressible through its output, so backward never needs the
-    /// pre-activations).
+    /// pre-activations). Length-generic and elementwise, so the batched
+    /// backward kernels apply it block-wise over whole `[batch][len]`
+    /// delta planes with per-sample-identical bits.
     #[inline]
     pub fn scale_delta(self, delta: &mut [f32], ys: &[f32]) {
         debug_assert_eq!(delta.len(), ys.len());

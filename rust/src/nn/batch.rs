@@ -1,26 +1,33 @@
-//! Batched forward execution: [`BatchPlan`] + [`BatchScratch`].
+//! Batched execution: [`BatchPlan`] + [`BatchScratch`].
 //!
 //! The per-sample orchestrator ([`super::Network::forward`]) re-loads every
-//! layer's parameter span through [`ParamSource`] once **per image** — fine
-//! for training (backward dominates), wasteful for forward-only consumers.
-//! A [`BatchPlan`] drives the same compiled op pipeline over `[B][len]`
+//! layer's parameter span through [`ParamSource`] once **per image**. A
+//! [`BatchPlan`] drives the same compiled op pipeline over `[B][len]`
 //! flat activation arenas and loads each layer's span exactly **once per
 //! batch**, handing the ops their weight-stationary
-//! [`LayerOp::forward_batch`] kernels. This is the data-parallel batching
-//! of Krizhevsky's "one weird trick" (arXiv:1404.5997) applied to the
-//! paper's SIMD story: contiguous activation rows across the batch keep
-//! the inner loops auto-vectorizer-friendly while weight traffic amortizes.
+//! [`LayerOp::forward_batch`]/[`LayerOp::backward_batch`] kernels. This is
+//! the data-parallel batching of Krizhevsky's "one weird trick"
+//! (arXiv:1404.5997) applied to the paper's SIMD story: contiguous
+//! activation rows across the batch keep the inner loops
+//! auto-vectorizer-friendly while weight traffic amortizes.
 //!
 //! Arenas live in 64-byte-aligned buffers ([`crate::tensor::AlignedBuf`],
 //! the paper's `_mm_malloc(…, 64)` discipline). Consumers:
-//! [`crate::runtime::NativeBatchEngine`] (serving) and the trainer's
-//! validation/testing phases (`chaos::trainer`).
+//! [`crate::runtime::NativeBatchEngine`] (serving), the trainer's
+//! validation/testing phases, and the minibatch update policies'
+//! training phases (`chaos::trainer` / `chaos::policy`). The backward
+//! arenas (delta ping-pong planes + the gradient staging buffer) allocate
+//! lazily on the first [`BatchPlan::backward`] call, so forward-only
+//! consumers pay nothing for them.
 //!
 //! Bit-identity: `plan.forward(params, images, n, …)` produces, row for
 //! row, exactly the bits of `n` independent [`super::Network::forward`]
-//! calls — enforced by `rust/tests/batch_forward.rs`.
+//! calls (enforced by `rust/tests/batch_forward.rs`), and
+//! `plan.backward(params, labels, n, …)` emits per-layer batch-summed
+//! gradients bitwise equal to accumulating `n` per-sample
+//! [`super::Network::backward`] calls (`rust/tests/batch_backward.rs`).
 
-use super::layer::{LayerOp, OpScratch};
+use super::layer::{BatchActs, LayerOp, OpScratch};
 use super::network::{Network, ParamSource};
 use crate::tensor::AlignedBuf;
 use crate::util::timer::LayerTimes;
@@ -82,6 +89,11 @@ impl<'n> BatchPlan<'n> {
             rngs,
             train_mode: false,
             param_buf: AlignedBuf::zeroed(max_params),
+            // Backward arenas allocate lazily on the first backward() —
+            // forward-only consumers (serving, eval) never pay for them.
+            delta_a: AlignedBuf::zeroed(0),
+            delta_b: AlignedBuf::zeroed(0),
+            grad_buf: AlignedBuf::zeroed(0),
         }
     }
 
@@ -154,11 +166,104 @@ impl<'n> BatchPlan<'n> {
         let classes = self.net.num_classes();
         &scratch.acts[n_layers - 1][..n * classes]
     }
+
+    /// Back-propagate the last forward pass of the first `n` slots against
+    /// per-sample `labels`, emitting each parameterized layer's
+    /// **batch-summed** `[weights..., biases...]` gradient through
+    /// `on_grads(layer_index, dims, grads)` right after that layer
+    /// completes (back-to-front, mirroring [`Network::backward`]'s
+    /// per-layer publication hook). Each layer's parameter span is loaded
+    /// **once** for the whole batch, the backward half of the
+    /// weight-stationary story.
+    ///
+    /// The caller must have run [`BatchPlan::forward`]/
+    /// [`BatchPlan::forward_staged`] on the same scratch with the same `n`
+    /// (training passes set `scratch.train_mode` so dropout masks are drawn
+    /// and replayed); the stored `[n][len]` activation arenas are consumed
+    /// here. Gradients are bit-identical to accumulating `n` per-sample
+    /// [`Network::backward`] calls (`rust/tests/batch_backward.rs`).
+    pub fn backward<P: ParamSource>(
+        &self,
+        params: &P,
+        labels: &[usize],
+        n: usize,
+        scratch: &mut BatchScratch,
+        timers: Option<&LayerTimes>,
+        mut on_grads: impl FnMut(usize, &super::dims::LayerDims, &[f32]),
+    ) {
+        assert!(n <= self.cap, "batch {n} exceeds plan capacity {}", self.cap);
+        // A hard assert: a short `labels` in release mode would silently
+        // backpropagate raw softmax rows for the unlabelled slots.
+        assert_eq!(labels.len(), n, "one label per batch slot");
+        scratch.ensure_backward_arenas(self.net);
+        let n_layers = self.net.dims.len();
+        let classes = self.net.num_classes();
+
+        // Output delta per row: softmax + cross-entropy ⇒ p − onehot
+        // (already the pre-activation delta — the output op's contract).
+        {
+            let probs = scratch.acts.last().unwrap();
+            let delta = &mut scratch.delta_a[..n * classes];
+            delta.copy_from_slice(&probs[..n * classes]);
+            for (s, &label) in labels.iter().enumerate() {
+                debug_assert!(label < classes);
+                delta[s * classes + label] -= 1.0;
+            }
+        }
+
+        // Walking back: on entry to layer l, `delta_a[..n·out_len]` holds
+        // every sample's ∂L/∂(output of layer l); the op converts to its
+        // pre-activation deltas itself and writes each sample's
+        // ∂L/∂(input) into `delta_b`.
+        for l in (1..n_layers).rev() {
+            let d = &self.net.dims[l];
+            let op: &dyn LayerOp = self.net.ops[l].as_ref();
+            let t0 = timers.map(|_| Instant::now());
+            let is_first = l == 1; // layer below is the input layer
+            let pc = d.param_count();
+            if pc > 0 {
+                // One on-demand load per layer per batch, as in forward.
+                params.load(d.params.clone(), &mut scratch.param_buf[..pc]);
+            }
+            scratch.grad_buf[..pc].fill(0.0);
+            let al = op.aux_len();
+            let (prev_acts, rest) = scratch.acts.split_at(l);
+            let deltas_in: &mut [f32] =
+                if is_first { &mut [] } else { &mut scratch.delta_b[..n * d.in_len()] };
+            op.backward_batch(
+                &scratch.param_buf[..pc],
+                BatchActs {
+                    inputs: &prev_acts[l - 1][..n * d.in_len()],
+                    outputs: &rest[0][..n * d.out_len()],
+                },
+                &mut scratch.delta_a[..n * d.out_len()],
+                deltas_in,
+                &mut scratch.grad_buf[..pc],
+                n,
+                &mut OpScratch {
+                    aux: &mut scratch.aux[l][..n * al],
+                    rng: &mut scratch.rngs[l],
+                    train: scratch.train_mode,
+                },
+            );
+            if pc > 0 {
+                on_grads(l, d, &scratch.grad_buf[..pc]);
+            }
+            if !is_first {
+                std::mem::swap(&mut scratch.delta_a, &mut scratch.delta_b);
+            }
+            if let (Some(t), Some(start)) = (timers, t0) {
+                t.add(op.class(true), start.elapsed().as_nanos() as u64);
+            }
+        }
+    }
 }
 
-/// Arenas for one batched-forward worker: per-layer `[cap][out_len]`
-/// activation blocks, per-op `[cap][aux_len]` auxiliary words, per-op PRNG
-/// streams, and the single staging buffer for on-demand parameter loads.
+/// Arenas for one batched worker: per-layer `[cap][out_len]` activation
+/// blocks, per-op `[cap][aux_len]` auxiliary words, per-op PRNG streams,
+/// the single staging buffer for on-demand parameter loads, and (allocated
+/// lazily by [`BatchPlan::backward`]) the `[cap][max_len]` delta ping-pong
+/// planes plus the per-layer batch-summed gradient staging buffer.
 /// Thread-private, like the per-sample [`super::Scratch`].
 pub struct BatchScratch {
     cap: usize,
@@ -166,15 +271,34 @@ pub struct BatchScratch {
     acts: Vec<AlignedBuf>,
     aux: Vec<Vec<u32>>,
     rngs: Vec<Pcg32>,
-    /// Whether forward runs as a training pass (dropout masks active).
+    /// Whether forward/backward run as a training pass (dropout masks
+    /// active).
     pub train_mode: bool,
     param_buf: AlignedBuf,
+    delta_a: AlignedBuf,
+    delta_b: AlignedBuf,
+    grad_buf: AlignedBuf,
 }
 
 impl BatchScratch {
     /// Batch capacity these arenas were sized for.
     pub fn cap(&self) -> usize {
         self.cap
+    }
+
+    /// Allocate the backward arenas on first use (forward-only consumers
+    /// never reach this).
+    fn ensure_backward_arenas(&mut self, net: &Network) {
+        let max_act = net.dims.iter().map(|d| d.out_len()).max().unwrap_or(0);
+        let need = self.cap * max_act;
+        if self.delta_a.len() < need {
+            self.delta_a = AlignedBuf::zeroed(need);
+            self.delta_b = AlignedBuf::zeroed(need);
+        }
+        let max_params = net.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
+        if self.grad_buf.len() < max_params {
+            self.grad_buf = AlignedBuf::zeroed(max_params);
+        }
     }
 
     /// Reset every per-op PRNG stream (fixed-mask knob for tests, mirrors
@@ -224,6 +348,43 @@ mod tests {
         let mut scratch = plan.scratch();
         let params = net.init_params(1);
         plan.forward_staged(&params, 3, &mut scratch, None);
+    }
+
+    #[test]
+    fn batched_backward_matches_accumulated_per_sample() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(13);
+        let n = 3;
+        let il = net.dims[0].out_len();
+        let mut rng = Pcg32::seeded(21);
+        let images: Vec<f32> = (0..n * il).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let labels = [1usize, 7, 3];
+
+        // Reference: per-sample backward, grads summed in sample order.
+        let mut scratch = net.scratch();
+        scratch.train_mode = true;
+        let mut acc = vec![0.0f32; net.total_params];
+        for s in 0..n {
+            net.forward(&params.as_slice(), &images[s * il..(s + 1) * il], &mut scratch, None);
+            net.backward(&params.as_slice(), labels[s], &mut scratch, None, |_, d, g| {
+                for (a, &v) in acc[d.params.clone()].iter_mut().zip(g) {
+                    *a += v;
+                }
+            });
+        }
+
+        let plan = BatchPlan::new(&net, 4).unwrap();
+        let mut bs = plan.scratch();
+        bs.train_mode = true;
+        plan.forward(&params, &images, n, &mut bs, None);
+        let mut batched = vec![0.0f32; net.total_params];
+        let mut order = Vec::new();
+        plan.backward(&params, &labels, n, &mut bs, None, |l, d, g| {
+            order.push(l);
+            batched[d.params.clone()].copy_from_slice(g);
+        });
+        assert_eq!(order, vec![6, 5, 3, 1], "back-to-front over parameterized layers");
+        assert_eq!(batched, acc, "batch-summed gradients must match per-sample bits");
     }
 
     #[test]

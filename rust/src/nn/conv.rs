@@ -241,6 +241,103 @@ pub fn conv_backward(
     }
 }
 
+/// Batched backward convolution over `batch` samples (`inputs`/`dinputs`
+/// laid out `[b][in_len]`, `deltas` `[b][out_len]`) — the weight-stationary
+/// variant of [`conv_backward`]: each kernel tap's weight and its gradient
+/// accumulator stay resident while every sample's rows stream past, so
+/// weight/gradient traffic amortizes across the batch exactly like the
+/// forward path. `wgrads`/`bgrads` receive the **batch-summed** gradients
+/// (accumulated into, as in the per-sample kernel); `dinputs` is
+/// overwritten per sample (pass an empty slice to skip).
+///
+/// Bit-identity contract: every gradient element receives its per-sample
+/// contributions in ascending sample order, each computed by the same
+/// row-dot sequence as [`conv_backward`], so the result equals `batch`
+/// successive per-sample calls sharing the gradient buffers bitwise
+/// (enforced by `rust/tests/batch_backward.rs`).
+pub fn conv_backward_batch(
+    s: &ConvShape,
+    inputs: &[f32],
+    weights: &[f32],
+    deltas: &[f32],
+    wgrads: &mut [f32],
+    bgrads: &mut [f32],
+    dinputs: &mut [f32],
+    batch: usize,
+) {
+    let in_len = s.in_len();
+    let out_len = s.out_len();
+    debug_assert_eq!(inputs.len(), batch * in_len);
+    debug_assert_eq!(weights.len(), s.weight_len());
+    debug_assert_eq!(deltas.len(), batch * out_len);
+    debug_assert_eq!(wgrads.len(), s.weight_len());
+    debug_assert_eq!(bgrads.len(), s.out_maps);
+    let want_dinput = !dinputs.is_empty();
+    if want_dinput {
+        debug_assert_eq!(dinputs.len(), batch * in_len);
+        dinputs.fill(0.0);
+    }
+
+    let os = s.out_side;
+    let is = s.in_side;
+    let k = s.kernel;
+    let omap_len = os * os;
+    let imap_len = is * is;
+
+    for m in 0..s.out_maps {
+        // Bias gradient: per-sample delta sums, added in sample order.
+        for b in 0..batch {
+            let d_map = &deltas[b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len];
+            let mut bsum = 0.0f32;
+            for &d in d_map {
+                bsum += d;
+            }
+            bgrads[m] += bsum;
+        }
+
+        let wm_base = m * s.in_maps * k * k;
+        for j in 0..s.in_maps {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let tap = wm_base + j * k * k + ky * k + kx;
+                    // One scalar weight and one gradient accumulator,
+                    // stationary across the whole batch.
+                    let w = weights[tap];
+                    let mut gacc = wgrads[tap];
+                    for b in 0..batch {
+                        let in_map =
+                            &inputs[b * in_len + j * imap_len..b * in_len + (j + 1) * imap_len];
+                        let d_map = &deltas
+                            [b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len];
+                        let mut acc = 0.0f32;
+                        if want_dinput {
+                            let din_map = &mut dinputs
+                                [b * in_len + j * imap_len..b * in_len + (j + 1) * imap_len];
+                            for y in 0..os {
+                                let base = (y + ky) * is + kx;
+                                let in_row = &in_map[base..base + os];
+                                let d_row = &d_map[y * os..y * os + os];
+                                acc += super::simd::dot(in_row, d_row);
+                                let din_row = &mut din_map[base..base + os];
+                                super::simd::saxpy(din_row, d_row, w);
+                            }
+                        } else {
+                            for y in 0..os {
+                                let base = (y + ky) * is + kx;
+                                let in_row = &in_map[base..base + os];
+                                let d_row = &d_map[y * os..y * os + os];
+                                acc += super::simd::dot(in_row, d_row);
+                            }
+                        }
+                        gacc += acc;
+                    }
+                    wgrads[tap] = gacc;
+                }
+            }
+        }
+    }
+}
+
 /// Geometry for a general convolution: zero padding `pad` on every border
 /// and stride `stride`. `stride == 1 && pad == 0` degenerates to the
 /// "valid" convolution above ([`ConvGeom::is_plain`]); the compiled conv op
@@ -693,6 +790,67 @@ mod tests {
                     if row != single.as_slice() {
                         return Err(format!("sample {b} not bit-identical"));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn batched_backward_bit_identical_to_per_sample() {
+        proptest::run(
+            proptest::Config { cases: 30, max_size: 6, ..Default::default() },
+            |rng, size| {
+                let in_maps = rng.range(1, 4);
+                let out_maps = rng.range(1, 4);
+                let kernel = rng.range(1, 4.min(size + 1) + 1);
+                let in_side = kernel + rng.range(0, size + 1);
+                let batch = rng.range(1, 6);
+                let s = ConvShape::valid(in_maps, in_side, out_maps, kernel);
+                let inputs = rand_vec(rng, batch * s.in_len());
+                let weights = rand_vec(rng, s.weight_len());
+                let deltas = rand_vec(rng, batch * s.out_len());
+                (s, inputs, weights, deltas, batch)
+            },
+            |(s, inputs, weights, deltas, batch)| {
+                let mut wg_b = vec![0.0; s.weight_len()];
+                let mut bg_b = vec![0.0; s.out_maps];
+                let mut din_b = vec![0.0; batch * s.in_len()];
+                conv_backward_batch(
+                    s, inputs, weights, deltas, &mut wg_b, &mut bg_b, &mut din_b, *batch,
+                );
+                // Reference: per-sample calls sharing the gradient buffers.
+                let mut wg = vec![0.0; s.weight_len()];
+                let mut bg = vec![0.0; s.out_maps];
+                let mut din = vec![0.0; batch * s.in_len()];
+                for b in 0..*batch {
+                    conv_backward(
+                        s,
+                        &inputs[b * s.in_len()..(b + 1) * s.in_len()],
+                        weights,
+                        &deltas[b * s.out_len()..(b + 1) * s.out_len()],
+                        &mut wg,
+                        &mut bg,
+                        &mut din[b * s.in_len()..(b + 1) * s.in_len()],
+                    );
+                }
+                if wg_b != wg {
+                    return Err("weight grads not bit-identical".to_string());
+                }
+                if bg_b != bg {
+                    return Err("bias grads not bit-identical".to_string());
+                }
+                if din_b != din {
+                    return Err("input deltas not bit-identical".to_string());
+                }
+                // The dinput-skipping path accumulates the same grads.
+                let mut wg_s = vec![0.0; s.weight_len()];
+                let mut bg_s = vec![0.0; s.out_maps];
+                conv_backward_batch(
+                    s, inputs, weights, deltas, &mut wg_s, &mut bg_s, &mut [], *batch,
+                );
+                if wg_s != wg || bg_s != bg {
+                    return Err("grads diverge without dinput".to_string());
                 }
                 Ok(())
             },

@@ -104,6 +104,57 @@ pub fn fc_backward(
     }
 }
 
+/// Batched backward over `batch` samples (`inputs`/`dinputs` laid out
+/// `[b][inputs]`, `deltas` `[b][outputs]`) — the GEMM-shaped variant of
+/// [`fc_backward`]: the weight-gradient matrix accumulates the sum of
+/// per-sample outer products `Σ_b δ_b ⊗ x_b` row by row, with each weight
+/// row and its gradient row stationary while the batch streams past.
+/// `wgrads`/`bgrads` receive the **batch-summed** gradients; `dinputs` is
+/// overwritten per sample (empty slice to skip).
+///
+/// Bit-identical to `batch` successive [`fc_backward`] calls sharing the
+/// gradient buffers: every gradient element receives its per-sample
+/// contributions in ascending sample order.
+pub fn fc_backward_batch(
+    s: &FcShape,
+    inputs: &[f32],
+    weights: &[f32],
+    deltas: &[f32],
+    wgrads: &mut [f32],
+    bgrads: &mut [f32],
+    dinputs: &mut [f32],
+    batch: usize,
+) {
+    debug_assert_eq!(inputs.len(), batch * s.inputs);
+    debug_assert_eq!(weights.len(), s.weight_len());
+    debug_assert_eq!(deltas.len(), batch * s.outputs);
+    debug_assert_eq!(wgrads.len(), s.weight_len());
+    debug_assert_eq!(bgrads.len(), s.outputs);
+    let want_dinput = !dinputs.is_empty();
+    if want_dinput {
+        debug_assert_eq!(dinputs.len(), batch * s.inputs);
+        dinputs.fill(0.0);
+    }
+    for n in 0..s.outputs {
+        let wrow = &weights[n * s.inputs..(n + 1) * s.inputs];
+        let grow = &mut wgrads[n * s.inputs..(n + 1) * s.inputs];
+        for b in 0..batch {
+            let d = deltas[b * s.outputs + n];
+            bgrads[n] += d;
+            let input = &inputs[b * s.inputs..(b + 1) * s.inputs];
+            for i in 0..s.inputs {
+                grow[i] += d * input[i];
+            }
+            if want_dinput {
+                let dinp = &mut dinputs[b * s.inputs..(b + 1) * s.inputs];
+                for i in 0..s.inputs {
+                    dinp[i] += d * wrow[i];
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +233,37 @@ mod tests {
             fc_forward(&s, &inputs[b * s.inputs..(b + 1) * s.inputs], &weights, &biases, &mut single);
             assert_eq!(&batched[b * s.outputs..(b + 1) * s.outputs], single.as_slice());
         }
+    }
+
+    #[test]
+    fn batched_backward_bit_identical_to_per_sample() {
+        let mut rng = Pcg32::seeded(23);
+        let s = FcShape::new(11, 6);
+        let batch = 5;
+        let inputs: Vec<f32> = (0..batch * s.inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let weights: Vec<f32> = (0..s.weight_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let deltas: Vec<f32> = (0..batch * s.outputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut wg_b = vec![0.0; s.weight_len()];
+        let mut bg_b = vec![0.0; s.outputs];
+        let mut din_b = vec![0.0; batch * s.inputs];
+        fc_backward_batch(&s, &inputs, &weights, &deltas, &mut wg_b, &mut bg_b, &mut din_b, batch);
+        let mut wg = vec![0.0; s.weight_len()];
+        let mut bg = vec![0.0; s.outputs];
+        let mut din = vec![0.0; batch * s.inputs];
+        for b in 0..batch {
+            fc_backward(
+                &s,
+                &inputs[b * s.inputs..(b + 1) * s.inputs],
+                &weights,
+                &deltas[b * s.outputs..(b + 1) * s.outputs],
+                &mut wg,
+                &mut bg,
+                &mut din[b * s.inputs..(b + 1) * s.inputs],
+            );
+        }
+        assert_eq!(wg_b, wg);
+        assert_eq!(bg_b, bg);
+        assert_eq!(din_b, din);
     }
 
     #[test]

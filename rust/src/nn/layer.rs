@@ -97,6 +97,14 @@ pub struct Acts<'a> {
     pub output: &'a [f32],
 }
 
+/// Batched stored activations for [`LayerOp::backward_batch`]: `inputs` is
+/// `[batch][in_len]` flat, `outputs` `[batch][out_len]` flat — the arenas a
+/// [`super::batch::BatchPlan`] forward pass left behind.
+pub struct BatchActs<'a> {
+    pub inputs: &'a [f32],
+    pub outputs: &'a [f32],
+}
+
 /// One compiled layer of one network. Implementations are stateless between
 /// calls — all mutable per-sample state lives in the worker's scratch, so a
 /// single op is shared by every CHAOS worker thread.
@@ -181,6 +189,65 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
         grads: &mut [f32],
         scratch: &mut OpScratch<'_>,
     );
+
+    /// Backward `batch` samples at once: `deltas_out` is `[batch][out_len]`
+    /// flat (∂L/∂output per sample, converted to pre-activation deltas in
+    /// place, like the per-sample contract), `deltas_in` `[batch][in_len]`
+    /// flat (or empty for the layer above the input), and `grads` is this
+    /// op's **single** gradient span receiving the **batch-summed**
+    /// `[weights..., biases...]` gradient (zeroed by the driver). `params`
+    /// is the op's single already-loaded span — loaded once per batch by
+    /// [`super::batch::BatchPlan::backward`], the backward half of the
+    /// weight-stationary story.
+    ///
+    /// Contract: gradients and input deltas must be bit-identical to
+    /// `batch` successive [`LayerOp::backward`] calls sharing `grads` and
+    /// `scratch.rng` — every gradient element accumulates its per-sample
+    /// contributions in ascending sample order (enforced for every
+    /// registered kind by `rust/tests/batch_backward.rs`). The default
+    /// impl loops the per-sample kernel; the built-in conv/fc ops override
+    /// it with weight-stationary kernels that keep the per-element
+    /// accumulation order.
+    fn backward_batch(
+        &self,
+        params: &[f32],
+        acts: BatchActs<'_>,
+        deltas_out: &mut [f32],
+        deltas_in: &mut [f32],
+        grads: &mut [f32],
+        batch: usize,
+        scratch: &mut OpScratch<'_>,
+    ) {
+        let il = self.in_shape().len();
+        let ol = self.out_shape().len();
+        let al = self.aux_len();
+        debug_assert_eq!(acts.inputs.len(), batch * il);
+        debug_assert_eq!(acts.outputs.len(), batch * ol);
+        debug_assert_eq!(deltas_out.len(), batch * ol);
+        debug_assert!(deltas_in.is_empty() || deltas_in.len() == batch * il);
+        debug_assert_eq!(scratch.aux.len(), batch * al);
+        let skip_din = deltas_in.is_empty();
+        for b in 0..batch {
+            let din: &mut [f32] =
+                if skip_din { &mut [] } else { &mut deltas_in[b * il..(b + 1) * il] };
+            let mut per = OpScratch {
+                aux: &mut scratch.aux[b * al..(b + 1) * al],
+                rng: &mut *scratch.rng,
+                train: scratch.train,
+            };
+            self.backward(
+                params,
+                Acts {
+                    input: &acts.inputs[b * il..(b + 1) * il],
+                    output: &acts.outputs[b * ol..(b + 1) * ol],
+                },
+                &mut deltas_out[b * ol..(b + 1) * ol],
+                din,
+                grads,
+                &mut per,
+            );
+        }
+    }
 }
 
 /// A registered layer kind — the parse/validate/compile behaviour behind
@@ -600,6 +667,54 @@ impl LayerOp for ConvOp {
             conv_backward_general(&self.geom, acts.input, w, delta_out, wg, bg, delta_in);
         }
     }
+
+    fn backward_batch(
+        &self,
+        params: &[f32],
+        acts: BatchActs<'_>,
+        deltas_out: &mut [f32],
+        deltas_in: &mut [f32],
+        grads: &mut [f32],
+        batch: usize,
+        _: &mut OpScratch<'_>,
+    ) {
+        // Block-wise pre-activation conversion (elementwise, so one sweep
+        // over the whole [batch][out_len] block matches per-sample bits).
+        self.act.scale_delta(deltas_out, acts.outputs);
+        let (w, _b) = params.split_at(self.weights);
+        let (wg, bg) = grads.split_at_mut(self.weights);
+        if self.geom.is_plain() {
+            super::conv::conv_backward_batch(
+                &self.geom.as_plain(),
+                acts.inputs,
+                w,
+                deltas_out,
+                wg,
+                bg,
+                deltas_in,
+                batch,
+            );
+        } else {
+            // Padded/strided path: gather-heavy, so batching buys only the
+            // amortized param load — tile it (mirrors forward_batch).
+            let il = self.geom.in_len();
+            let ol = self.geom.out_len();
+            let skip_din = deltas_in.is_empty();
+            for s in 0..batch {
+                let din: &mut [f32] =
+                    if skip_din { &mut [] } else { &mut deltas_in[s * il..(s + 1) * il] };
+                conv_backward_general(
+                    &self.geom,
+                    &acts.inputs[s * il..(s + 1) * il],
+                    w,
+                    &deltas_out[s * ol..(s + 1) * ol],
+                    wg,
+                    bg,
+                    din,
+                );
+            }
+        }
+    }
 }
 
 // ----- max pool --------------------------------------------------------------
@@ -734,6 +849,22 @@ impl LayerOp for MaxPoolOp {
         }
         pool_backward(&self.shape, delta_out, scratch.aux, delta_in);
     }
+
+    fn backward_batch(
+        &self,
+        _: &[f32],
+        _acts: BatchActs<'_>,
+        deltas_out: &mut [f32],
+        deltas_in: &mut [f32],
+        _: &mut [f32],
+        batch: usize,
+        scratch: &mut OpScratch<'_>,
+    ) {
+        if deltas_in.is_empty() {
+            return;
+        }
+        super::pool::pool_backward_batch(&self.shape, deltas_out, scratch.aux, deltas_in, batch);
+    }
 }
 
 // ----- avg pool --------------------------------------------------------------
@@ -835,6 +966,22 @@ impl LayerOp for AvgPoolOp {
             return;
         }
         avg_pool_backward(&self.shape, delta_out, delta_in);
+    }
+
+    fn backward_batch(
+        &self,
+        _: &[f32],
+        _acts: BatchActs<'_>,
+        deltas_out: &mut [f32],
+        deltas_in: &mut [f32],
+        _: &mut [f32],
+        batch: usize,
+        _: &mut OpScratch<'_>,
+    ) {
+        if deltas_in.is_empty() {
+            return;
+        }
+        super::pool::avg_pool_backward_batch(&self.shape, deltas_out, deltas_in, batch);
     }
 }
 
@@ -1046,6 +1193,36 @@ impl LayerOp for FcOp {
         let (wg, bg) = grads.split_at_mut(self.weights);
         fc_backward(&self.shape, acts.input, w, delta_out, wg, bg, delta_in);
     }
+
+    fn backward_batch(
+        &self,
+        params: &[f32],
+        acts: BatchActs<'_>,
+        deltas_out: &mut [f32],
+        deltas_in: &mut [f32],
+        grads: &mut [f32],
+        batch: usize,
+        _: &mut OpScratch<'_>,
+    ) {
+        if !self.output_softmax {
+            // Elementwise over the whole [batch][outputs] block; the output
+            // op's incoming delta is already pre-activation (fused
+            // softmax/cross-entropy), per sample as per row.
+            self.act.scale_delta(deltas_out, acts.outputs);
+        }
+        let (w, _b) = params.split_at(self.weights);
+        let (wg, bg) = grads.split_at_mut(self.weights);
+        super::fc::fc_backward_batch(
+            &self.shape,
+            acts.inputs,
+            w,
+            deltas_out,
+            wg,
+            bg,
+            deltas_in,
+            batch,
+        );
+    }
 }
 
 // ----- dropout ---------------------------------------------------------------
@@ -1190,6 +1367,33 @@ impl LayerOp for DropoutOp {
             return;
         }
         for ((di, &d), &m) in delta_in.iter_mut().zip(delta_out.iter()).zip(scratch.aux.iter()) {
+            *di = if m != 0 { d * self.keep_scale } else { 0.0 };
+        }
+    }
+
+    fn backward_batch(
+        &self,
+        _: &[f32],
+        _acts: BatchActs<'_>,
+        deltas_out: &mut [f32],
+        deltas_in: &mut [f32],
+        _: &mut [f32],
+        _batch: usize,
+        scratch: &mut OpScratch<'_>,
+    ) {
+        if deltas_in.is_empty() {
+            return;
+        }
+        if !scratch.train || self.rate == 0.0 {
+            // Eval-mode fast path: one block copy.
+            deltas_in.copy_from_slice(deltas_out);
+            return;
+        }
+        // Block-wise: the [batch][len] mask words align elementwise with
+        // the [batch][len] delta planes, so one flat sweep covers the batch.
+        for ((di, &d), &m) in
+            deltas_in.iter_mut().zip(deltas_out.iter()).zip(scratch.aux.iter())
+        {
             *di = if m != 0 { d * self.keep_scale } else { 0.0 };
         }
     }

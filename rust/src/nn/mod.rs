@@ -22,5 +22,5 @@ pub mod simd;
 
 pub use batch::{BatchPlan, BatchScratch};
 pub use dims::{compute_dims, total_params, LayerDims};
-pub use layer::{Acts, LayerCtx, LayerKind, LayerOp, OpScratch, Shape};
+pub use layer::{Acts, BatchActs, LayerCtx, LayerKind, LayerOp, OpScratch, Shape};
 pub use network::{Network, ParamSource, Scratch};

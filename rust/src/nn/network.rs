@@ -184,6 +184,9 @@ impl Network {
     /// layer, `on_grads(layer_index, dims, grads)` is invoked right after
     /// that layer's gradients are complete (back-to-front order) — grads is
     /// the flat `[weights..., biases...]` gradient of this sample.
+    /// (The batched equivalent over whole chunks is
+    /// [`super::batch::BatchPlan::backward`], bit-identical to accumulating
+    /// per-sample calls.)
     pub fn backward<P: ParamSource>(
         &self,
         params: &P,

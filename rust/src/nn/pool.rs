@@ -108,6 +108,32 @@ pub fn pool_backward(s: &PoolShape, delta: &[f32], switches: &[u32], dinput: &mu
     }
 }
 
+/// Batched backward max-pool (`deltas`/`switches` laid out `[b][out_len]`,
+/// `dinputs` `[b][in_len]`, each sample's switches indexing into its own
+/// input — see [`pool_forward_batch`]). Routing is per-sample independent,
+/// so this tiles the per-sample kernel; the batched win is arena reuse.
+pub fn pool_backward_batch(
+    s: &PoolShape,
+    deltas: &[f32],
+    switches: &[u32],
+    dinputs: &mut [f32],
+    batch: usize,
+) {
+    let in_len = s.in_len();
+    let out_len = s.out_len();
+    debug_assert_eq!(deltas.len(), batch * out_len);
+    debug_assert_eq!(switches.len(), batch * out_len);
+    debug_assert_eq!(dinputs.len(), batch * in_len);
+    for b in 0..batch {
+        pool_backward(
+            s,
+            &deltas[b * out_len..(b + 1) * out_len],
+            &switches[b * out_len..(b + 1) * out_len],
+            &mut dinputs[b * in_len..(b + 1) * in_len],
+        );
+    }
+}
+
 /// Forward average-pool: each output is the mean of its window.
 pub fn avg_pool_forward(s: &PoolShape, input: &[f32], out: &mut [f32]) {
     debug_assert_eq!(input.len(), s.in_len());
@@ -180,6 +206,22 @@ pub fn avg_pool_backward(s: &PoolShape, delta: &[f32], dinput: &mut [f32]) {
                 }
             }
         }
+    }
+}
+
+/// Batched backward average-pool (`deltas` `[b][out_len]` → `dinputs`
+/// `[b][in_len]`); tiles the per-sample kernel like [`pool_backward_batch`].
+pub fn avg_pool_backward_batch(s: &PoolShape, deltas: &[f32], dinputs: &mut [f32], batch: usize) {
+    let in_len = s.in_len();
+    let out_len = s.out_len();
+    debug_assert_eq!(deltas.len(), batch * out_len);
+    debug_assert_eq!(dinputs.len(), batch * in_len);
+    for b in 0..batch {
+        avg_pool_backward(
+            s,
+            &deltas[b * out_len..(b + 1) * out_len],
+            &mut dinputs[b * in_len..(b + 1) * in_len],
+        );
     }
 }
 

@@ -1,0 +1,285 @@
+//! Bit-identity of the batched backward path.
+//!
+//! The contract behind minibatch training (`minibatch:B` /
+//! `hogwild-batch:B` update policies): `BatchPlan::backward` over `n`
+//! samples emits, per parameterized layer, exactly the bits of `n`
+//! successive per-sample `Network::backward` calls accumulated in sample
+//! order — across **every registered layer kind**, including the
+//! padded/strided conv fast-path split and train-mode dropout with fixed
+//! masks. A second, op-level harness checks the per-op kernels directly so
+//! the **input deltas** (which the network-level API never exposes) are
+//! covered too.
+
+use chaos_phi::config::{Act, ArchSpec, LayerSpec};
+use chaos_phi::nn::{layer, Acts, BatchActs, Network, OpScratch};
+use chaos_phi::util::{proptest, Pcg32};
+
+fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+/// Every kind the test architectures below exercise; the coverage test
+/// asserts this set matches the registry, so a newly registered built-in
+/// kind fails loudly until it is covered here.
+const COVERED_KINDS: &[&str] = &["input", "conv", "pool", "avgpool", "fc", "dropout", "output"];
+
+/// An architecture touching every built-in kind, including the general
+/// (padded + strided) conv path and both activations (mirrors
+/// `batch_forward.rs`).
+fn zoo_arch() -> ArchSpec {
+    ArchSpec {
+        name: "batch-zoo".into(),
+        layers: vec![
+            LayerSpec::Input { side: 13 },
+            LayerSpec::conv_ex(4, 4, 1, 1, Act::Relu), // padded: 12x12
+            LayerSpec::MaxPool { kernel: 2 },          // 6x6
+            LayerSpec::conv_ex(6, 2, 2, 0, Act::ScaledTanh), // strided: 3x3
+            LayerSpec::AvgPool { kernel: 3 },          // 1x1
+            LayerSpec::Dropout { rate: 0.4 },
+            LayerSpec::fc_act(17, Act::Relu),
+            LayerSpec::Output { classes: 10 },
+        ],
+        paper_epochs: 1,
+    }
+}
+
+#[test]
+fn covered_kinds_match_registry() {
+    let mut covered: Vec<String> = COVERED_KINDS.iter().map(|s| s.to_string()).collect();
+    covered.sort();
+    let registered = layer::names();
+    assert_eq!(
+        registered, covered,
+        "a registered kind is missing from the batch backward bit-identity coverage"
+    );
+    // And the zoo arch really instantiates every non-input covered kind.
+    let net = Network::new(zoo_arch());
+    for kind in COVERED_KINDS.iter().filter(|k| **k != "input") {
+        assert!(
+            net.ops.iter().any(|op| op.kind() == *kind),
+            "zoo arch does not instantiate kind '{kind}'"
+        );
+    }
+}
+
+/// Per-sample baseline: forward + backward each sample with a scratch
+/// seeded like the batched one, accumulating per-layer gradients (in
+/// sample order) into a full-length vector.
+fn per_sample_grads(
+    net: &Network,
+    params: &[f32],
+    images: &[f32],
+    labels: &[usize],
+    n: usize,
+    train: bool,
+    seed: u64,
+) -> Vec<f32> {
+    let il = net.dims[0].out_len();
+    let mut scratch = net.scratch_seeded(seed);
+    scratch.train_mode = train;
+    let mut acc = vec![0.0f32; net.total_params];
+    for i in 0..n {
+        net.forward(&params, &images[i * il..(i + 1) * il], &mut scratch, None);
+        net.backward(&params, labels[i], &mut scratch, None, |_, d, g| {
+            for (a, &v) in acc[d.params.clone()].iter_mut().zip(g) {
+                *a += v;
+            }
+        });
+    }
+    acc
+}
+
+/// Batched path: one forward + one backward over the whole chunk (the
+/// per-sample baseline shares the PRNG streams, so train-mode dropout
+/// draws identical masks — single chunk, like the forward test).
+fn batched_grads(
+    net: &Network,
+    params: &[f32],
+    images: &[f32],
+    labels: &[usize],
+    n: usize,
+    train: bool,
+    seed: u64,
+) -> Vec<f32> {
+    let plan = net.batch_plan(n).unwrap();
+    let mut scratch = plan.scratch_seeded(seed);
+    scratch.train_mode = train;
+    plan.forward(&params, images, n, &mut scratch, None);
+    let mut acc = vec![0.0f32; net.total_params];
+    let mut emitted = Vec::new();
+    plan.backward(&params, labels, n, &mut scratch, None, |l, d, g| {
+        emitted.push(l);
+        acc[d.params.clone()].copy_from_slice(g);
+    });
+    // Back-to-front emission over exactly the parameterized layers.
+    let expect: Vec<usize> = (1..net.dims.len())
+        .rev()
+        .filter(|&l| net.dims[l].param_count() > 0)
+        .collect();
+    assert_eq!(emitted, expect, "{}: per-layer emission order", net.arch.name);
+    acc
+}
+
+#[test]
+fn batched_backward_bit_identical_across_kinds() {
+    // Property: for random images, labels and batch sizes, the batch-summed
+    // gradients equal the per-sample accumulation bitwise. Train mode (the
+    // trainer's setting): dropout draws masks shared with the baseline via
+    // the common PRNG stream; eval mode covered for the dropout-free archs.
+    for (arch, train) in
+        [(ArchSpec::tiny(), false), (ArchSpec::tiny(), true), (zoo_arch(), true)]
+    {
+        let net = Network::new(arch);
+        let params = net.init_params(42);
+        let il = net.dims[0].out_len();
+        let classes = net.num_classes();
+        proptest::run(
+            proptest::Config { cases: 10, max_size: 7, ..Default::default() },
+            |rng, size| {
+                let n = 1 + rng.range(0, size.max(1) + 1);
+                let images = rand_vec(rng, n * il);
+                let labels: Vec<usize> = (0..n).map(|_| rng.range(0, classes)).collect();
+                (n, images, labels)
+            },
+            |(n, images, labels)| {
+                let single = per_sample_grads(&net, &params, images, labels, *n, train, 0xD1);
+                let batched = batched_grads(&net, &params, images, labels, *n, train, 0xD1);
+                if single != batched {
+                    return Err(format!(
+                        "{} (train={train}): batched grads diverge at n={n}",
+                        net.arch.name
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn batched_backward_matches_paper_archs() {
+    // The paper networks end to end (29×29 inputs, conv/pool/fc/output).
+    let mut rng = Pcg32::seeded(9);
+    for name in ["small", "medium"] {
+        let net = Network::from_name(name).unwrap();
+        let params = net.init_params(5);
+        let il = net.dims[0].out_len();
+        let classes = net.num_classes();
+        let n = 4;
+        let images = rand_vec(&mut rng, n * il);
+        let labels: Vec<usize> = (0..n).map(|_| rng.range(0, classes)).collect();
+        let single = per_sample_grads(&net, &params, &images, &labels, n, false, 0);
+        let batched = batched_grads(&net, &params, &images, &labels, n, false, 0);
+        assert_eq!(single, batched, "{name}: batched backward ≠ per-sample");
+    }
+}
+
+#[test]
+fn op_backward_batch_bit_identical_per_kind() {
+    // Op-level harness: drive every compiled op of the zoo net directly so
+    // input deltas — invisible through the network API — are compared too.
+    // Both paths share one PRNG stream per op (forward first, to populate
+    // pool switches / dropout masks in the aux words).
+    let net = Network::new(zoo_arch());
+    let mut rng = Pcg32::seeded(31);
+    for l in 1..net.ops.len() {
+        let op = net.ops[l].as_ref();
+        let d = &net.dims[l];
+        let il = d.in_len();
+        let ol = d.out_len();
+        let al = op.aux_len();
+        let pc = d.param_count();
+        for batch in [1usize, 3, 5] {
+            let params = rand_vec(&mut rng, pc);
+            let inputs = rand_vec(&mut rng, batch * il);
+            let deltas0 = rand_vec(&mut rng, batch * ol);
+
+            // Per-sample path.
+            let mut rng_a = Pcg32::new(0xBEEF, l as u64);
+            let mut aux_a = vec![0u32; batch * al];
+            let mut outs_a = vec![0.0f32; batch * ol];
+            for b in 0..batch {
+                let mut per = OpScratch {
+                    aux: &mut aux_a[b * al..(b + 1) * al],
+                    rng: &mut rng_a,
+                    train: true,
+                };
+                op.forward(
+                    &params,
+                    &inputs[b * il..(b + 1) * il],
+                    &mut outs_a[b * ol..(b + 1) * ol],
+                    &mut per,
+                );
+            }
+            let mut deltas_a = deltas0.clone();
+            let mut din_a = vec![0.0f32; batch * il];
+            let mut grads_a = vec![0.0f32; pc];
+            for b in 0..batch {
+                let mut per = OpScratch {
+                    aux: &mut aux_a[b * al..(b + 1) * al],
+                    rng: &mut rng_a,
+                    train: true,
+                };
+                op.backward(
+                    &params,
+                    Acts {
+                        input: &inputs[b * il..(b + 1) * il],
+                        output: &outs_a[b * ol..(b + 1) * ol],
+                    },
+                    &mut deltas_a[b * ol..(b + 1) * ol],
+                    &mut din_a[b * il..(b + 1) * il],
+                    &mut grads_a,
+                    &mut per,
+                );
+            }
+
+            // Batched path, same seed → same masks.
+            let mut rng_b = Pcg32::new(0xBEEF, l as u64);
+            let mut aux_b = vec![0u32; batch * al];
+            let mut outs_b = vec![0.0f32; batch * ol];
+            {
+                let mut per = OpScratch { aux: &mut aux_b, rng: &mut rng_b, train: true };
+                op.forward_batch(&params, &inputs, &mut outs_b, batch, &mut per);
+            }
+            let mut deltas_b = deltas0.clone();
+            let mut din_b = vec![0.0f32; batch * il];
+            let mut grads_b = vec![0.0f32; pc];
+            {
+                let mut per = OpScratch { aux: &mut aux_b, rng: &mut rng_b, train: true };
+                op.backward_batch(
+                    &params,
+                    BatchActs { inputs: &inputs, outputs: &outs_b },
+                    &mut deltas_b,
+                    &mut din_b,
+                    &mut grads_b,
+                    batch,
+                    &mut per,
+                );
+            }
+
+            let kind = op.kind();
+            assert_eq!(outs_a, outs_b, "{kind} B={batch}: forward outputs");
+            assert_eq!(deltas_a, deltas_b, "{kind} B={batch}: pre-activation deltas");
+            assert_eq!(din_a, din_b, "{kind} B={batch}: input deltas");
+            assert_eq!(grads_a, grads_b, "{kind} B={batch}: batch-summed gradients");
+
+            // Empty input-delta path (layer above the input): gradients
+            // must be unaffected by skipping the delta computation.
+            let mut deltas_c = deltas0.clone();
+            let mut grads_c = vec![0.0f32; pc];
+            {
+                let mut per = OpScratch { aux: &mut aux_b, rng: &mut rng_b, train: true };
+                op.backward_batch(
+                    &params,
+                    BatchActs { inputs: &inputs, outputs: &outs_b },
+                    &mut deltas_c,
+                    &mut [],
+                    &mut grads_c,
+                    batch,
+                    &mut per,
+                );
+            }
+            assert_eq!(grads_c, grads_b, "{kind} B={batch}: grads with empty input deltas");
+        }
+    }
+}
