@@ -1,0 +1,346 @@
+//! Deterministic interleaving — level 3 of the analysis subsystem.
+//!
+//! [`Interleaver::run`] executes a set of worker closures under a
+//! cooperative scheduler: exactly one worker runs at a time, and control
+//! only transfers at [`yield_point`] calls (and at worker start/exit). The
+//! next worker is chosen either by a scripted order ([`Schedule::Script`])
+//! or by a seeded PRNG ([`Schedule::Seeded`]), so any adversarial ordering
+//! of the store's publish/load steps can be *replayed* — the
+//! nondeterministic half of a race report becomes a reproducible test.
+//! Under `--features race-check`, [`SharedParams`](crate::chaos::SharedParams)
+//! places yield points before lock acquisition, inside the unlocked
+//! read-modify-write, and at span loads; outside an interleaved run those
+//! calls are no-ops.
+//!
+//! **Discipline:** a worker must never yield while holding a lock another
+//! worker might take — with one-at-a-time execution, the suspended holder
+//! can never be resumed to release it. The store's instrumentation
+//! therefore yields *before* acquiring a layer lock, never inside it.
+
+use crate::util::Pcg32;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// How the scheduler picks the next worker at each yield.
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    /// Seeded PRNG pick among the runnable workers — reproducible
+    /// adversarial fuzzing.
+    Seeded(u64),
+    /// Explicit worker ids, consumed left to right; entries naming a
+    /// finished (or not-yet-yielded) worker are skipped, and when the
+    /// script runs dry the lowest runnable id continues. `Script(vec![])`
+    /// is round-robin-by-lowest-id.
+    Script(Vec<usize>),
+}
+
+/// One scheduling decision: worker `worker` was granted the step tagged
+/// `tag` (the tag of the yield point it was resumed at, or `"start"` /
+/// `"exit"` at its boundaries).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceStep {
+    pub worker: usize,
+    pub tag: &'static str,
+}
+
+/// The full schedule actually executed — compare against an expected
+/// ordering, or log it to reproduce a failure.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    /// The worker ids in execution order (tags stripped).
+    pub fn order(&self) -> Vec<usize> {
+        self.steps.iter().map(|s| s.worker).collect()
+    }
+}
+
+struct State {
+    /// The worker currently holding the execution token.
+    current: Option<usize>,
+    /// Worker is parked at a yield point (or its starting line) and can be
+    /// granted the token.
+    waiting: Vec<bool>,
+    finished: Vec<bool>,
+    script: VecDeque<usize>,
+    rng: Option<Pcg32>,
+    trace: Trace,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Shared {
+    fn new(n: usize, schedule: Schedule) -> Shared {
+        let (script, rng) = match schedule {
+            Schedule::Script(s) => (s.into(), None),
+            Schedule::Seeded(seed) => (VecDeque::new(), Some(Pcg32::seeded(seed))),
+        };
+        Shared {
+            state: Mutex::new(State {
+                current: None,
+                waiting: vec![true; n],
+                finished: vec![false; n],
+                script,
+                rng,
+                trace: Trace::default(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Grant the token to the next runnable worker (script first, then
+    /// seeded pick, then lowest id). No-op when nothing is runnable.
+    fn pick_next(st: &mut State) {
+        let runnable: Vec<usize> = (0..st.waiting.len())
+            .filter(|&i| st.waiting[i] && !st.finished[i])
+            .collect();
+        if runnable.is_empty() {
+            st.current = None;
+            return;
+        }
+        while let Some(w) = st.script.pop_front() {
+            if runnable.contains(&w) {
+                st.current = Some(w);
+                return;
+            }
+        }
+        st.current = Some(match &mut st.rng {
+            Some(rng) => runnable[rng.range(0, runnable.len())],
+            None => runnable[0],
+        });
+    }
+
+    /// Park at a yield point until the scheduler grants this worker the
+    /// token again.
+    fn yield_at(&self, id: usize, tag: &'static str) {
+        let mut st = self.lock();
+        st.waiting[id] = true;
+        st.current = None;
+        Self::pick_next(&mut st);
+        self.cv.notify_all();
+        while st.current != Some(id) {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.waiting[id] = false;
+        st.trace.steps.push(TraceStep { worker: id, tag });
+    }
+
+    /// Block until the scheduler grants this worker its first step.
+    fn wait_for_start(&self, id: usize) {
+        let mut st = self.lock();
+        while st.current != Some(id) {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.waiting[id] = false;
+        st.trace.steps.push(TraceStep { worker: id, tag: "start" });
+    }
+
+    /// Worker exit: release the token and reschedule so the remaining
+    /// workers keep running.
+    fn finish(&self, id: usize) {
+        let mut st = self.lock();
+        st.finished[id] = true;
+        st.waiting[id] = false;
+        st.trace.steps.push(TraceStep { worker: id, tag: "exit" });
+        if st.current == Some(id) {
+            st.current = None;
+        }
+        Self::pick_next(&mut st);
+        self.cv.notify_all();
+    }
+}
+
+thread_local! {
+    /// The interleaver context of the current thread, if it is an
+    /// interleaved worker.
+    static WORKER: RefCell<Option<(Arc<Shared>, usize)>> = const { RefCell::new(None) };
+}
+
+/// A serialization point: inside an [`Interleaver::run`] worker, parks the
+/// worker and lets the schedule pick who runs next; on any other thread
+/// (normal training, tests without an interleaver) this is a no-op.
+/// `tag` labels the step in the [`Trace`].
+pub fn yield_point(tag: &'static str) {
+    let ctx = WORKER.with(|w| w.borrow().clone());
+    if let Some((shared, id)) = ctx {
+        shared.yield_at(id, tag);
+    }
+}
+
+/// The cooperative scheduler. See the module docs for the execution model.
+pub struct Interleaver;
+
+impl Interleaver {
+    /// Run `workers` to completion under `schedule`, one at a time,
+    /// switching only at [`yield_point`]s and worker boundaries. Returns
+    /// the executed [`Trace`]. A panicking worker unwinds out of `run`
+    /// after the remaining workers finish.
+    pub fn run<'a>(schedule: Schedule, workers: Vec<Box<dyn FnOnce() + Send + 'a>>) -> Trace {
+        let shared = Arc::new(Shared::new(workers.len(), schedule));
+        let mut first_panic = None;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .into_iter()
+                .enumerate()
+                .map(|(id, f)| {
+                    let sh = Arc::clone(&shared);
+                    s.spawn(move || {
+                        sh.wait_for_start(id);
+                        WORKER.with(|w| *w.borrow_mut() = Some((Arc::clone(&sh), id)));
+                        let result = catch_unwind(AssertUnwindSafe(f));
+                        WORKER.with(|w| *w.borrow_mut() = None);
+                        sh.finish(id);
+                        result
+                    })
+                })
+                .collect();
+            // Initial grant: every worker starts parked on its start line.
+            {
+                let mut st = shared.lock();
+                Shared::pick_next(&mut st);
+            }
+            shared.cv.notify_all();
+            for h in handles {
+                if let Err(payload) = h.join().expect("interleaved worker thread died") {
+                    first_panic.get_or_insert(payload);
+                }
+            }
+        });
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+        match Arc::try_unwrap(shared) {
+            Ok(sh) => sh.state.into_inner().unwrap_or_else(|e| e.into_inner()).trace,
+            Err(_) => unreachable!("every worker joined and dropped its scheduler handle"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Two workers each appending their id twice, strictly alternating
+    /// under a script — the trace and the data agree with the script.
+    #[test]
+    fn scripted_schedule_is_exact() {
+        let log = Mutex::new(Vec::new());
+        let mk = |id: usize| {
+            let log = &log;
+            Box::new(move || {
+                log.lock().unwrap().push(id);
+                yield_point("step");
+                log.lock().unwrap().push(id);
+            }) as Box<dyn FnOnce() + Send>
+        };
+        let trace = Interleaver::run(Schedule::Script(vec![0, 1, 0, 1]), vec![mk(0), mk(1)]);
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 0, 1]);
+        // start0, start1, resume0, exit0 (recorded by the finishing worker
+        // before the next grant), resume1, exit1.
+        assert_eq!(trace.order(), vec![0, 1, 0, 0, 1, 1]);
+        let tags: Vec<&str> = trace.steps.iter().map(|s| s.tag).collect();
+        assert_eq!(tags, vec!["start", "start", "step", "exit", "step", "exit"]);
+    }
+
+    #[test]
+    fn empty_script_runs_lowest_id_to_completion() {
+        let log = Mutex::new(Vec::new());
+        let mk = |id: usize| {
+            let log = &log;
+            Box::new(move || {
+                log.lock().unwrap().push(id);
+                yield_point("step");
+                log.lock().unwrap().push(id);
+            }) as Box<dyn FnOnce() + Send>
+        };
+        Interleaver::run(Schedule::Script(vec![]), vec![mk(0), mk(1)]);
+        assert_eq!(*log.lock().unwrap(), vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn seeded_schedule_is_reproducible() {
+        let run = |seed: u64| {
+            let log = Mutex::new(Vec::new());
+            let mk = |id: usize| {
+                let log = &log;
+                Box::new(move || {
+                    for _ in 0..4 {
+                        log.lock().unwrap().push(id);
+                        yield_point("step");
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            };
+            let trace = Interleaver::run(Schedule::Seeded(seed), vec![mk(0), mk(1), mk(2)]);
+            (std::mem::take(&mut *log.lock().unwrap()), trace)
+        };
+        let (log_a, trace_a) = run(42);
+        let (log_b, trace_b) = run(42);
+        assert_eq!(log_a, log_b, "same seed must replay the same interleaving");
+        assert_eq!(trace_a, trace_b);
+        // Some seed in a small pool produces a different order (the
+        // scheduler is actually randomized, not round-robin in disguise).
+        assert!(
+            (0..20u64).any(|s| run(s).0 != log_a),
+            "20 seeds all gave one interleaving"
+        );
+    }
+
+    #[test]
+    fn yield_point_outside_interleaver_is_noop() {
+        yield_point("free-running"); // must not hang or panic
+    }
+
+    #[test]
+    fn single_worker_runs_through_all_yields() {
+        let n = AtomicUsize::new(0);
+        let trace = Interleaver::run(
+            Schedule::Seeded(7),
+            vec![Box::new(|| {
+                for _ in 0..3 {
+                    n.fetch_add(1, Ordering::Relaxed);
+                    yield_point("tick");
+                }
+            })],
+        );
+        assert_eq!(n.load(Ordering::Relaxed), 3);
+        assert_eq!(trace.order(), vec![0; 5]); // start + 3 ticks + exit
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_others_finish() {
+        let survivor_done = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            Interleaver::run(
+                Schedule::Script(vec![0, 1]),
+                vec![
+                    Box::new(|| {
+                        yield_point("a");
+                        panic!("seeded worker failure");
+                    }),
+                    Box::new(|| {
+                        yield_point("b");
+                        survivor_done.fetch_add(1, Ordering::Relaxed);
+                    }),
+                ],
+            );
+        }));
+        assert!(result.is_err(), "worker panic must unwind out of run()");
+        assert_eq!(
+            survivor_done.load(Ordering::Relaxed),
+            1,
+            "the non-panicking worker must still complete"
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! `chaos::analysis` — machine-checking the store's concurrency and
+//! aliasing contracts.
+//!
+//! CHAOS's correctness rests on a contract that was, until this module,
+//! entirely unchecked: every layer op declares a span in the flat
+//! parameter vector, and [`SharedParams`](super::SharedParams) serializes
+//! publications with per-layer locks while the Hogwild paths (§4.1,
+//! strategy D) deliberately skip them. The analysis subsystem verifies
+//! that discipline at three levels:
+//!
+//! 1. **Static span verification** ([`spans`]): a pass over a compiled
+//!    network's layer table proving the declared parameter spans are
+//!    in-bounds, pairwise-disjoint, and exactly cover the parameter
+//!    vector, and that each compiled op's
+//!    [`param_range`](crate::nn::LayerOp::param_range) agrees with the
+//!    layout. Runs at [`Network::compile`](crate::nn::Network::compile) in
+//!    debug builds and behind the `chaos analyze` CLI subcommand.
+//!    Defect classes: inverted span, out-of-bounds span, overlapping
+//!    spans, coverage gap, span/param-count length mismatch, op/layout
+//!    span mismatch.
+//!
+//! 2. **Dynamic race / lock-discipline checking** ([`race`]): behind the
+//!    `race-check` cargo feature, [`SharedParams`](super::SharedParams)
+//!    records lock acquire/release, `publish_*`, `load_span` and
+//!    `store_all` events into a [`race::RaceRecorder`], and every
+//!    [`UpdatePolicy`](super::UpdatePolicy) declares a
+//!    [`SyncContract`] (via
+//!    [`UpdatePolicy::sync_contract`](super::UpdatePolicy::sync_contract)).
+//!    The checker flags **wrong-lock publishes** (a `publish_scaled`
+//!    range not owned by the locked layer — a hard error under the
+//!    feature), **overlapping unlocked writes under a `Controlled`
+//!    contract** (a race the policy did not opt into), and **publishes
+//!    outside any declared span**. Clean runs are silent; the trainer
+//!    asserts a defect-free store at the end of every parallel run.
+//!
+//! 3. **Deterministic interleaving** ([`interleave`]): a seeded
+//!    cooperative scheduler that serializes worker steps at the store's
+//!    publish/load yield points, so tests can *replay* adversarial
+//!    orderings of the controlled and Hogwild paths reproducibly — e.g.
+//!    forcing the exact read-modify-write interleaving in which pure
+//!    HogWild! loses an update, and proving the per-layer locks lose
+//!    none under any schedule.
+//!
+//! The three levels compose: the static verifier proves the *declared*
+//! layout is sound, the race checker proves runtime accesses respect the
+//! declarations, and the interleaver makes the nondeterministic part of
+//! that proof replayable.
+
+pub mod interleave;
+pub mod race;
+pub mod spans;
+
+pub use interleave::{yield_point, Interleaver, Schedule, Trace, TraceStep};
+pub use race::{RaceDefect, RaceRecorder, StoreEvent, SyncContract};
+pub use spans::{verify_network, verify_spans, SpanDefect, SpanReport};

@@ -1,0 +1,497 @@
+//! Dynamic race / lock-discipline checking — level 2 of the analysis
+//! subsystem.
+//!
+//! [`RaceRecorder`] is the event log and checker that
+//! [`SharedParams`](crate::chaos::SharedParams) feeds when the crate is
+//! built with `--features race-check`. Every store access — lock
+//! acquire/release, locked and unlocked publication, span load, full-store
+//! overwrite — is recorded, and writes are checked against the layer span
+//! table (the same contract the static verifier proves for the layout)
+//! and against the policy's declared [`SyncContract`]:
+//!
+//! * **wrong-lock publish** — a locked publication whose range is not
+//!   owned by the locked layer; it serializes under the wrong mutex, so
+//!   the per-layer discipline silently degrades to a race;
+//! * **unlocked overlap under `Controlled`** — two temporally overlapping
+//!   unlocked writes to intersecting ranges when the policy claimed the
+//!   controlled discipline (a policy that wants HogWild! races declares
+//!   [`SyncContract::HogwildTolerated`] and opts out of this check);
+//! * **outside-span publish** — a write not contained in any single
+//!   layer's declared span (crossing a layer boundary or landing in
+//!   unowned territory);
+//! * **out-of-bounds publish** — a write past the end of the store.
+//!
+//! The recorder is silent on clean runs: `defects()` stays empty and the
+//! trainer's end-of-run assertion passes. Temporal extent of a write is
+//! tracked with RAII [`WriteGuard`]s — an active write is one whose guard
+//! is still alive, which is exactly the store's element-update loop.
+
+use crate::nn::LayerDims;
+use std::ops::Range;
+use std::sync::Mutex;
+
+/// Event-log capacity; beyond it events are counted but not stored, so a
+/// long training run cannot exhaust memory through instrumentation.
+const EVENT_CAP: usize = 16_384;
+
+/// The synchronization discipline an update policy promises to follow.
+/// Declared via
+/// [`UpdatePolicy::sync_contract`](crate::chaos::UpdatePolicy::sync_contract)
+/// and enforced by the [`RaceRecorder`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncContract {
+    /// All publications are serialized — per-layer locks, turnstiles, or
+    /// any other mechanism that prevents two writers from touching the
+    /// same range at the same time. Overlapping unlocked writes are a
+    /// defect.
+    Controlled,
+    /// The policy deliberately races (HogWild!, strategy D): overlapping
+    /// unlocked writes are tolerated by design. Span containment is still
+    /// enforced.
+    HogwildTolerated,
+    /// A master thread overwrites the whole vector between barrier rounds
+    /// (averaged SGD, strategy B).
+    StoreAll,
+}
+
+impl SyncContract {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SyncContract::Controlled => "controlled",
+            SyncContract::HogwildTolerated => "hogwild-tolerated",
+            SyncContract::StoreAll => "store-all",
+        }
+    }
+}
+
+/// One recorded store access.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreEvent {
+    LockAcquired { layer: usize },
+    LockReleased { layer: usize },
+    PublishLocked { layer: usize, range: Range<usize> },
+    PublishUnlocked { range: Range<usize> },
+    Load { range: Range<usize> },
+    StoreAll,
+}
+
+/// One violation of the lock discipline or span contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RaceDefect {
+    /// A locked publication whose range is not inside the locked layer's
+    /// declared span.
+    WrongLockPublish { layer: usize, range: Range<usize>, span: Range<usize> },
+    /// Two temporally overlapping unlocked writes to intersecting ranges
+    /// under a `Controlled` contract.
+    UnlockedOverlap { range: Range<usize>, other: Range<usize> },
+    /// A publication not contained in any single declared span.
+    OutsideSpan { range: Range<usize> },
+    /// A publication past the end of the store.
+    OutOfBounds { range: Range<usize>, total: usize },
+}
+
+impl std::fmt::Display for RaceDefect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RaceDefect::WrongLockPublish { layer, range, span } => write!(
+                f,
+                "publish of {}..{} under layer {layer}'s lock, which owns {}..{}",
+                range.start, range.end, span.start, span.end
+            ),
+            RaceDefect::UnlockedOverlap { range, other } => write!(
+                f,
+                "unlocked write {}..{} overlaps concurrent write {}..{} under a controlled contract",
+                range.start, range.end, other.start, other.end
+            ),
+            RaceDefect::OutsideSpan { range } => write!(
+                f,
+                "publish of {}..{} is not contained in any declared layer span",
+                range.start, range.end
+            ),
+            RaceDefect::OutOfBounds { range, total } => write!(
+                f,
+                "publish of {}..{} exceeds store length {total}",
+                range.start, range.end
+            ),
+        }
+    }
+}
+
+impl RaceDefect {
+    /// Stable machine-readable class name (reports, tests).
+    pub fn class(&self) -> &'static str {
+        match self {
+            RaceDefect::WrongLockPublish { .. } => "wrong-lock-publish",
+            RaceDefect::UnlockedOverlap { .. } => "unlocked-overlap",
+            RaceDefect::OutsideSpan { .. } => "outside-span",
+            RaceDefect::OutOfBounds { .. } => "out-of-bounds",
+        }
+    }
+}
+
+/// A write whose [`WriteGuard`] is still alive.
+#[derive(Debug, Clone)]
+struct ActiveWrite {
+    id: u64,
+    range: Range<usize>,
+    locked: bool,
+}
+
+struct RecState {
+    contract: SyncContract,
+    next_id: u64,
+    active: Vec<ActiveWrite>,
+    events: Vec<StoreEvent>,
+    events_dropped: usize,
+    defects: Vec<RaceDefect>,
+}
+
+/// The store's event log and lock-discipline checker. One per
+/// [`SharedParams`](crate::chaos::SharedParams) under `race-check`; also
+/// usable standalone in tests.
+pub struct RaceRecorder {
+    /// Per-layer declared spans (indexed by layer id, like the store's
+    /// lock table).
+    spans: Vec<Range<usize>>,
+    total: usize,
+    state: Mutex<RecState>,
+}
+
+impl RaceRecorder {
+    /// Build from a layer table (the store's construction path).
+    pub fn new(dims: &[LayerDims], total: usize) -> RaceRecorder {
+        RaceRecorder::from_spans(dims.iter().map(|d| d.params.clone()).collect(), total)
+    }
+
+    /// Build from bare spans (tests).
+    pub fn from_spans(spans: Vec<Range<usize>>, total: usize) -> RaceRecorder {
+        RaceRecorder {
+            spans,
+            total,
+            state: Mutex::new(RecState {
+                contract: SyncContract::Controlled,
+                next_id: 0,
+                active: Vec::new(),
+                events: Vec::new(),
+                events_dropped: 0,
+                defects: Vec::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RecState> {
+        // A panicking worker must not hide every later defect behind a
+        // poisoned mutex — the recorder's state is a plain log, always
+        // safe to read.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn record(st: &mut RecState, ev: StoreEvent) {
+        if st.events.len() < EVENT_CAP {
+            st.events.push(ev);
+        } else {
+            st.events_dropped += 1;
+        }
+    }
+
+    /// The contract currently enforced (defaults to `Controlled`).
+    pub fn contract(&self) -> SyncContract {
+        self.lock().contract
+    }
+
+    /// Declare the discipline the running policy promises — called by the
+    /// trainer before workers spawn.
+    pub fn set_contract(&self, contract: SyncContract) {
+        self.lock().contract = contract;
+    }
+
+    fn check_bounds_and_span(&self, st: &mut RecState, range: &Range<usize>) {
+        if range.end > self.total || range.start > range.end {
+            st.defects.push(RaceDefect::OutOfBounds { range: range.clone(), total: self.total });
+            return;
+        }
+        let contained = self
+            .spans
+            .iter()
+            .any(|s| !s.is_empty() && s.start <= range.start && range.end <= s.end);
+        if !contained && !range.is_empty() {
+            st.defects.push(RaceDefect::OutsideSpan { range: range.clone() });
+        }
+    }
+
+    /// Record a locked publication (the store has just acquired layer
+    /// `layer`'s lock). The returned guard spans the element-update loop;
+    /// drop it when the write completes.
+    pub fn locked_publish(&self, layer: usize, range: Range<usize>) -> WriteGuard<'_> {
+        let mut st = self.lock();
+        Self::record(&mut st, StoreEvent::LockAcquired { layer });
+        Self::record(&mut st, StoreEvent::PublishLocked { layer, range: range.clone() });
+        self.check_bounds_and_span(&mut st, &range);
+        let span = self.spans.get(layer).cloned().unwrap_or(0..0);
+        let owned = span.start <= range.start && range.end <= span.end;
+        if !owned && !(range.is_empty() && span.is_empty()) {
+            st.defects.push(RaceDefect::WrongLockPublish { layer, range: range.clone(), span });
+        }
+        // A locked write racing an *unlocked* write is the unlocked side's
+        // violation under Controlled; report it against the unlocked range.
+        if st.contract == SyncContract::Controlled {
+            let hits: Vec<Range<usize>> = st
+                .active
+                .iter()
+                .filter(|a| !a.locked && overlap(&a.range, &range))
+                .map(|a| a.range.clone())
+                .collect();
+            for other in hits {
+                st.defects.push(RaceDefect::UnlockedOverlap { range: other, other: range.clone() });
+            }
+        }
+        self.push_active(&mut st, range, true, Some(layer))
+    }
+
+    /// Record an unlocked publication. Under a `Controlled` contract, any
+    /// temporal overlap with another active write to an intersecting range
+    /// is a defect.
+    pub fn unlocked_publish(&self, range: Range<usize>) -> WriteGuard<'_> {
+        let mut st = self.lock();
+        Self::record(&mut st, StoreEvent::PublishUnlocked { range: range.clone() });
+        self.check_bounds_and_span(&mut st, &range);
+        if st.contract == SyncContract::Controlled {
+            let hits: Vec<Range<usize>> = st
+                .active
+                .iter()
+                .filter(|a| overlap(&a.range, &range))
+                .map(|a| a.range.clone())
+                .collect();
+            for other in hits {
+                st.defects.push(RaceDefect::UnlockedOverlap { range: range.clone(), other });
+            }
+        }
+        self.push_active(&mut st, range, false, None)
+    }
+
+    fn push_active(
+        &self,
+        st: &mut RecState,
+        range: Range<usize>,
+        locked: bool,
+        layer: Option<usize>,
+    ) -> WriteGuard<'_> {
+        let id = st.next_id;
+        st.next_id += 1;
+        st.active.push(ActiveWrite { id, range, locked });
+        WriteGuard { rec: self, id, layer }
+    }
+
+    /// Record an on-demand span read.
+    pub fn record_load(&self, range: Range<usize>) {
+        let mut st = self.lock();
+        Self::record(&mut st, StoreEvent::Load { range });
+    }
+
+    /// Record a full-store overwrite (averaged-SGD master step).
+    pub fn record_store_all(&self) {
+        let mut st = self.lock();
+        Self::record(&mut st, StoreEvent::StoreAll);
+    }
+
+    /// All defects found so far (empty on a clean run).
+    pub fn defects(&self) -> Vec<RaceDefect> {
+        self.lock().defects.clone()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.lock().defects.is_empty()
+    }
+
+    /// The recorded event log (capped at [`EVENT_CAP`] entries; see
+    /// [`RaceRecorder::events_dropped`]).
+    pub fn events(&self) -> Vec<StoreEvent> {
+        self.lock().events.clone()
+    }
+
+    /// Number of events that arrived after the log filled.
+    pub fn events_dropped(&self) -> usize {
+        self.lock().events_dropped
+    }
+}
+
+impl std::fmt::Debug for RaceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.lock();
+        write!(
+            f,
+            "RaceRecorder(layers={}, total={}, contract={}, events={}, defects={})",
+            self.spans.len(),
+            self.total,
+            st.contract.as_str(),
+            st.events.len(),
+            st.defects.len()
+        )
+    }
+}
+
+fn overlap(a: &Range<usize>, b: &Range<usize>) -> bool {
+    a.start < b.end && b.start < a.end
+}
+
+/// RAII handle marking a write as active; dropping it ends the write's
+/// temporal extent (and records the lock release for locked writes).
+pub struct WriteGuard<'a> {
+    rec: &'a RaceRecorder,
+    id: u64,
+    layer: Option<usize>,
+}
+
+impl Drop for WriteGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.rec.lock();
+        st.active.retain(|a| a.id != self.id);
+        if let Some(layer) = self.layer {
+            RaceRecorder::record(&mut st, StoreEvent::LockReleased { layer });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::nn::compute_dims;
+
+    fn recorder_for_tiny() -> (RaceRecorder, Vec<Range<usize>>) {
+        let dims = compute_dims(&ArchSpec::tiny());
+        let total = crate::nn::total_params(&dims);
+        let spans: Vec<Range<usize>> = dims.iter().map(|d| d.params.clone()).collect();
+        (RaceRecorder::new(&dims, total), spans)
+    }
+
+    fn classes(defects: &[RaceDefect]) -> Vec<&'static str> {
+        defects.iter().map(|d| d.class()).collect()
+    }
+
+    #[test]
+    fn clean_controlled_sequence_is_silent() {
+        let (rec, spans) = recorder_for_tiny();
+        assert_eq!(rec.contract(), SyncContract::Controlled);
+        for (layer, span) in spans.iter().enumerate().filter(|(_, s)| !s.is_empty()) {
+            rec.record_load(span.clone());
+            let g = rec.locked_publish(layer, span.clone());
+            drop(g);
+        }
+        assert!(rec.is_clean(), "{:?}", rec.defects());
+        // Lock events bracket every publication.
+        let events = rec.events();
+        let acquires = events.iter().filter(|e| matches!(e, StoreEvent::LockAcquired { .. }));
+        let releases = events.iter().filter(|e| matches!(e, StoreEvent::LockReleased { .. }));
+        assert_eq!(acquires.count(), releases.count());
+    }
+
+    #[test]
+    fn wrong_lock_publish_detected() {
+        let (rec, spans) = recorder_for_tiny();
+        // Publish layer 3's range while holding layer 1's lock.
+        let g = rec.locked_publish(1, spans[3].clone());
+        drop(g);
+        let defects = rec.defects();
+        assert!(
+            classes(&defects).contains(&"wrong-lock-publish"),
+            "not detected: {defects:?}"
+        );
+        match &defects[0] {
+            RaceDefect::WrongLockPublish { layer, range, span } => {
+                assert_eq!(*layer, 1);
+                assert_eq!(*range, spans[3]);
+                assert_eq!(*span, spans[1]);
+            }
+            other => panic!("expected WrongLockPublish, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unlocked_overlap_flagged_under_controlled_only() {
+        let (rec, spans) = recorder_for_tiny();
+        let r = spans[1].clone();
+        let g1 = rec.unlocked_publish(r.clone());
+        let g2 = rec.unlocked_publish(r.clone());
+        drop(g2);
+        drop(g1);
+        let defects = rec.defects();
+        assert_eq!(classes(&defects), vec!["unlocked-overlap"], "{defects:?}");
+
+        // The same interleaving is tolerated under a HogWild! contract.
+        let (rec, _) = recorder_for_tiny();
+        rec.set_contract(SyncContract::HogwildTolerated);
+        let g1 = rec.unlocked_publish(r.clone());
+        let g2 = rec.unlocked_publish(r.clone());
+        drop(g2);
+        drop(g1);
+        assert!(rec.is_clean(), "{:?}", rec.defects());
+    }
+
+    #[test]
+    fn sequential_unlocked_writes_are_controlled_clean() {
+        // Temporal separation is what Controlled demands — the turnstile
+        // policy (delayed-rr) publishes unlocked but never concurrently.
+        let (rec, spans) = recorder_for_tiny();
+        for _ in 0..3 {
+            let g = rec.unlocked_publish(spans[1].clone());
+            drop(g);
+        }
+        assert!(rec.is_clean(), "{:?}", rec.defects());
+    }
+
+    #[test]
+    fn disjoint_concurrent_unlocked_writes_are_clean() {
+        let (rec, spans) = recorder_for_tiny();
+        let g1 = rec.unlocked_publish(spans[1].clone());
+        let g2 = rec.unlocked_publish(spans[3].clone());
+        drop(g1);
+        drop(g2);
+        assert!(rec.is_clean(), "{:?}", rec.defects());
+    }
+
+    #[test]
+    fn outside_span_and_out_of_bounds_detected() {
+        let (rec, spans) = recorder_for_tiny();
+        // A range straddling the layer-1/layer-3 boundary fits no single
+        // span (layer 2 is a parameter-free pool).
+        let straddle = spans[1].end - 1..spans[3].start + 1;
+        let g = rec.unlocked_publish(straddle);
+        drop(g);
+        assert_eq!(classes(&rec.defects()), vec!["outside-span"]);
+
+        let (rec, _) = recorder_for_tiny();
+        let total = rec.total;
+        let g = rec.unlocked_publish(total - 1..total + 4);
+        drop(g);
+        assert_eq!(classes(&rec.defects()), vec!["out-of-bounds"]);
+    }
+
+    #[test]
+    fn locked_write_racing_unlocked_write_is_flagged() {
+        let (rec, spans) = recorder_for_tiny();
+        let g1 = rec.unlocked_publish(spans[1].clone());
+        let g2 = rec.locked_publish(1, spans[1].clone());
+        drop(g2);
+        drop(g1);
+        assert!(
+            classes(&rec.defects()).contains(&"unlocked-overlap"),
+            "{:?}",
+            rec.defects()
+        );
+    }
+
+    #[test]
+    fn event_log_caps_without_losing_defect_detection() {
+        let (rec, spans) = recorder_for_tiny();
+        for _ in 0..(EVENT_CAP + 10) {
+            rec.record_load(spans[1].clone());
+        }
+        assert_eq!(rec.events().len(), EVENT_CAP);
+        assert_eq!(rec.events_dropped(), 10);
+        // Defects are still found after the log fills.
+        let g = rec.locked_publish(1, spans[3].clone());
+        drop(g);
+        assert!(!rec.is_clean());
+    }
+}

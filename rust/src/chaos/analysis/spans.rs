@@ -1,0 +1,350 @@
+//! Static span verification — level 1 of the analysis subsystem.
+//!
+//! A compiled network declares, per layer, a `Range<usize>` into the flat
+//! parameter vector ([`LayerDims::params`]), and each compiled op repeats
+//! that declaration through [`LayerOp::param_range`](crate::nn::LayerOp).
+//! Everything downstream — per-layer publication locks, on-demand span
+//! loads, sharded stores — assumes those spans are in-bounds, pairwise
+//! disjoint, and exactly cover `0..total_params`. [`verify_spans`] proves
+//! those properties for a layer table (or reports every violation), and
+//! [`verify_network`] additionally cross-checks the op pipeline against
+//! the layout. The verifier runs at `Network::compile` in debug builds
+//! and behind `chaos analyze` on the CLI.
+
+use crate::nn::{LayerDims, Network};
+use crate::util::json::Json;
+use std::ops::Range;
+
+/// One violation of the span contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpanDefect {
+    /// `start > end` — not a meaningful range at all.
+    Inverted { layer: usize, range: Range<usize> },
+    /// The span reaches past the end of the parameter vector.
+    OutOfBounds { layer: usize, range: Range<usize>, total: usize },
+    /// Two layers' spans intersect — publications to one would race the
+    /// other's lock discipline.
+    Overlap { layer_a: usize, layer_b: usize, range_a: Range<usize>, range_b: Range<usize> },
+    /// A hole in the coverage of `0..total` — parameters no layer owns.
+    Gap { start: usize, end: usize },
+    /// The span's length disagrees with the layer's declared
+    /// weight + bias count.
+    LengthMismatch { layer: usize, span_len: usize, param_count: usize },
+    /// A compiled op's `param_range` disagrees with the layout table.
+    OpSpanMismatch { layer: usize, op: Range<usize>, declared: Range<usize> },
+}
+
+impl std::fmt::Display for SpanDefect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpanDefect::Inverted { layer, range } => {
+                write!(f, "layer {layer}: inverted span {}..{}", range.start, range.end)
+            }
+            SpanDefect::OutOfBounds { layer, range, total } => write!(
+                f,
+                "layer {layer}: span {}..{} exceeds parameter vector length {total}",
+                range.start, range.end
+            ),
+            SpanDefect::Overlap { layer_a, layer_b, range_a, range_b } => write!(
+                f,
+                "layers {layer_a} and {layer_b}: spans {}..{} and {}..{} overlap",
+                range_a.start, range_a.end, range_b.start, range_b.end
+            ),
+            SpanDefect::Gap { start, end } => {
+                write!(f, "parameters {start}..{end} are covered by no layer's span")
+            }
+            SpanDefect::LengthMismatch { layer, span_len, param_count } => write!(
+                f,
+                "layer {layer}: span holds {span_len} parameters but the layer declares {param_count}"
+            ),
+            SpanDefect::OpSpanMismatch { layer, op, declared } => write!(
+                f,
+                "layer {layer}: compiled op claims span {}..{} but the layout declares {}..{}",
+                op.start, op.end, declared.start, declared.end
+            ),
+        }
+    }
+}
+
+impl SpanDefect {
+    /// Stable machine-readable class name (JSON reports, tests).
+    pub fn class(&self) -> &'static str {
+        match self {
+            SpanDefect::Inverted { .. } => "inverted",
+            SpanDefect::OutOfBounds { .. } => "out-of-bounds",
+            SpanDefect::Overlap { .. } => "overlap",
+            SpanDefect::Gap { .. } => "gap",
+            SpanDefect::LengthMismatch { .. } => "length-mismatch",
+            SpanDefect::OpSpanMismatch { .. } => "op-span-mismatch",
+        }
+    }
+}
+
+/// The structured result of a span verification pass.
+#[derive(Debug, Clone)]
+pub struct SpanReport {
+    /// Architecture name (empty when verifying a bare layer table).
+    pub arch: String,
+    pub layers: usize,
+    pub total_params: usize,
+    pub defects: Vec<SpanDefect>,
+}
+
+impl SpanReport {
+    pub fn is_clean(&self) -> bool {
+        self.defects.is_empty()
+    }
+
+    /// Human-readable multi-line report.
+    pub fn to_text(&self) -> String {
+        let head = format!(
+            "{}: {} layers, {} parameters — ",
+            if self.arch.is_empty() { "<layer table>" } else { &self.arch },
+            self.layers,
+            self.total_params
+        );
+        if self.is_clean() {
+            return format!("{head}spans in-bounds, disjoint, exact cover: OK");
+        }
+        let mut out = format!("{head}{} defect(s)", self.defects.len());
+        for d in &self.defects {
+            out.push_str("\n  - ");
+            out.push_str(&d.to_string());
+        }
+        out
+    }
+
+    /// Structured JSON (the CLI's `--json` output).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::str(self.arch.clone())),
+            ("layers", Json::num(self.layers as f64)),
+            ("total_params", Json::num(self.total_params as f64)),
+            ("clean", Json::Bool(self.is_clean())),
+            (
+                "defects",
+                Json::arr(
+                    self.defects
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("class", Json::str(d.class())),
+                                ("detail", Json::str(d.to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Whether `r` is a well-formed, in-bounds, non-inverted range — defects
+/// about malformed ranges are reported separately and excluded from the
+/// overlap/coverage passes so one broken span doesn't cascade.
+fn well_formed(r: &Range<usize>, total: usize) -> bool {
+    r.start <= r.end && r.end <= total
+}
+
+/// Verify a layer table's parameter spans against a vector of
+/// `total_params` parameters: every span in-bounds, spans pairwise
+/// disjoint, and their union exactly `0..total_params`. Returns every
+/// defect found (empty = contract holds).
+pub fn verify_spans(dims: &[LayerDims], total_params: usize) -> Vec<SpanDefect> {
+    let mut defects = Vec::new();
+    for (i, d) in dims.iter().enumerate() {
+        let r = &d.params;
+        if r.start > r.end {
+            defects.push(SpanDefect::Inverted { layer: i, range: r.clone() });
+            continue;
+        }
+        if r.end > total_params {
+            defects.push(SpanDefect::OutOfBounds {
+                layer: i,
+                range: r.clone(),
+                total: total_params,
+            });
+        }
+        if r.len() != d.param_count() {
+            defects.push(SpanDefect::LengthMismatch {
+                layer: i,
+                span_len: r.len(),
+                param_count: d.param_count(),
+            });
+        }
+    }
+
+    // Disjointness + exact cover over the well-formed, non-empty spans.
+    let mut spans: Vec<(usize, Range<usize>)> = dims
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| !d.params.is_empty() && well_formed(&d.params, total_params))
+        .map(|(i, d)| (i, d.params.clone()))
+        .collect();
+    spans.sort_by_key(|(_, r)| (r.start, r.end));
+
+    let mut covered = 0usize; // everything below this offset is owned
+    let mut owner = 0usize; // layer owning the span that ends at `covered`
+    for (i, r) in &spans {
+        if r.start < covered {
+            defects.push(SpanDefect::Overlap {
+                layer_a: owner,
+                layer_b: *i,
+                range_a: dims[owner].params.clone(),
+                range_b: r.clone(),
+            });
+        } else if r.start > covered {
+            defects.push(SpanDefect::Gap { start: covered, end: r.start });
+        }
+        if r.end > covered {
+            covered = r.end;
+            owner = *i;
+        }
+    }
+    if covered < total_params {
+        defects.push(SpanDefect::Gap { start: covered, end: total_params });
+    }
+    defects
+}
+
+/// Verify a compiled network: the layout contract of [`verify_spans`]
+/// plus the cross-check that every compiled op's
+/// [`param_range`](crate::nn::LayerOp::param_range) agrees with the
+/// layout table (parameter-free ops may report any empty range).
+pub fn verify_network(net: &Network) -> SpanReport {
+    let mut defects = verify_spans(&net.dims, net.total_params);
+    for (i, (op, d)) in net.ops.iter().zip(&net.dims).enumerate() {
+        let op_range = op.param_range();
+        if op_range.is_empty() && d.params.is_empty() {
+            continue;
+        }
+        if op_range != d.params {
+            defects.push(SpanDefect::OpSpanMismatch {
+                layer: i,
+                op: op_range,
+                declared: d.params.clone(),
+            });
+        }
+    }
+    SpanReport {
+        arch: net.arch.name.clone(),
+        layers: net.dims.len(),
+        total_params: net.total_params,
+        defects,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::nn::compute_dims;
+
+    fn defect_classes(defects: &[SpanDefect]) -> Vec<&'static str> {
+        defects.iter().map(|d| d.class()).collect()
+    }
+
+    #[test]
+    fn paper_archs_are_clean() {
+        for name in crate::config::PAPER_ARCHS.into_iter().chain(["tiny"]) {
+            let net = Network::from_name(name).unwrap();
+            let report = verify_network(&net);
+            assert!(report.is_clean(), "{name}: {}", report.to_text());
+            assert!(report.to_text().contains("OK"));
+        }
+    }
+
+    /// Doctored layer tables seed each static defect class; the verifier
+    /// must name every one.
+    #[test]
+    fn seeded_defects_are_detected() {
+        let arch = ArchSpec::tiny();
+        let clean = compute_dims(&arch);
+        let total = crate::nn::total_params(&clean);
+        assert!(verify_spans(&clean, total).is_empty(), "baseline must be clean");
+
+        // Overlapping spans: shift layer 3's span down into layer 1's.
+        let mut dims = clean.clone();
+        let shift = 2usize;
+        dims[3].params = dims[3].params.start - shift..dims[3].params.end - shift;
+        let defects = verify_spans(&dims, total);
+        assert!(
+            defect_classes(&defects).contains(&"overlap"),
+            "overlap not detected: {defects:?}"
+        );
+
+        // Out-of-bounds span: extend the last layer past the vector end.
+        let mut dims = clean.clone();
+        let last = dims.len() - 1;
+        dims[last].params = dims[last].params.start..total + 7;
+        let defects = verify_spans(&dims, total);
+        assert!(
+            defect_classes(&defects).contains(&"out-of-bounds"),
+            "out-of-bounds not detected: {defects:?}"
+        );
+
+        // Coverage gap: shrink a middle span so parameters go unowned.
+        let mut dims = clean.clone();
+        dims[1].params = dims[1].params.start..dims[1].params.end - 3;
+        dims[1].weights -= 3; // keep length consistent so only the gap fires
+        let defects = verify_spans(&dims, total);
+        assert!(defect_classes(&defects).contains(&"gap"), "gap not detected: {defects:?}");
+
+        // Length mismatch: span length disagrees with weights + biases.
+        let mut dims = clean.clone();
+        dims[1].weights += 5;
+        let defects = verify_spans(&dims, total);
+        assert!(
+            defect_classes(&defects).contains(&"length-mismatch"),
+            "length mismatch not detected: {defects:?}"
+        );
+
+        // Inverted span.
+        let mut dims = clean;
+        dims[1].params = dims[1].params.end..dims[1].params.start;
+        let defects = verify_spans(&dims, total);
+        assert!(
+            defect_classes(&defects).contains(&"inverted"),
+            "inverted span not detected: {defects:?}"
+        );
+    }
+
+    #[test]
+    fn tail_gap_detected_when_no_layer_reaches_the_end() {
+        let arch = ArchSpec::tiny();
+        let dims = compute_dims(&arch);
+        let total = crate::nn::total_params(&dims);
+        // Pretend the vector is longer than the layout covers.
+        let defects = verify_spans(&dims, total + 10);
+        assert_eq!(defect_classes(&defects), vec!["gap"]);
+        match &defects[0] {
+            SpanDefect::Gap { start, end } => {
+                assert_eq!((*start, *end), (total, total + 10));
+            }
+            other => panic!("expected Gap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_text_and_json_name_defects() {
+        let arch = ArchSpec::tiny();
+        let mut dims = compute_dims(&arch);
+        let total = crate::nn::total_params(&dims);
+        let last = dims.len() - 1;
+        dims[last].params = dims[last].params.start..total + 1;
+        let report = SpanReport {
+            arch: "doctored".into(),
+            layers: dims.len(),
+            total_params: total,
+            defects: verify_spans(&dims, total),
+        };
+        assert!(!report.is_clean());
+        let text = report.to_text();
+        assert!(text.contains("doctored") && text.contains("exceeds"), "{text}");
+        let json = report.to_json().pretty();
+        assert!(json.contains("out-of-bounds"), "{json}");
+        // The JSON round-trips through the parser.
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("clean").and_then(|j| j.as_bool()), Some(false));
+    }
+}

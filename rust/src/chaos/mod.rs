@@ -25,6 +25,7 @@
 //! observed in flight (early stopping, live checkpointing) through
 //! [`EpochObserver`].
 
+pub mod analysis;
 mod checkpoint;
 mod observer;
 pub mod policy;
@@ -34,6 +35,7 @@ mod shared;
 mod strategies;
 mod trainer;
 
+pub use analysis::SyncContract;
 pub use checkpoint::Checkpoint;
 pub use observer::{
     observer_fn, CheckpointEvery, EarlyStop, EpochObserver, FnObserver, RunView, TrainControl,

@@ -41,6 +41,7 @@
 //!   per-layer locks: equivalent to B per-sample CHAOS steps computed from
 //!   one weight snapshot, published together.
 
+use super::analysis::SyncContract;
 use super::shared::SharedParams;
 use super::strategies::Turnstile;
 use crate::nn::{LayerDims, Network};
@@ -96,6 +97,16 @@ pub trait UpdatePolicy: Send + Sync {
     /// [`WorkerHooks::publish`] hook.
     fn minibatch(&self) -> Option<usize> {
         None
+    }
+
+    /// The synchronization discipline this policy's publications promise
+    /// to follow, enforced by the race checker when the crate is built
+    /// with `--features race-check` (see [`crate::chaos::analysis`]). The
+    /// default claims [`SyncContract::Controlled`] — writes never
+    /// temporally overlap; a deliberately racy policy must override this
+    /// to [`SyncContract::HogwildTolerated`] to opt into its races.
+    fn sync_contract(&self) -> SyncContract {
+        SyncContract::Controlled
     }
 
     /// Per-epoch shared state; called once per epoch before workers start.
@@ -212,6 +223,12 @@ pub struct HogwildPolicy;
 impl UpdatePolicy for HogwildPolicy {
     fn name(&self) -> String {
         "hogwild".to_string()
+    }
+
+    /// HogWild! opts into its races: concurrent unlocked writes to the
+    /// same range are the design, not a defect.
+    fn sync_contract(&self) -> SyncContract {
+        SyncContract::HogwildTolerated
     }
 
     fn epoch_state(&self, _ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
@@ -336,6 +353,11 @@ impl UpdatePolicy for AveragedPolicy {
             "averaged: sync_every must be ≥ 1 (0 would deadlock the barrier rounds)"
         );
         Ok(())
+    }
+
+    /// The leader overwrites the whole store between barrier rounds.
+    fn sync_contract(&self) -> SyncContract {
+        SyncContract::StoreAll
     }
 
     fn epoch_state(&self, ctx: &EpochCtx<'_>) -> Box<dyn EpochState> {
@@ -868,6 +890,26 @@ mod tests {
         assert!(!AveragedPolicy::default().is_sequential());
         assert!(!MinibatchPolicy::default().is_sequential());
         assert!(!HogwildBatchPolicy::default().is_sequential());
+    }
+
+    #[test]
+    fn builtin_policies_declare_their_contracts() {
+        use SyncContract as C;
+        for (name, want) in [
+            ("sequential", C::Controlled),
+            ("chaos", C::Controlled),
+            ("hogwild", C::HogwildTolerated),
+            // The turnstile serializes delayed-rr's unlocked publishes —
+            // temporally disjoint writes satisfy the controlled contract.
+            ("delayed-rr", C::Controlled),
+            ("averaged", C::StoreAll),
+            ("minibatch", C::Controlled),
+            // Despite the name, hogwild-batch publishes under the
+            // per-layer locks; only per-sample hogwild races.
+            ("hogwild-batch", C::Controlled),
+        ] {
+            assert_eq!(from_name(name).unwrap().sync_contract(), want, "{name}");
+        }
     }
 
     #[test]

@@ -19,15 +19,27 @@ pub struct Sampler {
 impl Sampler {
     /// Sequential order over `n` images.
     pub fn sequential(n: usize) -> Sampler {
-        Sampler { order: (0..n as u32).collect(), cursor: AtomicUsize::new(0) }
+        Sampler { order: Self::identity(n), cursor: AtomicUsize::new(0) }
     }
 
     /// Shuffled order, deterministic in (seed, epoch).
     pub fn shuffled(n: usize, seed: u64, epoch: usize) -> Sampler {
-        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut order = Self::identity(n);
         let mut rng = Pcg32::new(seed, 0x5A17 ^ epoch as u64);
         rng.shuffle(&mut order);
         Sampler { order, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Identity permutation `0..n`. Indices are stored as `u32` (half the
+    /// footprint of the epoch-sized index list), so a pool beyond
+    /// `u32::MAX` images must be rejected — `0..n as u32` would otherwise
+    /// silently truncate to an empty (or short) range.
+    fn identity(n: usize) -> Vec<u32> {
+        assert!(
+            u32::try_from(n).is_ok(),
+            "sampler pool of {n} images exceeds the u32 index space"
+        );
+        (0..n as u32).collect()
     }
 
     /// Claim the next image index, or `None` when the pool is drained.
@@ -175,5 +187,40 @@ mod tests {
         let s = Sampler::sequential(5);
         let got: Vec<_> = std::iter::from_fn(|| s.next()).collect();
         assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_pool_yields_nothing() {
+        for s in [Sampler::sequential(0), Sampler::shuffled(0, 9, 3)] {
+            assert!(s.is_empty());
+            assert_eq!(s.len(), 0);
+            assert!(s.next().is_none());
+            let mut chunk = vec![99];
+            s.next_chunk(4, &mut chunk);
+            assert!(chunk.is_empty(), "chunk from an empty pool must clear out");
+            assert_eq!(s.claimed(), 0);
+        }
+    }
+
+    #[test]
+    fn chunk_larger_than_pool_returns_everything() {
+        let s = Sampler::sequential(3);
+        let mut chunk = Vec::new();
+        s.next_chunk(1000, &mut chunk);
+        assert_eq!(chunk, vec![0, 1, 2]);
+        s.next_chunk(1000, &mut chunk);
+        assert!(chunk.is_empty());
+        assert_eq!(s.claimed(), 3);
+    }
+
+    /// A pool beyond the u32 index space must be rejected loudly, not
+    /// truncated by `0..n as u32` into a silently empty sampler. The assert
+    /// fires before the index list is allocated, so the test never attempts
+    /// a 16 GiB allocation.
+    #[test]
+    #[should_panic(expected = "exceeds the u32 index space")]
+    #[cfg(target_pointer_width = "64")]
+    fn pool_beyond_u32_panics() {
+        let _ = Sampler::sequential(u32::MAX as usize + 1);
     }
 }

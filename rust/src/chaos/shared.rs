@@ -18,7 +18,18 @@
 //!   original HogWild! tolerates.
 //! * **store_all** (averaged SGD, strategy B): the master overwrites the
 //!   whole vector between mini-batches.
+//!
+//! Built with `--features race-check`, every access is additionally
+//! recorded into a [`RaceRecorder`](super::analysis::RaceRecorder) that
+//! enforces the policy's declared [`SyncContract`] (see
+//! [`super::analysis`]), and publish/load paths carry
+//! [`yield_point`](super::analysis::yield_point)s so the deterministic
+//! interleaver can replay adversarial orderings. Without the feature the
+//! instrumentation compiles out entirely.
 
+use super::analysis::SyncContract;
+#[cfg(feature = "race-check")]
+use super::analysis::{yield_point, RaceDefect, RaceRecorder, StoreEvent};
 use crate::nn::{LayerDims, ParamSource};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
@@ -30,8 +41,13 @@ pub struct SharedParams {
     /// One lock per layer (indexed by layer id; non-parameterized layers
     /// carry an unused lock to keep indexing trivial).
     locks: Vec<Mutex<()>>,
+    /// Per-layer declared parameter spans (parallel to `locks`) — the
+    /// ownership table behind [`SharedParams::range_owned_by`].
+    spans: Vec<Range<usize>>,
     /// Count of published layer-updates (metrics / tests).
     publications: AtomicU64,
+    #[cfg(feature = "race-check")]
+    race: RaceRecorder,
 }
 
 impl SharedParams {
@@ -40,7 +56,10 @@ impl SharedParams {
         SharedParams {
             words: init.iter().map(|&v| AtomicU32::new(v.to_bits())).collect(),
             locks: dims.iter().map(|_| Mutex::new(())).collect(),
+            spans: dims.iter().map(|d| d.params.clone()).collect(),
             publications: AtomicU64::new(0),
+            #[cfg(feature = "race-check")]
+            race: RaceRecorder::new(dims, init.len()),
         }
     }
 
@@ -62,20 +81,71 @@ impl SharedParams {
         f32::from_bits(self.words[i].load(Ordering::Relaxed))
     }
 
+    /// Whether `range` lies within layer `layer`'s declared parameter
+    /// span — the precondition of [`SharedParams::publish_scaled`]: a
+    /// mismatched `(layer, range)` pair would serialize under the wrong
+    /// lock and silently race the range's real owner.
+    pub fn range_owned_by(&self, layer: usize, range: &Range<usize>) -> bool {
+        match self.spans.get(layer) {
+            Some(s) => range.start <= range.end && s.start <= range.start && range.end <= s.end,
+            None => false,
+        }
+    }
+
+    /// Declare the synchronization discipline of the running update policy
+    /// (see [`super::analysis::SyncContract`]). A no-op unless built with
+    /// `--features race-check`.
+    pub fn set_sync_contract(&self, contract: SyncContract) {
+        #[cfg(feature = "race-check")]
+        self.race.set_contract(contract);
+        #[cfg(not(feature = "race-check"))]
+        let _ = contract;
+    }
+
     /// Copy a span into `buf` — the worker's on-demand read.
     #[inline]
     pub fn load_span(&self, range: Range<usize>, buf: &mut [f32]) {
         debug_assert_eq!(buf.len(), range.len());
+        #[cfg(feature = "race-check")]
+        {
+            self.race.record_load(range.clone());
+            yield_point("load");
+        }
         for (dst, w) in buf.iter_mut().zip(&self.words[range]) {
             *dst = f32::from_bits(w.load(Ordering::Relaxed));
         }
     }
 
     /// Controlled publication: `w[range] += scale · grads`, serialized per
-    /// layer. `scale` is `-η` for gradient descent.
+    /// layer. `scale` is `-η` for gradient descent. `range` must lie
+    /// within layer `layer`'s declared span
+    /// ([`SharedParams::range_owned_by`]) — checked in debug builds, and a
+    /// hard error under `--features race-check`.
     pub fn publish_scaled(&self, layer: usize, range: Range<usize>, grads: &[f32], scale: f32) {
         debug_assert_eq!(grads.len(), range.len());
+        #[cfg(feature = "race-check")]
+        assert!(
+            self.range_owned_by(layer, &range),
+            "publish_scaled: range {}..{} not owned by layer {layer} (span {:?})",
+            range.start,
+            range.end,
+            self.spans.get(layer)
+        );
+        #[cfg(not(feature = "race-check"))]
+        debug_assert!(
+            self.range_owned_by(layer, &range),
+            "publish_scaled: range {}..{} not owned by layer {layer} (span {:?})",
+            range.start,
+            range.end,
+            self.spans.get(layer)
+        );
+        // Interleaver discipline: park *before* taking the lock, never
+        // inside it — a suspended lock holder could never be resumed.
+        #[cfg(feature = "race-check")]
+        yield_point("publish:locked");
         let _guard = self.locks[layer].lock().unwrap();
+        #[cfg(feature = "race-check")]
+        let _write = self.race.locked_publish(layer, range.clone());
         for (w, &g) in self.words[range].iter().zip(grads) {
             let cur = f32::from_bits(w.load(Ordering::Relaxed));
             w.store((cur + scale * g).to_bits(), Ordering::Relaxed);
@@ -87,8 +157,19 @@ impl SharedParams {
     /// publishers may interleave element-wise and lose increments.
     pub fn publish_scaled_unlocked(&self, range: Range<usize>, grads: &[f32], scale: f32) {
         debug_assert_eq!(grads.len(), range.len());
+        #[cfg(feature = "race-check")]
+        let _write = self.race.unlocked_publish(range.clone());
+        #[cfg(feature = "race-check")]
+        let mut first = true;
         for (w, &g) in self.words[range].iter().zip(grads) {
             let cur = f32::from_bits(w.load(Ordering::Relaxed));
+            // Park between the read and the write of the first element —
+            // the exact window in which a concurrent publisher's update is
+            // lost, so the interleaver can force the loss deterministically.
+            #[cfg(feature = "race-check")]
+            if std::mem::take(&mut first) {
+                yield_point("publish:unlocked:rmw");
+            }
             w.store((cur + scale * g).to_bits(), Ordering::Relaxed);
         }
         self.publications.fetch_add(1, Ordering::Relaxed);
@@ -97,6 +178,8 @@ impl SharedParams {
     /// Overwrite the full vector (averaged-SGD master step).
     pub fn store_all(&self, values: &[f32]) {
         debug_assert_eq!(values.len(), self.words.len());
+        #[cfg(feature = "race-check")]
+        self.race.record_store_all();
         for (w, &v) in self.words.iter().zip(values) {
             w.store(v.to_bits(), Ordering::Relaxed);
         }
@@ -108,6 +191,27 @@ impl SharedParams {
             .iter()
             .map(|w| f32::from_bits(w.load(Ordering::Relaxed)))
             .collect()
+    }
+}
+
+/// Race-checker views, available with `--features race-check` (see
+/// [`super::analysis::race`]).
+#[cfg(feature = "race-check")]
+impl SharedParams {
+    /// Lock-discipline / race defects recorded so far (empty on a clean
+    /// run). The trainer asserts this is empty at the end of every
+    /// parallel run.
+    pub fn race_defects(&self) -> Vec<RaceDefect> {
+        self.race.defects()
+    }
+
+    /// The recorded store-access event log.
+    pub fn race_events(&self) -> Vec<StoreEvent> {
+        self.race.events()
+    }
+
+    pub fn race_is_clean(&self) -> bool {
+        self.race.is_clean()
     }
 }
 
@@ -200,6 +304,62 @@ mod tests {
             assert_eq!(store.get(i), expect, "lost update at {i}");
         }
         assert_eq!(store.publication_count(), (per_thread * threads) as u64);
+    }
+
+    #[test]
+    fn hogwild_lost_updates_stay_bounded() {
+        // The unlocked path may lose updates but not invent them. Per
+        // thread, each read-modify-write reads at least the thread's own
+        // last store (coherence), so every thread's stored sequence grows
+        // by ≥ 1 per publish and the coherence-final store — some thread's
+        // last — is ≥ per_thread. And no store can exceed the race-free
+        // sum, since every stored value is (some earlier value) + 1.
+        let (store, dims) = store_for(&ArchSpec::tiny(), 0.0);
+        let range = dims[1].params.clone();
+        let store = std::sync::Arc::new(store);
+        let per_thread = 200;
+        let threads = 8;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let store = store.clone();
+                let range = range.clone();
+                s.spawn(move || {
+                    let grads = vec![1.0f32; range.len()];
+                    for _ in 0..per_thread {
+                        store.publish_scaled_unlocked(range.clone(), &grads, 1.0);
+                    }
+                });
+            }
+        });
+        for i in range {
+            let v = store.get(i);
+            assert!(v >= per_thread as f32, "below one thread's own updates at {i}: {v}");
+            assert!(v <= (per_thread * threads) as f32, "above the race-free sum at {i}: {v}");
+        }
+        assert_eq!(store.publication_count(), (per_thread * threads) as u64);
+    }
+
+    #[test]
+    fn range_ownership_is_checked() {
+        let (store, dims) = store_for(&ArchSpec::tiny(), 0.0);
+        assert!(store.range_owned_by(1, &dims[1].params));
+        let sub = dims[1].params.start..dims[1].params.start + 1;
+        assert!(store.range_owned_by(1, &sub));
+        assert!(!store.range_owned_by(1, &dims[3].params), "another layer's span");
+        assert!(!store.range_owned_by(99, &dims[1].params), "layer out of table");
+        let inverted = dims[1].params.end..dims[1].params.start;
+        assert!(!store.range_owned_by(1, &inverted), "inverted range");
+    }
+
+    #[test]
+    #[should_panic(expected = "not owned by layer")]
+    #[cfg(any(debug_assertions, feature = "race-check"))]
+    fn mismatched_publish_panics() {
+        // Satellite of the span contract: publishing layer 3's range under
+        // layer 1's lock is the wrong-lock hazard — rejected outright.
+        let (store, dims) = store_for(&ArchSpec::tiny(), 0.0);
+        let range = dims[3].params.clone();
+        store.publish_scaled(1, range.clone(), &vec![0.0; range.len()], 1.0);
     }
 
     #[test]

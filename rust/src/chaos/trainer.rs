@@ -226,7 +226,11 @@ fn run_epochs(
         Engine::Seq { params: net.init_params(cfg.seed), scratch: net.scratch_seeded(cfg.seed) }
     } else {
         let init = net.init_params(cfg.seed);
-        Engine::Par { store: SharedParams::new(&init, &net.dims) }
+        let store = SharedParams::new(&init, &net.dims);
+        // Declare the policy's synchronization discipline to the store so
+        // the race checker (`--features race-check`) can enforce it.
+        store.set_sync_contract(policy.sync_contract());
+        Engine::Par { store }
     };
 
     for epoch in 0..cfg.epochs {
@@ -309,6 +313,22 @@ fn run_epochs(
     let (final_params, publications) = match engine {
         Engine::Seq { params, .. } => (params, 0),
         Engine::Par { store } => {
+            // Under race-check, every parallel run doubles as a clean-run
+            // test: any lock-discipline violation recorded during the run
+            // fails loudly here instead of vanishing with the store.
+            #[cfg(feature = "race-check")]
+            {
+                let defects = store.race_defects();
+                assert!(
+                    defects.is_empty(),
+                    "race-check: {} store defect(s) under the '{}' policy \
+                     ({} contract): {:?}",
+                    defects.len(),
+                    policy_name,
+                    policy.sync_contract().as_str(),
+                    defects
+                );
+            }
             let count = store.publication_count();
             (store.snapshot(), count)
         }

@@ -88,9 +88,22 @@
 //! ([`serve::Engine::Native`], no artifacts required) or from the AOT
 //! PJRT artifact ([`serve::Engine::Pjrt`]).
 //!
+//! ## Static & dynamic analysis
+//!
+//! [`chaos::analysis`] verifies the invariants the parallel scheme rests
+//! on: a static span verifier proves every compiled network's parameter
+//! spans are in-bounds, disjoint and covering (run in debug builds at
+//! `Network::new`, and from the CLI as `chaos analyze`); a race /
+//! lock-discipline checker (cargo feature `race-check`) records every
+//! store event against the policy's declared [`chaos::SyncContract`]; and
+//! a deterministic interleaving harness replays cross-thread orderings
+//! under a seeded or scripted schedule.
+//!
 //! Start with [`config::ArchSpec`] (the paper's Table 2 networks),
 //! [`chaos::Trainer`] (the parallel trainer), and [`harness`] (regenerates
 //! every table and figure of the paper's evaluation).
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench;
 pub mod chaos;

@@ -8,6 +8,7 @@
 //!   predict    analytic performance model (Listing 2)
 //!   simulate   Xeon Phi discrete-event simulator
 //!   serve      batched-inference serving demo (native engine or AOT artifacts)
+//!   analyze    static span verifier over compiled networks + policy contracts
 //!   info       architecture/manifest inventory
 
 use chaos_phi::chaos::{self, policy};
@@ -40,6 +41,11 @@ USAGE: chaos <command> [flags]
   simulate  --arch A --threads 1,15,30,...
   serve     --arch tiny --requests N --clients C --engine native|pjrt --batch B
             --artifacts DIR --weights FILE.ckpt   (pjrt needs `make artifacts`)
+  analyze   [NAME|FILE.json ...] [--json]
+            (static span verification of each compiled network: in-bounds,
+             disjoint, exact cover, op/dims agreement; defaults to every
+             built-in arch and also prints each policy's sync contract;
+             exits nonzero if any defect is found)
   arch      validate FILE.json...   (parse + structurally validate + compile)
             show NAME [--out FILE.json]   (export a built-in arch as JSON)
             kinds   (list registered layer kinds)
@@ -62,6 +68,7 @@ fn main() {
         "predict" => cmd_predict(rest),
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "analyze" => cmd_analyze(rest),
         "arch" => cmd_arch(rest),
         "info" => cmd_info(rest),
         other => {
@@ -352,6 +359,61 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         "latency p50 {:.0}µs  p99 {:.0}µs  max {:.0}µs; {} batches, mean fill {:.2}",
         m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch_fill
     );
+    Ok(())
+}
+
+fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
+    use chaos_phi::chaos::analysis::verify_network;
+    use chaos_phi::util::json::Json;
+
+    // Positional targets (arch names or .json files) come first, flags after
+    // — same convention as `table`/`fig`.
+    let split = raw.iter().position(|s| s.starts_with("--")).unwrap_or(raw.len());
+    let (targets, flags) = raw.split_at(split);
+    let a = Args::parse(flags, &["json!"])?;
+    let default_targets: Vec<String>;
+    let targets: &[String] = if targets.is_empty() {
+        default_targets = chaos_phi::config::PAPER_ARCHS
+            .iter()
+            .map(|s| s.to_string())
+            .chain(std::iter::once("tiny".to_string()))
+            .collect();
+        &default_targets
+    } else {
+        targets
+    };
+
+    let mut reports = Vec::new();
+    for t in targets {
+        let arch = if t.ends_with(".json") {
+            ArchSpec::from_file(t).map_err(|e| anyhow::anyhow!("{t}: {e:#}"))?
+        } else {
+            ArchSpec::by_name(t).ok_or_else(|| {
+                anyhow::anyhow!("unknown arch '{t}' (expected a built-in name or a .json file)")
+            })?
+        };
+        // Note: debug builds also verify at compile and turn defects into a
+        // compile error; release builds reach verify_network below.
+        let net = Network::compile(arch).map_err(|e| anyhow::anyhow!("{t}: compile: {e:#}"))?;
+        reports.push(verify_network(&net));
+    }
+    let defects: usize = reports.iter().map(|r| r.defects.len()).sum();
+
+    if a.has("json") {
+        println!("{}", Json::arr(reports.iter().map(|r| r.to_json()).collect()).pretty());
+    } else {
+        for r in &reports {
+            println!("{}", r.to_text());
+        }
+        println!("\nupdate-policy sync contracts:");
+        let mut names = policy::names();
+        names.sort();
+        for name in names {
+            let p = policy::from_name(&name)?;
+            println!("  {name:16} {}", p.sync_contract().as_str());
+        }
+    }
+    anyhow::ensure!(defects == 0, "{defects} span defect(s) found");
     Ok(())
 }
 

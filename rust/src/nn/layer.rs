@@ -118,6 +118,16 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
 
     /// This op's span in the flat parameter vector (empty for
     /// parameter-free ops). Weights come first, then biases.
+    ///
+    /// **Span contract.** The returned range must equal the compiler's
+    /// declared span for the layer (`LayerDims::params`) — same start, same
+    /// end — or be empty when the op holds no parameters. Across the stack,
+    /// spans must lie in bounds, be pairwise disjoint, and exactly cover the
+    /// flat vector; [`crate::chaos::analysis::verify_network`] proves all of
+    /// this for every compiled network (debug builds enforce it at
+    /// `Network::new`, `chaos analyze` reports it from the CLI). The CHAOS
+    /// publication locks key off these spans, so an op that mis-declares its
+    /// range turns controlled updates into silent races.
     fn param_range(&self) -> Range<usize>;
 
     /// Auxiliary `u32` words this op needs in the per-worker scratch.

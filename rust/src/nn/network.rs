@@ -61,7 +61,10 @@ impl Clone for Network {
 
 impl Network {
     /// Compile an architecture into an executable network, resolving every
-    /// layer through the kind registry.
+    /// layer through the kind registry. Debug builds additionally run the
+    /// static span verifier ([`crate::chaos::analysis::verify_network`])
+    /// over the compiled op table, so a kind that mis-declares its
+    /// parameter span fails at compile time, not as a training-time race.
     pub fn compile(arch: ArchSpec) -> anyhow::Result<Network> {
         let dims = try_compute_dims(&arch)?;
         let mut ops: Vec<Box<dyn LayerOp>> = Vec::with_capacity(dims.len());
@@ -69,7 +72,18 @@ impl Network {
             ops.push(super::layer::kind_for(&d.spec)?.compile(&d.spec, d)?);
         }
         let total_params = total_params(&dims);
-        Ok(Network { arch, dims, ops, total_params })
+        let net = Network { arch, dims, ops, total_params };
+        #[cfg(debug_assertions)]
+        {
+            let report = crate::chaos::analysis::verify_network(&net);
+            anyhow::ensure!(
+                report.is_clean(),
+                "span verifier rejected '{}': {}",
+                net.arch.name,
+                report.to_text()
+            );
+        }
+        Ok(net)
     }
 
     /// Compile, panicking on an invalid architecture (use
@@ -275,7 +289,14 @@ impl Network {
         let correct = crate::tensor::argmax(probs) == label;
         self.backward(&src, label, scratch, timers, |_, d, grads| {
             debug_assert!(d.params.end <= len);
-            // Safety: see above — exclusive single-threaded access.
+            // SAFETY: `ptr` points at `params`, a Vec<f32> exclusively
+            // borrowed for the whole call, and `sgd_step` is
+            // single-threaded, so no other reference is live while this
+            // slice exists: the only reads through the same provenance
+            // (`ParamsPtr::load`) happen between callbacks, never during
+            // one. `d.params` is in bounds: spans are verified at compile
+            // (`analysis::verify_spans`) and `d.params.end <= len` is
+            // asserted above.
             let dst = unsafe {
                 std::slice::from_raw_parts_mut(ptr.add(d.params.start), d.params.len())
             };
@@ -297,6 +318,13 @@ struct ParamsPtr(*mut f32, usize);
 impl ParamSource for ParamsPtr {
     fn load(&self, range: std::ops::Range<usize>, buf: &mut [f32]) {
         debug_assert!(range.end <= self.1);
+        // SAFETY: `self.0` points at the parameter Vec exclusively
+        // borrowed by `sgd_step` (single-threaded), and no mutable slice
+        // from the update callback is live while this load runs — loads
+        // happen between callbacks. `range` is a verified layer span with
+        // `range.end <= self.1`, the Vec's length, so the read stays in
+        // bounds. The shared slice is dropped before this function
+        // returns.
         let src = unsafe { std::slice::from_raw_parts(self.0.add(range.start), range.len()) };
         buf.copy_from_slice(src);
     }
@@ -378,6 +406,33 @@ mod tests {
                 assert_eq!(op.out_shape().len(), d.out_len(), "{name}: {}", op.kind());
             }
         }
+    }
+
+    /// Smallest network that drives both raw-pointer sites in this file —
+    /// `ParamsPtr::load` and the in-place update slice in [`Network::sgd_step`]
+    /// — through a complete forward/backward step. Sized for Miri (the CI
+    /// aliasing job runs exactly this test), where the paper architectures
+    /// would take minutes.
+    #[test]
+    fn sgd_step_aliasing_smoke() {
+        let arch = ArchSpec {
+            name: "micro".into(),
+            layers: vec![
+                LayerSpec::Input { side: 4 },
+                LayerSpec::fc(3),
+                LayerSpec::Output { classes: 2 },
+            ],
+            paper_epochs: 1,
+        };
+        let net = Network::new(arch);
+        let mut params = net.init_params(11);
+        let mut scratch = net.scratch();
+        let mut rng = Pcg32::seeded(7);
+        let img = rand_image(&mut rng, 16);
+        let (loss1, _) = net.sgd_step(&mut params, &img, 1, 0.5, &mut scratch, None);
+        let (loss2, _) = net.sgd_step(&mut params, &img, 1, 0.5, &mut scratch, None);
+        assert!(loss1.is_finite() && loss2.is_finite());
+        assert!(loss2 < loss1, "repeated step on one sample reduces its loss");
     }
 
     #[test]

@@ -15,8 +15,12 @@ pub struct AlignedBuf {
     len: usize,
 }
 
-// The buffer owns its allocation exclusively; f32 is Send + Sync.
+// SAFETY: AlignedBuf owns its allocation exclusively (the raw pointer is
+// never shared out), all access goes through &self / &mut self borrows of
+// the owner, and f32 is Send + Sync, so moving the buffer or sharing
+// references across threads is sound.
 unsafe impl Send for AlignedBuf {}
+// SAFETY: as above — &AlignedBuf only permits reads of plain f32 data.
 unsafe impl Sync for AlignedBuf {}
 
 impl AlignedBuf {
@@ -25,7 +29,9 @@ impl AlignedBuf {
             return AlignedBuf { ptr: std::ptr::NonNull::<f32>::dangling().as_ptr(), len: 0 };
         }
         let layout = Self::layout(len);
-        // Safety: layout has non-zero size (len > 0).
+        // SAFETY: len > 0 so the layout has non-zero size, satisfying
+        // alloc_zeroed's only precondition. The all-zero bit pattern is a
+        // valid f32 (0.0), so the buffer is initialized for type f32.
         let ptr = unsafe { alloc_zeroed(layout) } as *mut f32;
         if ptr.is_null() {
             handle_alloc_error(layout);
@@ -40,8 +46,12 @@ impl AlignedBuf {
     }
 
     fn layout(len: usize) -> Layout {
-        Layout::from_size_align(len * std::mem::size_of::<f32>(), ALIGN)
-            .expect("aligned buffer layout")
+        // Layout::array checks the size computation for overflow (unlike a
+        // bare `len * size_of::<f32>()`), and align_to can only raise the
+        // alignment, which for a power of two never fails.
+        Layout::array::<f32>(len)
+            .and_then(|l| l.align_to(ALIGN))
+            .expect("aligned buffer layout overflows isize")
     }
 
     pub fn len(&self) -> usize {
@@ -65,13 +75,18 @@ impl AlignedBuf {
 impl Deref for AlignedBuf {
     type Target = [f32];
     fn deref(&self) -> &[f32] {
-        // Safety: ptr/len describe our exclusive allocation.
+        // SAFETY: ptr/len describe our exclusive, zero-initialized
+        // allocation (or a dangling-but-well-aligned pointer with len 0,
+        // which from_raw_parts permits). The borrow of self keeps the
+        // allocation alive and prevents a concurrent &mut slice.
         unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
     }
 }
 
 impl DerefMut for AlignedBuf {
     fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as in Deref, plus &mut self guarantees this is the only
+        // live reference into the allocation.
         unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
     }
 }
@@ -79,6 +94,10 @@ impl DerefMut for AlignedBuf {
 impl Drop for AlignedBuf {
     fn drop(&mut self) {
         if self.len > 0 {
+            // SAFETY: len > 0 means ptr came from alloc_zeroed with exactly
+            // this layout (len is immutable after construction), has not
+            // been freed before (drop runs once), and ownership is
+            // exclusive.
             unsafe { dealloc(self.ptr as *mut u8, Self::layout(self.len)) };
         }
     }
@@ -139,5 +158,16 @@ mod tests {
             let b = AlignedBuf::zeroed(len);
             assert!(b.is_aligned(), "len={len}");
         }
+    }
+
+    /// The layout computation must reject a length whose byte size
+    /// overflows isize instead of wrapping into a tiny allocation.
+    #[test]
+    #[should_panic(expected = "aligned buffer layout")]
+    #[cfg(target_pointer_width = "64")]
+    fn oversized_layout_panics_cleanly() {
+        // isize::MAX / 4 + 1 elements of f32 overflow the isize byte limit;
+        // the panic fires in layout(), before any allocation is attempted.
+        let _ = AlignedBuf::zeroed(isize::MAX as usize / 4 + 1);
     }
 }
