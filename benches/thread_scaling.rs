@@ -30,6 +30,7 @@ fn main() {
             eta_decay: 0.9,
             seed: 5,
             validation_fraction: 0.0,
+            eval_batch: 32,
         };
         report.add(
             Bench::new(format!("real/chaos_epoch/{threads}t"))

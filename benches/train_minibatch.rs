@@ -49,6 +49,7 @@ fn train_once(
         eta_decay: 0.9,
         seed: 0xBE7C4,
         validation_fraction: 0.0,
+        eval_batch: 32,
     };
     let run = Trainer::new()
         .arch(ArchSpec::small())

@@ -25,6 +25,7 @@ fn main() {
         eta_decay: 0.9,
         seed: 21,
         validation_fraction: 0.0,
+        eval_batch: 32,
     };
 
     for name in policy::names() {

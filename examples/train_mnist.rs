@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         eta_decay: 0.9,
         seed: 99,
         validation_fraction: 0.2,
+        eval_batch: 32,
     };
     let sw = Stopwatch::start();
     // Live progress through the observer API (fires as each epoch lands).

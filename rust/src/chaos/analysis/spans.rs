@@ -117,6 +117,7 @@ impl SpanReport {
     /// Structured JSON (the CLI's `--json` output).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("schema", Json::str("chaos.analyze.spans/v1")),
             ("arch", Json::str(self.arch.clone())),
             ("layers", Json::num(self.layers as f64)),
             ("total_params", Json::num(self.total_params as f64)),

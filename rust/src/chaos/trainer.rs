@@ -276,14 +276,15 @@ fn run_epochs(
         }
 
         // Validation and testing phases.
+        let eb = cfg.eval_batch;
         let (validation, test) = match &mut engine {
             Engine::Seq { params, .. } => (
-                eval_seq(net, params, train_set, val_len, Some(&layer_times)),
-                eval_seq(net, params, test_set, test_set.len(), Some(&layer_times)),
+                eval_seq(net, params, train_set, val_len, eb, Some(&layer_times)),
+                eval_seq(net, params, test_set, test_set.len(), eb, Some(&layer_times)),
             ),
             Engine::Par { store } => (
-                eval_parallel(net, store, train_set, val_len, threads, &layer_times),
-                eval_parallel(net, store, test_set, test_set.len(), threads, &layer_times),
+                eval_parallel(net, store, train_set, val_len, threads, eb, &layer_times),
+                eval_parallel(net, store, test_set, test_set.len(), threads, eb, &layer_times),
             ),
         };
 
@@ -471,11 +472,13 @@ fn worker_minibatch(
     local
 }
 
-/// Evaluation batch size: each worker forwards chunks of up to this many
-/// images per scratch reuse, so every layer's parameter span is read once
-/// per chunk instead of once per image (`nn::BatchPlan`). The batched path
-/// is bit-identical to per-image forwards, so metrics are unchanged.
-const EVAL_BATCH: usize = 32;
+// The evaluation batch size used to be a hardcoded `EVAL_BATCH: usize = 32`
+// here; it is now the validated `TrainConfig::eval_batch` field (default 32)
+// threaded through `eval_seq`/`eval_parallel`. Each worker forwards chunks
+// of up to `eval_batch` images per scratch reuse, so every layer's parameter
+// span is read once per chunk instead of once per image (`nn::BatchPlan`).
+// The batched path is bit-identical to per-image forwards, so metrics are
+// unchanged by the knob.
 
 /// Accumulate metrics for one probability row — the single definition of
 /// the evaluation metric, shared by the sequential and parallel phases.
@@ -490,16 +493,17 @@ fn eval_seq(
     params: &[f32],
     data: &Dataset,
     limit: usize,
+    eval_batch: usize,
     timers: Option<&LayerTimes>,
 ) -> EvalMetrics {
     let n = limit.min(data.len());
     let mut m = EvalMetrics::default();
     if n == 0 {
-        // Empty validation/test split: `batch_plan(EVAL_BATCH.min(0))`
+        // Empty validation/test split: `batch_plan(eval_batch.min(0))`
         // would hit the zero-capacity rejection and panic mid-run.
         return m;
     }
-    let plan = net.batch_plan(EVAL_BATCH.min(n)).expect("non-zero eval batch");
+    let plan = net.batch_plan(eval_batch.min(n)).expect("non-zero eval batch");
     let mut scratch = plan.scratch();
     let classes = net.num_classes();
     let mut idx = 0;
@@ -525,16 +529,18 @@ fn merge_metrics(metrics: &Mutex<EvalMetrics>, local: &EvalMetrics) {
 }
 
 /// Parallel forward-only evaluation (validation/testing phases — each
-/// worker claims chunks of up to `EVAL_BATCH` images from the shared
-/// pool and forward-propagates them in one batched pass per chunk, so the
-/// shared store is read once per layer per chunk; results are cumulated,
-/// paper Fig 4b).
+/// worker claims chunks of up to `eval_batch` images
+/// ([`TrainConfig::eval_batch`]) from the shared pool and
+/// forward-propagates them in one batched pass per chunk, so the shared
+/// store is read once per layer per chunk; results are cumulated, paper
+/// Fig 4b).
 pub fn eval_parallel(
     net: &Network,
     store: &SharedParams,
     data: &Dataset,
     limit: usize,
     threads: usize,
+    eval_batch: usize,
     timers: &LayerTimes,
 ) -> EvalMetrics {
     let n = limit.min(data.len());
@@ -551,15 +557,15 @@ pub fn eval_parallel(
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| {
-                let plan = net.batch_plan(EVAL_BATCH).expect("non-zero eval batch");
+                let plan = net.batch_plan(eval_batch).expect("non-zero eval batch");
                 let mut scratch = plan.scratch();
                 let mut local = EvalMetrics::default();
-                let mut idxs: Vec<usize> = Vec::with_capacity(EVAL_BATCH);
+                let mut idxs: Vec<usize> = Vec::with_capacity(eval_batch);
                 loop {
                     // next_chunk claims a contiguous run in one atomic op,
                     // but staging stays per slot (and tallying per index)
                     // so the loop is agnostic to the claim shape.
-                    sampler.next_chunk(EVAL_BATCH, &mut idxs);
+                    sampler.next_chunk(eval_batch, &mut idxs);
                     if idxs.is_empty() {
                         break;
                     }
@@ -604,6 +610,7 @@ mod tests {
             eta_decay: 0.95,
             seed: 42,
             validation_fraction: 0.25,
+            eval_batch: 32,
         }
     }
 
@@ -766,7 +773,7 @@ mod tests {
     fn empty_eval_sets_evaluate_to_empty_stats() {
         // Regression: an empty validation split (validation_fraction 0) or
         // an empty test set used to panic mid-run in the batched eval
-        // phases (`batch_plan(EVAL_BATCH.min(0))` rejects zero capacity).
+        // phases (`batch_plan(eval_batch.min(0))` rejects zero capacity).
         let trn = tiny_data(40, 71);
         let empty = tiny_data(0, 72);
         // Sequential engine.
@@ -789,11 +796,11 @@ mod tests {
         // Direct phase-level checks.
         let net = Network::new(ArchSpec::tiny());
         let params = net.init_params(1);
-        assert_eq!(eval_seq(&net, &params, &empty, empty.len(), None).images, 0);
+        assert_eq!(eval_seq(&net, &params, &empty, empty.len(), 32, None).images, 0);
         let store = SharedParams::new(&params, &net.dims);
         let timers = LayerTimes::new();
-        assert_eq!(eval_parallel(&net, &store, &empty, empty.len(), 2, &timers).images, 0);
-        assert_eq!(eval_parallel(&net, &store, &trn, 0, 2, &timers).images, 0);
+        assert_eq!(eval_parallel(&net, &store, &empty, empty.len(), 2, 32, &timers).images, 0);
+        assert_eq!(eval_parallel(&net, &store, &trn, 0, 2, 32, &timers).images, 0);
     }
 
     #[test]
@@ -929,11 +936,11 @@ mod tests {
         let params = net.init_params(1);
         let store = SharedParams::new(&params, &net.dims);
         let timers = LayerTimes::new();
-        let m = eval_parallel(&net, &store, &data, data.len(), 4, &timers);
+        let m = eval_parallel(&net, &store, &data, data.len(), 4, 32, &timers);
         assert_eq!(m.images, 123);
         assert!(m.loss > 0.0);
         // limit smaller than the dataset
-        let m2 = eval_parallel(&net, &store, &data, 50, 4, &timers);
+        let m2 = eval_parallel(&net, &store, &data, 50, 4, 32, &timers);
         assert_eq!(m2.images, 50);
     }
 
@@ -944,8 +951,8 @@ mod tests {
         let params = net.init_params(2);
         let store = SharedParams::new(&params, &net.dims);
         let timers = LayerTimes::new();
-        let par = eval_parallel(&net, &store, &data, data.len(), 4, &timers);
-        let seq = eval_seq(&net, &params, &data, data.len(), None);
+        let par = eval_parallel(&net, &store, &data, data.len(), 4, 16, &timers);
+        let seq = eval_seq(&net, &params, &data, data.len(), 32, None);
         assert_eq!(par.errors, seq.errors, "same weights ⇒ same predictions");
         assert!((par.loss - seq.loss).abs() < 1e-3 * seq.loss.abs().max(1.0));
     }

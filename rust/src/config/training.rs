@@ -20,6 +20,12 @@ pub struct TrainConfig {
     /// validates on the full training set (Table 7's validation column has
     /// 60,000 images); 1.0 reproduces that.
     pub validation_fraction: f64,
+    /// Batch size of the evaluation phases (validation/test forward
+    /// passes) — how many images each worker pushes through a
+    /// [`crate::nn::BatchPlan`] at a time, amortizing the per-layer
+    /// parameter load. Must be ≥ 1; purely a throughput knob, results are
+    /// bit-identical across values.
+    pub eval_batch: usize,
 }
 
 impl Default for TrainConfig {
@@ -31,6 +37,7 @@ impl Default for TrainConfig {
             threads: 1,
             seed: 0xC4A0_5EED,
             validation_fraction: 1.0,
+            eval_batch: 32,
         }
     }
 }
@@ -69,6 +76,11 @@ impl TrainConfig {
         self
     }
 
+    pub fn with_eval_batch(mut self, eval_batch: usize) -> TrainConfig {
+        self.eval_batch = eval_batch;
+        self
+    }
+
     /// η at the given 0-based epoch: η₀ · decay^epoch.
     pub fn eta_at(&self, epoch: usize) -> f32 {
         (self.eta0 * self.eta_decay.powi(epoch as i32)) as f32
@@ -90,6 +102,9 @@ impl TrainConfig {
         if !(0.0..=1.0).contains(&self.validation_fraction) {
             anyhow::bail!("validation_fraction must be in [0, 1]");
         }
+        if self.eval_batch == 0 {
+            anyhow::bail!("eval_batch must be > 0");
+        }
         Ok(())
     }
 
@@ -101,6 +116,7 @@ impl TrainConfig {
             ("threads", Json::num(self.threads as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("validation_fraction", Json::num(self.validation_fraction)),
+            ("eval_batch", Json::num(self.eval_batch as f64)),
         ])
     }
 }
@@ -124,6 +140,7 @@ mod tests {
         assert!(TrainConfig { threads: 0, ..Default::default() }.validate().is_err());
         assert!(TrainConfig { eta0: -1.0, ..Default::default() }.validate().is_err());
         assert!(TrainConfig { eta_decay: 1.5, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { eval_batch: 0, ..Default::default() }.validate().is_err());
     }
 
     #[test]
@@ -133,20 +150,24 @@ mod tests {
             .with_threads(4)
             .with_eta(0.01, 0.8)
             .with_seed(7)
-            .with_validation_fraction(0.25);
+            .with_validation_fraction(0.25)
+            .with_eval_batch(16);
         assert_eq!(c.epochs, 5);
         assert_eq!(c.threads, 4);
         assert_eq!(c.eta0, 0.01);
         assert_eq!(c.eta_decay, 0.8);
         assert_eq!(c.seed, 7);
         assert_eq!(c.validation_fraction, 0.25);
+        assert_eq!(c.eval_batch, 16);
         c.validate().unwrap();
     }
 
     #[test]
     fn json_has_all_fields() {
         let j = TrainConfig::default().to_json();
-        for k in ["epochs", "eta0", "eta_decay", "threads", "seed", "validation_fraction"] {
+        for k in
+            ["epochs", "eta0", "eta_decay", "threads", "seed", "validation_fraction", "eval_batch"]
+        {
             assert!(j.get(k).is_some(), "missing {k}");
         }
     }

@@ -48,6 +48,7 @@ pub fn table1(scale: RealRunScale) -> anyhow::Result<Table> {
         eta_decay: 0.9,
         seed: 1,
         validation_fraction: 0.0,
+        eval_batch: 32,
     };
     let run = Trainer::new()
         .network(net)
@@ -310,6 +311,7 @@ pub fn parity_runs(
         eta_decay: 0.9,
         seed: 0xC4A05,
         validation_fraction: 0.25,
+        eval_batch: 32,
     };
     let baseline = Trainer::new()
         .network(net.clone())

@@ -99,6 +99,19 @@
 //! a deterministic interleaving harness replays cross-thread orderings
 //! under a seeded or scripted schedule.
 //!
+//! [`nn::audit`] extends the static side from parameter spans to the
+//! batched execution engine: a dataflow/aliasing verifier (shape chain
+//! coherent end-to-end, `BatchScratch` arenas exactly sized and
+//! non-overlapping, dropout PRNG streams distinct — run in debug builds
+//! at `Network::compile`), a kernel-dispatch classifier (every
+//! [`nn::LayerOp`] names its forward/backward kernel path; runtime-
+//! registered kinds inherit a conservative per-sample default), and a
+//! static per-op FLOPs/bytes cost model that [`perfmodel`] derives its
+//! operation ratios from (`PerfModel::for_network`). `chaos analyze
+//! --cost` prints the dispatch + roofline tables and exits nonzero on
+//! any dataflow defect; all analyze JSON reports carry a
+//! `schema` version field.
+//!
 //! Start with [`config::ArchSpec`] (the paper's Table 2 networks),
 //! [`chaos::Trainer`] (the parallel trainer), and [`harness`] (regenerates
 //! every table and figure of the paper's evaluation).

@@ -8,7 +8,8 @@
 //!   predict    analytic performance model (Listing 2)
 //!   simulate   Xeon Phi discrete-event simulator
 //!   serve      batched-inference serving demo (native engine or AOT artifacts)
-//!   analyze    static span verifier over compiled networks + policy contracts
+//!   analyze    static analysis over compiled networks (spans, dataflow,
+//!              kernel dispatch, cost model) + policy contracts
 //!   info       architecture/manifest inventory
 
 use chaos_phi::chaos::{self, policy};
@@ -31,6 +32,7 @@ USAGE: chaos <command> [flags]
             --strategy chaos|sequential|hogwild|delayed-rr|averaged[:n]|minibatch[:B]|hogwild-batch[:B]
             --epochs E --train-n N --test-n N --eta F --seed S --data-dir DIR
             --out FILE.json --weights-out FILE.ckpt
+            --eval-batch B   (evaluation batch size, default 32)
             --stop-at-test-error R   (early-stop once test error rate <= R)
             (--strategy also accepts any policy registered via chaos::policy;
              minibatch:B trains on B-sample chunks with averaged gradients)
@@ -41,11 +43,14 @@ USAGE: chaos <command> [flags]
   simulate  --arch A --threads 1,15,30,...
   serve     --arch tiny --requests N --clients C --engine native|pjrt --batch B
             --artifacts DIR --weights FILE.ckpt   (pjrt needs `make artifacts`)
-  analyze   [NAME|FILE.json ...] [--json]
-            (static span verification of each compiled network: in-bounds,
-             disjoint, exact cover, op/dims agreement; defaults to every
-             built-in arch and also prints each policy's sync contract;
-             exits nonzero if any defect is found)
+  analyze   [NAME|FILE.json ...] [--cost] [--json]
+            (static analysis of each compiled network: span verification —
+             in-bounds, disjoint, exact cover, op/dims agreement — plus the
+             dataflow/aliasing audit over the shape chain and batch arenas;
+             --cost adds the kernel-dispatch classifier and the static cost
+             model's per-layer FLOPs/bytes/intensity roofline tables;
+             defaults to every built-in arch and also prints each policy's
+             sync contract; exits nonzero if any defect is found)
   arch      validate FILE.json...   (parse + structurally validate + compile)
             show NAME [--out FILE.json]   (export a built-in arch as JSON)
             kinds   (list registered layer kinds)
@@ -98,6 +103,7 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
             "out",
             "weights-out",
             "validation-fraction",
+            "eval-batch",
             "stop-at-test-error",
         ],
     )?;
@@ -114,7 +120,9 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
         eta_decay: 0.9,
         seed: a.get_u64("seed", 0xC4A05)?,
         validation_fraction: a.get_f64("validation-fraction", 0.25)?,
+        eval_batch: a.get_usize("eval-batch", 32)?,
     };
+    cfg.validate()?;
     let train_n = a.get_usize("train-n", 2_000)?;
     let test_n = a.get_usize("test-n", 1_000)?;
     let data_dir = a.get_str("data-dir", "data/mnist");
@@ -364,13 +372,14 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
 
 fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
     use chaos_phi::chaos::analysis::verify_network;
+    use chaos_phi::nn::audit;
     use chaos_phi::util::json::Json;
 
     // Positional targets (arch names or .json files) come first, flags after
     // — same convention as `table`/`fig`.
     let split = raw.iter().position(|s| s.starts_with("--")).unwrap_or(raw.len());
     let (targets, flags) = raw.split_at(split);
-    let a = Args::parse(flags, &["json!"])?;
+    let a = Args::parse(flags, &["json!", "cost!"])?;
     let default_targets: Vec<String>;
     let targets: &[String] = if targets.is_empty() {
         default_targets = chaos_phi::config::PAPER_ARCHS
@@ -383,7 +392,12 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
         targets
     };
 
-    let mut reports = Vec::new();
+    // Batch size the cost model amortizes parameter loads over (the
+    // trainer's evaluation default).
+    const COST_BATCH: usize = 32;
+    let mut span_reports = Vec::new();
+    let mut flow_reports = Vec::new();
+    let mut cost_views = Vec::new();
     for t in targets {
         let arch = if t.ends_with(".json") {
             ArchSpec::from_file(t).map_err(|e| anyhow::anyhow!("{t}: {e:#}"))?
@@ -393,17 +407,36 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
             })?
         };
         // Note: debug builds also verify at compile and turn defects into a
-        // compile error; release builds reach verify_network below.
+        // compile error; release builds reach the verifiers below.
         let net = Network::compile(arch).map_err(|e| anyhow::anyhow!("{t}: compile: {e:#}"))?;
-        reports.push(verify_network(&net));
+        span_reports.push(verify_network(&net));
+        flow_reports.push(audit::audit_dataflow(&net));
+        if a.has("cost") {
+            cost_views.push((audit::audit_dispatch(&net), audit::audit_cost(&net, COST_BATCH)));
+        }
     }
-    let defects: usize = reports.iter().map(|r| r.defects.len()).sum();
+    let span_defects: usize = span_reports.iter().map(|r| r.defects.len()).sum();
+    let flow_defects: usize = flow_reports.iter().map(|r| r.defects.len()).sum();
 
     if a.has("json") {
-        println!("{}", Json::arr(reports.iter().map(|r| r.to_json()).collect()).pretty());
+        let mut items = Vec::new();
+        for (i, (s, f)) in span_reports.iter().zip(&flow_reports).enumerate() {
+            let mut fields = vec![("spans", s.to_json()), ("dataflow", f.to_json())];
+            if let Some((k, c)) = cost_views.get(i) {
+                fields.push(("kernels", k.to_json()));
+                fields.push(("cost", c.to_json()));
+            }
+            items.push(Json::obj(fields));
+        }
+        println!("{}", Json::arr(items).pretty());
     } else {
-        for r in &reports {
-            println!("{}", r.to_text());
+        for (i, (s, f)) in span_reports.iter().zip(&flow_reports).enumerate() {
+            println!("{}", s.to_text());
+            println!("{}", f.to_text());
+            if let Some((k, c)) = cost_views.get(i) {
+                println!("{}", k.to_text());
+                println!("{}", c.to_text());
+            }
         }
         println!("\nupdate-policy sync contracts:");
         let mut names = policy::names();
@@ -413,7 +446,8 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
             println!("  {name:16} {}", p.sync_contract().as_str());
         }
     }
-    anyhow::ensure!(defects == 0, "{defects} span defect(s) found");
+    anyhow::ensure!(span_defects == 0, "{span_defects} span defect(s) found");
+    anyhow::ensure!(flow_defects == 0, "{flow_defects} dataflow defect(s) found");
     Ok(())
 }
 

@@ -76,6 +76,17 @@ impl Act {
             Act::Identity => {}
         }
     }
+
+    /// Static FLOP estimate of applying this activation to one element,
+    /// for the `nn::audit` cost model (transcendentals counted as a
+    /// handful of flops, the usual roofline convention).
+    pub fn flops_per_elem(self) -> f64 {
+        match self {
+            Act::ScaledTanh => 8.0,
+            Act::Relu => 1.0,
+            Act::Identity => 0.0,
+        }
+    }
 }
 
 /// In-place numerically-stable softmax.

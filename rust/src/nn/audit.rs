@@ -1,0 +1,926 @@
+//! `nn::audit` — static analysis over compiled networks.
+//!
+//! Three layers, all pure functions over plain data so defective inputs
+//! can be hand-built in tests:
+//!
+//! 1. **Dataflow/aliasing verifier** ([`audit_dataflow`]): proves the
+//!    `in_shape`/`out_shape` chain coherent end-to-end (every op consumes
+//!    exactly what its upstream produces, and agrees with the compiler's
+//!    [`LayerDims`](super::dims::LayerDims) table), and that a
+//!    [`BatchScratch`](super::batch::BatchScratch)'s arenas are sized
+//!    exactly to their planes with no byte overlap between the ping-pong
+//!    delta planes, the live activation planes, and the staging buffers —
+//!    and that the per-layer dropout PRNG streams are pairwise distinct.
+//!    Debug builds run it at `Network::compile` right after the span
+//!    verifier; `chaos analyze` runs it from the CLI.
+//! 2. **Kernel-dispatch classifier** ([`audit_dispatch`]): every
+//!    [`LayerOp`](super::layer::LayerOp) names the kernel path its
+//!    forward/backward batch kernels compile to ([`KernelPath`], via
+//!    `LayerOp::dispatch` — conservative `PerSampleLoop` default for
+//!    runtime-registered kinds), and the [`KernelReport`] flags every op
+//!    off the vectorized fast paths: the exact work-list for the SIMD /
+//!    cache-blocking pass.
+//! 3. **Static cost model** ([`audit_cost`]): per-op FLOPs and bytes
+//!    moved under the weight-stationary execution model (parameter spans
+//!    are loaded **once per batch**, so their traffic amortizes over the
+//!    batch), with arithmetic intensity per op and whole-net roofline
+//!    totals. `perfmodel::LayerCosts::derived` consumes these instead of
+//!    the hand-fit Table-3 constants; `benches/layer_ops.rs` is the
+//!    measured cross-check.
+//!
+//! JSON views carry a `schema` version field (`chaos.analyze.*/v1`),
+//! matching the self-checked `BENCH_*.json` convention.
+
+use super::network::Network;
+use crate::util::Json;
+use std::fmt;
+
+/// Batch capacity used by the compile-time dataflow audit: 2 is the
+/// smallest capacity that exercises per-sample plane strides.
+pub const AUDIT_CAP: usize = 2;
+
+// ---------------------------------------------------------------------------
+// Defects
+// ---------------------------------------------------------------------------
+
+/// One dataflow/aliasing defect found by the verifier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DataflowDefect {
+    /// An op's input element count disagrees with its upstream op's
+    /// output element count.
+    BrokenChain { layer: usize, got: usize, expected: usize },
+    /// An op's own shape disagrees with the compiler's `LayerDims` row.
+    OpShapeMismatch { layer: usize, kind: String, side: &'static str, op: usize, dims: usize },
+    /// An expected arena is absent from the scratch layout.
+    ArenaMissing { name: String },
+    /// An arena is not sized exactly to its plane.
+    ArenaMisSized { name: String, expected: usize, got: usize },
+    /// Two live arenas overlap in memory (aliased planes).
+    ArenaOverlap { a: String, b: String },
+    /// Two per-layer PRNG streams coincide (dropout masks would repeat).
+    DuplicateRngStream { a: usize, b: usize, stream: u64 },
+}
+
+impl DataflowDefect {
+    /// Stable machine-readable class tag (mirrors `SpanDefect::class`).
+    pub fn class(&self) -> &'static str {
+        match self {
+            DataflowDefect::BrokenChain { .. } => "shape-chain",
+            DataflowDefect::OpShapeMismatch { .. } => "op-shape-mismatch",
+            DataflowDefect::ArenaMissing { .. } => "arena-missing",
+            DataflowDefect::ArenaMisSized { .. } => "arena-size",
+            DataflowDefect::ArenaOverlap { .. } => "arena-overlap",
+            DataflowDefect::DuplicateRngStream { .. } => "dup-rng-stream",
+        }
+    }
+}
+
+impl fmt::Display for DataflowDefect {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataflowDefect::BrokenChain { layer, got, expected } => write!(
+                f,
+                "layer {layer}: input length {got} does not match upstream output {expected}"
+            ),
+            DataflowDefect::OpShapeMismatch { layer, kind, side, op, dims } => write!(
+                f,
+                "layer {layer} ({kind}): op {side} length {op} disagrees with compiled dims {dims}"
+            ),
+            DataflowDefect::ArenaMissing { name } => {
+                write!(f, "arena '{name}' missing from the scratch layout")
+            }
+            DataflowDefect::ArenaMisSized { name, expected, got } => {
+                write!(f, "arena '{name}' holds {got} elements, plane needs exactly {expected}")
+            }
+            DataflowDefect::ArenaOverlap { a, b } => {
+                write!(f, "arenas '{a}' and '{b}' overlap in memory")
+            }
+            DataflowDefect::DuplicateRngStream { a, b, stream } => {
+                write!(f, "layers {a} and {b} share PRNG stream {stream}")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape-chain verification
+// ---------------------------------------------------------------------------
+
+/// One row of the shape chain: what the op itself declares vs. what the
+/// compiler's dims table recorded, as element counts (flattening between
+/// feature maps and fc vectors preserves the count, so counts are the
+/// invariant the chain can be checked on).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeRow {
+    pub layer: usize,
+    pub kind: String,
+    pub op_in: usize,
+    pub op_out: usize,
+    pub dims_in: usize,
+    pub dims_out: usize,
+}
+
+/// Extract the shape chain from a compiled network.
+pub fn shape_rows(net: &Network) -> Vec<ShapeRow> {
+    net.ops
+        .iter()
+        .zip(&net.dims)
+        .enumerate()
+        .map(|(layer, (op, d))| ShapeRow {
+            layer,
+            kind: op.kind().to_string(),
+            op_in: op.in_shape().len(),
+            op_out: op.out_shape().len(),
+            dims_in: d.in_len(),
+            dims_out: d.out_len(),
+        })
+        .collect()
+}
+
+/// Verify a shape chain: per-row op/dims agreement, and end-to-end
+/// coherence (each row consumes exactly what the previous row produced).
+pub fn verify_shape_rows(rows: &[ShapeRow]) -> Vec<DataflowDefect> {
+    let mut defects = Vec::new();
+    for row in rows {
+        if row.op_in != row.dims_in {
+            defects.push(DataflowDefect::OpShapeMismatch {
+                layer: row.layer,
+                kind: row.kind.clone(),
+                side: "in",
+                op: row.op_in,
+                dims: row.dims_in,
+            });
+        }
+        if row.op_out != row.dims_out {
+            defects.push(DataflowDefect::OpShapeMismatch {
+                layer: row.layer,
+                kind: row.kind.clone(),
+                side: "out",
+                op: row.op_out,
+                dims: row.dims_out,
+            });
+        }
+    }
+    for pair in rows.windows(2) {
+        let (up, down) = (&pair[0], &pair[1]);
+        if down.dims_in != up.dims_out {
+            defects.push(DataflowDefect::BrokenChain {
+                layer: down.layer,
+                got: down.dims_in,
+                expected: up.dims_out,
+            });
+        }
+    }
+    defects
+}
+
+// ---------------------------------------------------------------------------
+// Arena-layout verification
+// ---------------------------------------------------------------------------
+
+/// One arena of a `BatchScratch`, reduced to its memory extent:
+/// `addr` is the base byte address, `len` the element count (all arenas
+/// hold 4-byte elements — `f32` planes or `u32` aux words).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArenaExtent {
+    pub name: String,
+    pub addr: usize,
+    pub len: usize,
+}
+
+impl ArenaExtent {
+    /// Half-open byte range of this extent.
+    fn bytes(&self) -> (usize, usize) {
+        (self.addr, self.addr + 4 * self.len)
+    }
+}
+
+/// The full arena layout of one `BatchScratch` (see
+/// [`super::batch::BatchScratch::layout`]), plus the per-layer PRNG
+/// stream identifiers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArenaLayout {
+    pub cap: usize,
+    pub extents: Vec<ArenaExtent>,
+    pub rng_streams: Vec<u64>,
+}
+
+/// Verify an arena layout against the expected `(name, element count)`
+/// plane sizes: every expected arena present and sized exactly, no two
+/// non-empty arenas overlapping in memory, all PRNG streams distinct.
+pub fn verify_arena_layout(
+    layout: &ArenaLayout,
+    expected: &[(String, usize)],
+) -> Vec<DataflowDefect> {
+    let mut defects = Vec::new();
+    for (name, want) in expected {
+        match layout.extents.iter().find(|e| &e.name == name) {
+            None => defects.push(DataflowDefect::ArenaMissing { name: name.clone() }),
+            Some(e) if e.len != *want => defects.push(DataflowDefect::ArenaMisSized {
+                name: name.clone(),
+                expected: *want,
+                got: e.len,
+            }),
+            Some(_) => {}
+        }
+    }
+    for i in 0..layout.extents.len() {
+        for j in i + 1..layout.extents.len() {
+            let (a, b) = (&layout.extents[i], &layout.extents[j]);
+            if a.len == 0 || b.len == 0 {
+                // Empty arenas have dangling (possibly shared) base
+                // pointers and no live bytes — nothing to alias.
+                continue;
+            }
+            let ((a0, a1), (b0, b1)) = (a.bytes(), b.bytes());
+            if a0 < b1 && b0 < a1 {
+                defects.push(DataflowDefect::ArenaOverlap {
+                    a: a.name.clone(),
+                    b: b.name.clone(),
+                });
+            }
+        }
+    }
+    for i in 0..layout.rng_streams.len() {
+        for j in i + 1..layout.rng_streams.len() {
+            if layout.rng_streams[i] == layout.rng_streams[j] {
+                defects.push(DataflowDefect::DuplicateRngStream {
+                    a: i,
+                    b: j,
+                    stream: layout.rng_streams[i],
+                });
+            }
+        }
+    }
+    defects
+}
+
+/// The exact arena sizes a `BatchScratch` of capacity `cap` must expose
+/// for `net` once the backward arenas are materialized: per-layer
+/// activation planes, per-layer aux words, the param staging buffer and
+/// grad staging buffer (both max plane over the stack), and the two
+/// ping-pong delta planes (capacity × max activation plane).
+pub fn expected_extents(net: &Network, cap: usize) -> Vec<(String, usize)> {
+    let mut v = Vec::new();
+    for (l, d) in net.dims.iter().enumerate() {
+        v.push((format!("acts[{l}]"), cap * d.out_len()));
+    }
+    for (l, op) in net.ops.iter().enumerate() {
+        v.push((format!("aux[{l}]"), cap * op.aux_len()));
+    }
+    let max_params = net.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
+    let max_act = net.dims.iter().map(|d| d.out_len()).max().unwrap_or(0);
+    v.push(("param_buf".to_string(), max_params));
+    v.push(("delta_a".to_string(), cap * max_act));
+    v.push(("delta_b".to_string(), cap * max_act));
+    v.push(("grad_buf".to_string(), max_params));
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Dataflow report
+// ---------------------------------------------------------------------------
+
+/// Outcome of the dataflow/aliasing audit over one compiled network.
+#[derive(Debug, Clone)]
+pub struct DataflowReport {
+    pub arch: String,
+    pub layers: usize,
+    /// Batch capacity the arena layout was audited at.
+    pub cap: usize,
+    pub defects: Vec<DataflowDefect>,
+}
+
+impl DataflowReport {
+    pub fn is_clean(&self) -> bool {
+        self.defects.is_empty()
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut s = format!(
+            "{}: dataflow audit over {} layers (arena cap {}) — {}\n",
+            self.arch,
+            self.layers,
+            self.cap,
+            if self.is_clean() {
+                "clean".to_string()
+            } else {
+                format!("{} defect(s)", self.defects.len())
+            }
+        );
+        for d in &self.defects {
+            s.push_str(&format!("  [{}] {d}\n", d.class()));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("chaos.analyze.dataflow/v1")),
+            ("arch", Json::str(self.arch.clone())),
+            ("layers", Json::num(self.layers as f64)),
+            ("cap", Json::num(self.cap as f64)),
+            ("clean", Json::Bool(self.is_clean())),
+            (
+                "defects",
+                Json::arr(
+                    self.defects
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("class", Json::str(d.class())),
+                                ("detail", Json::str(d.to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run the full dataflow/aliasing audit over a compiled network: shape
+/// chain, arena layout of a real `BatchScratch` (backward arenas
+/// materialized), and PRNG stream distinctness.
+pub fn audit_dataflow(net: &Network) -> DataflowReport {
+    let rows = shape_rows(net);
+    let mut defects = verify_shape_rows(&rows);
+    let plan = net.batch_plan(AUDIT_CAP).expect("audit batch capacity is ≥ 1");
+    let mut scratch = plan.scratch_seeded(0);
+    scratch.ensure_backward_arenas(net);
+    let layout = scratch.layout();
+    defects.extend(verify_arena_layout(&layout, &expected_extents(net, AUDIT_CAP)));
+    DataflowReport { arch: net.arch.name.clone(), layers: net.ops.len(), cap: AUDIT_CAP, defects }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-dispatch classification
+// ---------------------------------------------------------------------------
+
+/// The kernel path a batched op compiles to. `fast()` paths keep the
+/// whole batch in one vectorizable kernel invocation; the rest are the
+/// SIMD/cache-blocking work-list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Stride-1, pad-0 conv kernels with the batch loop hoisted inside
+    /// the kernel-tap loop.
+    VectorizedPlain,
+    /// GEMM-shaped fc kernels: weights stationary while the batch streams.
+    WeightStationary,
+    /// One flat elementwise sweep over the whole `[batch][len]` block.
+    BlockElementwise,
+    /// Batched driver tiles the per-sample kernel sample-by-sample
+    /// (amortizes the param load only).
+    TiledPerSample,
+    /// General padded/strided fallback kernel — gather-heavy, off every
+    /// vectorized path.
+    GeneralFallback,
+    /// Trait-default loop over the per-sample kernel (sequential RNG
+    /// draws or an un-overridden custom kind).
+    PerSampleLoop,
+    /// Never executed (the input placeholder).
+    Inert,
+}
+
+impl KernelPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::VectorizedPlain => "vectorized-plain",
+            KernelPath::WeightStationary => "weight-stationary",
+            KernelPath::BlockElementwise => "block-elementwise",
+            KernelPath::TiledPerSample => "tiled-per-sample",
+            KernelPath::GeneralFallback => "general-fallback",
+            KernelPath::PerSampleLoop => "per-sample-loop",
+            KernelPath::Inert => "inert",
+        }
+    }
+
+    /// Whether this path is one of the vectorized fast paths.
+    pub fn fast(self) -> bool {
+        matches!(
+            self,
+            KernelPath::VectorizedPlain
+                | KernelPath::WeightStationary
+                | KernelPath::BlockElementwise
+                | KernelPath::Inert
+        )
+    }
+}
+
+impl fmt::Display for KernelPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The kernel paths one op's forward and backward batch kernels take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch {
+    pub forward: KernelPath,
+    pub backward: KernelPath,
+}
+
+impl Dispatch {
+    /// Same path both directions.
+    pub fn uniform(path: KernelPath) -> Dispatch {
+        Dispatch { forward: path, backward: path }
+    }
+
+    /// The conservative trait default: un-overridden batch kernels loop
+    /// the per-sample kernel.
+    pub fn per_sample() -> Dispatch {
+        Dispatch::uniform(KernelPath::PerSampleLoop)
+    }
+
+    /// The input placeholder: never driven.
+    pub fn inert() -> Dispatch {
+        Dispatch::uniform(KernelPath::Inert)
+    }
+
+    /// On the fast path in both directions.
+    pub fn fast(self) -> bool {
+        self.forward.fast() && self.backward.fast()
+    }
+}
+
+/// One layer's dispatch classification.
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    pub layer: usize,
+    pub kind: String,
+    pub dispatch: Dispatch,
+}
+
+/// Dispatch classification of every op in a compiled network.
+#[derive(Debug, Clone)]
+pub struct KernelReport {
+    pub arch: String,
+    pub rows: Vec<KernelRow>,
+}
+
+impl KernelReport {
+    /// The SIMD work-list: every op off a vectorized fast path.
+    pub fn off_fast_path(&self) -> Vec<&KernelRow> {
+        self.rows.iter().filter(|r| !r.dispatch.fast()).collect()
+    }
+
+    pub fn to_text(&self) -> String {
+        let off = self.off_fast_path().len();
+        let mut s = format!(
+            "{}: kernel dispatch — {} of {} op(s) off the vectorized fast path\n",
+            self.arch,
+            off,
+            self.rows.len()
+        );
+        s.push_str("  layer  kind      forward            backward\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "  {:>5}  {:<8}  {:<17}  {:<17}{}\n",
+                r.layer,
+                r.kind,
+                r.dispatch.forward.name(),
+                r.dispatch.backward.name(),
+                if r.dispatch.fast() { "" } else { "  !" }
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("chaos.analyze.kernel/v1")),
+            ("arch", Json::str(self.arch.clone())),
+            ("off_fast_path", Json::num(self.off_fast_path().len() as f64)),
+            (
+                "layers",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("layer", Json::num(r.layer as f64)),
+                                ("kind", Json::str(r.kind.clone())),
+                                ("forward", Json::str(r.dispatch.forward.name())),
+                                ("backward", Json::str(r.dispatch.backward.name())),
+                                ("fast", Json::Bool(r.dispatch.fast())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Classify every op's kernel dispatch (via `LayerOp::dispatch`, which
+/// runtime-registered kinds inherit conservatively).
+pub fn audit_dispatch(net: &Network) -> KernelReport {
+    let rows = net
+        .ops
+        .iter()
+        .enumerate()
+        .map(|(layer, op)| KernelRow {
+            layer,
+            kind: op.kind().to_string(),
+            dispatch: op.dispatch(),
+        })
+        .collect();
+    KernelReport { arch: net.arch.name.clone(), rows }
+}
+
+// ---------------------------------------------------------------------------
+// Static cost model
+// ---------------------------------------------------------------------------
+
+/// Per-sample static cost of one op under the weight-stationary execution
+/// model. FLOPs and activation bytes are per sample; `param_bytes` is the
+/// parameter span traffic charged **once per batch** (the whole point of
+/// the batched drivers), so byte totals amortize it by the batch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    pub fwd_flops: f64,
+    pub bwd_flops: f64,
+    /// 4 · parameter span length — loaded once per batch per direction.
+    pub param_bytes: f64,
+    /// Activation traffic of one forward sample (read input + write output).
+    pub fwd_act_bytes: f64,
+    /// Activation traffic of one backward sample (deltas both directions
+    /// plus the stored activations).
+    pub bwd_act_bytes: f64,
+}
+
+impl OpCost {
+    pub fn zero() -> OpCost {
+        OpCost {
+            fwd_flops: 0.0,
+            bwd_flops: 0.0,
+            param_bytes: 0.0,
+            fwd_act_bytes: 0.0,
+            bwd_act_bytes: 0.0,
+        }
+    }
+
+    /// The conservative trait default for kinds without a cost override:
+    /// one touch per input/output element forward, twice that backward,
+    /// the parameter span counted once per batch.
+    pub fn generic(in_len: usize, out_len: usize, param_len: usize) -> OpCost {
+        let touched = (in_len + out_len) as f64;
+        OpCost {
+            fwd_flops: touched,
+            bwd_flops: 2.0 * touched,
+            param_bytes: 4.0 * param_len as f64,
+            fwd_act_bytes: 4.0 * touched,
+            bwd_act_bytes: 8.0 * touched,
+        }
+    }
+
+    /// Forward bytes per sample at batch size `batch` (weight traffic
+    /// amortized over the batch).
+    pub fn fwd_bytes(&self, batch: usize) -> f64 {
+        self.fwd_act_bytes + self.param_bytes / batch as f64
+    }
+
+    /// Backward bytes per sample at batch size `batch`.
+    pub fn bwd_bytes(&self, batch: usize) -> f64 {
+        self.bwd_act_bytes + self.param_bytes / batch as f64
+    }
+
+    /// Forward arithmetic intensity (FLOPs per byte) at batch size `batch`.
+    pub fn fwd_intensity(&self, batch: usize) -> f64 {
+        intensity(self.fwd_flops, self.fwd_bytes(batch))
+    }
+
+    /// Backward arithmetic intensity at batch size `batch`.
+    pub fn bwd_intensity(&self, batch: usize) -> f64 {
+        intensity(self.bwd_flops, self.bwd_bytes(batch))
+    }
+}
+
+fn intensity(flops: f64, bytes: f64) -> f64 {
+    if bytes > 0.0 {
+        flops / bytes
+    } else {
+        0.0
+    }
+}
+
+/// One layer's static cost plus its dispatch classification — a row of
+/// the `chaos analyze --cost` table.
+#[derive(Debug, Clone)]
+pub struct CostRow {
+    pub layer: usize,
+    pub kind: String,
+    pub dispatch: Dispatch,
+    pub cost: OpCost,
+}
+
+/// The whole-net static cost model at one batch size.
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    pub arch: String,
+    pub batch: usize,
+    pub rows: Vec<CostRow>,
+}
+
+impl CostReport {
+    pub fn total_fwd_flops(&self) -> f64 {
+        self.rows.iter().map(|r| r.cost.fwd_flops).sum()
+    }
+
+    pub fn total_bwd_flops(&self) -> f64 {
+        self.rows.iter().map(|r| r.cost.bwd_flops).sum()
+    }
+
+    pub fn total_fwd_bytes(&self) -> f64 {
+        self.rows.iter().map(|r| r.cost.fwd_bytes(self.batch)).sum()
+    }
+
+    pub fn total_bwd_bytes(&self) -> f64 {
+        self.rows.iter().map(|r| r.cost.bwd_bytes(self.batch)).sum()
+    }
+
+    /// Whole-net forward arithmetic intensity.
+    pub fn fwd_intensity(&self) -> f64 {
+        intensity(self.total_fwd_flops(), self.total_fwd_bytes())
+    }
+
+    /// Whole-net backward arithmetic intensity.
+    pub fn bwd_intensity(&self) -> f64 {
+        intensity(self.total_bwd_flops(), self.total_bwd_bytes())
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut s = format!(
+            "{}: static cost model, per sample at batch {} (weights amortized per batch)\n",
+            self.arch, self.batch
+        );
+        s.push_str(
+            "  layer  kind      forward            backward           \
+             fwd flops   bwd flops   fwd bytes   fwd ai\n",
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "  {:>5}  {:<8}  {:<17}  {:<17}  {:>10.3e}  {:>10.3e}  {:>10.3e}  {:>7.2}{}\n",
+                r.layer,
+                r.kind,
+                r.dispatch.forward.name(),
+                r.dispatch.backward.name(),
+                r.cost.fwd_flops,
+                r.cost.bwd_flops,
+                r.cost.fwd_bytes(self.batch),
+                r.cost.fwd_intensity(self.batch),
+                if r.dispatch.fast() { "" } else { "  !" }
+            ));
+        }
+        s.push_str(&format!(
+            "  total  fwd {:.3e} flop / {:.3e} B (ai {:.2})   bwd {:.3e} flop / {:.3e} B (ai {:.2})\n",
+            self.total_fwd_flops(),
+            self.total_fwd_bytes(),
+            self.fwd_intensity(),
+            self.total_bwd_flops(),
+            self.total_bwd_bytes(),
+            self.bwd_intensity(),
+        ));
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("chaos.analyze.cost/v1")),
+            ("arch", Json::str(self.arch.clone())),
+            ("batch", Json::num(self.batch as f64)),
+            (
+                "layers",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("layer", Json::num(r.layer as f64)),
+                                ("kind", Json::str(r.kind.clone())),
+                                ("forward", Json::str(r.dispatch.forward.name())),
+                                ("backward", Json::str(r.dispatch.backward.name())),
+                                ("fast", Json::Bool(r.dispatch.fast())),
+                                ("fwd_flops", Json::num(r.cost.fwd_flops)),
+                                ("bwd_flops", Json::num(r.cost.bwd_flops)),
+                                ("param_bytes", Json::num(r.cost.param_bytes)),
+                                ("fwd_bytes", Json::num(r.cost.fwd_bytes(self.batch))),
+                                ("bwd_bytes", Json::num(r.cost.bwd_bytes(self.batch))),
+                                ("fwd_intensity", Json::num(r.cost.fwd_intensity(self.batch))),
+                                ("bwd_intensity", Json::num(r.cost.bwd_intensity(self.batch))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("fwd_flops", Json::num(self.total_fwd_flops())),
+                    ("bwd_flops", Json::num(self.total_bwd_flops())),
+                    ("fwd_bytes", Json::num(self.total_fwd_bytes())),
+                    ("bwd_bytes", Json::num(self.total_bwd_bytes())),
+                    ("fwd_intensity", Json::num(self.fwd_intensity())),
+                    ("bwd_intensity", Json::num(self.bwd_intensity())),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Build the static cost model for a compiled network at one batch size
+/// (via `LayerOp::cost`, which runtime-registered kinds inherit
+/// conservatively).
+pub fn audit_cost(net: &Network, batch: usize) -> CostReport {
+    assert!(batch >= 1, "cost model batch size must be ≥ 1");
+    let rows = net
+        .ops
+        .iter()
+        .enumerate()
+        .map(|(layer, op)| CostRow {
+            layer,
+            kind: op.kind().to_string(),
+            dispatch: op.dispatch(),
+            cost: op.cost(),
+        })
+        .collect();
+    CostReport { arch: net.arch.name.clone(), batch, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    fn row(layer: usize, inn: usize, out: usize) -> ShapeRow {
+        ShapeRow {
+            layer,
+            kind: "conv".to_string(),
+            op_in: inn,
+            op_out: out,
+            dims_in: inn,
+            dims_out: out,
+        }
+    }
+
+    #[test]
+    fn clean_shape_chain_has_no_defects() {
+        let rows = vec![row(0, 9, 9), row(1, 9, 4), row(2, 4, 10)];
+        assert!(verify_shape_rows(&rows).is_empty());
+    }
+
+    #[test]
+    fn broken_chain_and_op_mismatch_are_detected() {
+        // Layer 2 consumes 5 elements where layer 1 produced 4.
+        let rows = vec![row(0, 9, 9), row(1, 9, 4), row(2, 5, 10)];
+        let classes: Vec<_> = verify_shape_rows(&rows).iter().map(|d| d.class()).collect();
+        assert!(classes.contains(&"shape-chain"), "{classes:?}");
+
+        // Op disagrees with the compiled dims table.
+        let mut bad = row(1, 9, 4);
+        bad.op_out = 7;
+        let defects = verify_shape_rows(&[row(0, 9, 9), bad]);
+        assert!(
+            defects.iter().any(|d| matches!(
+                d,
+                DataflowDefect::OpShapeMismatch { side: "out", op: 7, dims: 4, .. }
+            )),
+            "{defects:?}"
+        );
+    }
+
+    fn extent(name: &str, addr: usize, len: usize) -> ArenaExtent {
+        ArenaExtent { name: name.to_string(), addr, len }
+    }
+
+    #[test]
+    fn arena_layout_defects_are_detected() {
+        let expected =
+            vec![("delta_a".to_string(), 8), ("delta_b".to_string(), 8), ("acts[0]".to_string(), 4)];
+        // Clean: disjoint byte ranges, exact sizes, distinct streams.
+        let clean = ArenaLayout {
+            cap: 2,
+            extents: vec![
+                extent("delta_a", 0, 8),
+                extent("delta_b", 64, 8),
+                extent("acts[0]", 128, 4),
+            ],
+            rng_streams: vec![0, 1, 2],
+        };
+        assert!(verify_arena_layout(&clean, &expected).is_empty());
+
+        // Aliased ping-pong delta planes: delta_b starts inside delta_a.
+        let aliased = ArenaLayout {
+            cap: 2,
+            extents: vec![
+                extent("delta_a", 0, 8),
+                extent("delta_b", 16, 8),
+                extent("acts[0]", 128, 4),
+            ],
+            rng_streams: vec![0, 1, 2],
+        };
+        let classes: Vec<_> =
+            verify_arena_layout(&aliased, &expected).iter().map(|d| d.class()).collect();
+        assert_eq!(classes, vec!["arena-overlap"]);
+
+        // Missing + mis-sized arenas.
+        let short = ArenaLayout {
+            cap: 2,
+            extents: vec![extent("delta_a", 0, 6), extent("delta_b", 64, 8)],
+            rng_streams: vec![0, 1],
+        };
+        let classes: Vec<_> =
+            verify_arena_layout(&short, &expected).iter().map(|d| d.class()).collect();
+        assert!(classes.contains(&"arena-size"), "{classes:?}");
+        assert!(classes.contains(&"arena-missing"), "{classes:?}");
+
+        // Duplicate PRNG streams.
+        let dup = ArenaLayout {
+            cap: 2,
+            extents: vec![
+                extent("delta_a", 0, 8),
+                extent("delta_b", 64, 8),
+                extent("acts[0]", 128, 4),
+            ],
+            rng_streams: vec![3, 5, 3],
+        };
+        let defects = verify_arena_layout(&dup, &expected);
+        assert!(
+            defects
+                .iter()
+                .any(|d| matches!(d, DataflowDefect::DuplicateRngStream { a: 0, b: 2, stream: 3 })),
+            "{defects:?}"
+        );
+    }
+
+    #[test]
+    fn empty_extents_never_alias() {
+        // Two zero-length arenas sharing a dangling base pointer are fine.
+        let layout = ArenaLayout {
+            cap: 1,
+            extents: vec![extent("aux[1]", 4, 0), extent("aux[2]", 4, 0)],
+            rng_streams: vec![],
+        };
+        assert!(verify_arena_layout(&layout, &[]).is_empty());
+    }
+
+    #[test]
+    fn fast_path_classification() {
+        assert!(KernelPath::VectorizedPlain.fast());
+        assert!(KernelPath::WeightStationary.fast());
+        assert!(KernelPath::BlockElementwise.fast());
+        assert!(KernelPath::Inert.fast());
+        assert!(!KernelPath::TiledPerSample.fast());
+        assert!(!KernelPath::GeneralFallback.fast());
+        assert!(!KernelPath::PerSampleLoop.fast());
+        let d = Dispatch { forward: KernelPath::PerSampleLoop, backward: KernelPath::BlockElementwise };
+        assert!(!d.fast(), "one slow direction keeps the op on the work-list");
+        assert!(Dispatch::uniform(KernelPath::WeightStationary).fast());
+    }
+
+    #[test]
+    fn op_cost_amortizes_weights_over_the_batch() {
+        let c = OpCost {
+            fwd_flops: 100.0,
+            bwd_flops: 200.0,
+            param_bytes: 400.0,
+            fwd_act_bytes: 40.0,
+            bwd_act_bytes: 80.0,
+        };
+        assert_eq!(c.fwd_bytes(1), 440.0);
+        assert_eq!(c.fwd_bytes(10), 80.0);
+        assert!(c.fwd_intensity(10) > c.fwd_intensity(1), "batching raises intensity");
+        assert_eq!(OpCost::zero().fwd_intensity(4), 0.0, "zero bytes must not divide by zero");
+    }
+
+    #[test]
+    fn tiny_network_audits_clean() {
+        let net = Network::new(ArchSpec::tiny());
+        let report = audit_dataflow(&net);
+        assert!(report.is_clean(), "{}", report.to_text());
+        assert_eq!(report.layers, net.ops.len());
+        // JSON carries the schema tag and round-trips.
+        let json = Json::parse(&report.to_json().pretty()).unwrap();
+        assert_eq!(
+            json.get("schema").and_then(Json::as_str),
+            Some("chaos.analyze.dataflow/v1")
+        );
+        assert_eq!(json.get("clean").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn tiny_cost_report_is_positive_and_tagged() {
+        let net = Network::new(ArchSpec::tiny());
+        let cost = audit_cost(&net, 32);
+        assert!(cost.total_fwd_flops() > 0.0);
+        assert!(
+            cost.total_bwd_flops() > cost.total_fwd_flops(),
+            "backward does strictly more arithmetic than forward"
+        );
+        let json = Json::parse(&cost.to_json().pretty()).unwrap();
+        assert_eq!(json.get("schema").and_then(Json::as_str), Some("chaos.analyze.cost/v1"));
+        let kernel = audit_dispatch(&net);
+        let kjson = Json::parse(&kernel.to_json().pretty()).unwrap();
+        assert_eq!(kjson.get("schema").and_then(Json::as_str), Some("chaos.analyze.kernel/v1"));
+    }
+}

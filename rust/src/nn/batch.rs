@@ -287,8 +287,10 @@ impl BatchScratch {
     }
 
     /// Allocate the backward arenas on first use (forward-only consumers
-    /// never reach this).
-    fn ensure_backward_arenas(&mut self, net: &Network) {
+    /// never reach this). Public so the dataflow auditor
+    /// ([`crate::nn::audit`]) — and out-of-crate audit harnesses — can
+    /// materialize and then verify them; idempotent once sized.
+    pub fn ensure_backward_arenas(&mut self, net: &Network) {
         let max_act = net.dims.iter().map(|d| d.out_len()).max().unwrap_or(0);
         let need = self.cap * max_act;
         if self.delta_a.len() < need {
@@ -298,6 +300,45 @@ impl BatchScratch {
         let max_params = net.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
         if self.grad_buf.len() < max_params {
             self.grad_buf = AlignedBuf::zeroed(max_params);
+        }
+    }
+
+    /// Reduce the arenas to their memory extents plus the per-op PRNG
+    /// stream identifiers — the plain-data view the dataflow/aliasing
+    /// verifier ([`crate::nn::audit::verify_arena_layout`]) reasons about.
+    pub fn layout(&self) -> crate::nn::audit::ArenaLayout {
+        use crate::nn::audit::{ArenaExtent, ArenaLayout};
+        let mut extents = Vec::new();
+        for (l, a) in self.acts.iter().enumerate() {
+            extents.push(ArenaExtent {
+                name: format!("acts[{l}]"),
+                addr: a.as_ptr() as usize,
+                len: a.len(),
+            });
+        }
+        for (l, a) in self.aux.iter().enumerate() {
+            extents.push(ArenaExtent {
+                name: format!("aux[{l}]"),
+                addr: a.as_ptr() as usize,
+                len: a.len(),
+            });
+        }
+        for (name, buf) in [
+            ("param_buf", &self.param_buf),
+            ("delta_a", &self.delta_a),
+            ("delta_b", &self.delta_b),
+            ("grad_buf", &self.grad_buf),
+        ] {
+            extents.push(ArenaExtent {
+                name: name.to_string(),
+                addr: buf.as_ptr() as usize,
+                len: buf.len(),
+            });
+        }
+        ArenaLayout {
+            cap: self.cap,
+            extents,
+            rng_streams: self.rngs.iter().map(|r| r.stream()).collect(),
         }
     }
 
@@ -385,6 +426,33 @@ mod tests {
         });
         assert_eq!(order, vec![6, 5, 3, 1], "back-to-front over parameterized layers");
         assert_eq!(batched, acc, "batch-summed gradients must match per-sample bits");
+    }
+
+    #[test]
+    fn arena_layout_matches_expected_extents() {
+        // Miri-sized (fc-only micro arch, batch 2): the arena layout the
+        // aliasing verifier reasons about must describe real, disjoint,
+        // exactly-sized planes once the backward arenas materialize.
+        let arch = ArchSpec {
+            name: "micro".into(),
+            layers: vec![
+                crate::config::LayerSpec::Input { side: 4 },
+                crate::config::LayerSpec::fc(3),
+                crate::config::LayerSpec::Output { classes: 2 },
+            ],
+            paper_epochs: 1,
+        };
+        let net = Network::new(arch);
+        let plan = BatchPlan::new(&net, 2).unwrap();
+        let mut scratch = plan.scratch_seeded(7);
+        scratch.ensure_backward_arenas(&net);
+        let layout = scratch.layout();
+        assert_eq!(layout.cap, 2);
+        let expected = crate::nn::audit::expected_extents(&net, 2);
+        let defects = crate::nn::audit::verify_arena_layout(&layout, &expected);
+        assert!(defects.is_empty(), "{defects:?}");
+        // Per-op PRNG streams are the layer indices — pairwise distinct.
+        assert_eq!(layout.rng_streams, vec![0, 1, 2]);
     }
 
     #[test]

@@ -405,6 +405,13 @@ impl ConvGeom {
     pub fn weight_len(&self) -> usize {
         self.out_maps * self.in_maps * self.kernel * self.kernel
     }
+
+    /// Multiply-accumulates of one forward sample: every output element
+    /// reads a full `in_maps · k²` receptive column (padding contributes
+    /// zeros but still occupies a tap in the general kernel).
+    pub fn macs(&self) -> usize {
+        self.out_len() * self.in_maps * self.kernel * self.kernel
+    }
 }
 
 /// General forward convolution (zero padding, arbitrary stride), producing

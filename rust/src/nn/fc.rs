@@ -21,6 +21,11 @@ impl FcShape {
     pub fn weight_len(&self) -> usize {
         self.inputs * self.outputs
     }
+
+    /// Multiply-accumulates of one forward sample (one per weight).
+    pub fn macs(&self) -> usize {
+        self.inputs * self.outputs
+    }
 }
 
 /// Forward: `out[n] = b[n] + Σ_i w[n][i]·in[i]` (pre-activations).

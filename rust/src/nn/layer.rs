@@ -30,6 +30,7 @@
 //! already the pre-activation `p − onehot` because softmax and
 //! cross-entropy fuse in the loss.
 
+use super::audit::{Dispatch, KernelPath, OpCost};
 use super::conv::{conv_backward, conv_backward_general, conv_forward, conv_forward_general, ConvGeom};
 use super::dims::LayerDims;
 use super::fc::{fc_backward, fc_forward, FcShape};
@@ -257,6 +258,30 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
                 &mut per,
             );
         }
+    }
+
+    /// Which kernel path each pass of this op compiles to, for the static
+    /// dispatch classifier ([`crate::nn::audit::audit_dispatch`]). The
+    /// conservative default says "per-sample loop" — the slowest truthful
+    /// answer for an op that has not overridden the batched kernels — so
+    /// runtime-registered kinds show up on the audit work-list rather than
+    /// silently passing as fast.
+    fn dispatch(&self) -> Dispatch {
+        Dispatch::per_sample()
+    }
+
+    /// Static per-sample cost estimate (FLOPs and bytes moved) for the
+    /// analytic model ([`crate::nn::audit::audit_cost`]). The conservative
+    /// default charges one flop per touched element forward, two backward,
+    /// and counts every activation and parameter byte — an upper-ish bound
+    /// that keeps unregistered kinds visible in the roofline table. Built-in
+    /// ops override this with exact kernel arithmetic.
+    fn cost(&self) -> OpCost {
+        OpCost::generic(
+            self.in_shape().len(),
+            self.out_shape().len(),
+            self.param_range().len(),
+        )
     }
 }
 
@@ -503,6 +528,14 @@ impl LayerOp for InputOp {
     ) {
         unreachable!("input layer is never backpropagated");
     }
+
+    fn dispatch(&self) -> Dispatch {
+        Dispatch::inert()
+    }
+
+    fn cost(&self) -> OpCost {
+        OpCost::zero()
+    }
 }
 
 // ----- conv ------------------------------------------------------------------
@@ -725,6 +758,34 @@ impl LayerOp for ConvOp {
             }
         }
     }
+
+    fn dispatch(&self) -> Dispatch {
+        if self.geom.is_plain() {
+            // Plain geometry takes the vectorized weight-stationary batch
+            // kernels (conv_forward_batch / conv_backward_batch).
+            Dispatch::uniform(KernelPath::VectorizedPlain)
+        } else {
+            // Padded/strided geometry tiles the gather-heavy general kernel
+            // per sample — flagged as the SIMD work-list entry.
+            Dispatch::uniform(KernelPath::GeneralFallback)
+        }
+    }
+
+    fn cost(&self) -> OpCost {
+        let macs = self.geom.macs() as f64;
+        let out = self.geom.out_len() as f64;
+        let touched = (self.geom.in_len() + self.geom.out_len()) as f64;
+        OpCost {
+            // 2 flops per MAC, plus bias add and activation per output.
+            fwd_flops: 2.0 * macs + out * (1.0 + self.act.flops_per_elem()),
+            // Backward runs the MAC volume twice (input deltas + weight
+            // grads), plus the delta pre-activation scaling.
+            bwd_flops: 4.0 * macs + out * (1.0 + self.act.flops_per_elem()),
+            param_bytes: 4.0 * self.params.len() as f64,
+            fwd_act_bytes: 4.0 * touched,
+            bwd_act_bytes: 8.0 * touched,
+        }
+    }
 }
 
 // ----- max pool --------------------------------------------------------------
@@ -875,6 +936,25 @@ impl LayerOp for MaxPoolOp {
         }
         super::pool::pool_backward_batch(&self.shape, deltas_out, scratch.aux, deltas_in, batch);
     }
+
+    fn dispatch(&self) -> Dispatch {
+        // Batch kernels tile the per-sample window sweep (parameter-free,
+        // so there is no weight-stationarity to exploit).
+        Dispatch::uniform(KernelPath::TiledPerSample)
+    }
+
+    fn cost(&self) -> OpCost {
+        let touched = (self.shape.in_len() + self.shape.out_len()) as f64;
+        OpCost {
+            // One compare per window tap forward; backward scatters one
+            // add per output through the argmax switch.
+            fwd_flops: self.shape.window_ops() as f64,
+            bwd_flops: self.shape.out_len() as f64,
+            param_bytes: 0.0,
+            fwd_act_bytes: 4.0 * touched,
+            bwd_act_bytes: 8.0 * touched,
+        }
+    }
 }
 
 // ----- avg pool --------------------------------------------------------------
@@ -992,6 +1072,23 @@ impl LayerOp for AvgPoolOp {
             return;
         }
         super::pool::avg_pool_backward_batch(&self.shape, deltas_out, deltas_in, batch);
+    }
+
+    fn dispatch(&self) -> Dispatch {
+        Dispatch::uniform(KernelPath::TiledPerSample)
+    }
+
+    fn cost(&self) -> OpCost {
+        let touched = (self.shape.in_len() + self.shape.out_len()) as f64;
+        OpCost {
+            // One add per window tap plus the 1/k² scale per output;
+            // backward fans the scaled delta back over each window.
+            fwd_flops: (self.shape.window_ops() + self.shape.out_len()) as f64,
+            bwd_flops: self.shape.in_len() as f64,
+            param_bytes: 0.0,
+            fwd_act_bytes: 4.0 * touched,
+            bwd_act_bytes: 8.0 * touched,
+        }
     }
 }
 
@@ -1233,6 +1330,29 @@ impl LayerOp for FcOp {
             batch,
         );
     }
+
+    fn dispatch(&self) -> Dispatch {
+        // Both passes run the weight-stationary batched GEMV kernels
+        // (params loaded once per batch, samples streamed through).
+        Dispatch::uniform(KernelPath::WeightStationary)
+    }
+
+    fn cost(&self) -> OpCost {
+        let macs = self.shape.macs() as f64;
+        let out = self.shape.outputs as f64;
+        let touched = (self.shape.inputs + self.shape.outputs) as f64;
+        // Softmax costs a handful of flops per class (exp, subtract-max,
+        // normalize); hidden fc pays bias + activation per output.
+        let per_out =
+            if self.output_softmax { 5.0 } else { 1.0 + self.act.flops_per_elem() };
+        OpCost {
+            fwd_flops: 2.0 * macs + out * per_out,
+            bwd_flops: 4.0 * macs + out * per_out,
+            param_bytes: 4.0 * self.params.len() as f64,
+            fwd_act_bytes: 4.0 * touched,
+            bwd_act_bytes: 8.0 * touched,
+        }
+    }
 }
 
 // ----- dropout ---------------------------------------------------------------
@@ -1405,6 +1525,30 @@ impl LayerOp for DropoutOp {
             deltas_in.iter_mut().zip(deltas_out.iter()).zip(scratch.aux.iter())
         {
             *di = if m != 0 { d * self.keep_scale } else { 0.0 };
+        }
+    }
+
+    fn dispatch(&self) -> Dispatch {
+        Dispatch {
+            // Forward draws masks sample-by-sample from the worker PRNG
+            // (bit-parity with successive per-sample calls forces the
+            // loop); backward replays the stored masks in one flat sweep.
+            forward: KernelPath::PerSampleLoop,
+            backward: KernelPath::BlockElementwise,
+        }
+    }
+
+    fn cost(&self) -> OpCost {
+        let n = self.shape.len() as f64;
+        OpCost {
+            // Forward: one uniform draw + one scale per element; backward:
+            // one masked scale per element.
+            fwd_flops: 2.0 * n,
+            bwd_flops: n,
+            param_bytes: 0.0,
+            // Forward also writes the u32 mask plane.
+            fwd_act_bytes: 8.0 * n,
+            bwd_act_bytes: 16.0 * n,
         }
     }
 }

@@ -10,6 +10,7 @@
 //! parameter loads across `[B][len]` activation arenas.
 
 pub mod activation;
+pub mod audit;
 pub mod batch;
 pub mod conv;
 pub mod dims;
@@ -20,6 +21,10 @@ pub mod network;
 pub mod pool;
 pub mod simd;
 
+pub use audit::{
+    audit_cost, audit_dataflow, audit_dispatch, ArenaExtent, ArenaLayout, CostReport,
+    DataflowDefect, DataflowReport, Dispatch, KernelPath, KernelReport, OpCost,
+};
 pub use batch::{BatchPlan, BatchScratch};
 pub use dims::{compute_dims, total_params, LayerDims};
 pub use layer::{Acts, BatchActs, LayerCtx, LayerKind, LayerOp, OpScratch, Shape};

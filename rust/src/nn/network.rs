@@ -82,6 +82,16 @@ impl Network {
                 net.arch.name,
                 report.to_text()
             );
+            // Second static pass: prove the shape chain coherent and the
+            // batch arenas exactly-sized, non-overlapping, and on distinct
+            // PRNG streams (see [`super::audit`]).
+            let flow = super::audit::audit_dataflow(&net);
+            anyhow::ensure!(
+                flow.is_clean(),
+                "dataflow audit rejected '{}': {}",
+                net.arch.name,
+                flow.to_text()
+            );
         }
         Ok(net)
     }

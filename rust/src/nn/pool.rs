@@ -28,6 +28,12 @@ impl PoolShape {
     pub fn out_len(&self) -> usize {
         self.maps * self.out_side * self.out_side
     }
+
+    /// Window element reads of one forward sample: every output element
+    /// scans its full k² window (windows tile the input exactly).
+    pub fn window_ops(&self) -> usize {
+        self.out_len() * self.kernel * self.kernel
+    }
 }
 
 /// Forward max-pool. `switches[o]` receives the flat input index of the

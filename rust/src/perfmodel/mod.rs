@@ -2,6 +2,29 @@
 //! and its constants. Regenerates Figs 11–13 and Tables 8/9, and predicts
 //! execution times for thread counts beyond the 7120P's 244 hardware
 //! threads.
+//!
+//! # Derived vs. measured parameters
+//!
+//! The model's parameters come in two flavours:
+//!
+//! - **Measured** — Table-3 constants fit by the paper's authors against
+//!   the 7120P (per-image FProp/BProp operation counts and millisecond
+//!   timings, the `OperationFactor` calibration, the Table-4 memory
+//!   contention fits). [`PerfModel::for_arch`] uses these verbatim.
+//! - **Derived** — per-op FLOP/byte counts computed statically from the
+//!   compiled kernels by the cost model in [`crate::nn::audit`]
+//!   ([`LayerCosts::derived`], [`derived_ops`]). No fitting involved: they
+//!   fall out of the kernel arithmetic, and `chaos analyze --cost` prints
+//!   the per-layer breakdown. [`PerfModel::for_network`] swaps the
+//!   hand-fit backward count for the derived backward/forward ratio while
+//!   keeping the measured forward anchor.
+//!
+//! The derived side is cross-checkable against measurements: the
+//! `layer_ops` bench and the harness's `BENCH_train.json` /
+//! `BENCH_eval.json` outputs record measured per-phase times, so a derived
+//! per-layer cost share that disagrees badly with the measured per-layer
+//! timer shares (`chaos train`'s layer table) indicates a cost-model bug —
+//! the static table is the prediction, the bench JSON is the experiment.
 
 mod contention;
 mod model;
@@ -12,6 +35,7 @@ pub use contention::{
 };
 pub use model::{Breakdown, PerfModel, Scenario};
 pub use params::{
-    arch_constants, cpi, cpi_for_threads_per_core, threads_per_core, ArchConstants, LayerCosts,
-    CLOCK_HZ, CORE_I5_SPEED_VS_PHI1T, OPERATION_FACTOR, PHI_CORES, XEON_E5_SPEED_VS_PHI1T,
+    arch_constants, cpi, cpi_for_threads_per_core, derived_ops, threads_per_core, ArchConstants,
+    LayerCosts, CLOCK_HZ, CORE_I5_SPEED_VS_PHI1T, OPERATION_FACTOR, PHI_CORES,
+    XEON_E5_SPEED_VS_PHI1T,
 };

@@ -70,6 +70,21 @@ impl PerfModel {
         Ok(PerfModel { arch: arch.to_string(), consts, contention })
     }
 
+    /// Like [`PerfModel::for_arch`], but with the backward operation count
+    /// derived from the static cost model ([`crate::nn::audit`]) instead of
+    /// the hand-fit Table-3 value — see
+    /// [`ArchConstants::with_derived_ops`]. The forward count and the
+    /// contention fit remain the measured anchors.
+    pub fn for_network(net: &crate::nn::Network) -> anyhow::Result<PerfModel> {
+        let name = net.arch.name.as_str();
+        let consts = arch_constants(name)
+            .ok_or_else(|| anyhow::anyhow!("no Table-3 constants for arch '{name}'"))?
+            .with_derived_ops(net);
+        let contention = ContentionModel::for_arch(name)
+            .ok_or_else(|| anyhow::anyhow!("no Table-4 contention for arch '{name}'"))?;
+        Ok(PerfModel { arch: name.to_string(), consts, contention })
+    }
+
     /// Listing-2 prediction with per-term breakdown.
     pub fn predict_breakdown(&self, sc: &Scenario) -> Breakdown {
         let p = sc.threads.max(1) as f64;
@@ -213,5 +228,23 @@ mod tests {
     #[test]
     fn unknown_arch_rejected() {
         assert!(PerfModel::for_arch("tiny").is_err());
+    }
+
+    #[test]
+    fn derived_model_is_structurally_sane() {
+        // The derived-constants variant must stay a well-formed model:
+        // finite positive predictions, training dominating validation (its
+        // backward/forward ratio is > 1 by kernel arithmetic), and the
+        // same measured anchors as the Table-3 model.
+        let net = crate::nn::Network::from_name("small").unwrap();
+        let m = PerfModel::for_network(&net).unwrap();
+        let sc = Scenario::paper_default("small", 240);
+        let b = m.predict_breakdown(&sc);
+        assert!(b.total().is_finite() && b.total() > 0.0);
+        assert!(b.training > b.validation);
+        let table3 = PerfModel::for_arch("small").unwrap();
+        assert_eq!(m.measured_phi_1t_secs(&sc), table3.measured_phi_1t_secs(&sc));
+        // Non-paper archs have no measured anchors to derive around.
+        assert!(PerfModel::for_network(&crate::nn::Network::from_name("tiny").unwrap()).is_err());
     }
 }

@@ -7,7 +7,7 @@
 //! counts the authors derived for FProp/BProp/Prep.
 
 use crate::config::{ArchSpec, LayerSpec};
-use crate::nn::compute_dims;
+use crate::nn::{compute_dims, Network};
 
 /// Xeon Phi core count (7120P).
 pub const PHI_CORES: usize = 61;
@@ -102,6 +102,34 @@ pub fn arch_constants(arch: &str) -> Option<ArchConstants> {
     }
 }
 
+/// Total (forward, backward) FLOPs per image derived from the static cost
+/// model ([`crate::nn::audit`]): the sum of every compiled op's
+/// [`crate::nn::LayerOp::cost`]. Unlike the Table-3 counts these are not
+/// hand-fit — they fall out of the kernel arithmetic, and `chaos analyze
+/// --cost` prints the per-layer breakdown they sum over.
+pub fn derived_ops(net: &Network) -> (f64, f64) {
+    net.ops.iter().map(|op| op.cost()).fold((0.0, 0.0), |(f, b), c| {
+        (f + c.fwd_flops, b + c.bwd_flops)
+    })
+}
+
+impl ArchConstants {
+    /// Replace the hand-fit BProp operation count with a statically
+    /// *derived* one: keep the forward count as the single measured-scale
+    /// anchor and set `bprop_ops = fprop_ops · (derived bwd / derived fwd)`.
+    /// The backward cost then comes out of the cost model's kernel
+    /// arithmetic instead of Table 3, so the analytic model consumes
+    /// derived relative costs — cross-check the absolute scale against
+    /// `BENCH_train.json` / `BENCH_eval.json`.
+    pub fn with_derived_ops(self, net: &Network) -> ArchConstants {
+        let (f, b) = derived_ops(net);
+        if f <= 0.0 {
+            return self;
+        }
+        ArchConstants { bprop_ops: self.fprop_ops * (b / f), ..self }
+    }
+}
+
 /// Per-layer cost weights (MAC-style operation counts) computed from the
 /// architecture geometry. The analytic model uses the paper's aggregate
 /// constants; the simulator distributes them over layers proportionally to
@@ -113,6 +141,18 @@ pub struct LayerCosts {
 }
 
 impl LayerCosts {
+    /// Per-layer (forward, backward) FLOPs from the static cost model —
+    /// every compiled op's [`crate::nn::LayerOp::cost`], including
+    /// runtime-registered kinds (which answer through the conservative
+    /// trait default). Prefer this over [`LayerCosts::of`] when a compiled
+    /// [`Network`] is at hand: the spec-level MAC proxy below cannot see
+    /// op-level detail like activation arithmetic or custom kernels.
+    pub fn derived(net: &Network) -> LayerCosts {
+        let per_layer =
+            net.ops.iter().map(|op| { let c = op.cost(); (c.fwd_flops, c.bwd_flops) }).collect();
+        LayerCosts { per_layer }
+    }
+
     pub fn of(arch: &ArchSpec) -> LayerCosts {
         let dims = compute_dims(arch);
         let per_layer = dims
@@ -222,6 +262,43 @@ mod tests {
             let frac = conv_b / costs.total_backward();
             assert!(frac > 0.85, "{name}: conv backward fraction {frac}");
         }
+    }
+
+    #[test]
+    fn derived_costs_are_structural() {
+        for name in crate::config::PAPER_ARCHS {
+            let net = Network::from_name(name).unwrap();
+            let costs = LayerCosts::derived(&net);
+            assert_eq!(costs.per_layer.len(), net.ops.len(), "{name}");
+            // Input layer is free; every driven layer costs something.
+            assert_eq!(costs.per_layer[0], (0.0, 0.0), "{name}");
+            for (l, (f, b)) in costs.per_layer.iter().enumerate().skip(1) {
+                assert!(*f > 0.0 && *b > 0.0, "{name} layer {l}: ({f}, {b})");
+            }
+            // Backward does strictly more arithmetic than forward, and
+            // convolution dominates (paper Table 1/5).
+            assert!(costs.total_backward() > costs.total_forward(), "{name}");
+            let conv_b: f64 = net
+                .ops
+                .iter()
+                .zip(&costs.per_layer)
+                .filter(|(op, _)| op.kind() == "conv")
+                .map(|(_, (_, b))| b)
+                .sum();
+            assert!(conv_b / costs.total_backward() > 0.8, "{name}: conv fraction");
+        }
+    }
+
+    #[test]
+    fn derived_ops_scale_with_arch_size() {
+        let (fs, bs) = derived_ops(&Network::from_name("small").unwrap());
+        let (fm, bm) = derived_ops(&Network::from_name("medium").unwrap());
+        assert!(fm > fs && bm > bs, "medium ({fm}, {bm}) must exceed small ({fs}, {bs})");
+        // with_derived_ops keeps the forward anchor, derives backward.
+        let c = arch_constants("small").unwrap();
+        let d = c.with_derived_ops(&Network::from_name("small").unwrap());
+        assert_eq!(d.fprop_ops, c.fprop_ops);
+        assert!((d.bprop_ops / d.fprop_ops - bs / fs).abs() < 1e-9);
     }
 
     #[test]

@@ -31,6 +31,14 @@ impl Pcg32 {
         Self::new(seed, 0)
     }
 
+    /// Stream id this generator was created with. Two generators sharing a
+    /// stream id walk identical sequences for the same seed, so the
+    /// dataflow auditor treats duplicate streams as an aliasing defect.
+    #[inline]
+    pub fn stream(&self) -> u64 {
+        self.inc >> 1
+    }
+
     /// Next raw 32-bit output.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
@@ -136,6 +144,12 @@ mod tests {
         for _ in 0..1000 {
             assert_eq!(a.next_u32(), b.next_u32());
         }
+    }
+
+    #[test]
+    fn stream_id_round_trips() {
+        assert_eq!(Pcg32::new(1, 7).stream(), 7);
+        assert_eq!(Pcg32::seeded(99).stream(), 0);
     }
 
     #[test]

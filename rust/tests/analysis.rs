@@ -250,6 +250,7 @@ mod race_check {
                     eta_decay: 0.95,
                     seed: 7,
                     validation_fraction: 0.25,
+                    eval_batch: 32,
                 })
                 .policy_boxed(policy::from_name(name).unwrap())
                 .run(&train, &test)

@@ -1,0 +1,340 @@
+//! Integration coverage for `nn::audit` — the compile-time dataflow /
+//! aliasing verifier, the kernel-dispatch classifier, and the static
+//! cost model, driven over real compiled networks through the crate's
+//! public API.
+//!
+//! The acceptance checks of the subsystem live here: every shipped
+//! architecture (including the JSON-loaded `examples/archs/*.json`
+//! paper variants) audits clean across all three layers; the
+//! general-conv fallback in `mixed.json` is flagged off the vectorized
+//! fast path; every seeded dataflow-defect class — broken shape chain,
+//! aliased delta planes, missing/mis-sized arenas, duplicate PRNG
+//! streams — is detected; and the registry-coverage guard fails loudly
+//! when a newly registered layer kind is not answering dispatch/cost.
+
+use chaos_phi::config::{Act, ArchSpec, LayerSpec};
+use chaos_phi::nn::audit::{
+    expected_extents, shape_rows, verify_arena_layout, verify_shape_rows, ShapeRow, AUDIT_CAP,
+};
+use chaos_phi::nn::{
+    audit_cost, audit_dataflow, audit_dispatch, layer, ArenaExtent, ArenaLayout, DataflowDefect,
+    Dispatch, KernelPath, Network, OpCost,
+};
+use chaos_phi::perfmodel::derived_ops;
+use chaos_phi::util::Json;
+
+/// Every kind the audits below exercise; the coverage guard asserts this
+/// set matches the registry, so a newly registered built-in kind fails
+/// loudly until it is covered here too.
+const COVERED_KINDS: &[&str] = &["input", "conv", "pool", "avgpool", "fc", "dropout", "output"];
+
+/// An architecture touching every built-in kind, including the general
+/// (padded + strided) conv path and both activations.
+fn zoo_arch() -> ArchSpec {
+    ArchSpec {
+        name: "audit-zoo".into(),
+        layers: vec![
+            LayerSpec::Input { side: 13 },
+            LayerSpec::conv_ex(4, 4, 1, 1, Act::Relu), // padded: 12x12
+            LayerSpec::MaxPool { kernel: 2 },          // 6x6
+            LayerSpec::conv_ex(6, 2, 2, 0, Act::ScaledTanh), // strided: 3x3
+            LayerSpec::AvgPool { kernel: 3 },          // 1x1
+            LayerSpec::Dropout { rate: 0.4 },
+            LayerSpec::fc_act(17, Act::Relu),
+            LayerSpec::Output { classes: 10 },
+        ],
+        paper_epochs: 1,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Positive: shipped architectures audit clean across all three layers
+// ---------------------------------------------------------------------
+
+#[test]
+fn shipped_architectures_audit_clean() {
+    for name in ["small", "medium", "large", "tiny"] {
+        let net = Network::from_name(name).unwrap();
+        let flow = audit_dataflow(&net);
+        assert!(flow.is_clean(), "{name}: {}", flow.to_text());
+        assert_eq!(flow.arch, name);
+        assert_eq!(flow.layers, net.ops.len());
+        assert_eq!(flow.cap, AUDIT_CAP);
+
+        // Each report's JSON view carries its schema tag and round-trips.
+        let j = Json::parse(&flow.to_json().pretty()).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("chaos.analyze.dataflow/v1"));
+        assert_eq!(j.get("clean").and_then(Json::as_bool), Some(true));
+
+        let kernels = audit_dispatch(&net);
+        let kj = Json::parse(&kernels.to_json().pretty()).unwrap();
+        assert_eq!(kj.get("schema").and_then(Json::as_str), Some("chaos.analyze.kernel/v1"));
+        assert_eq!(kernels.rows.len(), net.ops.len());
+
+        let cost = audit_cost(&net, 32);
+        let cj = Json::parse(&cost.to_json().pretty()).unwrap();
+        assert_eq!(cj.get("schema").and_then(Json::as_str), Some("chaos.analyze.cost/v1"));
+        assert_eq!(cj.get("layers").and_then(Json::as_arr).map(|a| a.len()), Some(net.ops.len()));
+        assert!(cost.total_fwd_flops() > 0.0, "{name}");
+        assert!(
+            cost.total_bwd_flops() > cost.total_fwd_flops(),
+            "{name}: backward must cost strictly more than forward"
+        );
+    }
+}
+
+#[test]
+fn example_arch_files_audit_clean() {
+    // The CI loop runs `chaos analyze --cost` over the same files; this
+    // pins the library-level contract behind that loop.
+    for path in ["examples/archs/small.json", "examples/archs/mixed.json"] {
+        let arch = ArchSpec::from_file(path).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        let net = Network::new(arch);
+        let flow = audit_dataflow(&net);
+        assert!(flow.is_clean(), "{path}: {}", flow.to_text());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatch classification: the mixed arch's general conv is flagged
+// ---------------------------------------------------------------------
+
+#[test]
+fn mixed_arch_general_conv_is_flagged_off_fast_path() {
+    // mixed.json's first conv is stride-2/pad-2: it compiles to the
+    // gather-heavy general fallback kernel and must land on the SIMD
+    // work-list. Its second conv is stride-1/pad-0 and stays vectorized.
+    let net = Network::new(ArchSpec::from_file("examples/archs/mixed.json").unwrap());
+    let report = audit_dispatch(&net);
+
+    let convs: Vec<_> = report.rows.iter().filter(|r| r.kind == "conv").collect();
+    assert_eq!(convs.len(), 2);
+    assert_eq!(convs[0].dispatch.forward, KernelPath::GeneralFallback);
+    assert_eq!(convs[0].dispatch.backward, KernelPath::GeneralFallback);
+    assert!(!convs[0].dispatch.fast());
+    assert_eq!(convs[1].dispatch.forward, KernelPath::VectorizedPlain);
+    assert!(convs[1].dispatch.fast());
+
+    let off = report.off_fast_path();
+    assert!(
+        off.iter().any(|r| r.layer == convs[0].layer),
+        "general conv missing from the work-list: {}",
+        report.to_text()
+    );
+
+    // The JSON view flags the same row.
+    let j = Json::parse(&report.to_json().pretty()).unwrap();
+    let rows = j.get("layers").and_then(Json::as_arr).unwrap();
+    let row = &rows[convs[0].layer];
+    assert_eq!(row.get("forward").and_then(Json::as_str), Some("general-fallback"));
+    assert_eq!(row.get("fast").and_then(Json::as_bool), Some(false));
+}
+
+#[test]
+fn paper_archs_are_fully_vectorized_except_pools_and_dropout() {
+    // The paper nets use stride-1/pad-0 convs throughout: the only ops
+    // off the fast path are the tiled pools (and dropout's sequential
+    // forward RNG draws) — exactly the known SIMD work-list.
+    for name in ["small", "medium", "large"] {
+        let net = Network::from_name(name).unwrap();
+        for r in &audit_dispatch(&net).rows {
+            match r.kind.as_str() {
+                "conv" => assert_eq!(r.dispatch.forward, KernelPath::VectorizedPlain, "{name}"),
+                "fc" | "output" => {
+                    assert_eq!(r.dispatch.forward, KernelPath::WeightStationary, "{name}")
+                }
+                "input" => assert_eq!(r.dispatch.forward, KernelPath::Inert, "{name}"),
+                _ => assert!(!r.dispatch.fast(), "{name}: {} unexpectedly fast", r.kind),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Negative: every seeded dataflow-defect class is detected
+// ---------------------------------------------------------------------
+
+fn chain_of(net: &Network) -> Vec<ShapeRow> {
+    let rows = shape_rows(net);
+    assert!(verify_shape_rows(&rows).is_empty(), "baseline chain must be clean");
+    rows
+}
+
+#[test]
+fn broken_shape_chain_is_detected() {
+    let net = Network::new(ArchSpec::tiny());
+
+    // Break the chain: layer 2 claims to consume 5 more elements than
+    // layer 1 produces (both sides consistently, so only the chain trips).
+    let mut rows = chain_of(&net);
+    rows[2].op_in += 5;
+    rows[2].dims_in += 5;
+    let defects = verify_shape_rows(&rows);
+    assert!(
+        defects.iter().any(|d| matches!(d, DataflowDefect::BrokenChain { layer: 2, .. })),
+        "{defects:?}"
+    );
+
+    // An op disagreeing with the compiled dims table is its own class.
+    let mut rows = chain_of(&net);
+    rows[1].op_out += 1;
+    let defects = verify_shape_rows(&rows);
+    assert!(
+        defects.iter().any(|d| matches!(
+            d,
+            DataflowDefect::OpShapeMismatch { layer: 1, side: "out", .. }
+        )),
+        "{defects:?}"
+    );
+}
+
+#[test]
+fn aliased_and_missized_arenas_are_detected() {
+    // Start from the real layout of a real scratch, then seed defects.
+    let net = Network::new(ArchSpec::tiny());
+    let plan = net.batch_plan(AUDIT_CAP).unwrap();
+    let mut scratch = plan.scratch_seeded(0);
+    let expected = expected_extents(&net, AUDIT_CAP);
+
+    // The forward-only scratch is *missing* the backward arenas: the
+    // verifier reports them (delta planes sized 0 vs. their real planes).
+    let defects = verify_arena_layout(&scratch.layout(), &expected);
+    assert!(
+        defects.iter().any(|d| matches!(d, DataflowDefect::ArenaMisSized { .. })),
+        "forward-only scratch must fail the backward-arena check: {defects:?}"
+    );
+
+    // Fully materialized, it verifies clean…
+    let full = audit_dataflow(&net);
+    assert!(full.is_clean(), "{}", full.to_text());
+
+    // …and seeding each defect class into that clean layout trips it.
+    scratch.ensure_backward_arenas(&net);
+    let clean = scratch.layout();
+    assert!(verify_arena_layout(&clean, &expected).is_empty());
+
+    // Aliased ping-pong delta planes: point delta_b into delta_a.
+    let mut aliased = clean.clone();
+    let a = aliased.extents.iter().find(|e| e.name == "delta_a").unwrap().addr;
+    let b = aliased.extents.iter_mut().find(|e| e.name == "delta_b").unwrap();
+    b.addr = a + 4; // overlaps all but delta_a's first element
+    let classes: Vec<_> =
+        verify_arena_layout(&aliased, &expected).iter().map(|d| d.class()).collect();
+    assert!(classes.contains(&"arena-overlap"), "{classes:?}");
+
+    // A whole arena gone missing.
+    let mut gone = clean.clone();
+    gone.extents.retain(|e| e.name != "grad_buf");
+    let classes: Vec<_> = verify_arena_layout(&gone, &expected).iter().map(|d| d.class()).collect();
+    assert_eq!(classes, vec!["arena-missing"]);
+
+    // Duplicate per-layer PRNG streams: dropout masks would repeat
+    // across layers (same class the per-worker reseed guards against).
+    let mut dup = clean.clone();
+    assert!(dup.rng_streams.len() >= 2);
+    dup.rng_streams[1] = dup.rng_streams[0];
+    let defects = verify_arena_layout(&dup, &expected);
+    assert!(
+        defects.iter().any(|d| matches!(d, DataflowDefect::DuplicateRngStream { .. })),
+        "{defects:?}"
+    );
+}
+
+#[test]
+fn hand_built_degenerate_layouts_are_rejected() {
+    // Pure-data path: no Network at all, mirroring how a defective
+    // runtime-registered kind would present to the verifier.
+    let expected = vec![("acts[0]".to_string(), 8), ("delta_a".to_string(), 16)];
+    let layout = ArenaLayout {
+        cap: 2,
+        extents: vec![
+            ArenaExtent { name: "acts[0]".into(), addr: 0, len: 4 }, // half the plane
+            ArenaExtent { name: "delta_a".into(), addr: 8, len: 16 }, // starts inside acts[0]
+        ],
+        rng_streams: vec![1, 2, 1],
+    };
+    let classes: Vec<_> = verify_arena_layout(&layout, &expected).iter().map(|d| d.class()).collect();
+    assert!(classes.contains(&"arena-size"), "{classes:?}");
+    assert!(classes.contains(&"arena-overlap"), "{classes:?}");
+    assert!(classes.contains(&"dup-rng-stream"), "{classes:?}");
+}
+
+// ---------------------------------------------------------------------
+// Registry coverage: every registered kind answers dispatch/cost
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_registered_kind_answers_dispatch_and_cost() {
+    let mut covered: Vec<String> = COVERED_KINDS.iter().map(|s| s.to_string()).collect();
+    covered.sort();
+    assert_eq!(
+        layer::names(),
+        covered,
+        "a registered kind is missing from the audit coverage zoo"
+    );
+
+    let net = Network::new(zoo_arch());
+    for kind in COVERED_KINDS.iter().filter(|k| **k != "input") {
+        assert!(
+            net.ops.iter().any(|op| op.kind() == *kind),
+            "zoo arch does not instantiate kind '{kind}'"
+        );
+    }
+
+    // Every op classifies its dispatch and prices its cost: finite,
+    // non-negative, and strictly positive FLOPs for every driven layer.
+    let cost = audit_cost(&net, AUDIT_CAP);
+    for r in &cost.rows {
+        let c = &r.cost;
+        for v in [c.fwd_flops, c.bwd_flops, c.param_bytes, c.fwd_act_bytes, c.bwd_act_bytes] {
+            assert!(v.is_finite() && v >= 0.0, "layer {} ({}): bad cost {v}", r.layer, r.kind);
+        }
+        if r.kind == "input" {
+            assert_eq!(r.dispatch, Dispatch::inert());
+            assert_eq!(c.fwd_flops, 0.0);
+        } else {
+            assert!(c.fwd_flops > 0.0, "layer {} ({}): zero forward flops", r.layer, r.kind);
+            assert!(c.bwd_flops > 0.0, "layer {} ({}): zero backward flops", r.layer, r.kind);
+            assert_ne!(r.dispatch.forward, KernelPath::Inert, "{}", r.kind);
+        }
+    }
+
+    // Parameterized kinds charge their spans; parameterless kinds don't.
+    for r in &cost.rows {
+        match r.kind.as_str() {
+            "conv" | "fc" | "output" => assert!(r.cost.param_bytes > 0.0, "{}", r.kind),
+            _ => assert_eq!(r.cost.param_bytes, 0.0, "{}", r.kind),
+        }
+    }
+}
+
+#[test]
+fn conservative_default_is_slow_but_priced() {
+    // The trait defaults a runtime-registered kind inherits: off the fast
+    // path (so the classifier surfaces it) yet still costed, with the
+    // parameter span charged once per batch.
+    let d = Dispatch::per_sample();
+    assert_eq!(d.forward, KernelPath::PerSampleLoop);
+    assert!(!d.fast(), "an un-overridden kind must land on the work-list");
+
+    let c = OpCost::generic(100, 50, 10);
+    assert_eq!(c.fwd_flops, 150.0);
+    assert_eq!(c.bwd_flops, 300.0);
+    assert_eq!(c.param_bytes, 40.0);
+    assert!(c.fwd_intensity(32) > c.fwd_intensity(1), "batching amortizes the span");
+}
+
+// ---------------------------------------------------------------------
+// Cross-check: perfmodel's derived constants are the audit totals
+// ---------------------------------------------------------------------
+
+#[test]
+fn perfmodel_derived_ops_equal_audit_totals() {
+    for arch in [ArchSpec::small(), ArchSpec::medium(), zoo_arch()] {
+        let net = Network::new(arch);
+        let (fwd, bwd) = derived_ops(&net);
+        let cost = audit_cost(&net, 1);
+        assert_eq!(fwd, cost.total_fwd_flops(), "{}", net.arch.name);
+        assert_eq!(bwd, cost.total_bwd_flops(), "{}", net.arch.name);
+    }
+}

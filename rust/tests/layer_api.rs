@@ -364,6 +364,7 @@ fn runtime_registered_kind_trains_under_every_policy() {
                 eta_decay: 0.95,
                 seed: 42,
                 validation_fraction: 0.25,
+                eval_batch: 32,
             })
             .policy_name(&name)
             .unwrap()

@@ -28,6 +28,7 @@ fn tiny_trainer(threads: usize, epochs: usize) -> Trainer {
         eta_decay: 0.95,
         seed: 42,
         validation_fraction: 0.25,
+        eval_batch: 32,
     })
 }
 
@@ -194,6 +195,7 @@ fn strategy_enum_still_selects_policies_through_the_builder() {
         eta_decay: 0.95,
         seed: 1,
         validation_fraction: 0.0,
+        eval_batch: 32,
     };
     let run = Trainer::new()
         .network(net)

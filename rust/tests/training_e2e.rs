@@ -17,6 +17,7 @@ fn cfg(threads: usize, epochs: usize) -> TrainConfig {
         eta_decay: 0.9,
         seed: 77,
         validation_fraction: 0.2,
+        eval_batch: 32,
     }
 }
 
