@@ -1,0 +1,196 @@
+//! Bench: batch-lane SIMD training kernels — one full minibatch step
+//! (batched forward + backward) swept over B ∈ {1, 8, 32} × the two
+//! accumulation policies (`--math exact|fast`), on a plain-conv paper
+//! net and a padded/strided net that routes through im2col+GEMM.
+//!
+//! This is the measurement behind the batch-lane rework: `Exact` keeps
+//! the per-sample accumulation order (bit-identity enforced by
+//! rust/tests/batch_forward.rs and batch_backward.rs), `Fast` allows the
+//! reassociated kernels — im2col staging for general conv and the
+//! KC/MR cache-blocked fc GEMM — so its rows should only go up from the
+//! exact ones. A numeric sanity gate asserts fast probabilities stay
+//! within a small relative error of exact before any timing runs.
+//!
+//! Output: a markdown report on stdout **and** machine-readable
+//! `BENCH_simd.json` (schema self-checked after writing, smoke-tested in
+//! CI):
+//!
+//! ```json
+//! {
+//!   "bench": "simd_batch", "images": 128,
+//!   "archs": [{"arch": "small", "rows": [
+//!     {"batch": B, "math": "exact"|"fast", "mean_secs": s,
+//!      "images_per_sec": r, "speedup_vs_exact_b1": x}, ...]}, ...]
+//! }
+//! ```
+//!
+//! Run: `cargo bench --bench simd_batch [-- --smoke] [-- --out FILE]`
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::config::{Act, ArchSpec, LayerSpec};
+use chaos_phi::data::{generate_synthetic, Dataset, SynthConfig};
+use chaos_phi::nn::{MathPolicy, Network};
+use chaos_phi::util::Json;
+
+const BATCH_SIZES: [usize; 3] = [1, 8, 32];
+const POLICIES: [MathPolicy; 2] = [MathPolicy::Exact, MathPolicy::Fast];
+
+/// A padded + strided net: its first conv leaves the plain
+/// weight-stationary kernels and exercises the im2col+GEMM route.
+fn general_arch() -> ArchSpec {
+    ArchSpec {
+        name: "bench-general".into(),
+        layers: vec![
+            LayerSpec::Input { side: 29 },
+            LayerSpec::conv_ex(6, 5, 2, 2, Act::Relu), // stride-2/pad-2: 15x15
+            LayerSpec::MaxPool { kernel: 3 },          // 5x5
+            LayerSpec::fc_act(40, Act::Relu),
+            LayerSpec::Output { classes: 10 },
+        ],
+        paper_epochs: 1,
+    }
+}
+
+/// One epoch of minibatch steps over the whole dataset: stage, forward,
+/// backward, consume the batch-summed gradients. Returns a gradient
+/// checksum so the optimizer cannot dead-code the work away.
+fn train_steps(
+    net: &Network,
+    params: &[f32],
+    data: &Dataset,
+    batch: usize,
+    math: MathPolicy,
+) -> f64 {
+    let plan = net.batch_plan(batch).unwrap().with_math(math);
+    let mut scratch = plan.scratch_seeded(42);
+    scratch.train_mode = true;
+    let mut sink = 0.0f64;
+    let mut labels = Vec::with_capacity(batch);
+    let mut idx = 0;
+    while idx < data.len() {
+        let b = batch.min(data.len() - idx);
+        for slot in 0..b {
+            plan.stage_image(&mut scratch, slot, data.image(idx + slot));
+        }
+        plan.forward_staged(&params, b, &mut scratch, None);
+        labels.clear();
+        labels.extend((0..b).map(|s| data.label(idx + s)));
+        plan.backward(&params, &labels, b, &mut scratch, None, |_, _, grads| {
+            sink += grads.iter().take(4).map(|&g| g as f64).sum::<f64>();
+        });
+        idx += b;
+    }
+    sink
+}
+
+/// Numeric gate: fast-math probabilities must stay within a small
+/// relative error of the exact ones on real data (the batch suites pin
+/// the tight property; this re-asserts it on the benched nets).
+fn assert_fast_close_to_exact(net: &Network, params: &[f32], data: &Dataset, batch: usize) {
+    let n = batch.min(data.len());
+    let il = net.dims[0].out_len();
+    let images: Vec<f32> = (0..n).flat_map(|i| data.image(i).to_vec()).collect();
+    let exact_plan = net.batch_plan(n).unwrap();
+    let mut exact_scratch = exact_plan.scratch_seeded(0);
+    let exact = exact_plan.forward(&params, &images[..n * il], n, &mut exact_scratch, None).to_vec();
+    let fast_plan = net.batch_plan(n).unwrap().with_math(MathPolicy::Fast);
+    let mut fast_scratch = fast_plan.scratch_seeded(0);
+    let fast = fast_plan.forward(&params, &images[..n * il], n, &mut fast_scratch, None);
+    for (i, (&e, &f)) in exact.iter().zip(fast).enumerate() {
+        let tol = 1e-5f32 * e.abs().max(f.abs()).max(1e-3);
+        assert!(
+            (e - f).abs() <= tol,
+            "{}: fast prob {i} drifted from exact: {e} vs {f}",
+            net.arch.name
+        );
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_simd.json".to_string());
+
+    let (images_n, iters) = if smoke { (32, 2) } else { (128, 6) };
+
+    let nets = [Network::from_name("small").unwrap(), Network::new(general_arch())];
+
+    let mut report = Report::new(format!(
+        "simd_batch — minibatch step over {images_n} images, B ∈ {BATCH_SIZES:?} × exact/fast"
+    ));
+
+    let mut arch_docs: Vec<Json> = Vec::new();
+    for net in &nets {
+        let params = net.init_params(1);
+        let side = net.arch.input_side();
+        let data = generate_synthetic(images_n, 7, &SynthConfig::default()).resize(side);
+
+        assert_fast_close_to_exact(net, &params, &data, *BATCH_SIZES.last().unwrap());
+
+        let mut rows: Vec<Json> = Vec::new();
+        let mut exact_b1_secs = None;
+        for b in BATCH_SIZES {
+            for math in POLICIES {
+                let r = Bench::new(format!("{}/B={b}/{}", net.arch.name, math.name()))
+                    .warmup(1)
+                    .iters(iters)
+                    .run(|| train_steps(net, &params, &data, b, math));
+                let rate = images_n as f64 / r.mean_secs;
+                if b == 1 && math == MathPolicy::Exact {
+                    exact_b1_secs = Some(r.mean_secs);
+                }
+                let speedup = exact_b1_secs.expect("B=1 exact runs first") / r.mean_secs;
+                report.note(format!(
+                    "{} B={b} {}: {rate:.0} images/s, {speedup:.2}× vs exact B=1",
+                    net.arch.name,
+                    math.name()
+                ));
+                rows.push(Json::obj(vec![
+                    ("batch", Json::num(b as f64)),
+                    ("math", Json::str(math.name())),
+                    ("mean_secs", Json::num(r.mean_secs)),
+                    ("images_per_sec", Json::num(rate)),
+                    ("speedup_vs_exact_b1", Json::num(speedup)),
+                ]));
+                report.add(r);
+            }
+        }
+        arch_docs.push(Json::obj(vec![
+            ("arch", Json::str(net.arch.name.as_str())),
+            ("rows", Json::arr(rows)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("simd_batch")),
+        ("smoke", Json::num(u32::from(smoke))),
+        ("images", Json::num(images_n as f64)),
+        ("archs", Json::arr(arch_docs)),
+    ]);
+    std::fs::write(&out_path, doc.pretty()).expect("write BENCH_simd.json");
+
+    // Schema self-check: re-parse what we wrote so CI catches rot without
+    // external tooling.
+    let parsed = Json::parse(&std::fs::read_to_string(&out_path).unwrap()).expect("valid JSON");
+    assert_eq!(parsed.req("bench").unwrap().as_str(), Some("simd_batch"));
+    let archs = parsed.req("archs").unwrap().as_arr().expect("archs array");
+    assert_eq!(archs.len(), nets.len());
+    for arch in archs {
+        let rows = arch.req("rows").unwrap().as_arr().expect("rows array");
+        assert_eq!(rows.len(), BATCH_SIZES.len() * POLICIES.len());
+        for row in rows {
+            let math = row.req("math").unwrap().as_str().unwrap();
+            assert!(math == "exact" || math == "fast", "bad policy tag {math}");
+            assert!(row.req("images_per_sec").unwrap().as_f64().unwrap() > 0.0);
+            assert!(row.req("speedup_vs_exact_b1").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+    println!("\nwrote {out_path}");
+
+    report.print();
+}

@@ -31,6 +31,7 @@ fn main() {
             seed: 5,
             validation_fraction: 0.0,
             eval_batch: 32,
+            ..TrainConfig::default()
         };
         report.add(
             Bench::new(format!("real/chaos_epoch/{threads}t"))

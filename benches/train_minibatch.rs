@@ -50,6 +50,7 @@ fn train_once(
         seed: 0xBE7C4,
         validation_fraction: 0.0,
         eval_batch: 32,
+        ..TrainConfig::default()
     };
     let run = Trainer::new()
         .arch(ArchSpec::small())

@@ -26,6 +26,7 @@ fn main() {
         seed: 21,
         validation_fraction: 0.0,
         eval_batch: 32,
+        ..TrainConfig::default()
     };
 
     for name in policy::names() {

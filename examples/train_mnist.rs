@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         seed: 99,
         validation_fraction: 0.2,
         eval_batch: 32,
+        ..TrainConfig::default()
     };
     let sw = Stopwatch::start();
     // Live progress through the observer API (fires as each epoch lands).

@@ -44,7 +44,7 @@
 use super::analysis::SyncContract;
 use super::shared::SharedParams;
 use super::strategies::Turnstile;
-use crate::nn::{LayerDims, Network};
+use crate::nn::{LayerDims, MathPolicy, Network};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex, OnceLock};
@@ -66,6 +66,9 @@ pub struct EpochCtx<'a> {
     /// scratch streams so stochastic ops (dropout masks) differ across
     /// differently-seeded runs.
     pub seed: u64,
+    /// Accumulation policy for the minibatch training kernels
+    /// (`TrainConfig::math`); per-sample workers are inherently exact.
+    pub math: MathPolicy,
 }
 
 /// An update policy: how worker gradients reach the shared weights.
@@ -799,7 +802,15 @@ mod tests {
         let params = net.init_params(3);
         let store = SharedParams::new(&params, &net.dims);
         let eta = 0.01f32;
-        let ctx = EpochCtx { net: &net, store: &store, threads: 1, eta, epoch: 0, seed: 0 };
+        let ctx = EpochCtx {
+            net: &net,
+            store: &store,
+            threads: 1,
+            eta,
+            epoch: 0,
+            seed: 0,
+            math: MathPolicy::Exact,
+        };
         let layer = 1;
         let dims = &net.dims[layer];
         let grads = vec![1.0f32; dims.param_count()];
@@ -917,7 +928,15 @@ mod tests {
         let net = crate::nn::Network::new(ArchSpec::tiny());
         let params = net.init_params(1);
         let store = SharedParams::new(&params, &net.dims);
-        let ctx = EpochCtx { net: &net, store: &store, threads: 2, eta: 0.01, epoch: 0, seed: 0 };
+        let ctx = EpochCtx {
+            net: &net,
+            store: &store,
+            threads: 2,
+            eta: 0.01,
+            epoch: 0,
+            seed: 0,
+            math: MathPolicy::Exact,
+        };
         let state = DelayedRoundRobinPolicy.epoch_state(&ctx);
         // Drive one worker through a fake sample: publish into every
         // parameterized layer, then end_sample must push it to the store.

@@ -257,7 +257,15 @@ fn run_epochs(
                 m
             }
             Engine::Par { store } => {
-                let ctx = EpochCtx { net, store: &*store, threads, eta, epoch, seed: cfg.seed };
+                let ctx = EpochCtx {
+                    net,
+                    store: &*store,
+                    threads,
+                    eta,
+                    epoch,
+                    seed: cfg.seed,
+                    math: cfg.math,
+                };
                 train_phase_parallel(&ctx, train_set, &sampler, policy, &layer_times)
             }
         };
@@ -441,7 +449,8 @@ fn worker_minibatch(
     batch: usize,
     timers: &LayerTimes,
 ) -> EvalMetrics {
-    let plan = ctx.net.batch_plan(batch).expect("minibatch size validated ≥ 1");
+    let plan =
+        ctx.net.batch_plan(batch).expect("minibatch size validated ≥ 1").with_math(ctx.math);
     let mut scratch = plan.scratch_seeded(seed);
     scratch.train_mode = true;
     let classes = ctx.net.num_classes();
@@ -611,6 +620,7 @@ mod tests {
             seed: 42,
             validation_fraction: 0.25,
             eval_batch: 32,
+            ..TrainConfig::default()
         }
     }
 

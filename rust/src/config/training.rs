@@ -1,6 +1,7 @@
 //! Training hyper-parameters — paper §5.1: "trained … using a starting
 //! decay (eta) of 0.001 and factor of 0.9", per-sample (on-line) SGD.
 
+use crate::nn::MathPolicy;
 use crate::util::Json;
 
 /// Hyper-parameters for a training run.
@@ -26,6 +27,12 @@ pub struct TrainConfig {
     /// parameter load. Must be ≥ 1; purely a throughput knob, results are
     /// bit-identical across values.
     pub eval_batch: usize,
+    /// Accumulation policy for the minibatch training kernels (see the
+    /// `nn::simd` reassociation contract). `Exact` (the default) keeps
+    /// batched training bit-identical to per-sample execution; `Fast`
+    /// allows reassociated, cache-blocked kernels. Evaluation phases
+    /// always run exact.
+    pub math: MathPolicy,
 }
 
 impl Default for TrainConfig {
@@ -38,6 +45,7 @@ impl Default for TrainConfig {
             seed: 0xC4A0_5EED,
             validation_fraction: 1.0,
             eval_batch: 32,
+            math: MathPolicy::Exact,
         }
     }
 }
@@ -81,6 +89,11 @@ impl TrainConfig {
         self
     }
 
+    pub fn with_math(mut self, math: MathPolicy) -> TrainConfig {
+        self.math = math;
+        self
+    }
+
     /// η at the given 0-based epoch: η₀ · decay^epoch.
     pub fn eta_at(&self, epoch: usize) -> f32 {
         (self.eta0 * self.eta_decay.powi(epoch as i32)) as f32
@@ -117,6 +130,7 @@ impl TrainConfig {
             ("seed", Json::num(self.seed as f64)),
             ("validation_fraction", Json::num(self.validation_fraction)),
             ("eval_batch", Json::num(self.eval_batch as f64)),
+            ("math", Json::str(self.math.name())),
         ])
     }
 }
@@ -151,7 +165,8 @@ mod tests {
             .with_eta(0.01, 0.8)
             .with_seed(7)
             .with_validation_fraction(0.25)
-            .with_eval_batch(16);
+            .with_eval_batch(16)
+            .with_math(MathPolicy::Fast);
         assert_eq!(c.epochs, 5);
         assert_eq!(c.threads, 4);
         assert_eq!(c.eta0, 0.01);
@@ -159,15 +174,23 @@ mod tests {
         assert_eq!(c.seed, 7);
         assert_eq!(c.validation_fraction, 0.25);
         assert_eq!(c.eval_batch, 16);
+        assert_eq!(c.math, MathPolicy::Fast);
         c.validate().unwrap();
     }
 
     #[test]
     fn json_has_all_fields() {
         let j = TrainConfig::default().to_json();
-        for k in
-            ["epochs", "eta0", "eta_decay", "threads", "seed", "validation_fraction", "eval_batch"]
-        {
+        for k in [
+            "epochs",
+            "eta0",
+            "eta_decay",
+            "threads",
+            "seed",
+            "validation_fraction",
+            "eval_batch",
+            "math",
+        ] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
     }

@@ -49,6 +49,7 @@ pub fn table1(scale: RealRunScale) -> anyhow::Result<Table> {
         seed: 1,
         validation_fraction: 0.0,
         eval_batch: 32,
+        ..TrainConfig::default()
     };
     let run = Trainer::new()
         .network(net)
@@ -312,6 +313,7 @@ pub fn parity_runs(
         seed: 0xC4A05,
         validation_fraction: 0.25,
         eval_batch: 32,
+        ..TrainConfig::default()
     };
     let baseline = Trainer::new()
         .network(net.clone())

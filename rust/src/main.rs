@@ -33,6 +33,8 @@ USAGE: chaos <command> [flags]
             --epochs E --train-n N --test-n N --eta F --seed S --data-dir DIR
             --out FILE.json --weights-out FILE.ckpt
             --eval-batch B   (evaluation batch size, default 32)
+            --math exact|fast   (minibatch kernel accumulation, default exact;
+             fast allows reassociated cache-blocked kernels, see README)
             --stop-at-test-error R   (early-stop once test error rate <= R)
             (--strategy also accepts any policy registered via chaos::policy;
              minibatch:B trains on B-sample chunks with averaged gradients)
@@ -104,6 +106,7 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
             "weights-out",
             "validation-fraction",
             "eval-batch",
+            "math",
             "stop-at-test-error",
         ],
     )?;
@@ -121,6 +124,7 @@ fn cmd_train(raw: &[String]) -> anyhow::Result<()> {
         seed: a.get_u64("seed", 0xC4A05)?,
         validation_fraction: a.get_f64("validation-fraction", 0.25)?,
         eval_batch: a.get_usize("eval-batch", 32)?,
+        math: chaos_phi::nn::MathPolicy::parse(&a.get_str("math", "exact"))?,
     };
     cfg.validate()?;
     let train_n = a.get_usize("train-n", 2_000)?;

@@ -270,10 +270,14 @@ pub fn expected_extents(net: &Network, cap: usize) -> Vec<(String, usize)> {
     }
     let max_params = net.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
     let max_act = net.dims.iter().map(|d| d.out_len()).max().unwrap_or(0);
+    let max_col = net.ops.iter().map(|op| op.im2col_len()).max().unwrap_or(0);
     v.push(("param_buf".to_string(), max_params));
     v.push(("delta_a".to_string(), cap * max_act));
     v.push(("delta_b".to_string(), cap * max_act));
     v.push(("grad_buf".to_string(), max_params));
+    // One shared im2col staging panel (per sample, reused across the
+    // batch), zero-length when no op wants the im2col route.
+    v.push(("im2col".to_string(), max_col));
     v
 }
 
@@ -367,6 +371,15 @@ pub enum KernelPath {
     VectorizedPlain,
     /// GEMM-shaped fc kernels: weights stationary while the batch streams.
     WeightStationary,
+    /// Padded/strided conv via tap-stationary batched kernels with an
+    /// im2col+GEMM staging route under fast math.
+    Im2colGemm,
+    /// Parameter-free window kernels swept with the batch as the lane
+    /// axis (window geometry computed once, applied across samples).
+    BatchLane,
+    /// Cache-blocked GEMM-shaped fc kernels: `GEMM_KC`-long k-panels ×
+    /// `GEMM_MR`-row register blocks (see `nn::simd`).
+    BlockedGemm,
     /// One flat elementwise sweep over the whole `[batch][len]` block.
     BlockElementwise,
     /// Batched driver tiles the per-sample kernel sample-by-sample
@@ -387,6 +400,9 @@ impl KernelPath {
         match self {
             KernelPath::VectorizedPlain => "vectorized-plain",
             KernelPath::WeightStationary => "weight-stationary",
+            KernelPath::Im2colGemm => "im2col-gemm",
+            KernelPath::BatchLane => "batch-lane",
+            KernelPath::BlockedGemm => "blocked-gemm",
             KernelPath::BlockElementwise => "block-elementwise",
             KernelPath::TiledPerSample => "tiled-per-sample",
             KernelPath::GeneralFallback => "general-fallback",
@@ -401,6 +417,9 @@ impl KernelPath {
             self,
             KernelPath::VectorizedPlain
                 | KernelPath::WeightStationary
+                | KernelPath::Im2colGemm
+                | KernelPath::BatchLane
+                | KernelPath::BlockedGemm
                 | KernelPath::BlockElementwise
                 | KernelPath::Inert
         )
@@ -488,9 +507,18 @@ impl KernelReport {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("schema", Json::str("chaos.analyze.kernel/v1")),
+            // /v2: adds the im2col-gemm / batch-lane / blocked-gemm
+            // classes and the GEMM tile constants.
+            ("schema", Json::str("chaos.analyze.kernel/v2")),
             ("arch", Json::str(self.arch.clone())),
             ("off_fast_path", Json::num(self.off_fast_path().len() as f64)),
+            (
+                "tiles",
+                Json::obj(vec![
+                    ("gemm_kc", Json::num(crate::nn::simd::GEMM_KC as f64)),
+                    ("gemm_mr", Json::num(crate::nn::simd::GEMM_MR as f64)),
+                ]),
+            ),
             (
                 "layers",
                 Json::arr(
@@ -868,11 +896,17 @@ mod tests {
     fn fast_path_classification() {
         assert!(KernelPath::VectorizedPlain.fast());
         assert!(KernelPath::WeightStationary.fast());
+        assert!(KernelPath::Im2colGemm.fast());
+        assert!(KernelPath::BatchLane.fast());
+        assert!(KernelPath::BlockedGemm.fast());
         assert!(KernelPath::BlockElementwise.fast());
         assert!(KernelPath::Inert.fast());
         assert!(!KernelPath::TiledPerSample.fast());
         assert!(!KernelPath::GeneralFallback.fast());
         assert!(!KernelPath::PerSampleLoop.fast());
+        assert_eq!(KernelPath::Im2colGemm.name(), "im2col-gemm");
+        assert_eq!(KernelPath::BatchLane.name(), "batch-lane");
+        assert_eq!(KernelPath::BlockedGemm.name(), "blocked-gemm");
         let d = Dispatch { forward: KernelPath::PerSampleLoop, backward: KernelPath::BlockElementwise };
         assert!(!d.fast(), "one slow direction keeps the op on the work-list");
         assert!(Dispatch::uniform(KernelPath::WeightStationary).fast());
@@ -921,6 +955,15 @@ mod tests {
         assert_eq!(json.get("schema").and_then(Json::as_str), Some("chaos.analyze.cost/v1"));
         let kernel = audit_dispatch(&net);
         let kjson = Json::parse(&kernel.to_json().pretty()).unwrap();
-        assert_eq!(kjson.get("schema").and_then(Json::as_str), Some("chaos.analyze.kernel/v1"));
+        assert_eq!(kjson.get("schema").and_then(Json::as_str), Some("chaos.analyze.kernel/v2"));
+        let tiles = kjson.get("tiles").expect("v2 carries the GEMM tile constants");
+        assert_eq!(
+            tiles.get("gemm_kc").and_then(Json::as_usize),
+            Some(crate::nn::simd::GEMM_KC)
+        );
+        assert_eq!(
+            tiles.get("gemm_mr").and_then(Json::as_usize),
+            Some(crate::nn::simd::GEMM_MR)
+        );
     }
 }

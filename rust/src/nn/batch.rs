@@ -29,6 +29,7 @@
 
 use super::layer::{BatchActs, LayerOp, OpScratch};
 use super::network::{Network, ParamSource};
+use super::simd::MathPolicy;
 use crate::tensor::AlignedBuf;
 use crate::util::timer::LayerTimes;
 use crate::util::Pcg32;
@@ -40,15 +41,30 @@ use std::time::Instant;
 pub struct BatchPlan<'n> {
     net: &'n Network,
     cap: usize,
+    math: MathPolicy,
 }
 
 impl<'n> BatchPlan<'n> {
     /// Plan batches of up to `cap` samples. `cap == 0` is rejected — it
     /// would make every downstream buffer zero-length and turn the serve
-    /// loop into a busy spin.
+    /// loop into a busy spin. Accumulation defaults to
+    /// [`MathPolicy::Exact`] (bit-identical to per-sample execution); see
+    /// [`BatchPlan::with_math`].
     pub fn new(net: &'n Network, cap: usize) -> anyhow::Result<BatchPlan<'n>> {
         anyhow::ensure!(cap > 0, "batch capacity must be ≥ 1");
-        Ok(BatchPlan { net, cap })
+        Ok(BatchPlan { net, cap, math: MathPolicy::Exact })
+    }
+
+    /// Select the accumulation policy the batched kernels run under (see
+    /// the `nn::simd` reassociation contract).
+    pub fn with_math(mut self, math: MathPolicy) -> BatchPlan<'n> {
+        self.math = math;
+        self
+    }
+
+    /// The accumulation policy this plan executes under.
+    pub fn math(&self) -> MathPolicy {
+        self.math
     }
 
     /// Batch capacity.
@@ -82,19 +98,38 @@ impl<'n> BatchPlan<'n> {
         let rngs: Vec<Pcg32> =
             (0..self.net.ops.len()).map(|l| Pcg32::new(seed, l as u64)).collect();
         let max_params = self.net.dims.iter().map(|d| d.param_count()).max().unwrap_or(0);
-        BatchScratch {
+        // One shared im2col staging panel sized to the largest requester
+        // (eager, unlike the backward arenas: the forward pass uses it).
+        let max_col = self.net.ops.iter().map(|op| op.im2col_len()).max().unwrap_or(0);
+        let scratch = BatchScratch {
             cap: self.cap,
             acts,
             aux,
             rngs,
             train_mode: false,
+            math: self.math,
             param_buf: AlignedBuf::zeroed(max_params),
+            col: AlignedBuf::zeroed(max_col),
             // Backward arenas allocate lazily on the first backward() —
             // forward-only consumers (serving, eval) never pay for them.
             delta_a: AlignedBuf::zeroed(0),
             delta_b: AlignedBuf::zeroed(0),
             grad_buf: AlignedBuf::zeroed(0),
+        };
+        // The batch-lane kernels assume 64-byte arena bases (the paper's
+        // `_mm_malloc(…, 64)` discipline); mid-arena lane slices inherit
+        // whatever the plane stride gives them, so the assert belongs
+        // here, at allocation, not in the primitives.
+        #[cfg(debug_assertions)]
+        for (buf, what) in scratch
+            .acts
+            .iter()
+            .map(|a| (a, "acts"))
+            .chain([(&scratch.param_buf, "param_buf"), (&scratch.col, "im2col")])
+        {
+            debug_assert!(buf.is_aligned(), "{what} arena base must be 64-byte aligned");
         }
+        scratch
     }
 
     /// Stage one image into batch slot `slot` (for callers gathering
@@ -157,6 +192,8 @@ impl<'n> BatchPlan<'n> {
                     aux: &mut scratch.aux[l][..n * al],
                     rng: &mut scratch.rngs[l],
                     train: scratch.train_mode,
+                    math: scratch.math,
+                    col: &mut scratch.col[..],
                 },
             );
             if let (Some(t), Some(start)) = (timers, t0) {
@@ -244,6 +281,8 @@ impl<'n> BatchPlan<'n> {
                     aux: &mut scratch.aux[l][..n * al],
                     rng: &mut scratch.rngs[l],
                     train: scratch.train_mode,
+                    math: scratch.math,
+                    col: &mut scratch.col[..],
                 },
             );
             if pc > 0 {
@@ -274,7 +313,13 @@ pub struct BatchScratch {
     /// Whether forward/backward run as a training pass (dropout masks
     /// active).
     pub train_mode: bool,
+    /// Accumulation policy, copied from the plan that allocated this
+    /// scratch (the plan passes it to every op through `OpScratch`).
+    math: MathPolicy,
     param_buf: AlignedBuf,
+    /// Shared im2col staging panel (one sample, reused across the batch),
+    /// sized to the largest `LayerOp::im2col_len` in the stack.
+    col: AlignedBuf,
     delta_a: AlignedBuf,
     delta_b: AlignedBuf,
     grad_buf: AlignedBuf,
@@ -328,6 +373,7 @@ impl BatchScratch {
             ("delta_a", &self.delta_a),
             ("delta_b", &self.delta_b),
             ("grad_buf", &self.grad_buf),
+            ("im2col", &self.col),
         ] {
             extents.push(ArenaExtent {
                 name: name.to_string(),
@@ -453,6 +499,59 @@ mod tests {
         assert!(defects.is_empty(), "{defects:?}");
         // Per-op PRNG streams are the layer indices — pairwise distinct.
         assert_eq!(layout.rng_streams, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn im2col_arena_layout_matches_expected_extents() {
+        // Miri-sized: a strided/padded conv makes the plan allocate the
+        // shared im2col panel eagerly; the layout the aliasing verifier
+        // sees must size it exactly and keep it disjoint from every other
+        // arena. Geometry: side 4, k=3, stride 2, pad 1 → out_side 2, so
+        // the panel holds 1·3·3·2·2 = 36 elements.
+        let arch = ArchSpec {
+            name: "micro-general".into(),
+            layers: vec![
+                crate::config::LayerSpec::Input { side: 4 },
+                crate::config::LayerSpec::conv_ex(1, 3, 2, 1, crate::config::Act::Relu),
+                crate::config::LayerSpec::Output { classes: 2 },
+            ],
+            paper_epochs: 1,
+        };
+        let net = Network::new(arch);
+        let plan = BatchPlan::new(&net, 2).unwrap();
+        let mut scratch = plan.scratch_seeded(3);
+        scratch.ensure_backward_arenas(&net);
+        let layout = scratch.layout();
+        let col = layout.extents.iter().find(|e| e.name == "im2col").unwrap();
+        assert_eq!(col.len, 36);
+        let expected = crate::nn::audit::expected_extents(&net, 2);
+        let defects = crate::nn::audit::verify_arena_layout(&layout, &expected);
+        assert!(defects.is_empty(), "{defects:?}");
+    }
+
+    #[test]
+    fn fast_math_forward_stays_close_to_exact() {
+        // Same plan, both policies: fast math may reassociate, so outputs
+        // agree only to rounding — but must stay within a tight relative
+        // bound on softmax probabilities.
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(17);
+        let mut rng = Pcg32::seeded(29);
+        let il = net.dims[0].out_len();
+        let images: Vec<f32> = (0..4 * il).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let exact_plan = BatchPlan::new(&net, 4).unwrap();
+        let mut se = exact_plan.scratch();
+        let exact = exact_plan.forward(&params, &images, 4, &mut se, None).to_vec();
+        let fast_plan = BatchPlan::new(&net, 4).unwrap().with_math(MathPolicy::Fast);
+        assert_eq!(fast_plan.math(), MathPolicy::Fast);
+        let mut sf = fast_plan.scratch();
+        let fast = fast_plan.forward(&params, &images, 4, &mut sf, None);
+        for (i, (&e, &f)) in exact.iter().zip(fast.iter()).enumerate() {
+            assert!(
+                (e - f).abs() <= 1e-5 * (1.0 + e.abs()),
+                "probability {i} diverged: exact {e} vs fast {f}"
+            );
+        }
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! Layout: input/output activations are `[maps][side][side]` flat;
 //! weights are `[out_map][in_map][ky][kx]` flat, then `[out_map]` biases.
 
+use super::simd::MathPolicy;
+
 /// Geometry for one convolution.
 #[derive(Debug, Clone, Copy)]
 pub struct ConvShape {
@@ -89,10 +91,12 @@ pub fn conv_forward(
 }
 
 /// Batched forward convolution over `batch` samples laid out `[b][in_len]`
-/// → `[b][out_len]` — the weight-stationary variant of [`conv_forward`]:
-/// each kernel tap is loaded once per **batch** and swept across every
-/// sample's rows, so at batch ≥ 8 the weight traffic amortizes away and
-/// the inner saxpy rows stay contiguous for the auto-vectorizer.
+/// → `[b][out_len]` — the weight-stationary variant of [`conv_forward`]
+/// with the **batch as the SIMD lane axis**: each kernel tap is loaded once
+/// per batch and broadcast across every sample's rows via
+/// [`super::simd::lane_axpy`] (lane stride = one sample plane), so at
+/// batch ≥ 8 the weight traffic amortizes away and every lane's row stays
+/// contiguous for the auto-vectorizer.
 ///
 /// Bit-identity contract: every output element receives its additions in
 /// exactly the order of the per-sample kernel (bias, then `j → ky → kx`
@@ -128,20 +132,21 @@ pub fn conv_forward_batch(
             let wj = &wm[j * k * k..(j + 1) * k * k];
             for ky in 0..k {
                 for kx in 0..k {
-                    // One scalar weight, stationary across the whole batch.
+                    // One scalar weight, stationary across the whole batch:
+                    // each output row (y) is updated in every sample lane.
                     let w = wj[ky * k + kx];
-                    for b in 0..batch {
-                        let in_map =
-                            &inputs[b * in_len + j * imap_len..b * in_len + (j + 1) * imap_len];
-                        let out_map = &mut outs
-                            [b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len];
-                        for y in 0..os {
-                            let in_row = &in_map[(y + ky) * is + kx..(y + ky) * is + kx + os];
-                            let out_row = &mut out_map[y * os..y * os + os];
-                            for x in 0..os {
-                                out_row[x] += w * in_row[x];
-                            }
-                        }
+                    for y in 0..os {
+                        let src = j * imap_len + (y + ky) * is + kx;
+                        let dst = m * omap_len + y * os;
+                        super::simd::lane_axpy(
+                            &mut outs[dst..],
+                            out_len,
+                            &inputs[src..],
+                            in_len,
+                            os,
+                            batch,
+                            w,
+                        );
                     }
                 }
             }
@@ -412,6 +417,29 @@ impl ConvGeom {
     pub fn macs(&self) -> usize {
         self.out_len() * self.in_maps * self.kernel * self.kernel
     }
+
+    /// Scratch elements of one sample's im2col panel: one `out_side²`-long
+    /// row per receptive-column tap (`in_maps · k²` rows). The fast-math
+    /// general forward materializes this panel so the accumulation becomes
+    /// a contiguous saxpy per tap (GEMM-shaped); the `BatchScratch` arena
+    /// sized from this is accounted for in the dataflow audit.
+    pub fn im2col_len(&self) -> usize {
+        self.in_maps * self.kernel * self.kernel * self.out_side * self.out_side
+    }
+}
+
+/// Output positions `o` with a valid (non-padding) input under tap offset
+/// `kk`: `0 ≤ o·stride + kk − pad < in_side`, clamped to `0..out_side`.
+/// Returns `(lo, hi)` with `lo ≥ hi` meaning no valid position.
+#[inline]
+fn valid_range(kk: usize, pad: usize, stride: usize, in_side: usize, out_side: usize) -> (usize, usize) {
+    let lo = if kk >= pad { 0 } else { (pad - kk).div_ceil(stride) };
+    let hi = if in_side + pad < kk + 1 {
+        0
+    } else {
+        ((in_side + pad - kk - 1) / stride + 1).min(out_side)
+    };
+    (lo, hi)
 }
 
 /// General forward convolution (zero padding, arbitrary stride), producing
@@ -528,6 +556,214 @@ pub fn conv_backward_general(
                         }
                     }
                     gj[ky * k + kx] += acc;
+                }
+            }
+        }
+    }
+}
+
+/// Batched general forward convolution over `batch` samples — the
+/// tap-stationary replacement for a per-sample [`conv_forward_general`]
+/// loop. Two accumulation routes, selected by `math`:
+///
+/// * [`MathPolicy::Exact`]: interval-precomputed valid ranges replace the
+///   per-tap bounds checks, and every output element receives its taps in
+///   the per-sample order (`bias`, then `j → ky → kx`, padding skipped) —
+///   **bit-identical** to `batch` independent [`conv_forward_general`]
+///   calls.
+/// * [`MathPolicy::Fast`]: per sample, a zero-padded im2col panel is
+///   materialized in `col` (layout `[j·k² tap rows][out_side²]`, sized by
+///   [`ConvGeom::im2col_len`]) and each output map accumulates one
+///   contiguous saxpy per tap — a GEMM shape. Padding taps contribute
+///   explicit `w · 0.0` terms, so results agree with exact mode only to
+///   rounding (and `-0.0` sign bits may differ).
+pub fn conv_forward_general_batch(
+    g: &ConvGeom,
+    inputs: &[f32],
+    weights: &[f32],
+    biases: &[f32],
+    outs: &mut [f32],
+    batch: usize,
+    math: MathPolicy,
+    col: &mut [f32],
+) {
+    let in_len = g.in_len();
+    let out_len = g.out_len();
+    debug_assert_eq!(inputs.len(), batch * in_len);
+    debug_assert_eq!(weights.len(), g.weight_len());
+    debug_assert_eq!(biases.len(), g.out_maps);
+    debug_assert_eq!(outs.len(), batch * out_len);
+
+    let k = g.kernel;
+    let is = g.in_side;
+    let os = g.out_side;
+    let imap_len = is * is;
+    let omap_len = os * os;
+
+    if math == MathPolicy::Fast {
+        debug_assert!(col.len() >= g.im2col_len());
+        let taps = g.in_maps * k * k;
+        let col = &mut col[..taps * omap_len];
+        for b in 0..batch {
+            // Build this sample's panel. A shared col arena may hold another
+            // layer's (or sample's) stale values at this layer's padding
+            // positions, so the zero fill is not optional.
+            col.fill(0.0);
+            let input = &inputs[b * in_len..(b + 1) * in_len];
+            for j in 0..g.in_maps {
+                let in_map = &input[j * imap_len..(j + 1) * imap_len];
+                for ky in 0..k {
+                    let (oy_lo, oy_hi) = valid_range(ky, g.pad, g.stride, is, os);
+                    for kx in 0..k {
+                        let (ox_lo, ox_hi) = valid_range(kx, g.pad, g.stride, is, os);
+                        let c = (j * k + ky) * k + kx;
+                        let col_row = &mut col[c * omap_len..(c + 1) * omap_len];
+                        for oy in oy_lo..oy_hi {
+                            let iy = oy * g.stride + ky - g.pad;
+                            for ox in ox_lo..ox_hi {
+                                let ix = ox * g.stride + kx - g.pad;
+                                col_row[oy * os + ox] = in_map[iy * is + ix];
+                            }
+                        }
+                    }
+                }
+            }
+            // GEMM: out[m] = bias[m] + Σ_c w[m][c] · col[c].
+            let out = &mut outs[b * out_len..(b + 1) * out_len];
+            for m in 0..g.out_maps {
+                let out_map = &mut out[m * omap_len..(m + 1) * omap_len];
+                out_map.fill(biases[m]);
+                let wm = &weights[m * taps..(m + 1) * taps];
+                for (c, &w) in wm.iter().enumerate() {
+                    super::simd::saxpy(out_map, &col[c * omap_len..(c + 1) * omap_len], w);
+                }
+            }
+        }
+        return;
+    }
+
+    // Exact: tap-stationary sweep; the valid-output intervals skip exactly
+    // the padding taps the per-sample kernel's bounds checks skip, so the
+    // per-element addition chain is unchanged.
+    for m in 0..g.out_maps {
+        for b in 0..batch {
+            outs[b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len].fill(biases[m]);
+        }
+        let wm = &weights[m * g.in_maps * k * k..];
+        for j in 0..g.in_maps {
+            let wj = &wm[j * k * k..(j + 1) * k * k];
+            for ky in 0..k {
+                let (oy_lo, oy_hi) = valid_range(ky, g.pad, g.stride, is, os);
+                for kx in 0..k {
+                    let (ox_lo, ox_hi) = valid_range(kx, g.pad, g.stride, is, os);
+                    let w = wj[ky * k + kx];
+                    for b in 0..batch {
+                        let in_map =
+                            &inputs[b * in_len + j * imap_len..b * in_len + (j + 1) * imap_len];
+                        let out_map = &mut outs
+                            [b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len];
+                        for oy in oy_lo..oy_hi {
+                            let iy = oy * g.stride + ky - g.pad;
+                            let out_row = &mut out_map[oy * os..(oy + 1) * os];
+                            for ox in ox_lo..ox_hi {
+                                let ix = ox * g.stride + kx - g.pad;
+                                out_row[ox] += w * in_map[iy * is + ix];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Batched general backward convolution — the tap-stationary variant of
+/// [`conv_backward_general`], policy-independent (always exact): every
+/// gradient element receives its per-sample contributions in ascending
+/// sample order, each computed by the same scalar `(oy, ox)` chain as the
+/// per-sample kernel, so the result equals `batch` successive
+/// [`conv_backward_general`] calls sharing the gradient buffers bitwise.
+pub fn conv_backward_general_batch(
+    g: &ConvGeom,
+    inputs: &[f32],
+    weights: &[f32],
+    deltas: &[f32],
+    wgrads: &mut [f32],
+    bgrads: &mut [f32],
+    dinputs: &mut [f32],
+    batch: usize,
+) {
+    let in_len = g.in_len();
+    let out_len = g.out_len();
+    debug_assert_eq!(inputs.len(), batch * in_len);
+    debug_assert_eq!(weights.len(), g.weight_len());
+    debug_assert_eq!(deltas.len(), batch * out_len);
+    debug_assert_eq!(wgrads.len(), g.weight_len());
+    debug_assert_eq!(bgrads.len(), g.out_maps);
+    let want_dinput = !dinputs.is_empty();
+    if want_dinput {
+        debug_assert_eq!(dinputs.len(), batch * in_len);
+        dinputs.fill(0.0);
+    }
+
+    let k = g.kernel;
+    let is = g.in_side;
+    let os = g.out_side;
+    let imap_len = is * is;
+    let omap_len = os * os;
+
+    for m in 0..g.out_maps {
+        // Bias gradient: per-sample delta sums, added in sample order.
+        for b in 0..batch {
+            let d_map = &deltas[b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len];
+            let mut bsum = 0.0f32;
+            for &d in d_map {
+                bsum += d;
+            }
+            bgrads[m] += bsum;
+        }
+
+        let wm_base = m * g.in_maps * k * k;
+        for j in 0..g.in_maps {
+            for ky in 0..k {
+                let (oy_lo, oy_hi) = valid_range(ky, g.pad, g.stride, is, os);
+                for kx in 0..k {
+                    let (ox_lo, ox_hi) = valid_range(kx, g.pad, g.stride, is, os);
+                    let tap = wm_base + j * k * k + ky * k + kx;
+                    // One scalar weight and one gradient accumulator,
+                    // stationary across the whole batch.
+                    let w = weights[tap];
+                    let mut gacc = wgrads[tap];
+                    for b in 0..batch {
+                        let in_map =
+                            &inputs[b * in_len + j * imap_len..b * in_len + (j + 1) * imap_len];
+                        let d_map = &deltas
+                            [b * out_len + m * omap_len..b * out_len + (m + 1) * omap_len];
+                        let mut acc = 0.0f32;
+                        if want_dinput {
+                            let din_map = &mut dinputs
+                                [b * in_len + j * imap_len..b * in_len + (j + 1) * imap_len];
+                            for oy in oy_lo..oy_hi {
+                                let iy = oy * g.stride + ky - g.pad;
+                                for ox in ox_lo..ox_hi {
+                                    let ix = ox * g.stride + kx - g.pad;
+                                    let d = d_map[oy * os + ox];
+                                    acc += in_map[iy * is + ix] * d;
+                                    din_map[iy * is + ix] += w * d;
+                                }
+                            }
+                        } else {
+                            for oy in oy_lo..oy_hi {
+                                let iy = oy * g.stride + ky - g.pad;
+                                for ox in ox_lo..ox_hi {
+                                    let ix = ox * g.stride + kx - g.pad;
+                                    acc += in_map[iy * is + ix] * d_map[oy * os + ox];
+                                }
+                            }
+                        }
+                        gacc += acc;
+                    }
+                    wgrads[tap] = gacc;
                 }
             }
         }
@@ -855,6 +1091,144 @@ mod tests {
                 let mut bg_s = vec![0.0; s.out_maps];
                 conv_backward_batch(
                     s, inputs, weights, deltas, &mut wg_s, &mut bg_s, &mut [], *batch,
+                );
+                if wg_s != wg || bg_s != bg {
+                    return Err("grads diverge without dinput".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Random general (padded/strided) geometry + operands for the batched
+    /// general-kernel property tests.
+    fn rand_general_case(
+        rng: &mut Pcg32,
+        size: usize,
+    ) -> (ConvGeom, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, usize) {
+        loop {
+            let in_maps = rng.range(1, 3);
+            let out_maps = rng.range(1, 3);
+            let kernel = rng.range(1, 4.min(size + 1) + 1);
+            let in_side = 1 + rng.range(0, size + 3);
+            let stride = rng.range(1, 3);
+            let pad = rng.range(0, kernel);
+            if let Some(g) = ConvGeom::new(in_maps, in_side, out_maps, kernel, stride, pad) {
+                let batch = rng.range(1, 5);
+                let inputs = rand_vec(rng, batch * g.in_len());
+                let weights = rand_vec(rng, g.weight_len());
+                let biases = rand_vec(rng, g.out_maps);
+                let deltas = rand_vec(rng, batch * g.out_len());
+                return (g, inputs, weights, biases, deltas, batch);
+            }
+        }
+    }
+
+    #[test]
+    fn general_batched_forward_exact_bit_identical_to_per_sample() {
+        proptest::run(
+            proptest::Config { cases: 30, max_size: 6, ..Default::default() },
+            |rng, size| rand_general_case(rng, size),
+            |(g, inputs, weights, biases, _deltas, batch)| {
+                let mut batched = vec![0.0; batch * g.out_len()];
+                conv_forward_general_batch(
+                    g,
+                    inputs,
+                    weights,
+                    biases,
+                    &mut batched,
+                    *batch,
+                    MathPolicy::Exact,
+                    &mut [],
+                );
+                for b in 0..*batch {
+                    let mut single = vec![0.0; g.out_len()];
+                    let input = &inputs[b * g.in_len()..(b + 1) * g.in_len()];
+                    conv_forward_general(g, input, weights, biases, &mut single);
+                    if &batched[b * g.out_len()..(b + 1) * g.out_len()] != single.as_slice() {
+                        return Err(format!("sample {b} not bit-identical (geom {g:?})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn general_batched_forward_fast_matches_exact_to_rounding() {
+        proptest::run(
+            proptest::Config { cases: 30, max_size: 6, ..Default::default() },
+            |rng, size| rand_general_case(rng, size),
+            |(g, inputs, weights, biases, _deltas, batch)| {
+                let mut exact = vec![0.0; batch * g.out_len()];
+                conv_forward_general_batch(
+                    g,
+                    inputs,
+                    weights,
+                    biases,
+                    &mut exact,
+                    *batch,
+                    MathPolicy::Exact,
+                    &mut [],
+                );
+                // Poison the panel to prove the zero-fill handles reuse.
+                let mut col = vec![f32::NAN; g.im2col_len()];
+                let mut fast = vec![0.0; batch * g.out_len()];
+                conv_forward_general_batch(
+                    g,
+                    inputs,
+                    weights,
+                    biases,
+                    &mut fast,
+                    *batch,
+                    MathPolicy::Fast,
+                    &mut col,
+                );
+                proptest::check_close(&fast, &exact, 1e-5, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn general_batched_backward_bit_identical_to_per_sample() {
+        proptest::run(
+            proptest::Config { cases: 30, max_size: 6, ..Default::default() },
+            |rng, size| rand_general_case(rng, size),
+            |(g, inputs, weights, _biases, deltas, batch)| {
+                let mut wg_b = vec![0.0; g.weight_len()];
+                let mut bg_b = vec![0.0; g.out_maps];
+                let mut din_b = vec![0.0; batch * g.in_len()];
+                conv_backward_general_batch(
+                    g, inputs, weights, deltas, &mut wg_b, &mut bg_b, &mut din_b, *batch,
+                );
+                let mut wg = vec![0.0; g.weight_len()];
+                let mut bg = vec![0.0; g.out_maps];
+                let mut din = vec![0.0; batch * g.in_len()];
+                for b in 0..*batch {
+                    conv_backward_general(
+                        g,
+                        &inputs[b * g.in_len()..(b + 1) * g.in_len()],
+                        weights,
+                        &deltas[b * g.out_len()..(b + 1) * g.out_len()],
+                        &mut wg,
+                        &mut bg,
+                        &mut din[b * g.in_len()..(b + 1) * g.in_len()],
+                    );
+                }
+                if wg_b != wg {
+                    return Err("weight grads not bit-identical".to_string());
+                }
+                if bg_b != bg {
+                    return Err("bias grads not bit-identical".to_string());
+                }
+                if din_b != din {
+                    return Err("input deltas not bit-identical".to_string());
+                }
+                // The dinput-skipping path accumulates the same grads.
+                let mut wg_s = vec![0.0; g.weight_len()];
+                let mut bg_s = vec![0.0; g.out_maps];
+                conv_backward_general_batch(
+                    g, inputs, weights, deltas, &mut wg_s, &mut bg_s, &mut [], *batch,
                 );
                 if wg_s != wg || bg_s != bg {
                     return Err("grads diverge without dinput".to_string());

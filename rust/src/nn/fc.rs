@@ -5,6 +5,8 @@
 //! sequence of contiguous dot products and the backward input-gradient is a
 //! saxpy over the weight rows — both auto-vectorizable.
 
+use super::simd::{GEMM_KC, GEMM_MR};
+
 /// Geometry for one fully-connected layer.
 #[derive(Debug, Clone, Copy)]
 pub struct FcShape {
@@ -41,7 +43,8 @@ pub fn fc_forward(s: &FcShape, input: &[f32], weights: &[f32], biases: &[f32], o
 }
 
 /// Batched forward over `batch` samples laid out `[b][inputs]` →
-/// `[b][outputs]` — the weight-stationary variant of [`fc_forward`]: each
+/// `[b][outputs]` — the weight-stationary variant of [`fc_forward`] with
+/// the batch as the SIMD lane axis ([`super::simd::lane_dot`]): each
 /// weight row is loaded once per batch and dotted against every sample
 /// (row-stationary GEMV → GEMM), instead of streaming the whole weight
 /// matrix through the cache once per sample.
@@ -62,11 +65,50 @@ pub fn fc_forward_batch(
     debug_assert_eq!(outs.len(), batch * s.outputs);
     for n in 0..s.outputs {
         let row = &weights[n * s.inputs..(n + 1) * s.inputs];
-        let bias = biases[n];
-        for b in 0..batch {
-            let input = &inputs[b * s.inputs..(b + 1) * s.inputs];
-            outs[b * s.outputs + n] = super::simd::dot(row, input) + bias;
+        super::simd::lane_dot(row, inputs, s.inputs, batch, &mut outs[n..], s.outputs, biases[n]);
+    }
+}
+
+/// Cache-blocked batched forward ([`super::simd::MathPolicy::Fast`] route):
+/// the reduction axis is chunked into [`GEMM_KC`]-long panels and the
+/// weight rows register-blocked [`GEMM_MR`] at a time, so one k-panel of
+/// `MR` weight rows stays L1-resident while the batch streams past.
+/// Reassociates the reduction (bias hoisted out of the dot chain, panel
+/// partial sums added panel-by-panel), so results agree with
+/// [`fc_forward_batch`] only to rounding.
+pub fn fc_forward_batch_blocked(
+    s: &FcShape,
+    inputs: &[f32],
+    weights: &[f32],
+    biases: &[f32],
+    outs: &mut [f32],
+    batch: usize,
+) {
+    debug_assert_eq!(inputs.len(), batch * s.inputs);
+    debug_assert_eq!(weights.len(), s.weight_len());
+    debug_assert_eq!(biases.len(), s.outputs);
+    debug_assert_eq!(outs.len(), batch * s.outputs);
+    for b in 0..batch {
+        outs[b * s.outputs..(b + 1) * s.outputs].copy_from_slice(biases);
+    }
+    let mut k0 = 0;
+    while k0 < s.inputs {
+        let kc = GEMM_KC.min(s.inputs - k0);
+        let mut n0 = 0;
+        while n0 < s.outputs {
+            let mr = GEMM_MR.min(s.outputs - n0);
+            for b in 0..batch {
+                let x = &inputs[b * s.inputs + k0..b * s.inputs + k0 + kc];
+                let out = &mut outs[b * s.outputs + n0..b * s.outputs + n0 + mr];
+                for (r, o) in out.iter_mut().enumerate() {
+                    let n = n0 + r;
+                    let row = &weights[n * s.inputs + k0..n * s.inputs + k0 + kc];
+                    *o += super::simd::dot(row, x);
+                }
+            }
+            n0 += mr;
         }
+        k0 += kc;
     }
 }
 
@@ -112,14 +154,17 @@ pub fn fc_backward(
 /// Batched backward over `batch` samples (`inputs`/`dinputs` laid out
 /// `[b][inputs]`, `deltas` `[b][outputs]`) — the GEMM-shaped variant of
 /// [`fc_backward`]: the weight-gradient matrix accumulates the sum of
-/// per-sample outer products `Σ_b δ_b ⊗ x_b` row by row, with each weight
-/// row and its gradient row stationary while the batch streams past.
+/// per-sample outer products `Σ_b δ_b ⊗ x_b` row by row, cache-blocked
+/// along the input axis in [`GEMM_KC`]-long panels so each weight-row /
+/// gradient-row panel stays L1-resident while the batch streams past.
 /// `wgrads`/`bgrads` receive the **batch-summed** gradients; `dinputs` is
 /// overwritten per sample (empty slice to skip).
 ///
 /// Bit-identical to `batch` successive [`fc_backward`] calls sharing the
-/// gradient buffers: every gradient element receives its per-sample
-/// contributions in ascending sample order.
+/// gradient buffers under **every** math policy: each gradient element
+/// belongs to exactly one `(n, i)` pair, so k-blocking only reorders
+/// writes to *different* elements — every element still receives its
+/// per-sample contributions in ascending sample order.
 pub fn fc_backward_batch(
     s: &FcShape,
     inputs: &[f32],
@@ -140,23 +185,32 @@ pub fn fc_backward_batch(
         debug_assert_eq!(dinputs.len(), batch * s.inputs);
         dinputs.fill(0.0);
     }
-    for n in 0..s.outputs {
-        let wrow = &weights[n * s.inputs..(n + 1) * s.inputs];
-        let grow = &mut wgrads[n * s.inputs..(n + 1) * s.inputs];
-        for b in 0..batch {
-            let d = deltas[b * s.outputs + n];
-            bgrads[n] += d;
-            let input = &inputs[b * s.inputs..(b + 1) * s.inputs];
-            for i in 0..s.inputs {
-                grow[i] += d * input[i];
-            }
-            if want_dinput {
-                let dinp = &mut dinputs[b * s.inputs..(b + 1) * s.inputs];
-                for i in 0..s.inputs {
-                    dinp[i] += d * wrow[i];
+    let mut k0 = 0;
+    while k0 < s.inputs {
+        let kc = GEMM_KC.min(s.inputs - k0);
+        for n in 0..s.outputs {
+            let wrow = &weights[n * s.inputs + k0..n * s.inputs + k0 + kc];
+            let grow = &mut wgrads[n * s.inputs + k0..n * s.inputs + k0 + kc];
+            for b in 0..batch {
+                let d = deltas[b * s.outputs + n];
+                // The bias gradient has no k axis: charge it on the first
+                // panel only (still ascending sample order per n).
+                if k0 == 0 {
+                    bgrads[n] += d;
+                }
+                let input = &inputs[b * s.inputs + k0..b * s.inputs + k0 + kc];
+                for i in 0..kc {
+                    grow[i] += d * input[i];
+                }
+                if want_dinput {
+                    let dinp = &mut dinputs[b * s.inputs + k0..b * s.inputs + k0 + kc];
+                    for i in 0..kc {
+                        dinp[i] += d * wrow[i];
+                    }
                 }
             }
         }
+        k0 += kc;
     }
 }
 
@@ -245,6 +299,61 @@ mod tests {
         let mut rng = Pcg32::seeded(23);
         let s = FcShape::new(11, 6);
         let batch = 5;
+        let inputs: Vec<f32> = (0..batch * s.inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let weights: Vec<f32> = (0..s.weight_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let deltas: Vec<f32> = (0..batch * s.outputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut wg_b = vec![0.0; s.weight_len()];
+        let mut bg_b = vec![0.0; s.outputs];
+        let mut din_b = vec![0.0; batch * s.inputs];
+        fc_backward_batch(&s, &inputs, &weights, &deltas, &mut wg_b, &mut bg_b, &mut din_b, batch);
+        let mut wg = vec![0.0; s.weight_len()];
+        let mut bg = vec![0.0; s.outputs];
+        let mut din = vec![0.0; batch * s.inputs];
+        for b in 0..batch {
+            fc_backward(
+                &s,
+                &inputs[b * s.inputs..(b + 1) * s.inputs],
+                &weights,
+                &deltas[b * s.outputs..(b + 1) * s.outputs],
+                &mut wg,
+                &mut bg,
+                &mut din[b * s.inputs..(b + 1) * s.inputs],
+            );
+        }
+        assert_eq!(wg_b, wg);
+        assert_eq!(bg_b, bg);
+        assert_eq!(din_b, din);
+    }
+
+    #[test]
+    fn blocked_forward_matches_exact_to_rounding() {
+        let mut rng = Pcg32::seeded(29);
+        // inputs > GEMM_KC so the k-panel loop actually splits the
+        // reduction; outputs not a multiple of GEMM_MR for the edge block.
+        let s = FcShape::new(GEMM_KC + 45, 2 * GEMM_MR + 1);
+        let batch = 6;
+        let inputs: Vec<f32> = (0..batch * s.inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let weights: Vec<f32> = (0..s.weight_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let biases: Vec<f32> = (0..s.outputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut exact = vec![0.0; batch * s.outputs];
+        fc_forward_batch(&s, &inputs, &weights, &biases, &mut exact, batch);
+        let mut blocked = vec![0.0; batch * s.outputs];
+        fc_forward_batch_blocked(&s, &inputs, &weights, &biases, &mut blocked, batch);
+        for (i, (e, f)) in exact.iter().zip(&blocked).enumerate() {
+            assert!(
+                (e - f).abs() < 1e-4 * (1.0 + e.abs()),
+                "out[{i}]: exact {e} vs blocked {f}"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_k_blocking_bit_identical_across_panel_boundary() {
+        let mut rng = Pcg32::seeded(31);
+        // inputs > GEMM_KC: the per-element sample order must survive the
+        // panel split bitwise.
+        let s = FcShape::new(GEMM_KC + 13, 3);
+        let batch = 4;
         let inputs: Vec<f32> = (0..batch * s.inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let weights: Vec<f32> = (0..s.weight_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let deltas: Vec<f32> = (0..batch * s.outputs).map(|_| rng.uniform(-1.0, 1.0)).collect();

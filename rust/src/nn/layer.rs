@@ -35,6 +35,7 @@ use super::conv::{conv_backward, conv_backward_general, conv_forward, conv_forwa
 use super::dims::LayerDims;
 use super::fc::{fc_backward, fc_forward, FcShape};
 use super::pool::{avg_pool_backward, avg_pool_forward, pool_backward, pool_forward, PoolShape};
+use super::simd::MathPolicy;
 use crate::config::{Act, ArchSpec, LayerSpec};
 use crate::util::timer::LayerClass;
 use crate::util::{Json, Pcg32};
@@ -85,10 +86,17 @@ pub struct LayerCtx<'a> {
 /// words (pool switches, dropout masks — sized by [`LayerOp::aux_len`]),
 /// this layer's thread-private PRNG, and whether the pass is a training
 /// pass (dropout is identity outside training).
+///
+/// Batched passes additionally carry the accumulation policy ([`MathPolicy`]
+/// — per-sample kernels are always exact and ignore it) and the shared
+/// im2col scratch panel `col`, sized by the plan to the largest
+/// [`LayerOp::im2col_len`] in the stack (empty when no op asks for one).
 pub struct OpScratch<'a> {
     pub aux: &'a mut [u32],
     pub rng: &'a mut Pcg32,
     pub train: bool,
+    pub math: MathPolicy,
+    pub col: &'a mut [f32],
 }
 
 /// The stored activations an op may consult during backward: its forward
@@ -133,6 +141,16 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
 
     /// Auxiliary `u32` words this op needs in the per-worker scratch.
     fn aux_len(&self) -> usize {
+        0
+    }
+
+    /// `f32` elements of im2col panel scratch this op's batched kernels
+    /// want under [`MathPolicy::Fast`] (zero for ops without an im2col
+    /// route). The batch plan allocates one shared panel sized to the
+    /// stack-wide maximum and hands it to every op through
+    /// [`OpScratch::col`]; the arena is accounted for in
+    /// `BatchScratch::layout()` so the dataflow audit covers it.
+    fn im2col_len(&self) -> usize {
         0
     }
 
@@ -183,6 +201,8 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
                 aux: &mut scratch.aux[b * al..(b + 1) * al],
                 rng: &mut *scratch.rng,
                 train: scratch.train,
+                math: scratch.math,
+                col: &mut *scratch.col,
             };
             self.forward(params, &inputs[b * il..(b + 1) * il], &mut outs[b * ol..(b + 1) * ol], &mut per);
         }
@@ -245,6 +265,8 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
                 aux: &mut scratch.aux[b * al..(b + 1) * al],
                 rng: &mut *scratch.rng,
                 train: scratch.train,
+                math: scratch.math,
+                col: &mut *scratch.col,
             };
             self.backward(
                 params,
@@ -668,25 +690,25 @@ impl LayerOp for ConvOp {
         inputs: &[f32],
         outs: &mut [f32],
         batch: usize,
-        _: &mut OpScratch<'_>,
+        scratch: &mut OpScratch<'_>,
     ) {
         let (w, b) = params.split_at(self.weights);
         if self.geom.is_plain() {
             super::conv::conv_forward_batch(&self.geom.as_plain(), inputs, w, b, outs, batch);
         } else {
-            // Padded/strided path: the general kernel is gather-heavy, so
-            // batching buys only the amortized param load — tile it.
-            let il = self.geom.in_len();
-            let ol = self.geom.out_len();
-            for s in 0..batch {
-                conv_forward_general(
-                    &self.geom,
-                    &inputs[s * il..(s + 1) * il],
-                    w,
-                    b,
-                    &mut outs[s * ol..(s + 1) * ol],
-                );
-            }
+            // Padded/strided path: tap-stationary batched kernel; under
+            // MathPolicy::Fast it stages each sample through the shared
+            // im2col panel in scratch.col.
+            super::conv::conv_forward_general_batch(
+                &self.geom,
+                inputs,
+                w,
+                b,
+                outs,
+                batch,
+                scratch.math,
+                scratch.col,
+            );
         }
         // Elementwise activation over the whole [batch][out_len] block.
         self.act.apply(outs);
@@ -738,24 +760,26 @@ impl LayerOp for ConvOp {
                 batch,
             );
         } else {
-            // Padded/strided path: gather-heavy, so batching buys only the
-            // amortized param load — tile it (mirrors forward_batch).
-            let il = self.geom.in_len();
-            let ol = self.geom.out_len();
-            let skip_din = deltas_in.is_empty();
-            for s in 0..batch {
-                let din: &mut [f32] =
-                    if skip_din { &mut [] } else { &mut deltas_in[s * il..(s + 1) * il] };
-                conv_backward_general(
-                    &self.geom,
-                    &acts.inputs[s * il..(s + 1) * il],
-                    w,
-                    &deltas_out[s * ol..(s + 1) * ol],
-                    wg,
-                    bg,
-                    din,
-                );
-            }
+            // Padded/strided path: tap-stationary batched kernel
+            // (policy-independent — backward is exact under every policy).
+            super::conv::conv_backward_general_batch(
+                &self.geom,
+                acts.inputs,
+                w,
+                deltas_out,
+                wg,
+                bg,
+                deltas_in,
+                batch,
+            );
+        }
+    }
+
+    fn im2col_len(&self) -> usize {
+        if self.geom.is_plain() {
+            0
+        } else {
+            self.geom.im2col_len()
         }
     }
 
@@ -765,9 +789,9 @@ impl LayerOp for ConvOp {
             // kernels (conv_forward_batch / conv_backward_batch).
             Dispatch::uniform(KernelPath::VectorizedPlain)
         } else {
-            // Padded/strided geometry tiles the gather-heavy general kernel
-            // per sample — flagged as the SIMD work-list entry.
-            Dispatch::uniform(KernelPath::GeneralFallback)
+            // Padded/strided geometry runs the tap-stationary batched
+            // kernels, with the im2col+GEMM staging route under fast math.
+            Dispatch::uniform(KernelPath::Im2colGemm)
         }
     }
 
@@ -938,9 +962,10 @@ impl LayerOp for MaxPoolOp {
     }
 
     fn dispatch(&self) -> Dispatch {
-        // Batch kernels tile the per-sample window sweep (parameter-free,
+        // Window-stationary batch kernels: each pool window's geometry is
+        // computed once and swept across the batch lanes (parameter-free,
         // so there is no weight-stationarity to exploit).
-        Dispatch::uniform(KernelPath::TiledPerSample)
+        Dispatch::uniform(KernelPath::BatchLane)
     }
 
     fn cost(&self) -> OpCost {
@@ -1075,7 +1100,7 @@ impl LayerOp for AvgPoolOp {
     }
 
     fn dispatch(&self) -> Dispatch {
-        Dispatch::uniform(KernelPath::TiledPerSample)
+        Dispatch::uniform(KernelPath::BatchLane)
     }
 
     fn cost(&self) -> OpCost {
@@ -1270,10 +1295,17 @@ impl LayerOp for FcOp {
         inputs: &[f32],
         outs: &mut [f32],
         batch: usize,
-        _: &mut OpScratch<'_>,
+        scratch: &mut OpScratch<'_>,
     ) {
         let (w, b) = params.split_at(self.weights);
-        super::fc::fc_forward_batch(&self.shape, inputs, w, b, outs, batch);
+        match scratch.math {
+            MathPolicy::Exact => {
+                super::fc::fc_forward_batch(&self.shape, inputs, w, b, outs, batch)
+            }
+            MathPolicy::Fast => {
+                super::fc::fc_forward_batch_blocked(&self.shape, inputs, w, b, outs, batch)
+            }
+        }
         if self.output_softmax {
             // Softmax normalizes per sample, never across the batch.
             for row in outs.chunks_exact_mut(self.shape.outputs) {
@@ -1332,9 +1364,11 @@ impl LayerOp for FcOp {
     }
 
     fn dispatch(&self) -> Dispatch {
-        // Both passes run the weight-stationary batched GEMV kernels
-        // (params loaded once per batch, samples streamed through).
-        Dispatch::uniform(KernelPath::WeightStationary)
+        // Both passes run weight-stationary GEMM-shaped batch kernels:
+        // forward is batch-lane dotted (exact) or KC/MR cache-blocked
+        // (fast), backward is k-panel blocked unconditionally (bit-exact
+        // either way — each gradient element has a single owner).
+        Dispatch::uniform(KernelPath::BlockedGemm)
     }
 
     fn cost(&self) -> OpCost {
@@ -1466,17 +1500,16 @@ impl LayerOp for DropoutOp {
             outs.copy_from_slice(inputs);
             return;
         }
-        // Train mode: loop the per-sample kernel (like the trait default)
-        // so the mask logic exists exactly once; draws advance the shared
-        // stream sample-by-sample, same as B successive forwards.
-        let len = self.shape.len();
-        for b in 0..batch {
-            let mut per = OpScratch {
-                aux: &mut scratch.aux[b * len..(b + 1) * len],
-                rng: &mut *scratch.rng,
-                train: scratch.train,
-            };
-            self.forward(&[], &inputs[b * len..(b + 1) * len], &mut outs[b * len..(b + 1) * len], &mut per);
+        // Train mode: one flat sweep over the [batch][len] block. The
+        // per-sample kernel draws one uniform per element in b-major
+        // elementwise order — exactly this sweep's order — so the mask
+        // stream (and therefore the output) is bit-identical to `batch`
+        // successive per-sample forwards sharing the PRNG.
+        debug_assert_eq!(inputs.len(), batch * self.shape.len());
+        for ((o, &x), m) in outs.iter_mut().zip(inputs).zip(scratch.aux.iter_mut()) {
+            let keep = scratch.rng.next_f32() >= self.rate;
+            *m = keep as u32;
+            *o = if keep { x * self.keep_scale } else { 0.0 };
         }
     }
 
@@ -1529,13 +1562,10 @@ impl LayerOp for DropoutOp {
     }
 
     fn dispatch(&self) -> Dispatch {
-        Dispatch {
-            // Forward draws masks sample-by-sample from the worker PRNG
-            // (bit-parity with successive per-sample calls forces the
-            // loop); backward replays the stored masks in one flat sweep.
-            forward: KernelPath::PerSampleLoop,
-            backward: KernelPath::BlockElementwise,
-        }
+        // Both passes are one flat elementwise sweep over the
+        // [batch][len] block; forward's b-major mask draws match the
+        // per-sample PRNG order, so the sweep keeps bit-parity.
+        Dispatch::uniform(KernelPath::BlockElementwise)
     }
 
     fn cost(&self) -> OpCost {

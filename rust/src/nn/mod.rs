@@ -29,3 +29,4 @@ pub use batch::{BatchPlan, BatchScratch};
 pub use dims::{compute_dims, total_params, LayerDims};
 pub use layer::{Acts, BatchActs, LayerCtx, LayerKind, LayerOp, OpScratch, Shape};
 pub use network::{Network, ParamSource, Scratch};
+pub use simd::MathPolicy;

@@ -16,6 +16,7 @@
 use super::activation::cross_entropy;
 use super::dims::{total_params, try_compute_dims, LayerDims};
 use super::layer::{Acts, LayerOp, OpScratch};
+use super::simd::MathPolicy;
 use crate::config::ArchSpec;
 use crate::util::timer::LayerTimes;
 use crate::util::Pcg32;
@@ -185,6 +186,10 @@ impl Network {
                     aux: &mut scratch.aux[l],
                     rng: &mut scratch.rngs[l],
                     train: scratch.train_mode,
+                    // Per-sample kernels are the exact reference order and
+                    // never stage through an im2col panel.
+                    math: MathPolicy::Exact,
+                    col: &mut [],
                 },
             );
             if let (Some(t), Some(start)) = (timers, t0) {
@@ -257,6 +262,8 @@ impl Network {
                     aux: &mut scratch.aux[l],
                     rng: &mut scratch.rngs[l],
                     train: scratch.train_mode,
+                    math: MathPolicy::Exact,
+                    col: &mut [],
                 },
             );
             if pc > 0 {

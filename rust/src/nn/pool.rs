@@ -77,9 +77,13 @@ pub fn pool_forward(s: &PoolShape, input: &[f32], out: &mut [f32], switches: &mu
 /// Batched forward max-pool over samples laid out `[b][in_len]` →
 /// `[b][out_len]`, `switches` laid out `[b][out_len]`. Each sample's
 /// switches hold flat indices into *that sample's* input (the per-sample
-/// convention), so backward routing per sample is unchanged. Pooling has no
-/// parameters — the batched win is scratch/arena reuse, so this simply
-/// tiles the per-sample kernel.
+/// convention), so backward routing per sample is unchanged.
+///
+/// Batch-lane sweep: the window geometry (indices, bounds) is computed
+/// once per output element and reused across every sample lane, instead of
+/// re-deriving it per sample. Samples are independent and each window is
+/// scanned in the per-sample `ky → kx` order, so outputs and argmax ties
+/// are bit-identical to tiled per-sample calls.
 pub fn pool_forward_batch(
     s: &PoolShape,
     inputs: &[f32],
@@ -92,13 +96,38 @@ pub fn pool_forward_batch(
     debug_assert_eq!(inputs.len(), batch * in_len);
     debug_assert_eq!(outs.len(), batch * out_len);
     debug_assert_eq!(switches.len(), batch * out_len);
-    for b in 0..batch {
-        pool_forward(
-            s,
-            &inputs[b * in_len..(b + 1) * in_len],
-            &mut outs[b * out_len..(b + 1) * out_len],
-            &mut switches[b * out_len..(b + 1) * out_len],
-        );
+
+    let k = s.kernel;
+    let is = s.in_side;
+    let os = s.out_side;
+    let imap = is * is;
+    let omap = os * os;
+
+    for m in 0..s.maps {
+        for oy in 0..os {
+            for ox in 0..os {
+                let o = m * omap + oy * os + ox;
+                let win = (oy * k) * is + ox * k;
+                for b in 0..batch {
+                    let in_map = &inputs[b * in_len + m * imap..b * in_len + (m + 1) * imap];
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0u32;
+                    for ky in 0..k {
+                        let row = win + ky * is;
+                        for kx in 0..k {
+                            let idx = row + kx;
+                            let v = in_map[idx];
+                            if v > best {
+                                best = v;
+                                best_idx = (m * imap + idx) as u32;
+                            }
+                        }
+                    }
+                    outs[b * out_len + o] = best;
+                    switches[b * out_len + o] = best_idx;
+                }
+            }
+        }
     }
 }
 
@@ -116,8 +145,10 @@ pub fn pool_backward(s: &PoolShape, delta: &[f32], switches: &[u32], dinput: &mu
 
 /// Batched backward max-pool (`deltas`/`switches` laid out `[b][out_len]`,
 /// `dinputs` `[b][in_len]`, each sample's switches indexing into its own
-/// input — see [`pool_forward_batch`]). Routing is per-sample independent,
-/// so this tiles the per-sample kernel; the batched win is arena reuse.
+/// input — see [`pool_forward_batch`]). Output-element-outer, sample-inner
+/// sweep; windows tile the input disjointly (≤ 1 delta per input element),
+/// so the routing order cannot change the result and the batch stays
+/// bit-identical to tiled per-sample calls.
 pub fn pool_backward_batch(
     s: &PoolShape,
     deltas: &[f32],
@@ -130,13 +161,12 @@ pub fn pool_backward_batch(
     debug_assert_eq!(deltas.len(), batch * out_len);
     debug_assert_eq!(switches.len(), batch * out_len);
     debug_assert_eq!(dinputs.len(), batch * in_len);
-    for b in 0..batch {
-        pool_backward(
-            s,
-            &deltas[b * out_len..(b + 1) * out_len],
-            &switches[b * out_len..(b + 1) * out_len],
-            &mut dinputs[b * in_len..(b + 1) * in_len],
-        );
+    dinputs.fill(0.0);
+    for o in 0..out_len {
+        for b in 0..batch {
+            let d = deltas[b * out_len + o];
+            dinputs[b * in_len + switches[b * out_len + o] as usize] += d;
+        }
     }
 }
 
@@ -170,18 +200,40 @@ pub fn avg_pool_forward(s: &PoolShape, input: &[f32], out: &mut [f32]) {
 }
 
 /// Batched forward average-pool (`[b][in_len]` → `[b][out_len]`); see
-/// [`pool_forward_batch`] for the layout convention.
+/// [`pool_forward_batch`] for the layout and batch-lane conventions. Each
+/// window sum uses the per-sample `ky → kx` order → bit-identical to tiled
+/// per-sample calls.
 pub fn avg_pool_forward_batch(s: &PoolShape, inputs: &[f32], outs: &mut [f32], batch: usize) {
     let in_len = s.in_len();
     let out_len = s.out_len();
     debug_assert_eq!(inputs.len(), batch * in_len);
     debug_assert_eq!(outs.len(), batch * out_len);
-    for b in 0..batch {
-        avg_pool_forward(
-            s,
-            &inputs[b * in_len..(b + 1) * in_len],
-            &mut outs[b * out_len..(b + 1) * out_len],
-        );
+
+    let k = s.kernel;
+    let is = s.in_side;
+    let os = s.out_side;
+    let imap = is * is;
+    let omap = os * os;
+    let inv = 1.0 / (k * k) as f32;
+
+    for m in 0..s.maps {
+        for oy in 0..os {
+            for ox in 0..os {
+                let o = m * omap + oy * os + ox;
+                let win = (oy * k) * is + ox * k;
+                for b in 0..batch {
+                    let in_map = &inputs[b * in_len + m * imap..b * in_len + (m + 1) * imap];
+                    let mut sum = 0.0f32;
+                    for ky in 0..k {
+                        let row = win + ky * is;
+                        for kx in 0..k {
+                            sum += in_map[row + kx];
+                        }
+                    }
+                    outs[b * out_len + o] = sum * inv;
+                }
+            }
+        }
     }
 }
 
@@ -216,18 +268,40 @@ pub fn avg_pool_backward(s: &PoolShape, delta: &[f32], dinput: &mut [f32]) {
 }
 
 /// Batched backward average-pool (`deltas` `[b][out_len]` → `dinputs`
-/// `[b][in_len]`); tiles the per-sample kernel like [`pool_backward_batch`].
+/// `[b][in_len]`); window-stationary, sample-inner like
+/// [`pool_backward_batch`] — disjoint windows keep it bit-identical to
+/// tiled per-sample calls.
 pub fn avg_pool_backward_batch(s: &PoolShape, deltas: &[f32], dinputs: &mut [f32], batch: usize) {
     let in_len = s.in_len();
     let out_len = s.out_len();
     debug_assert_eq!(deltas.len(), batch * out_len);
     debug_assert_eq!(dinputs.len(), batch * in_len);
-    for b in 0..batch {
-        avg_pool_backward(
-            s,
-            &deltas[b * out_len..(b + 1) * out_len],
-            &mut dinputs[b * in_len..(b + 1) * in_len],
-        );
+
+    let k = s.kernel;
+    let is = s.in_side;
+    let os = s.out_side;
+    let imap = is * is;
+    let omap = os * os;
+    let inv = 1.0 / (k * k) as f32;
+
+    dinputs.fill(0.0);
+    for m in 0..s.maps {
+        for oy in 0..os {
+            for ox in 0..os {
+                let o = m * omap + oy * os + ox;
+                let win = m * imap + (oy * k) * is + ox * k;
+                for b in 0..batch {
+                    let d = deltas[b * out_len + o] * inv;
+                    let base = b * in_len + win;
+                    for ky in 0..k {
+                        let row = base + ky * is;
+                        for kx in 0..k {
+                            dinputs[row + kx] += d;
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -388,6 +462,51 @@ mod tests {
         let mut out = vec![0.0; 18];
         avg_pool_forward(&s, &input, &mut out);
         assert_eq!(out, input);
+    }
+
+    #[test]
+    fn batched_pools_bit_identical_to_per_sample() {
+        let mut rng = Pcg32::seeded(7);
+        for (maps, in_side, kernel) in [(3, 6, 2), (2, 9, 3), (1, 4, 1)] {
+            let s = PoolShape::new(maps, in_side, kernel);
+            let batch = 4;
+            let inputs: Vec<f32> =
+                (0..batch * s.in_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let deltas: Vec<f32> =
+                (0..batch * s.out_len()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+            let mut outs_b = vec![0.0; batch * s.out_len()];
+            let mut sw_b = vec![0u32; batch * s.out_len()];
+            pool_forward_batch(&s, &inputs, &mut outs_b, &mut sw_b, batch);
+            let mut din_b = vec![0.0; batch * s.in_len()];
+            pool_backward_batch(&s, &deltas, &sw_b, &mut din_b, batch);
+            let mut avg_b = vec![0.0; batch * s.out_len()];
+            avg_pool_forward_batch(&s, &inputs, &mut avg_b, batch);
+            let mut avg_din_b = vec![0.0; batch * s.in_len()];
+            avg_pool_backward_batch(&s, &deltas, &mut avg_din_b, batch);
+
+            for b in 0..batch {
+                let input = &inputs[b * s.in_len()..(b + 1) * s.in_len()];
+                let delta = &deltas[b * s.out_len()..(b + 1) * s.out_len()];
+                let mut out = vec![0.0; s.out_len()];
+                let mut sw = vec![0u32; s.out_len()];
+                pool_forward(&s, input, &mut out, &mut sw);
+                assert_eq!(&outs_b[b * s.out_len()..(b + 1) * s.out_len()], out.as_slice());
+                assert_eq!(&sw_b[b * s.out_len()..(b + 1) * s.out_len()], sw.as_slice());
+                let mut din = vec![0.0; s.in_len()];
+                pool_backward(&s, delta, &sw, &mut din);
+                assert_eq!(&din_b[b * s.in_len()..(b + 1) * s.in_len()], din.as_slice());
+                let mut avg = vec![0.0; s.out_len()];
+                avg_pool_forward(&s, input, &mut avg);
+                assert_eq!(&avg_b[b * s.out_len()..(b + 1) * s.out_len()], avg.as_slice());
+                let mut avg_din = vec![0.0; s.in_len()];
+                avg_pool_backward(&s, delta, &mut avg_din);
+                assert_eq!(
+                    &avg_din_b[b * s.in_len()..(b + 1) * s.in_len()],
+                    avg_din.as_slice()
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,87 @@
 //! Vector-friendly primitives for the hot loops.
 //!
+//! # Scalar-lane reductions
+//!
 //! Rust/LLVM will not reassociate floating-point reductions, so a naive
 //! `acc += a[i] * b[i]` dot product is a *scalar* dependency chain even at
 //! opt-level 3. Splitting the accumulator into 8 independent lanes lets
 //! the auto-vectorizer emit packed mul/add — the same transformation the
 //! paper's `#pragma omp simd` performed on the Phi's 512-bit VPU
 //! (§Perf iteration 3 in EXPERIMENTS.md measures the win).
+//!
+//! # Batch-lane layout
+//!
+//! Batched activations live in `[b][plane]` arenas (`AlignedBuf`, 64-byte
+//! base alignment, debug-asserted where the arenas are allocated in
+//! `BatchPlan::scratch_seeded`): sample `b`'s plane starts `b * plane_len`
+//! elements into the arena. The batch-lane primitives [`lane_axpy`] and
+//! [`lane_dot`] treat the **batch dimension as the SIMD lane axis**: one
+//! weight tap (or one weight row) is loaded once and broadcast against
+//! `lanes` samples sitting at a fixed element stride, so the weight traffic
+//! is amortized over the whole batch while each lane's row stays a
+//! contiguous, unit-stride — and therefore vectorizable — span.
+//!
+//! # Reassociation contract ([`MathPolicy`])
+//!
+//! f32 addition is not associative, so kernel blocking is a semantic
+//! choice, not just a perf one:
+//!
+//! - [`MathPolicy::Exact`] (the default): every batched kernel preserves
+//!   the per-sample, per-element accumulation order of the scalar
+//!   reference kernels. Batched results are **bit-identical** to
+//!   successive per-sample calls — the property the batch bit-identity
+//!   suites pin (`rust/tests/batch_forward.rs`, `batch_backward.rs`).
+//! - [`MathPolicy::Fast`]: kernels may reassociate — chunk the reduction
+//!   axis into [`GEMM_KC`]-long blocks, hoist biases out of the dot chain,
+//!   or materialize zero-padded im2col panels whose padding taps
+//!   contribute exact-zero terms. Results agree with exact mode only to
+//!   rounding (the `MathPolicy` property tests bound the per-element
+//!   relative error), in exchange for cache-blocked GEMM shapes.
+//!
+//! The tile constants [`GEMM_KC`] / [`GEMM_MR`] are `pub` so the static
+//! cost model in `nn::audit` can report the blocking it prices.
+
+/// GEMM cache block along the reduction (k) axis: 256 f32 = 1 KiB per
+/// panel row, so an MR-row weight panel plus one sample row stay resident
+/// in a 32 KiB L1 while the batch streams past.
+pub const GEMM_KC: usize = 256;
+
+/// Register-block height of the fc micro-kernel: weight rows processed
+/// per k-panel, each holding an independent accumulator (fits the 16
+/// logical registers of x86-64 without spilling).
+pub const GEMM_MR: usize = 4;
+
+/// Accumulation-order policy for the batched kernels (see the module docs
+/// for the full contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MathPolicy {
+    /// Preserve the per-sample accumulation order: batched results are
+    /// bit-identical to successive per-sample kernel calls.
+    #[default]
+    Exact,
+    /// Allow reassociation (k-blocking, bias hoisting, zero-padded im2col
+    /// panels) for better cache behaviour; results agree with `Exact`
+    /// only to rounding.
+    Fast,
+}
+
+impl MathPolicy {
+    /// Parse a CLI-facing policy name (`exact` | `fast`).
+    pub fn parse(s: &str) -> anyhow::Result<MathPolicy> {
+        match s {
+            "exact" => Ok(MathPolicy::Exact),
+            "fast" => Ok(MathPolicy::Fast),
+            other => anyhow::bail!("unknown math policy '{other}' (expected exact|fast)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MathPolicy::Exact => "exact",
+            MathPolicy::Fast => "fast",
+        }
+    }
+}
 
 /// Dot product with 8 independent accumulator lanes (4-lane pass over the
 /// remainder, scalar only for the last ≤3 elements — the large network's
@@ -53,6 +129,59 @@ pub fn saxpy(dst: &mut [f32], src: &[f32], w: f32) {
     }
 }
 
+/// Batch-lane saxpy: `dst[l·dst_stride..][..row] += w · src[l·src_stride..][..row]`
+/// for each lane `l < lanes`. One weight tap, broadcast against `lanes`
+/// samples; each lane's row is a contiguous unit-stride span, so the inner
+/// loop vectorizes while the tap load is amortized over the batch.
+///
+/// Element-disjoint across lanes, so lane order does not affect the
+/// result: bit-identical to per-lane [`saxpy`] calls in any order.
+#[inline]
+pub fn lane_axpy(
+    dst: &mut [f32],
+    dst_stride: usize,
+    src: &[f32],
+    src_stride: usize,
+    row: usize,
+    lanes: usize,
+    w: f32,
+) {
+    debug_assert!(lanes > 0 && row > 0);
+    debug_assert!(dst.len() >= (lanes - 1) * dst_stride + row);
+    debug_assert!(src.len() >= (lanes - 1) * src_stride + row);
+    for l in 0..lanes {
+        let d = &mut dst[l * dst_stride..l * dst_stride + row];
+        let s = &src[l * src_stride..l * src_stride + row];
+        for (di, &si) in d.iter_mut().zip(s) {
+            *di += w * si;
+        }
+    }
+}
+
+/// Batch-lane dot: `outs[l·out_stride] = dot(row, xs[l·x_stride..][..row.len()]) + bias`
+/// for each lane `l < lanes`. One weight row, dotted against `lanes`
+/// samples — the weight-stationary fc forward with the batch as the lane
+/// axis. Uses the same [`dot`] reduction per lane, so each output element
+/// is bit-identical to the per-sample kernel's.
+#[inline]
+pub fn lane_dot(
+    row: &[f32],
+    xs: &[f32],
+    x_stride: usize,
+    lanes: usize,
+    outs: &mut [f32],
+    out_stride: usize,
+    bias: f32,
+) {
+    debug_assert!(lanes > 0);
+    debug_assert!(xs.len() >= (lanes - 1) * x_stride + row.len());
+    debug_assert!(outs.len() >= (lanes - 1) * out_stride + 1);
+    for l in 0..lanes {
+        let x = &xs[l * x_stride..l * x_stride + row.len()];
+        outs[l * out_stride] = dot(row, x) + bias;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,5 +213,46 @@ mod tests {
             *e += 0.5 * s;
         }
         assert_eq!(dst, expect);
+    }
+
+    #[test]
+    fn lane_axpy_bit_identical_to_per_lane_saxpy() {
+        let mut rng = Pcg32::seeded(3);
+        let (lanes, row, stride) = (5usize, 9usize, 14usize);
+        let src: Vec<f32> =
+            (0..(lanes - 1) * stride + row).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut dst: Vec<f32> =
+            (0..(lanes - 1) * stride + row).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut expect = dst.clone();
+        lane_axpy(&mut dst, stride, &src, stride, row, lanes, 0.75);
+        for l in 0..lanes {
+            saxpy(&mut expect[l * stride..l * stride + row], &src[l * stride..l * stride + row], 0.75);
+        }
+        assert_eq!(dst, expect);
+    }
+
+    #[test]
+    fn lane_dot_bit_identical_to_per_lane_dot() {
+        let mut rng = Pcg32::seeded(4);
+        let (lanes, n, x_stride, out_stride) = (4usize, 23usize, 30usize, 3usize);
+        let row: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let xs: Vec<f32> =
+            (0..(lanes - 1) * x_stride + n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut outs = vec![0.0f32; (lanes - 1) * out_stride + 1];
+        lane_dot(&row, &xs, x_stride, lanes, &mut outs, out_stride, 0.25);
+        for l in 0..lanes {
+            let expect = dot(&row, &xs[l * x_stride..l * x_stride + n]) + 0.25;
+            assert_eq!(outs[l * out_stride].to_bits(), expect.to_bits(), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn math_policy_parses_and_names() {
+        assert_eq!(MathPolicy::parse("exact").unwrap(), MathPolicy::Exact);
+        assert_eq!(MathPolicy::parse("fast").unwrap(), MathPolicy::Fast);
+        assert!(MathPolicy::parse("sloppy").is_err());
+        assert_eq!(MathPolicy::default(), MathPolicy::Exact);
+        assert_eq!(MathPolicy::Exact.name(), "exact");
+        assert_eq!(MathPolicy::Fast.name(), "fast");
     }
 }

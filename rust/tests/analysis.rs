@@ -251,6 +251,7 @@ mod race_check {
                     seed: 7,
                     validation_fraction: 0.25,
                     eval_batch: 32,
+                    ..TrainConfig::default()
                 })
                 .policy_boxed(policy::from_name(name).unwrap())
                 .run(&train, &test)

@@ -68,7 +68,10 @@ fn shipped_architectures_audit_clean() {
 
         let kernels = audit_dispatch(&net);
         let kj = Json::parse(&kernels.to_json().pretty()).unwrap();
-        assert_eq!(kj.get("schema").and_then(Json::as_str), Some("chaos.analyze.kernel/v1"));
+        assert_eq!(kj.get("schema").and_then(Json::as_str), Some("chaos.analyze.kernel/v2"));
+        // /v2 publishes the GEMM tile constants for the cost model.
+        let tiles = kj.get("tiles").expect("kernel/v2 carries a tiles object");
+        assert!(tiles.get("gemm_kc").is_some() && tiles.get("gemm_mr").is_some());
         assert_eq!(kernels.rows.len(), net.ops.len());
 
         let cost = audit_cost(&net, 32);
@@ -100,52 +103,92 @@ fn example_arch_files_audit_clean() {
 // ---------------------------------------------------------------------
 
 #[test]
-fn mixed_arch_general_conv_is_flagged_off_fast_path() {
-    // mixed.json's first conv is stride-2/pad-2: it compiles to the
-    // gather-heavy general fallback kernel and must land on the SIMD
-    // work-list. Its second conv is stride-1/pad-0 and stays vectorized.
+fn mixed_arch_general_conv_routes_through_im2col_gemm() {
+    // mixed.json's first conv is stride-2/pad-2: since the batch-lane
+    // rework it compiles to the im2col+GEMM staging route and is *on*
+    // the fast path — `general-fallback` no longer appears for any
+    // built-in op. Its second conv is stride-1/pad-0 and stays on the
+    // vectorized weight-stationary kernels.
     let net = Network::new(ArchSpec::from_file("examples/archs/mixed.json").unwrap());
     let report = audit_dispatch(&net);
 
     let convs: Vec<_> = report.rows.iter().filter(|r| r.kind == "conv").collect();
     assert_eq!(convs.len(), 2);
-    assert_eq!(convs[0].dispatch.forward, KernelPath::GeneralFallback);
-    assert_eq!(convs[0].dispatch.backward, KernelPath::GeneralFallback);
-    assert!(!convs[0].dispatch.fast());
+    assert_eq!(convs[0].dispatch.forward, KernelPath::Im2colGemm);
+    assert_eq!(convs[0].dispatch.backward, KernelPath::Im2colGemm);
+    assert!(convs[0].dispatch.fast());
     assert_eq!(convs[1].dispatch.forward, KernelPath::VectorizedPlain);
     assert!(convs[1].dispatch.fast());
 
-    let off = report.off_fast_path();
     assert!(
-        off.iter().any(|r| r.layer == convs[0].layer),
-        "general conv missing from the work-list: {}",
+        report.off_fast_path().is_empty(),
+        "mixed.json should audit fully fast: {}",
         report.to_text()
     );
 
-    // The JSON view flags the same row.
+    // The JSON view reports the same class.
     let j = Json::parse(&report.to_json().pretty()).unwrap();
     let rows = j.get("layers").and_then(Json::as_arr).unwrap();
     let row = &rows[convs[0].layer];
-    assert_eq!(row.get("forward").and_then(Json::as_str), Some("general-fallback"));
-    assert_eq!(row.get("fast").and_then(Json::as_bool), Some(false));
+    assert_eq!(row.get("forward").and_then(Json::as_str), Some("im2col-gemm"));
+    assert_eq!(row.get("fast").and_then(Json::as_bool), Some(true));
 }
 
 #[test]
-fn paper_archs_are_fully_vectorized_except_pools_and_dropout() {
-    // The paper nets use stride-1/pad-0 convs throughout: the only ops
-    // off the fast path are the tiled pools (and dropout's sequential
-    // forward RNG draws) — exactly the known SIMD work-list.
+fn paper_archs_are_fully_vectorized() {
+    // The paper nets use stride-1/pad-0 convs throughout; with the
+    // batch-lane pool/dropout kernels and the blocked fc GEMM every
+    // built-in op now classifies fast.
     for name in ["small", "medium", "large"] {
         let net = Network::from_name(name).unwrap();
         for r in &audit_dispatch(&net).rows {
             match r.kind.as_str() {
                 "conv" => assert_eq!(r.dispatch.forward, KernelPath::VectorizedPlain, "{name}"),
                 "fc" | "output" => {
-                    assert_eq!(r.dispatch.forward, KernelPath::WeightStationary, "{name}")
+                    assert_eq!(r.dispatch.forward, KernelPath::BlockedGemm, "{name}")
+                }
+                "pool" | "avgpool" => {
+                    assert_eq!(r.dispatch.forward, KernelPath::BatchLane, "{name}")
+                }
+                "dropout" => {
+                    assert_eq!(r.dispatch.forward, KernelPath::BlockElementwise, "{name}")
                 }
                 "input" => assert_eq!(r.dispatch.forward, KernelPath::Inert, "{name}"),
-                _ => assert!(!r.dispatch.fast(), "{name}: {} unexpectedly fast", r.kind),
+                other => panic!("{name}: unexpected kind {other}"),
             }
+            if r.kind != "input" {
+                assert!(r.dispatch.fast(), "{name}: {} off the fast path", r.kind);
+            }
+        }
+    }
+}
+
+#[test]
+fn no_builtin_op_is_off_the_fast_path() {
+    // Regression guard for the batch-lane rework: `off_fast_path()` is
+    // empty — no `per-sample-loop`, no `general-fallback` — for every
+    // shipped architecture and every example arch file, zoo included.
+    for net in [
+        Network::from_name("small").unwrap(),
+        Network::from_name("medium").unwrap(),
+        Network::from_name("large").unwrap(),
+        Network::from_name("tiny").unwrap(),
+        Network::new(zoo_arch()),
+        Network::new(ArchSpec::from_file("examples/archs/small.json").unwrap()),
+        Network::new(ArchSpec::from_file("examples/archs/mixed.json").unwrap()),
+    ] {
+        let report = audit_dispatch(&net);
+        assert!(
+            report.off_fast_path().is_empty(),
+            "{}: built-in ops left on the SIMD work-list: {}",
+            net.arch.name,
+            report.to_text()
+        );
+        for r in &report.rows {
+            assert_ne!(r.dispatch.forward, KernelPath::PerSampleLoop, "{}", net.arch.name);
+            assert_ne!(r.dispatch.forward, KernelPath::GeneralFallback, "{}", net.arch.name);
+            assert_ne!(r.dispatch.backward, KernelPath::PerSampleLoop, "{}", net.arch.name);
+            assert_ne!(r.dispatch.backward, KernelPath::GeneralFallback, "{}", net.arch.name);
         }
     }
 }

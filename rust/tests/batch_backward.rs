@@ -11,7 +11,7 @@
 //! covered too.
 
 use chaos_phi::config::{Act, ArchSpec, LayerSpec};
-use chaos_phi::nn::{layer, Acts, BatchActs, Network, OpScratch};
+use chaos_phi::nn::{layer, Acts, BatchActs, MathPolicy, Network, OpScratch};
 use chaos_phi::util::{proptest, Pcg32};
 
 fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
@@ -203,6 +203,8 @@ fn op_backward_batch_bit_identical_per_kind() {
                     aux: &mut aux_a[b * al..(b + 1) * al],
                     rng: &mut rng_a,
                     train: true,
+                    math: MathPolicy::Exact,
+                    col: &mut [],
                 };
                 op.forward(
                     &params,
@@ -219,6 +221,8 @@ fn op_backward_batch_bit_identical_per_kind() {
                     aux: &mut aux_a[b * al..(b + 1) * al],
                     rng: &mut rng_a,
                     train: true,
+                    math: MathPolicy::Exact,
+                    col: &mut [],
                 };
                 op.backward(
                     &params,
@@ -238,14 +242,26 @@ fn op_backward_batch_bit_identical_per_kind() {
             let mut aux_b = vec![0u32; batch * al];
             let mut outs_b = vec![0.0f32; batch * ol];
             {
-                let mut per = OpScratch { aux: &mut aux_b, rng: &mut rng_b, train: true };
+                let mut per = OpScratch {
+                    aux: &mut aux_b,
+                    rng: &mut rng_b,
+                    train: true,
+                    math: MathPolicy::Exact,
+                    col: &mut [],
+                };
                 op.forward_batch(&params, &inputs, &mut outs_b, batch, &mut per);
             }
             let mut deltas_b = deltas0.clone();
             let mut din_b = vec![0.0f32; batch * il];
             let mut grads_b = vec![0.0f32; pc];
             {
-                let mut per = OpScratch { aux: &mut aux_b, rng: &mut rng_b, train: true };
+                let mut per = OpScratch {
+                    aux: &mut aux_b,
+                    rng: &mut rng_b,
+                    train: true,
+                    math: MathPolicy::Exact,
+                    col: &mut [],
+                };
                 op.backward_batch(
                     &params,
                     BatchActs { inputs: &inputs, outputs: &outs_b },
@@ -268,7 +284,13 @@ fn op_backward_batch_bit_identical_per_kind() {
             let mut deltas_c = deltas0.clone();
             let mut grads_c = vec![0.0f32; pc];
             {
-                let mut per = OpScratch { aux: &mut aux_b, rng: &mut rng_b, train: true };
+                let mut per = OpScratch {
+                    aux: &mut aux_b,
+                    rng: &mut rng_b,
+                    train: true,
+                    math: MathPolicy::Exact,
+                    col: &mut [],
+                };
                 op.backward_batch(
                     &params,
                     BatchActs { inputs: &inputs, outputs: &outs_b },

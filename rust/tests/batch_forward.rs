@@ -9,7 +9,7 @@
 //! PRNG stream.
 
 use chaos_phi::config::{Act, ArchSpec, LayerSpec};
-use chaos_phi::nn::{layer, Network};
+use chaos_phi::nn::{layer, MathPolicy, Network};
 use chaos_phi::util::{proptest, Pcg32};
 
 fn rand_images(rng: &mut Pcg32, n: usize, len: usize) -> Vec<f32> {
@@ -155,6 +155,56 @@ fn batched_forward_bit_identical_with_train_mode_dropout() {
         let batched = batched_probs(&net, &params, &images, n, n, true, 0xD0);
         assert_eq!(single, batched, "train-mode dropout diverged at n={n}");
     }
+}
+
+#[test]
+fn fast_math_forward_within_tolerance_of_exact() {
+    // Property: `MathPolicy::Fast` may reassociate (im2col conv, blocked
+    // fc GEMM) but must stay numerically close to the exact order — every
+    // probability within a small relative error of its exact twin. The zoo
+    // arch routes through both reassociating kernels (general conv →
+    // im2col, fc → blocked GEMM).
+    for arch in [ArchSpec::tiny(), zoo_arch()] {
+        let net = Network::new(arch);
+        let params = net.init_params(11);
+        let il = net.dims[0].out_len();
+        let classes = net.num_classes();
+        proptest::run(
+            proptest::Config { cases: 10, max_size: 8, ..Default::default() },
+            |rng, size| {
+                let n = 1 + rng.range(0, size.max(1) + 1);
+                rand_images(rng, n, il)
+            },
+            |images| {
+                let n = images.len() / il;
+                let exact = batched_probs(&net, &params, images, n, n, false, 0);
+                let plan = net.batch_plan(n).unwrap().with_math(MathPolicy::Fast);
+                let mut scratch = plan.scratch_seeded(0);
+                let fast = plan.forward(&params, images, n, &mut scratch, None).to_vec();
+                assert_eq!(exact.len(), n * classes);
+                for (i, (&e, &f)) in exact.iter().zip(&fast).enumerate() {
+                    let tol = 1e-5f32 * e.abs().max(f.abs()).max(1e-3);
+                    if (e - f).abs() > tol {
+                        return Err(format!(
+                            "{}: fast prob {i} drifted: exact={e} fast={f}",
+                            net.arch.name
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn exact_policy_is_the_default_and_fast_must_be_requested() {
+    // The plan's default policy is Exact; bit-identity tests above rely on
+    // it. `with_math` is the only way to opt in to reassociation.
+    let net = Network::new(zoo_arch());
+    let plan = net.batch_plan(4).unwrap();
+    assert_eq!(plan.math(), MathPolicy::Exact);
+    assert_eq!(plan.with_math(MathPolicy::Fast).math(), MathPolicy::Fast);
 }
 
 #[test]

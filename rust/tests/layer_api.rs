@@ -365,6 +365,7 @@ fn runtime_registered_kind_trains_under_every_policy() {
                 seed: 42,
                 validation_fraction: 0.25,
                 eval_batch: 32,
+                ..TrainConfig::default()
             })
             .policy_name(&name)
             .unwrap()

@@ -29,6 +29,7 @@ fn tiny_trainer(threads: usize, epochs: usize) -> Trainer {
         seed: 42,
         validation_fraction: 0.25,
         eval_batch: 32,
+        ..TrainConfig::default()
     })
 }
 
@@ -196,6 +197,7 @@ fn strategy_enum_still_selects_policies_through_the_builder() {
         seed: 1,
         validation_fraction: 0.0,
         eval_batch: 32,
+        ..TrainConfig::default()
     };
     let run = Trainer::new()
         .network(net)

@@ -18,6 +18,7 @@ fn cfg(threads: usize, epochs: usize) -> TrainConfig {
         seed: 77,
         validation_fraction: 0.2,
         eval_batch: 32,
+        ..TrainConfig::default()
     }
 }
 
