@@ -1,0 +1,142 @@
+//! Bench: the serving tier under concurrent client load — request
+//! throughput and latency percentiles swept over worker-pool sizes.
+//!
+//! Each configuration spawns a fresh native-engine server (tiny net,
+//! batch cap 8) and drives `requests` predictions from `clients`
+//! concurrent client threads; the server's own fixed-bucket histograms
+//! supply the latency/exec-time distributions, so the bench doubles as an
+//! end-to-end exercise of the bounded metrics path.
+//!
+//! Output: a markdown report on stdout **and** machine-readable
+//! `BENCH_serve.json` (schema self-checked after writing, smoke-tested in
+//! CI):
+//!
+//! ```json
+//! {
+//!   "bench": "serve_load", "requests": N, "batch": 8,
+//!   "rows": [{"workers": W, "clients": C, "mean_secs": s,
+//!             "req_per_sec": r, "p50_us": p, "p99_us": q,
+//!             "exec_mean_us": e, "mean_batch_fill": f}, ...]
+//! }
+//! ```
+//!
+//! Run: `cargo bench --bench serve_load [-- --smoke] [-- --out FILE]`
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::data::{generate_synthetic, Dataset, SynthConfig};
+use chaos_phi::nn::Network;
+use chaos_phi::serve::{Engine, Server, ServerConfig};
+use chaos_phi::util::Json;
+use std::time::Duration;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+const BATCH: usize = 8;
+
+/// Drive `requests` predictions through the server from `clients`
+/// concurrent threads; returns a checksum so the work cannot be elided.
+fn drive(server: &Server, images: &Dataset, requests: usize, clients: usize) -> f64 {
+    let sums: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let handle = server.handle();
+                s.spawn(move || {
+                    let mut sum = 0.0f64;
+                    let mut i = c;
+                    while i < requests {
+                        let row = handle.predict(images.image(i % images.len())).expect("predict");
+                        sum += row[0] as f64;
+                        i += clients;
+                    }
+                    sum
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    sums.iter().sum()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+
+    let (requests, clients, iters) = if smoke { (64, 4, 1) } else { (2048, 8, 3) };
+
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(1);
+    let side = net.arch.input_side();
+    let images = generate_synthetic(256.min(requests), 7, &SynthConfig::default()).resize(side);
+
+    let mut report = Report::new(format!(
+        "serve_load — {requests} requests, {clients} clients, batch cap {BATCH}, workers ∈ {WORKER_COUNTS:?}"
+    ));
+
+    let mut rows: Vec<Json> = Vec::new();
+    for workers in WORKER_COUNTS {
+        let server = Server::spawn(
+            Engine::Native { net: net.clone(), params: params.clone(), batch: BATCH },
+            ServerConfig {
+                max_delay: Duration::from_micros(500),
+                workers,
+                ..Default::default()
+            },
+        )
+        .expect("spawn server");
+        let r = Bench::new(format!("serve/W={workers}/C={clients}"))
+            .warmup(1)
+            .iters(iters)
+            .run(|| drive(&server, &images, requests, clients));
+        let rate = requests as f64 / r.mean_secs;
+        // The server's own histograms (accumulated over warmup + iters)
+        // supply the latency shape.
+        let m = server.handle().metrics.snapshot();
+        report.note(format!(
+            "W={workers}: {rate:.0} req/s, p50 {:.0}µs p99 {:.0}µs, exec mean {:.0}µs, fill {:.2}",
+            m.p50_us, m.p99_us, m.exec_mean_us, m.mean_batch_fill
+        ));
+        rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("mean_secs", Json::num(r.mean_secs)),
+            ("req_per_sec", Json::num(rate)),
+            ("p50_us", Json::num(m.p50_us)),
+            ("p99_us", Json::num(m.p99_us)),
+            ("exec_mean_us", Json::num(m.exec_mean_us)),
+            ("mean_batch_fill", Json::num(m.mean_batch_fill)),
+        ]));
+        report.add(r);
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_load")),
+        ("smoke", Json::num(u32::from(smoke))),
+        ("requests", Json::num(requests as f64)),
+        ("batch", Json::num(BATCH as f64)),
+        ("rows", Json::arr(rows)),
+    ]);
+    std::fs::write(&out_path, doc.pretty()).expect("write BENCH_serve.json");
+
+    // Schema self-check: re-parse what we wrote so CI catches rot without
+    // external tooling.
+    let parsed = Json::parse(&std::fs::read_to_string(&out_path).unwrap()).expect("valid JSON");
+    assert_eq!(parsed.req("bench").unwrap().as_str(), Some("serve_load"));
+    let rows = parsed.req("rows").unwrap().as_arr().expect("rows array");
+    assert_eq!(rows.len(), WORKER_COUNTS.len());
+    for row in rows {
+        assert!(row.req("workers").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(row.req("req_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let p50 = row.req("p50_us").unwrap().as_f64().unwrap();
+        let p99 = row.req("p99_us").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p99 >= p50, "histogram percentiles out of order: {p50} / {p99}");
+        assert!(row.req("mean_batch_fill").unwrap().as_f64().unwrap() > 0.0);
+    }
+    println!("\nwrote {out_path}");
+
+    report.print();
+}

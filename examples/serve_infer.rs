@@ -3,7 +3,7 @@
 //! requests with dynamic batching, reporting latency percentiles and
 //! throughput.
 //!
-//! Run: `cargo run --release --example serve_infer -- [requests] [clients] [batch]`
+//! Run: `cargo run --release --example serve_infer -- [requests] [clients] [batch] [workers]`
 //!
 //! To serve through the AOT/PJRT path instead, build the artifacts
 //! (`make artifacts`) and spawn with `serve::Engine::Pjrt` — the client
@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
     let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
     let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
 
     // Weights would normally come from a CHAOS training run
     // (`RunResult::final_params`); deterministic init keeps the example
@@ -27,9 +28,13 @@ fn main() -> anyhow::Result<()> {
     let params = net.init_params(1);
     let server = Server::spawn(
         Engine::Native { net, params, batch },
-        ServerConfig { max_delay: std::time::Duration::from_millis(1), ..Default::default() },
+        ServerConfig {
+            max_delay: std::time::Duration::from_millis(1),
+            workers,
+            ..Default::default()
+        },
     )?;
-    println!("server up (native batched engine, batch cap {batch})");
+    println!("server up (native batched engine, batch cap {batch}, {workers} workers)");
 
     let images = generate_synthetic(requests, 11, &SynthConfig::default()).resize(13);
     let sw = Stopwatch::start();
@@ -68,6 +73,10 @@ fn main() -> anyhow::Result<()> {
         m.p50_us, m.p99_us, m.max_us
     );
     println!("batches: {} (mean fill {:.2} / {batch})", m.batches, m.mean_batch_fill);
+    println!(
+        "engine exec/batch: p50 {:.0} µs   p99 {:.0} µs   mean {:.0} µs",
+        m.exec_p50_us, m.exec_p99_us, m.exec_mean_us
+    );
     println!(
         "predictions from untrained weights: {}/{} correct (≈ chance, as expected)",
         correct, requests

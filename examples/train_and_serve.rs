@@ -1,0 +1,110 @@
+//! Live-from-training serving: run CHAOS training and a multi-worker
+//! inference server **concurrently against the same weights**, with no
+//! checkpoint round-trip.
+//!
+//! The trainer exports its live `chaos::SharedParams` store
+//! (`Trainer::export_store`); the server's `Engine::Shared` snapshots the
+//! store per batch under the CHAOS per-layer lock contract — serving
+//! threads are just extra readers, the same worker-heterogeneity argument
+//! that lets training workers observe non-instant updates. Predictions
+//! are validated mid-epoch (well-formed probability rows) and, once
+//! training finishes, checked bit-identical against a frozen engine on
+//! the run's final weights.
+//!
+//! Run: `cargo run --release --example train_and_serve -- [epochs] [threads] [workers]`
+
+use chaos_phi::chaos::Trainer;
+use chaos_phi::config::ArchSpec;
+use chaos_phi::data::{generate_synthetic, SynthConfig};
+use chaos_phi::nn::Network;
+use chaos_phi::runtime::NativeBatchEngine;
+use chaos_phi::serve::{Server, ServerConfig};
+use chaos_phi::util::Stopwatch;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let epochs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let threads: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let batch = 8usize;
+
+    let train_set = generate_synthetic(400, 1, &SynthConfig::default()).resize(13);
+    let test_set = generate_synthetic(100, 2, &SynthConfig::default()).resize(13);
+    let queries = generate_synthetic(64, 3, &SynthConfig::default()).resize(13);
+
+    // The trainer hands its live store out through this channel as soon as
+    // the parallel engine comes up.
+    let (store_tx, store_rx) = mpsc::channel();
+    let trainer = Trainer::new()
+        .arch(ArchSpec::tiny())
+        .epochs(epochs)
+        .threads(threads)
+        .eta(0.05, 0.95)
+        .seed(42)
+        .export_store(store_tx);
+    let sw = Stopwatch::start();
+    let training = std::thread::spawn(move || trainer.run(&train_set, &test_set));
+
+    let store = store_rx.recv().expect("parallel run exports its store");
+    println!("training started ({threads} threads); live store received after {:.3}s", sw.elapsed_secs());
+
+    // Serve straight out of the training store — no checkpoint, no copy of
+    // record: every batch snapshots whatever the workers have published.
+    let net = Network::from_name("tiny")?;
+    let server = Server::spawn_shared(
+        net.clone(),
+        store.clone(),
+        batch,
+        ServerConfig {
+            max_delay: Duration::from_micros(500),
+            workers,
+            ..Default::default()
+        },
+    )?;
+    println!("server up: {workers} worker(s) serving live from the shared store");
+
+    // Query continuously while training runs: rows must always be
+    // well-formed probability distributions, whatever publication state
+    // the snapshot catches.
+    let handle = server.handle();
+    let mut mid_epoch_queries = 0usize;
+    while !training.is_finished() {
+        for i in 0..queries.len() {
+            let row = handle.predict(queries.image(i)).expect("live predict");
+            assert_eq!(row.len(), 10);
+            let sum: f32 = row.iter().sum();
+            assert!(
+                row.iter().all(|p| p.is_finite() && *p >= 0.0) && (sum - 1.0).abs() < 1e-3,
+                "malformed probability row mid-training: sum {sum}"
+            );
+            mid_epoch_queries += 1;
+        }
+    }
+    let run = training.join().expect("training thread")?;
+    println!(
+        "training done in {:.2}s: {} publications, final test error rate {:.1}%",
+        sw.elapsed_secs(),
+        run.publications,
+        run.final_epoch().test.error_rate() * 100.0
+    );
+    println!("served {mid_epoch_queries} live queries mid-training");
+
+    // Training has stopped publishing, so the live engine and a frozen
+    // engine on the run's final weights must now agree bit-for-bit.
+    let mut frozen = NativeBatchEngine::new(net, run.final_params.clone(), 1)?;
+    for i in 0..queries.len() {
+        let live = handle.predict(queries.image(i)).expect("post-training predict");
+        let expect = frozen.run(queries.image(i), 1)?;
+        assert_eq!(live, expect[0], "query {i}: live store diverged from final weights");
+    }
+    println!("post-training predictions bit-identical to the final checkpoint ✓");
+
+    let m = server.handle().metrics.snapshot();
+    println!(
+        "serving metrics: {} requests, {} batches (mean fill {:.2}), p50 {:.0}µs p99 {:.0}µs, exec mean {:.0}µs",
+        m.requests, m.batches, m.mean_batch_fill, m.p50_us, m.p99_us, m.exec_mean_us
+    );
+    Ok(())
+}

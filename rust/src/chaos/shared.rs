@@ -192,6 +192,28 @@ impl SharedParams {
             .map(|w| f32::from_bits(w.load(Ordering::Relaxed)))
             .collect()
     }
+
+    /// Snapshot the full vector into a caller-owned buffer — the serving
+    /// tier's per-batch read ([`crate::runtime::SharedStoreEngine`]):
+    /// allocation-free on the hot path, and recorded as a whole-store load
+    /// under `--features race-check` so live-serving reads are checked
+    /// against the training policy's [`SyncContract`] like any worker
+    /// read.
+    pub fn snapshot_into(&self, buf: &mut [f32]) {
+        assert_eq!(
+            buf.len(),
+            self.words.len(),
+            "snapshot_into: buffer length must match the store"
+        );
+        #[cfg(feature = "race-check")]
+        {
+            self.race.record_load(0..self.words.len());
+            yield_point("load");
+        }
+        for (dst, w) in buf.iter_mut().zip(&self.words) {
+            *dst = f32::from_bits(w.load(Ordering::Relaxed));
+        }
+    }
 }
 
 /// Race-checker views, available with `--features race-check` (see

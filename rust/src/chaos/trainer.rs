@@ -32,7 +32,7 @@ use crate::config::{ArchSpec, TrainConfig};
 use crate::data::Dataset;
 use crate::nn::{Network, Scratch};
 use crate::util::{LayerTimes, Stopwatch};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Builder for a training run — the public entry point of the CHAOS
 /// coordinator.
@@ -50,6 +50,7 @@ pub struct Trainer {
     cfg: TrainConfig,
     policy: Box<dyn UpdatePolicy>,
     observers: Vec<Box<dyn EpochObserver>>,
+    store_export: Option<mpsc::Sender<Arc<SharedParams>>>,
 }
 
 impl Default for Trainer {
@@ -68,6 +69,7 @@ impl Trainer {
             cfg: TrainConfig::default(),
             policy: Box::new(ChaosPolicy),
             observers: Vec::new(),
+            store_export: None,
         }
     }
 
@@ -149,6 +151,19 @@ impl Trainer {
         self
     }
 
+    /// Register a channel that receives the run's live [`SharedParams`]
+    /// store as soon as a parallel run creates it — the live-serving
+    /// hookup: hand the received `Arc` to
+    /// [`crate::serve::Server::spawn_shared`] (or
+    /// [`crate::runtime::SharedStoreEngine`]) and predictions track
+    /// training mid-epoch. Sequential runs (`threads == 1` or a
+    /// sequential policy) have no shared store; the sender is dropped
+    /// unused, so the receiver observes a disconnect instead of blocking.
+    pub fn export_store(mut self, tx: mpsc::Sender<Arc<SharedParams>>) -> Trainer {
+        self.store_export = Some(tx);
+        self
+    }
+
     /// Check the build without running: architecture present, config sane,
     /// policy parameterization valid.
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -180,6 +195,7 @@ impl Trainer {
             &self.cfg,
             self.policy.as_ref(),
             &mut self.observers,
+            self.store_export.take(),
         ))
     }
 }
@@ -193,8 +209,10 @@ fn validation_len(cfg: &TrainConfig, train_set: &Dataset) -> usize {
 enum Engine {
     /// Single-thread in-place SGD (sequential policies or `threads == 1`).
     Seq { params: Vec<f32>, scratch: Scratch },
-    /// Shared atomic store driven by a policy's worker hooks.
-    Par { store: SharedParams },
+    /// Shared atomic store driven by a policy's worker hooks. `Arc` so a
+    /// live handle can be exported to concurrent readers (the serving
+    /// tier) while the run owns it.
+    Par { store: Arc<SharedParams> },
 }
 
 /// The unified epoch driver behind [`Trainer::run`].
@@ -205,6 +223,7 @@ fn run_epochs(
     cfg: &TrainConfig,
     policy: &dyn UpdatePolicy,
     observers: &mut [Box<dyn EpochObserver>],
+    store_export: Option<mpsc::Sender<Arc<SharedParams>>>,
 ) -> RunResult {
     // Minibatch policies train through the batched engine even at one
     // thread — the per-sample sequential engine would silently change
@@ -226,12 +245,20 @@ fn run_epochs(
         Engine::Seq { params: net.init_params(cfg.seed), scratch: net.scratch_seeded(cfg.seed) }
     } else {
         let init = net.init_params(cfg.seed);
-        let store = SharedParams::new(&init, &net.dims);
+        let store = Arc::new(SharedParams::new(&init, &net.dims));
         // Declare the policy's synchronization discipline to the store so
         // the race checker (`--features race-check`) can enforce it.
         store.set_sync_contract(policy.sync_contract());
         Engine::Par { store }
     };
+    // Hand a live store handle to any registered exporter (the serving
+    // tier's live-from-training hookup). On the sequential engine there is
+    // no store: dropping the sender unread disconnects the receiver.
+    if let Some(tx) = store_export {
+        if let Engine::Par { store } = &engine {
+            let _ = tx.send(store.clone());
+        }
+    }
 
     for epoch in 0..cfg.epochs {
         let eta = cfg.eta_at(epoch);
@@ -259,7 +286,7 @@ fn run_epochs(
             Engine::Par { store } => {
                 let ctx = EpochCtx {
                     net,
-                    store: &*store,
+                    store: &**store,
                     threads,
                     eta,
                     epoch,
@@ -291,8 +318,8 @@ fn run_epochs(
                 eval_seq(net, params, test_set, test_set.len(), eb, Some(&layer_times)),
             ),
             Engine::Par { store } => (
-                eval_parallel(net, store, train_set, val_len, threads, eb, &layer_times),
-                eval_parallel(net, store, test_set, test_set.len(), threads, eb, &layer_times),
+                eval_parallel(net, &**store, train_set, val_len, threads, eb, &layer_times),
+                eval_parallel(net, &**store, test_set, test_set.len(), threads, eb, &layer_times),
             ),
         };
 
@@ -364,7 +391,7 @@ fn run_view<'a>(
 ) -> RunView<'a> {
     let (params, publications) = match engine {
         Engine::Seq { params, .. } => (ParamsView::Seq(params.as_slice()), 0),
-        Engine::Par { store } => (ParamsView::Par(store), store.publication_count()),
+        Engine::Par { store } => (ParamsView::Par(&**store), store.publication_count()),
     };
     RunView::new(&net.arch.name, policy_name, threads, cfg.epochs, publications, params)
 }
@@ -921,6 +948,24 @@ mod tests {
             .run(&trn, &tst)
             .unwrap();
         assert_eq!(calls_seq.load(Ordering::Relaxed), 0, "sequential engine never publishes");
+    }
+
+    #[test]
+    fn export_store_delivers_live_store_on_parallel_runs_only() {
+        let trn = tiny_data(80, 51);
+        let tst = tiny_data(30, 52);
+        // Parallel run: the exported handle IS the run's store — after the
+        // run it holds the final weights and the publication count.
+        let (tx, rx) = mpsc::channel();
+        let r = tiny_trainer(3, 1).policy(ChaosPolicy).export_store(tx).run(&trn, &tst).unwrap();
+        let store = rx.recv().expect("parallel run must export its store");
+        assert_eq!(store.snapshot(), r.final_params);
+        assert_eq!(store.publication_count(), r.publications);
+        // Sequential run: no store exists; the receiver sees a disconnect
+        // rather than blocking forever.
+        let (tx, rx) = mpsc::channel();
+        tiny_trainer(1, 1).policy(SequentialPolicy).export_store(tx).run(&trn, &tst).unwrap();
+        assert!(rx.recv().is_err(), "sequential engine has no store to export");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use chaos_phi::harness::{self, RealRunScale};
 use chaos_phi::nn::Network;
 use chaos_phi::perfmodel::{PerfModel, Scenario};
 use chaos_phi::phisim::{simulate, SimConfig};
-use chaos_phi::serve::{Engine, Server, ServerConfig};
+use chaos_phi::serve::{Engine, ServeError, Server, ServerConfig};
 use chaos_phi::util::cli::Args;
 use chaos_phi::util::Stopwatch;
 
@@ -44,6 +44,9 @@ USAGE: chaos <command> [flags]
   predict   --arch A --threads 1,15,30,...  [--images N --test-n N --epochs E]
   simulate  --arch A --threads 1,15,30,...
   serve     --arch tiny --requests N --clients C --engine native|pjrt --batch B
+            --workers W --queue-depth Q --delay-us D
+            --deadline-us T   (per-request deadline; expired/overloaded
+             requests are shed with typed errors instead of blocking)
             --artifacts DIR --weights FILE.ckpt   (pjrt needs `make artifacts`)
   analyze   [NAME|FILE.json ...] [--cost] [--json]
             (static analysis of each compiled network: span verification —
@@ -318,7 +321,19 @@ fn cmd_simulate(raw: &[String]) -> anyhow::Result<()> {
 fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let a = Args::parse(
         raw,
-        &["arch", "requests", "clients", "artifacts", "delay-us", "weights", "engine", "batch"],
+        &[
+            "arch",
+            "requests",
+            "clients",
+            "artifacts",
+            "delay-us",
+            "deadline-us",
+            "weights",
+            "engine",
+            "batch",
+            "workers",
+            "queue-depth",
+        ],
     )?;
     let arch = a.get_str("arch", "tiny");
     let requests = a.get_usize("requests", 256)?;
@@ -327,6 +342,13 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let delay_us = a.get_u64("delay-us", 2000)?;
     let engine_name = a.get_str("engine", "native");
     let batch = a.get_usize("batch", 8)?;
+    let defaults = ServerConfig::default();
+    let workers = a.get_usize("workers", 2)?;
+    let queue_depth = a.get_usize("queue-depth", defaults.queue_depth)?;
+    let deadline = match a.get("deadline-us") {
+        Some(_) => Some(std::time::Duration::from_micros(a.get_u64("deadline-us", 0)?)),
+        None => None,
+    };
 
     let net = Network::from_name(&arch)?;
     let params = match a.get("weights") {
@@ -335,7 +357,8 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     };
     let cfg = ServerConfig {
         max_delay: std::time::Duration::from_micros(delay_us),
-        ..Default::default()
+        queue_depth,
+        workers,
     };
     let engine = match engine_name.as_str() {
         "native" => Engine::Native { net: net.clone(), params, batch },
@@ -354,8 +377,20 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
             s.spawn(move || {
                 let mut i = c;
                 while i < requests {
-                    let probs = handle.predict(images.image(i)).expect("predict");
-                    assert_eq!(probs.len(), 10);
+                    match deadline {
+                        None => {
+                            let probs = handle.predict(images.image(i)).expect("predict");
+                            assert_eq!(probs.len(), 10);
+                        }
+                        // Deadline mode: shed expired/overloaded requests
+                        // like a real client under SLO, count nothing here
+                        // — the server's metrics do.
+                        Some(budget) => match handle.predict_deadline(images.image(i), budget) {
+                            Ok(probs) => assert_eq!(probs.len(), 10),
+                            Err(ServeError::Expired | ServeError::Overloaded) => {}
+                            Err(e) => panic!("predict: {e}"),
+                        },
+                    }
                     i += clients;
                 }
             });
@@ -364,12 +399,18 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let secs = sw.elapsed_secs();
     let m = server.handle().metrics.snapshot();
     println!(
-        "served {requests} requests from {clients} clients in {secs:.2}s ({:.0} req/s)",
-        requests as f64 / secs
+        "served {} of {requests} requests from {clients} clients in {secs:.2}s ({:.0} req/s) on {} worker(s)",
+        m.requests,
+        m.requests as f64 / secs,
+        m.workers
     );
     println!(
         "latency p50 {:.0}µs  p99 {:.0}µs  max {:.0}µs; {} batches, mean fill {:.2}",
         m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch_fill
+    );
+    println!(
+        "exec/batch p50 {:.0}µs  p99 {:.0}µs  mean {:.0}µs; expired {}  overloaded {}  exec failures {}",
+        m.exec_p50_us, m.exec_p99_us, m.exec_mean_us, m.expired, m.overloaded, m.exec_failures
     );
     Ok(())
 }

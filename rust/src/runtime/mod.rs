@@ -8,7 +8,10 @@
 //!   [`crate::nn::Network`] op pipeline through a batched forward plan
 //!   ([`crate::nn::BatchPlan`]). No artifacts, no external crates, works
 //!   in every build, accepts partial batches, and serves weights straight
-//!   from a CHAOS training run. This is the default serving path.
+//!   from a CHAOS training run. This is the default serving path. Its
+//!   sibling [`SharedStoreEngine`] serves **live** from a
+//!   [`crate::chaos::SharedParams`] training store, snapshotting weights
+//!   per batch.
 //! * **PJRT** ([`ForwardEngine`]/[`BatchForwardEngine`]/[`TrainEngine`]) —
 //!   loads the AOT-lowered HLO artifacts (`make artifacts`) and executes
 //!   them on the PJRT CPU client. The interchange format is HLO **text** —
@@ -36,7 +39,7 @@ pub use executor::{
     BatchForwardEngine, Executable, ForwardEngine, Runtime, TrainEngine, TrainStepOut,
 };
 pub use manifest::{ArchManifest, ArtifactSpec, Manifest, ParamSpec};
-pub use native::NativeBatchEngine;
+pub use native::{NativeBatchEngine, SharedStoreEngine};
 
 /// Default artifact directory (relative to the repo root).
 pub const ARTIFACT_DIR: &str = "artifacts";

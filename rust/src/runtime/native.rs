@@ -12,7 +12,9 @@
 //! artifact round-trip. `serve::Engine::{Native, Pjrt}` selects between
 //! the two.
 
+use crate::chaos::SharedParams;
 use crate::nn::{BatchScratch, Network};
+use std::sync::Arc;
 
 /// Batched forward execution over the native op pipeline. Owns the
 /// network, a parameter snapshot, and the reusable batch arenas — one
@@ -77,6 +79,86 @@ impl NativeBatchEngine {
     }
 }
 
+/// Batched forward execution **live from a CHAOS training store**: every
+/// batch snapshots the current weights out of a [`SharedParams`] before
+/// running, so predictions track training mid-epoch with no checkpoint
+/// round-trip.
+///
+/// The per-batch snapshot uses [`SharedParams::snapshot_into`] — relaxed
+/// atomic loads into a reusable engine-private buffer. Under the CHAOS
+/// per-layer lock contract reads never block publishers and never
+/// constitute defects (only publications are contract-checked), so a
+/// serving thread is just another reader: the same tolerance argument
+/// that lets heterogeneous training workers observe non-instant updates
+/// lets an inference batch observe a mid-publication weight vector. One
+/// engine per serving thread, like [`NativeBatchEngine`].
+pub struct SharedStoreEngine {
+    net: Network,
+    store: Arc<SharedParams>,
+    /// Per-batch weight snapshot, reused across runs.
+    params: Vec<f32>,
+    batch: usize,
+    scratch: BatchScratch,
+}
+
+impl SharedStoreEngine {
+    /// Build an engine serving live from `store` through `net` in batches
+    /// of up to `batch`. Rejects a zero batch size and a store whose
+    /// length does not match the network's layout.
+    pub fn new(
+        net: Network,
+        store: Arc<SharedParams>,
+        batch: usize,
+    ) -> anyhow::Result<SharedStoreEngine> {
+        anyhow::ensure!(batch > 0, "shared-store engine: batch size must be ≥ 1");
+        anyhow::ensure!(
+            store.len() == net.total_params,
+            "shared-store engine: store holds {} values, network '{}' needs {}",
+            store.len(),
+            net.arch.name,
+            net.total_params
+        );
+        let scratch = net.batch_plan(batch)?.scratch();
+        let params = vec![0.0; net.total_params];
+        Ok(SharedStoreEngine { net, store, params, batch, scratch })
+    }
+
+    /// Maximum samples per [`SharedStoreEngine::run`] call.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Flat length of one input image.
+    pub fn image_len(&self) -> usize {
+        let side = self.net.arch.input_side();
+        side * side
+    }
+
+    /// Number of output classes per prediction row.
+    pub fn num_classes(&self) -> usize {
+        self.net.num_classes()
+    }
+
+    /// Snapshot the store, then run the first `n` images of a
+    /// `[≥n][image_len]` flat buffer — every row of one batch sees the
+    /// *same* weight snapshot, taken at batch start.
+    pub fn run(&mut self, images: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(n > 0, "shared-store engine: empty batch");
+        anyhow::ensure!(
+            n <= self.batch,
+            "shared-store engine: batch {n} exceeds capacity {}",
+            self.batch
+        );
+        let il = self.image_len();
+        anyhow::ensure!(images.len() >= n * il, "shared-store engine: image buffer too short");
+        self.store.snapshot_into(&mut self.params);
+        let plan = self.net.batch_plan(self.batch)?;
+        let probs = plan.forward(&self.params, &images[..n * il], n, &mut self.scratch, None);
+        let classes = self.net.num_classes();
+        Ok(probs.chunks_exact(classes).map(|row| row.to_vec()).collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +191,52 @@ mod tests {
                 net.forward(&params.as_slice(), &images[i * il..(i + 1) * il], &mut scratch, None);
             assert_eq!(row.as_slice(), expect, "row {i} not bit-identical");
         }
+    }
+
+    #[test]
+    fn shared_store_engine_rejects_bad_construction() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        let store = Arc::new(SharedParams::new(&params, &net.dims));
+        let e = SharedStoreEngine::new(net.clone(), store, 0).unwrap_err().to_string();
+        assert!(e.contains("batch size"), "{e}");
+        let short = Arc::new(SharedParams::new(&[0.0; 3], &net.dims));
+        let e = SharedStoreEngine::new(net, short, 4).unwrap_err().to_string();
+        assert!(e.contains("store holds"), "{e}");
+    }
+
+    #[test]
+    fn shared_store_engine_matches_native_on_frozen_store() {
+        // With no publications between runs, the live engine must be
+        // bit-identical to the snapshot engine on the same weights.
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(11);
+        let store = Arc::new(SharedParams::new(&params, &net.dims));
+        let mut live = SharedStoreEngine::new(net.clone(), store, 4).unwrap();
+        let mut frozen = NativeBatchEngine::new(net, params, 4).unwrap();
+        let il = live.image_len();
+        let mut rng = Pcg32::seeded(5);
+        let images: Vec<f32> = (0..3 * il).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        assert_eq!(live.run(&images, 3).unwrap(), frozen.run(&images, 3).unwrap());
+    }
+
+    #[test]
+    fn shared_store_engine_sees_published_updates() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(11);
+        let dims = net.dims.clone();
+        let store = Arc::new(SharedParams::new(&params, &net.dims));
+        let mut engine = SharedStoreEngine::new(net, store.clone(), 2).unwrap();
+        let il = engine.image_len();
+        let mut rng = Pcg32::seeded(6);
+        let images: Vec<f32> = (0..il).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let before = engine.run(&images, 1).unwrap();
+        // Publish a large update to a parameterized layer: the next batch's
+        // snapshot must reflect it.
+        let range = dims[1].params.clone();
+        store.publish_scaled(1, range.clone(), &vec![1.0; range.len()], 5.0);
+        let after = engine.run(&images, 1).unwrap();
+        assert_ne!(before, after, "live engine must pick up published weights");
     }
 
     #[test]

@@ -1,23 +1,35 @@
-//! Dynamic batcher + serving loop.
+//! Dynamic batcher + multi-worker serving loop.
 //!
-//! Requests arrive on an mpsc channel; the collector drains up to `B`
-//! requests, waiting at most `max_delay` for stragglers, executes the
-//! batch on the selected [`Engine`], and replies per-request. This is the
-//! standard router/batcher shape of serving systems (vLLM-style), sized
-//! down to the paper's models.
+//! Requests enter a shared bounded queue ([`super::queue::Bounded`]) at an
+//! admission point with three disciplines ([`ServerHandle::predict`] /
+//! [`ServerHandle::try_predict`] / [`ServerHandle::predict_deadline`]); a
+//! pool of `N` worker threads — each owning its own engine and batch
+//! arenas — drains the queue, groups up to `B` requests (waiting at most
+//! `max_delay` for stragglers), drops expired requests *before* they
+//! occupy a batch slot, executes the batch, and replies per-request. This
+//! is the standard router/worker-pool shape of serving systems
+//! (vLLM-style), sized down to the paper's models.
 //!
-//! Two execution engines ([`Engine`]):
+//! Three execution engines ([`Engine`]):
 //! * `Native` — [`crate::runtime::NativeBatchEngine`] over any compiled
 //!   network + parameter snapshot; partial batches run at their actual
-//!   size.
+//!   size. Replicated per worker.
+//! * `Shared` — [`crate::runtime::SharedStoreEngine`] serving **live**
+//!   from a [`crate::chaos::SharedParams`] training store: each batch
+//!   reads a fresh per-batch snapshot under the CHAOS per-layer read
+//!   contract, so a model is servable mid-epoch with no checkpoint
+//!   round-trip.
 //! * `Pjrt` — the AOT artifact path; the compiled HLO has a static batch
 //!   dimension, so partial batches are zero-padded to `B`.
 
+use super::error::ServeError;
 use super::metrics::ServeMetrics;
+use super::queue::{Bounded, PushError};
+use crate::chaos::SharedParams;
 use crate::nn::Network;
-use crate::runtime::{BatchForwardEngine, NativeBatchEngine};
+use crate::runtime::{BatchForwardEngine, NativeBatchEngine, SharedStoreEngine};
 use crate::util::Stopwatch;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{self, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -26,31 +38,65 @@ use std::time::{Duration, Instant};
 pub struct ServerConfig {
     /// Max time a request may wait for batch-mates.
     pub max_delay: Duration,
-    /// Channel capacity (back-pressure bound).
+    /// Request-queue capacity — the admission-control bound: a full queue
+    /// rejects [`ServerHandle::try_predict`] /
+    /// [`ServerHandle::predict_deadline`] with
+    /// [`ServeError::Overloaded`].
     pub queue_depth: usize,
+    /// Worker threads draining the queue, each with its own engine and
+    /// batch arenas.
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_delay: Duration::from_millis(2), queue_depth: 1024 }
+        ServerConfig { max_delay: Duration::from_millis(2), queue_depth: 1024, workers: 1 }
     }
 }
 
 /// Which execution engine a [`Server`] runs — the serving-side analogue of
-/// the runtime's native/PJRT split (see [`crate::runtime`]).
+/// the runtime's native/PJRT split (see [`crate::runtime`]), plus the
+/// live-from-training shared-store path.
 pub enum Engine {
     /// In-process batched execution of a compiled network; no artifacts
-    /// required. `batch` is the collector's batch cap.
+    /// required. `batch` is each worker's batch cap.
     Native { net: Network, params: Vec<f32>, batch: usize },
+    /// Serve directly from a live [`SharedParams`] training store: every
+    /// batch snapshots the current weights (per-batch, under the CHAOS
+    /// read contract), so predictions track training mid-epoch.
+    Shared { net: Network, store: Arc<SharedParams>, batch: usize },
     /// AOT-compiled PJRT artifact (requires `make artifacts` and the
     /// `xla-runtime` feature). The batch cap is the artifact's compiled
     /// batch dimension.
     Pjrt { artifact_dir: String, arch: String, params: Vec<f32> },
 }
 
-/// What the serve loop needs from either engine. `images` is the
-/// collector's `[cap][image_len]` zero-padded staging buffer; `n` is how
-/// many leading rows are real.
+impl Engine {
+    /// One engine spec per worker: native/shared replicate by cloning the
+    /// (stateless) network and sharing/cloning the weights; PJRT workers
+    /// each load the artifact themselves (the handles are not `Send`).
+    fn replicate(self, n: usize) -> Vec<Engine> {
+        match self {
+            Engine::Native { net, params, batch } => (0..n)
+                .map(|_| Engine::Native { net: net.clone(), params: params.clone(), batch })
+                .collect(),
+            Engine::Shared { net, store, batch } => (0..n)
+                .map(|_| Engine::Shared { net: net.clone(), store: store.clone(), batch })
+                .collect(),
+            Engine::Pjrt { artifact_dir, arch, params } => (0..n)
+                .map(|_| Engine::Pjrt {
+                    artifact_dir: artifact_dir.clone(),
+                    arch: arch.clone(),
+                    params: params.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// What the serve loop needs from any engine. `images` is the worker's
+/// `[cap][image_len]` zero-padded staging buffer; `n` is how many leading
+/// rows are real.
 trait ServeEngine {
     fn batch_cap(&self) -> usize;
     fn image_len(&self) -> usize;
@@ -68,6 +114,20 @@ impl ServeEngine for NativeBatchEngine {
 
     fn run(&mut self, images: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
         NativeBatchEngine::run(self, images, n)
+    }
+}
+
+impl ServeEngine for SharedStoreEngine {
+    fn batch_cap(&self) -> usize {
+        self.batch()
+    }
+
+    fn image_len(&self) -> usize {
+        SharedStoreEngine::image_len(self)
+    }
+
+    fn run(&mut self, images: &[f32], n: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        SharedStoreEngine::run(self, images, n)
     }
 }
 
@@ -94,98 +154,225 @@ impl ServeEngine for PjrtServe {
     }
 }
 
+/// Build one worker's engine from its spec. Runs *inside* the worker
+/// thread (the xla crate's PJRT handles are not `Send`).
+fn build_engine(spec: Engine) -> anyhow::Result<Box<dyn ServeEngine>> {
+    let built: Box<dyn ServeEngine> = match spec {
+        Engine::Native { net, params, batch } => {
+            Box::new(NativeBatchEngine::new(net, params, batch)?)
+        }
+        Engine::Shared { net, store, batch } => {
+            Box::new(SharedStoreEngine::new(net, store, batch)?)
+        }
+        Engine::Pjrt { artifact_dir, arch, params } => {
+            let manifest = crate::runtime::Manifest::load(&artifact_dir)?;
+            let rt = crate::runtime::Runtime::cpu()?;
+            let engine = BatchForwardEngine::load(&rt, &manifest, &arch)?;
+            Box::new(PjrtServe { engine, params })
+        }
+    };
+    anyhow::ensure!(built.batch_cap() > 0, "serve: engine reports a zero batch capacity");
+    Ok(built)
+}
+
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
-    reply: Sender<anyhow::Result<Vec<f32>>>,
+    /// Cancellation point: once passed, the request must not occupy a
+    /// batch slot — workers reply [`ServeError::Expired`] instead.
+    deadline: Option<Instant>,
+    reply: Sender<Result<Vec<f32>, ServeError>>,
 }
 
-/// Handle used by client threads.
-#[derive(Clone)]
-pub struct ServerHandle {
-    tx: SyncSender<Request>,
-    image_len: usize,
-    pub metrics: Arc<ServeMetrics>,
-    /// Liveness token: `Server::drop` counts strong references to decide
-    /// between joining the worker (no external handles) and detaching.
-    alive: Arc<()>,
-}
-
-impl ServerHandle {
-    /// Submit one image and block for its probability vector.
-    pub fn predict(&self, image: &[f32]) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(image.len() == self.image_len, "image size mismatch");
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request { image: image.to_vec(), enqueued: Instant::now(), reply: reply_tx };
-        self.tx
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        reply_rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+impl Request {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
-/// The serving loop owner. Dropping `Server` closes its own sender: with
-/// no outstanding [`ServerHandle`]s the worker exits and is joined; with
-/// handles still alive the worker is **detached** and keeps serving them,
-/// exiting on its own once the last handle disconnects.
+/// Closes the request queue when the last [`ServerHandle`] clone
+/// (including the [`Server`]'s own) drops, so idle workers drain and
+/// exit — the queue-level analogue of every `mpsc` sender disconnecting.
+struct ProducerGuard {
+    queue: Arc<Bounded<Request>>,
+}
+
+impl Drop for ProducerGuard {
+    fn drop(&mut self) {
+        self.queue.close();
+    }
+}
+
+/// Handle used by client threads. Cloning is cheap; every clone is a
+/// liveness token keeping the worker pool serving.
+#[derive(Clone)]
+pub struct ServerHandle {
+    queue: Arc<Bounded<Request>>,
+    image_len: usize,
+    pub metrics: Arc<ServeMetrics>,
+    /// Producer liveness: closes the queue when the last clone drops, and
+    /// `Server::drop` counts strong references to decide between joining
+    /// the pool (no external handles) and detaching.
+    shared: Arc<ProducerGuard>,
+}
+
+impl ServerHandle {
+    /// Submit one image and block for its probability vector. Blocks
+    /// while the queue is full (classic backpressure); for load-shedding
+    /// admission control use [`ServerHandle::try_predict`] or
+    /// [`ServerHandle::predict_deadline`].
+    pub fn predict(&self, image: &[f32]) -> Result<Vec<f32>, ServeError> {
+        self.submit(image, None, false)
+    }
+
+    /// Like [`ServerHandle::predict`], but refuses immediately with
+    /// [`ServeError::Overloaded`] when the queue is full instead of
+    /// blocking.
+    pub fn try_predict(&self, image: &[f32]) -> Result<Vec<f32>, ServeError> {
+        self.submit(image, None, true)
+    }
+
+    /// Submit with a deadline `budget` from now. Admission waits at most
+    /// until the deadline ([`ServeError::Overloaded`] on a full queue);
+    /// once admitted, the request is cancelled — before it occupies a
+    /// batch slot — if the deadline passes before execution, and the call
+    /// returns [`ServeError::Expired`].
+    pub fn predict_deadline(
+        &self,
+        image: &[f32],
+        budget: Duration,
+    ) -> Result<Vec<f32>, ServeError> {
+        self.submit(image, Some(Instant::now() + budget), false)
+    }
+
+    fn submit(
+        &self,
+        image: &[f32],
+        deadline: Option<Instant>,
+        nonblocking: bool,
+    ) -> Result<Vec<f32>, ServeError> {
+        if image.len() != self.image_len {
+            return Err(ServeError::InvalidRequest(format!(
+                "image size mismatch: got {}, engine expects {}",
+                image.len(),
+                self.image_len
+            )));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req =
+            Request { image: image.to_vec(), enqueued: Instant::now(), deadline, reply: reply_tx };
+        let admission = if nonblocking {
+            self.queue.try_push(req)
+        } else {
+            self.queue.push_deadline(req, deadline)
+        };
+        match admission {
+            Ok(()) => {}
+            Err(PushError::Full(_)) => {
+                self.metrics.record_overloaded();
+                return Err(ServeError::Overloaded);
+            }
+            Err(PushError::Closed(_)) => return Err(ServeError::Stopped),
+        }
+        self.metrics.set_queue_depth(self.queue.len());
+        match deadline {
+            None => reply_rx.recv().unwrap_or(Err(ServeError::Stopped)),
+            Some(d) => {
+                let timeout = d.saturating_duration_since(Instant::now());
+                match reply_rx.recv_timeout(timeout) {
+                    Ok(reply) => reply,
+                    // The worker discovers the expiry independently (and
+                    // counts it) when it reaches the request.
+                    Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Expired),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::Stopped),
+                }
+            }
+        }
+    }
+}
+
+/// The serving-pool owner. Dropping `Server` drops its own handle: with no
+/// outstanding [`ServerHandle`]s the queue closes and every worker is
+/// joined; with handles still alive the pool is **detached** and keeps
+/// serving them, exiting on its own once the last handle disconnects.
 pub struct Server {
-    handle: ServerHandle,
-    worker: Option<std::thread::JoinHandle<()>>,
+    handle: Option<ServerHandle>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Validate the config and spawn the serving thread. The engine is
-    /// built *inside* the worker (the xla crate's PJRT handles are not
+    /// Validate the config and spawn the worker pool. Each engine is
+    /// built *inside* its worker (the xla crate's PJRT handles are not
     /// `Send`); build errors — including a zero batch cap from the engine
     /// — are reported back before this returns.
     pub fn spawn(engine: Engine, cfg: ServerConfig) -> anyhow::Result<Server> {
         anyhow::ensure!(
             cfg.queue_depth > 0,
-            "serve: queue_depth must be ≥ 1 (a zero-capacity channel deadlocks every sender)"
+            "serve: queue_depth must be ≥ 1 (a zero-capacity queue rejects every request)"
         );
-        if let Engine::Native { batch, .. } = &engine {
-            anyhow::ensure!(*batch > 0, "serve: native engine batch size must be ≥ 1");
+        anyhow::ensure!(cfg.workers > 0, "serve: the worker pool needs ≥ 1 worker");
+        if let Engine::Native { batch, .. } | Engine::Shared { batch, .. } = &engine {
+            anyhow::ensure!(*batch > 0, "serve: engine batch size must be ≥ 1");
         }
         let metrics = Arc::new(ServeMetrics::new());
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        metrics.set_workers(cfg.workers);
+        let queue: Arc<Bounded<Request>> = Arc::new(Bounded::new(cfg.queue_depth));
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<usize>>();
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            let built = (|| -> anyhow::Result<Box<dyn ServeEngine>> {
-                let built: Box<dyn ServeEngine> = match engine {
-                    Engine::Native { net, params, batch } => {
-                        Box::new(NativeBatchEngine::new(net, params, batch)?)
-                    }
-                    Engine::Pjrt { artifact_dir, arch, params } => {
-                        let manifest = crate::runtime::Manifest::load(&artifact_dir)?;
-                        let rt = crate::runtime::Runtime::cpu()?;
-                        let engine = BatchForwardEngine::load(&rt, &manifest, &arch)?;
-                        Box::new(PjrtServe { engine, params })
-                    }
-                };
-                anyhow::ensure!(
-                    built.batch_cap() > 0,
-                    "serve: engine reports a zero batch capacity"
-                );
-                Ok(built)
-            })();
-            match built {
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for spec in engine.replicate(cfg.workers) {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || match build_engine(spec) {
                 Ok(engine) => {
-                    let _ = ready_tx.send(Ok(engine.image_len()));
-                    serve_loop(engine, cfg, rx, m2);
+                    let _ = ready.send(Ok(engine.image_len()));
+                    worker_loop(engine, &cfg, &queue, &metrics);
                 }
                 Err(e) => {
-                    let _ = ready_tx.send(Err(e));
+                    let _ = ready.send(Err(e));
+                }
+            }));
+        }
+        drop(ready_tx);
+
+        // Collect every worker's load report; any failure tears the pool
+        // down (close + join) and surfaces the first error.
+        let mut image_len = None;
+        let mut first_err = None;
+        for _ in 0..cfg.workers {
+            match ready_rx.recv() {
+                Ok(Ok(il)) => {
+                    debug_assert!(image_len.is_none_or(|prev: usize| prev == il));
+                    image_len = Some(il);
+                }
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("server worker died during load"));
+                    }
                 }
             }
-        });
-        let image_len = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server thread died during load"))??;
-        Ok(Server {
-            handle: ServerHandle { tx, image_len, metrics, alive: Arc::new(()) },
-            worker: Some(worker),
-        })
+        }
+        if let Some(e) = first_err {
+            queue.close();
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(e);
+        }
+        let image_len = image_len.expect("workers > 0 all reported ready");
+        let handle = ServerHandle {
+            queue: queue.clone(),
+            image_len,
+            metrics,
+            shared: Arc::new(ProducerGuard { queue }),
+        };
+        Ok(Server { handle: Some(handle), workers })
     }
 
     /// Convenience: spawn on the native engine.
@@ -198,35 +385,61 @@ impl Server {
         Server::spawn(Engine::Native { net, params, batch }, cfg)
     }
 
+    /// Convenience: spawn serving live from a shared training store.
+    pub fn spawn_shared(
+        net: Network,
+        store: Arc<SharedParams>,
+        batch: usize,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Server> {
+        Server::spawn(Engine::Shared { net, store, batch }, cfg)
+    }
+
     pub fn handle(&self) -> ServerHandle {
-        self.handle.clone()
+        self.handle.as_ref().expect("handle lives until drop").clone()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            // Close our own sender by replacing it with a dummy channel.
-            let (dummy_tx, _) = mpsc::sync_channel(1);
-            self.handle.tx = dummy_tx;
-            // Join only when no external handle can feed the loop any
-            // more; otherwise detach — joining here would block until
-            // every outstanding clone is dropped (possibly forever).
-            // A handle dropped between the count and the join only makes
-            // the join return sooner; no new handle can appear because
-            // cloning requires an existing one.
-            if Arc::strong_count(&self.handle.alive) == 1 {
+        let Some(handle) = self.handle.take() else { return };
+        // Join only when no external handle can feed the pool any more;
+        // otherwise detach — joining here would block until every
+        // outstanding clone is dropped (possibly forever). A handle
+        // dropped between the count and the join only makes the join
+        // return sooner; no new handle can appear because cloning
+        // requires an existing one.
+        let external = Arc::strong_count(&handle.shared) > 1;
+        drop(handle); // last ProducerGuard ref ⇒ queue closes
+        if !external {
+            for w in self.workers.drain(..) {
                 let _ = w.join();
             }
         }
     }
 }
 
-fn serve_loop(
+/// Reply `Expired` (and count it) if the request's deadline has passed;
+/// otherwise hand it back for batching. The expiry gate every request
+/// passes **before** occupying a batch slot.
+fn admit(req: Request, metrics: &ServeMetrics) -> Option<Request> {
+    if req.expired(Instant::now()) {
+        metrics.record_expired();
+        let _ = req.reply.send(Err(ServeError::Expired));
+        None
+    } else {
+        Some(req)
+    }
+}
+
+/// One worker: pop a request, collect batch-mates until the cap or the
+/// first request's delay budget runs out, sweep expired requests out,
+/// execute, reply. Exits when the queue is closed and drained.
+fn worker_loop(
     mut engine: Box<dyn ServeEngine>,
-    cfg: ServerConfig,
-    rx: Receiver<Request>,
-    metrics: Arc<ServeMetrics>,
+    cfg: &ServerConfig,
+    queue: &Bounded<Request>,
+    metrics: &ServeMetrics,
 ) {
     let image_len = engine.image_len();
     let batch_cap = engine.batch_cap();
@@ -234,61 +447,87 @@ fn serve_loop(
     let mut images = vec![0.0f32; batch_cap * image_len];
 
     loop {
-        batch.clear();
-        // Block for the first request of a batch.
-        match rx.recv() {
-            Ok(r) => batch.push(r),
-            Err(_) => return, // all senders dropped
-        }
-        // Then collect batch-mates until full or the delay budget of the
+        // Block for the first live request of a batch.
+        let first = loop {
+            match queue.pop_wait() {
+                Some(r) => {
+                    metrics.set_queue_depth(queue.len());
+                    if let Some(r) = admit(r, metrics) {
+                        break r;
+                    }
+                }
+                None => return, // closed and drained
+            }
+        };
+        // Collect batch-mates until full or the delay budget of the
         // *first* request runs out.
-        let deadline = batch[0].enqueued + cfg.max_delay;
+        let flush_at = first.enqueued + cfg.max_delay;
+        batch.clear();
+        batch.push(first);
         while batch.len() < batch_cap {
-            let now = Instant::now();
-            if now >= deadline {
+            if Instant::now() >= flush_at {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            match queue.pop_before(flush_at) {
+                Some(r) => {
+                    metrics.set_queue_depth(queue.len());
+                    if let Some(r) = admit(r, metrics) {
+                        batch.push(r);
+                    }
+                }
+                None => break,
             }
+        }
+        // Final expiry sweep: time spent waiting for stragglers must not
+        // let an expired request into the engine.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < batch.len() {
+            if batch[i].expired(now) {
+                let r = batch.swap_remove(i);
+                metrics.record_expired();
+                let _ = r.reply.send(Err(ServeError::Expired));
+            } else {
+                i += 1;
+            }
+        }
+        if batch.is_empty() {
+            continue;
         }
 
         // Stage (zero-padding the tail for the static-batch engine) and
-        // execute.
+        // execute, timing the engine for the per-batch exec metric.
         images.fill(0.0);
         for (i, r) in batch.iter().enumerate() {
             images[i * image_len..(i + 1) * image_len].copy_from_slice(&r.image);
         }
         metrics.record_batch(batch.len());
+        metrics.inflight_add(batch.len());
         let sw = Stopwatch::start();
         let result = engine.run(&images, batch.len());
-        let _exec_secs = sw.elapsed_secs();
+        metrics.record_exec_us(sw.elapsed_secs() * 1e6);
+        metrics.inflight_sub(batch.len());
 
         match result {
-            Ok(rows) => {
-                if rows.len() < batch.len() {
-                    let msg = format!(
-                        "engine returned {} rows for a batch of {}",
-                        rows.len(),
-                        batch.len()
-                    );
-                    for r in batch.drain(..) {
-                        let _ = r.reply.send(Err(anyhow::anyhow!("{msg}")));
-                    }
-                    continue;
-                }
+            Ok(rows) if rows.len() >= batch.len() => {
                 for (i, r) in batch.drain(..).enumerate() {
-                    metrics
-                        .record_latency_us(r.enqueued.elapsed().as_secs_f64() * 1e6);
+                    metrics.record_latency_us(r.enqueued.elapsed().as_secs_f64() * 1e6);
                     let _ = r.reply.send(Ok(rows[i].clone()));
                 }
             }
-            Err(e) => {
-                let msg = format!("batch execution failed: {e}");
+            Ok(rows) => {
+                let msg =
+                    format!("engine returned {} rows for a batch of {}", rows.len(), batch.len());
+                metrics.record_exec_failure();
                 for r in batch.drain(..) {
-                    let _ = r.reply.send(Err(anyhow::anyhow!("{msg}")));
+                    let _ = r.reply.send(Err(ServeError::Exec(msg.clone())));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e:#}");
+                metrics.record_exec_failure();
+                for r in batch.drain(..) {
+                    let _ = r.reply.send(Err(ServeError::Exec(msg.clone())));
                 }
             }
         }
@@ -297,10 +536,10 @@ fn serve_loop(
 
 #[cfg(test)]
 mod tests {
-    // Engine-driven integration coverage (native partial batches,
-    // straggler flushes, drop semantics) lives in rust/tests/serving.rs
-    // and examples/serve_infer.rs. Unit tests here cover config defaults
-    // and spawn-time validation.
+    // Engine-driven integration coverage (multi-worker pools, deadline
+    // expiry, admission control, drop semantics, live shared-store
+    // serving) lives in rust/tests/serving.rs and the serving examples.
+    // Unit tests here cover config defaults and spawn-time validation.
     use super::*;
     use crate::config::ArchSpec;
 
@@ -309,6 +548,7 @@ mod tests {
         let c = ServerConfig::default();
         assert!(c.max_delay >= Duration::from_micros(100));
         assert!(c.queue_depth >= 16);
+        assert!(c.workers >= 1);
     }
 
     #[test]
@@ -331,6 +571,31 @@ mod tests {
         let net = Network::new(ArchSpec::tiny());
         let params = net.init_params(1);
         let e = Server::spawn_native(net, params, 0, ServerConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("batch size"), "{e}");
+    }
+
+    #[test]
+    fn spawn_rejects_zero_workers() {
+        let net = Network::new(ArchSpec::tiny());
+        let params = net.init_params(1);
+        let e = Server::spawn_native(
+            net,
+            params,
+            4,
+            ServerConfig { workers: 0, ..Default::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("worker"), "{e}");
+    }
+
+    #[test]
+    fn spawn_rejects_zero_batch_on_shared_engine() {
+        let net = Network::new(ArchSpec::tiny());
+        let store = Arc::new(SharedParams::new(&net.init_params(1), &net.dims));
+        let e = Server::spawn_shared(net, store, 0, ServerConfig::default())
             .unwrap_err()
             .to_string();
         assert!(e.contains("batch size"), "{e}");

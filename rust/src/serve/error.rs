@@ -1,0 +1,84 @@
+//! Typed serving errors — the admission-control and deadline contract of
+//! the serving tier.
+//!
+//! Clients used to get one opaque "server stopped" string for every
+//! failure mode; the worker-pool rewrite distinguishes the cases a real
+//! load balancer must tell apart: a full queue ([`ServeError::Overloaded`],
+//! retry elsewhere / shed load), a missed deadline ([`ServeError::Expired`],
+//! the answer is worthless now), and an actual shutdown
+//! ([`ServeError::Stopped`]).
+
+/// Why a prediction request failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded request queue was full and the request was not admitted
+    /// (within its deadline, if it had one). The server is shedding load —
+    /// back off and retry.
+    Overloaded,
+    /// The request's deadline passed before a reply was produced. Expired
+    /// requests are cancelled before they occupy a batch slot; the engine
+    /// never runs them.
+    Expired,
+    /// The server has shut down (or a worker died) — no reply will ever
+    /// come.
+    Stopped,
+    /// The request was malformed (e.g. an image size mismatch) and was
+    /// rejected before it was enqueued.
+    InvalidRequest(String),
+    /// The engine failed while executing the batch containing this
+    /// request.
+    Exec(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => {
+                write!(f, "server overloaded: request queue is full")
+            }
+            ServeError::Expired => {
+                write!(f, "request expired: deadline passed before execution")
+            }
+            ServeError::Stopped => write!(f, "server stopped"),
+            ServeError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::Exec(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_are_distinguishable_in_display() {
+        let msgs = [
+            ServeError::Overloaded.to_string(),
+            ServeError::Expired.to_string(),
+            ServeError::Stopped.to_string(),
+            ServeError::InvalidRequest("image size mismatch".into()).to_string(),
+            ServeError::Exec("boom".into()).to_string(),
+        ];
+        for (i, a) in msgs.iter().enumerate() {
+            for (j, b) in msgs.iter().enumerate() {
+                if i != j {
+                    assert_ne!(a, b);
+                }
+            }
+        }
+        assert!(msgs[0].contains("overloaded"));
+        assert!(msgs[1].contains("expired"));
+        assert!(msgs[3].contains("size"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(ServeError::Overloaded)?;
+            Ok(())
+        }
+        assert!(fails().unwrap_err().to_string().contains("overloaded"));
+    }
+}

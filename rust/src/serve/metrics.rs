@@ -1,30 +1,178 @@
-//! Serving metrics: request latency distribution and batch fill —
-//! the numbers the `serve_infer` example reports.
+//! Serving metrics: bounded-memory latency/execution histograms, queue
+//! and in-flight gauges, and admission-control counters.
+//!
+//! The first cut of this module pushed every latency into an unbounded
+//! `Vec` under a `Mutex` — sustained traffic grew memory without bound and
+//! snapshots sorted the whole history. Everything is now fixed-size and
+//! lock-free: distributions live in log-spaced fixed-bucket
+//! [`Histogram`]s (atomic counters; percentile estimates are exact to one
+//! bucket width, regression-tested), counters and gauges are plain
+//! atomics. Recording costs a handful of relaxed atomic ops regardless of
+//! how long the server has been up.
 
-use crate::util::stats;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-/// Thread-safe latency/batch accounting.
+/// Number of histogram buckets per decade of latency. The geometric
+/// bucket ratio is `10^(1/PER_DECADE)` ≈ 1.33, which bounds the relative
+/// error of every percentile estimate.
+const PER_DECADE: usize = 8;
+/// Histogram span: `10^DECADES` × the 1 µs base bucket (≈ 10 s). Slower
+/// samples land in the overflow bucket and report the observed max.
+const DECADES: usize = 7;
+
+/// A fixed-bucket histogram over microsecond samples. Log-spaced bucket
+/// edges from 1 µs to ~10 s plus an overflow bucket; all state is atomic,
+/// so recording never blocks and memory is constant for the lifetime of
+/// the server.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Ascending bucket upper edges (µs); samples beyond the last edge go
+    /// to the overflow bucket.
+    bounds_us: Vec<f64>,
+    /// One counter per bucket, `bounds_us.len() + 1` with the overflow.
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let n = DECADES * PER_DECADE;
+        let ratio = 10f64.powf(1.0 / PER_DECADE as f64);
+        let mut bounds_us = Vec::with_capacity(n);
+        let mut edge = 1.0f64;
+        for _ in 0..n {
+            bounds_us.push(edge);
+            edge *= ratio;
+        }
+        let counts = (0..=n).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds_us,
+            counts,
+            total: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// The geometric ratio between adjacent bucket edges — the bound on
+    /// the relative error of [`Histogram::percentile_us`].
+    pub fn bucket_ratio() -> f64 {
+        10f64.powf(1.0 / PER_DECADE as f64)
+    }
+
+    /// Record one sample (µs). Negative samples clamp to zero.
+    pub fn record_us(&self, us: f64) {
+        let us = if us.is_finite() { us.max(0.0) } else { 0.0 };
+        let idx = self.bounds_us.partition_point(|&edge| edge < us);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let ns = (us * 1e3) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded sample (µs); 0 when empty.
+    pub fn max_us(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Mean of all recorded samples (µs); 0 when empty.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3 / n as f64
+    }
+
+    /// Percentile estimate (p in [0, 100]): the upper edge of the bucket
+    /// holding the rank-p sample, i.e. within one bucket width
+    /// ([`Histogram::bucket_ratio`]) above the true value. Returns a
+    /// well-defined 0 (never NaN) on an empty histogram.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    // Overflow bucket: the best bound we have is the max.
+                    self.max_us()
+                };
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Thread-safe serving metrics: request-latency and per-batch
+/// execution-time histograms, batch fill, deadline/admission counters,
+/// queue-depth and in-flight gauges. All recording paths are lock-free
+/// and memory is bounded.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
-    inner: Mutex<Inner>,
+    /// Enqueue → reply latency of served requests.
+    latency: Histogram,
+    /// Engine execution time per batch (the `serve_loop` measurement that
+    /// used to be discarded).
+    exec: Histogram,
+    batches: AtomicU64,
+    /// Sum of batch sizes (mean fill = filled / batches).
+    filled: AtomicU64,
+    expired: AtomicU64,
+    overloaded: AtomicU64,
+    exec_failures: AtomicU64,
+    queue_depth: AtomicUsize,
+    in_flight: AtomicUsize,
+    workers: AtomicUsize,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    latencies_us: Vec<f64>,
-    batch_sizes: Vec<usize>,
-}
-
-/// A snapshot of the metrics for reporting.
+/// A point-in-time snapshot of the metrics for reporting. Every field is
+/// well-defined (zero, never NaN) on a server that has served nothing.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests answered successfully.
     pub requests: usize,
+    /// Batches executed.
     pub batches: usize,
     pub p50_us: f64,
     pub p99_us: f64,
     pub max_us: f64,
+    /// Per-batch engine execution time percentiles/mean (µs).
+    pub exec_p50_us: f64,
+    pub exec_p99_us: f64,
+    pub exec_mean_us: f64,
     pub mean_batch_fill: f64,
+    /// Requests cancelled because their deadline passed before execution.
+    pub expired: usize,
+    /// Requests rejected at admission because the queue was full.
+    pub overloaded: usize,
+    /// Batches whose engine execution failed.
+    pub exec_failures: usize,
+    /// Queue depth at the last enqueue/dequeue (gauge).
+    pub queue_depth: usize,
+    /// Requests currently staged in an executing batch (gauge).
+    pub in_flight: usize,
+    /// Worker threads in the pool.
+    pub workers: usize,
 }
 
 impl ServeMetrics {
@@ -32,28 +180,76 @@ impl ServeMetrics {
         Self::default()
     }
 
+    /// Record one served request's enqueue→reply latency.
     pub fn record_latency_us(&self, us: f64) {
-        self.inner.lock().unwrap().latencies_us.push(us);
+        self.latency.record_us(us);
     }
 
+    /// Record one executed batch's size.
     pub fn record_batch(&self, size: usize) {
-        self.inner.lock().unwrap().batch_sizes.push(size);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.filled.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record one batch's engine execution time.
+    pub fn record_exec_us(&self, us: f64) {
+        self.exec.record_us(us);
+    }
+
+    /// Count a request cancelled on deadline expiry.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a request rejected at admission (queue full).
+    pub fn record_overloaded(&self) {
+        self.overloaded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a batch whose engine execution failed.
+    pub fn record_exec_failure(&self) {
+        self.exec_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Update the queue-depth gauge (called from both enqueue and
+    /// dequeue sides with the queue's current length).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    pub fn set_workers(&self, n: usize) {
+        self.workers.store(n, Ordering::Relaxed);
+    }
+
+    /// Raise the in-flight gauge as a batch enters the engine.
+    pub fn inflight_add(&self, n: usize) {
+        self.in_flight.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lower the in-flight gauge as a batch leaves the engine.
+    pub fn inflight_sub(&self, n: usize) {
+        self.in_flight.fetch_sub(n, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let inner = self.inner.lock().unwrap();
-        let l = &inner.latencies_us;
+        let batches = self.batches.load(Ordering::Relaxed);
+        let filled = self.filled.load(Ordering::Relaxed);
         MetricsSnapshot {
-            requests: l.len(),
-            batches: inner.batch_sizes.len(),
-            p50_us: stats::percentile(l, 50.0),
-            p99_us: stats::percentile(l, 99.0),
-            max_us: l.iter().copied().fold(0.0, f64::max),
-            mean_batch_fill: if inner.batch_sizes.is_empty() {
-                0.0
-            } else {
-                inner.batch_sizes.iter().sum::<usize>() as f64 / inner.batch_sizes.len() as f64
-            },
+            requests: self.latency.count() as usize,
+            batches: batches as usize,
+            p50_us: self.latency.percentile_us(50.0),
+            p99_us: self.latency.percentile_us(99.0),
+            max_us: self.latency.max_us(),
+            exec_p50_us: self.exec.percentile_us(50.0),
+            exec_p99_us: self.exec.percentile_us(99.0),
+            exec_mean_us: self.exec.mean_us(),
+            mean_batch_fill: if batches == 0 { 0.0 } else { filled as f64 / batches as f64 },
+            expired: self.expired.load(Ordering::Relaxed) as usize,
+            overloaded: self.overloaded.load(Ordering::Relaxed) as usize,
+            exec_failures: self.exec_failures.load(Ordering::Relaxed) as usize,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            workers: self.workers.load(Ordering::Relaxed),
         }
     }
 }
@@ -61,22 +257,105 @@ impl ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::stats;
 
     #[test]
-    fn records_and_snapshots() {
-        let m = ServeMetrics::new();
-        for i in 1..=100 {
-            m.record_latency_us(i as f64);
+    fn empty_snapshot_is_all_zeros_never_nan() {
+        // Regression: `MetricsSnapshot` on a zero-request server used to
+        // run percentiles over empty data; every field must now be a
+        // well-defined zero.
+        let s = ServeMetrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.batches, 0);
+        for v in [
+            s.p50_us,
+            s.p99_us,
+            s.max_us,
+            s.exec_p50_us,
+            s.exec_p99_us,
+            s.exec_mean_us,
+            s.mean_batch_fill,
+        ] {
+            assert!(v.is_finite(), "snapshot field must never be NaN/inf: {v}");
+            assert_eq!(v, 0.0);
         }
+        assert_eq!(s.expired, 0);
+        assert_eq!(s.overloaded, 0);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.in_flight, 0);
+    }
+
+    #[test]
+    fn percentiles_stay_within_one_bucket_width() {
+        // The histogram contract: against an exact reference percentile
+        // over the same samples, the estimate is never below the true
+        // sample and at most one geometric bucket above it.
+        let m = ServeMetrics::new();
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        for &s in &samples {
+            m.record_latency_us(s);
+        }
+        let snap = m.snapshot();
+        let ratio = Histogram::bucket_ratio();
+        for (p, est) in [(50.0, snap.p50_us), (99.0, snap.p99_us)] {
+            let exact = stats::percentile(&samples, p);
+            assert!(
+                est >= exact * 0.999 && est <= exact * ratio * 1.001,
+                "p{p}: histogram estimate {est} vs exact {exact} (ratio bound {ratio})"
+            );
+        }
+        assert_eq!(snap.requests, 1000);
+        assert_eq!(snap.max_us, 1000.0);
+    }
+
+    #[test]
+    fn memory_is_bounded_under_sustained_traffic() {
+        // 100k samples land in the same fixed bucket array that 10
+        // samples do — nothing grows with traffic.
+        let m = ServeMetrics::new();
+        for i in 0..100_000u64 {
+            m.record_latency_us((i % 7_000) as f64);
+            if i % 8 == 0 {
+                m.record_exec_us((i % 900) as f64);
+            }
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100_000);
+        assert!(s.p50_us > 0.0 && s.p99_us >= s.p50_us);
+        assert!(s.exec_p99_us >= s.exec_p50_us);
+    }
+
+    #[test]
+    fn overflow_bucket_reports_observed_max() {
+        let h = Histogram::new();
+        h.record_us(1e12); // far past the last edge
+        assert_eq!(h.count(), 1);
+        assert!((h.percentile_us(50.0) - 1e12).abs() / 1e12 < 1e-6);
+        assert!((h.max_us() - 1e12).abs() / 1e12 < 1e-6);
+    }
+
+    #[test]
+    fn batch_and_gauge_accounting() {
+        let m = ServeMetrics::new();
         m.record_batch(4);
         m.record_batch(8);
+        m.record_exec_us(100.0);
+        m.record_expired();
+        m.record_overloaded();
+        m.set_queue_depth(3);
+        m.set_workers(2);
+        m.inflight_add(8);
+        m.inflight_sub(8);
+        m.inflight_add(4);
         let s = m.snapshot();
-        assert_eq!(s.requests, 100);
         assert_eq!(s.batches, 2);
-        assert!((s.p50_us - 50.5).abs() < 1.0);
-        assert!(s.p99_us >= 99.0);
-        assert_eq!(s.max_us, 100.0);
         assert!((s.mean_batch_fill - 6.0).abs() < 1e-9);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.overloaded, 1);
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.in_flight, 4);
+        assert!(s.exec_mean_us > 0.0);
     }
 
     #[test]

@@ -1,12 +1,19 @@
 //! Batched inference service — the deployment-side complement of the
-//! trainer: once CHAOS has produced weights, this module serves
-//! predictions with dynamic batching.
+//! trainer: once CHAOS has produced weights (or *while* it is producing
+//! them), this module serves predictions with dynamic batching.
 //!
-//! Architecture (std threads + channels; tokio is not in the vendored
-//! registry): callers submit images through [`ServerHandle::predict`]; a
-//! collector thread groups them into batches of up to `B`, flushing on
-//! size or on `max_delay`; the engine runs the batch and routes each row
-//! back through the caller's oneshot channel.
+//! Architecture (std threads; tokio is not in the vendored registry):
+//! callers submit images through a [`ServerHandle`] — blocking
+//! ([`ServerHandle::predict`]), load-shedding
+//! ([`ServerHandle::try_predict`]) or deadline-bounded
+//! ([`ServerHandle::predict_deadline`]) — into a shared bounded queue; a
+//! pool of `N` worker threads, each owning its own engine and batch
+//! arenas, drains the queue, groups requests into batches of up to `B`
+//! (flushing on size or on `max_delay`), drops expired requests before
+//! they occupy a batch slot, and routes each probability row back through
+//! the caller's oneshot channel. Failures are typed ([`ServeError`]):
+//! `Overloaded` (full queue), `Expired` (deadline passed), `Stopped`
+//! (shutdown), plus request-validation and execution errors.
 //!
 //! ## Engine choice ([`Engine`])
 //!
@@ -16,13 +23,28 @@
 //!   [`crate::runtime::NativeBatchEngine`]. Works in every build, needs no
 //!   artifacts, runs partial batches at their actual size, and serves
 //!   weights straight from a training run.
+//! * **`Engine::Shared`** — serves **live from a training run**: each
+//!   batch snapshots the current weights out of a
+//!   [`crate::chaos::SharedParams`] store
+//!   ([`crate::runtime::SharedStoreEngine`]) under the CHAOS per-layer
+//!   read contract, so predictions track training mid-epoch with no
+//!   checkpoint round-trip.
 //! * **`Engine::Pjrt`** — executes the AOT-compiled batched-forward HLO
 //!   artifact on the PJRT CPU client (requires `make artifacts` and the
 //!   `xla-runtime` feature). The artifact's batch dimension is static, so
 //!   partial batches are zero-padded to the compiled `B`.
+//!
+//! Observability: [`ServerHandle::metrics`] exposes [`ServeMetrics`] —
+//! fixed-bucket latency and exec-time histograms (bounded memory under
+//! sustained traffic) plus queue-depth / in-flight / worker gauges and
+//! expiry / overload / failure counters, snapshotted via
+//! [`ServeMetrics::snapshot`] into a [`MetricsSnapshot`].
 
 mod batcher;
+mod error;
 mod metrics;
+mod queue;
 
 pub use batcher::{Engine, Server, ServerConfig, ServerHandle};
-pub use metrics::ServeMetrics;
+pub use error::ServeError;
+pub use metrics::{Histogram, MetricsSnapshot, ServeMetrics};

@@ -1,0 +1,264 @@
+//! Bounded multi-producer / multi-consumer request queue.
+//!
+//! The serving tier's admission point: producers ([`super::ServerHandle`])
+//! push with one of three disciplines — non-blocking
+//! ([`Bounded::try_push`], the `try_predict` path), blocking until space
+//! ([`Bounded::push_deadline`] with no deadline, the classic `predict`
+//! path) or blocking at most until a deadline (`predict_deadline`) — and
+//! the worker pool pops from the shared tail. `std::sync::mpsc` cannot
+//! express this shape (its receiver is single-consumer and `SyncSender`
+//! has no deadline-bounded send), so this is a small
+//! `Mutex<VecDeque> + Condvar` queue, the textbook construction.
+//!
+//! Closing ([`Bounded::close`]) is one-way: further pushes fail with
+//! [`PushError::Closed`], while pops drain the remaining items and then
+//! return `None` — the same drain-then-disconnect semantics as dropping
+//! every `mpsc` sender.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a push was refused. The rejected item is handed back so the caller
+/// can reply to it.
+#[derive(Debug)]
+pub(crate) enum PushError<T> {
+    /// The queue was at capacity (for the whole wait, if one was allowed).
+    Full(T),
+    /// The queue is closed — the server is shutting down.
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue with deadline-aware blocking pushes and pops.
+pub(crate) struct Bounded<T> {
+    cap: usize,
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Bounded<T> {
+    /// A queue admitting at most `cap` items (`cap ≥ 1`).
+    pub fn new(cap: usize) -> Bounded<T> {
+        assert!(cap > 0, "queue capacity must be ≥ 1");
+        Bounded {
+            cap,
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(cap), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Current depth (a gauge — racy by nature, exact at the instant read).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Non-blocking push: fails immediately when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Push, waiting for space until `deadline` (forever when `None`).
+    /// Returns [`PushError::Full`] if the deadline passes first and
+    /// [`PushError::Closed`] if the queue closes while waiting.
+    pub fn push_deadline(&self, item: T, deadline: Option<Instant>) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.items.len() < self.cap {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match deadline {
+                None => g = self.not_full.wait(g).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(PushError::Full(item));
+                    }
+                    g = self.not_full.wait_timeout(g, d - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Pop, blocking until an item arrives. Returns `None` only once the
+    /// queue is closed **and** drained.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop, blocking at most until `deadline`. `None` means timeout (or
+    /// closed-and-drained) — the batch collector's straggler wait.
+    pub fn pop_before(&self, deadline: Instant) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g = self.not_empty.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Close the queue: pushes start failing, pops drain what remains.
+    /// Wakes every waiter on both sides.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    #[cfg(test)]
+    fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let q: Bounded<u32> = Bounded::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), Some(2));
+    }
+
+    #[test]
+    fn push_deadline_times_out_when_full() {
+        let q: Bounded<u32> = Bounded::new(1);
+        q.try_push(1).unwrap();
+        let start = Instant::now();
+        let deadline = start + Duration::from_millis(30);
+        match q.push_deadline(2, Some(deadline)) {
+            Err(PushError::Full(2)) => {}
+            other => panic!("expected Full(2), got {other:?}"),
+        }
+        assert!(start.elapsed() >= Duration::from_millis(25), "must wait out the deadline");
+    }
+
+    #[test]
+    fn push_deadline_unblocks_when_space_frees() {
+        let q: Arc<Bounded<u32>> = Arc::new(Bounded::new(1));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            q2.push_deadline(2, Some(Instant::now() + Duration::from_secs(10)))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_wait(), Some(1));
+        assert!(t.join().unwrap().is_ok(), "freed slot must admit the waiter");
+        assert_eq!(q.pop_wait(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_disconnects() {
+        let q: Bounded<u32> = Bounded::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.try_push(8) {
+            Err(PushError::Closed(8)) => {}
+            other => panic!("expected Closed(8), got {other:?}"),
+        }
+        // Remaining items drain, then the disconnect surfaces.
+        assert_eq!(q.pop_wait(), Some(7));
+        assert_eq!(q.pop_wait(), None);
+        assert_eq!(q.pop_before(Instant::now() + Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers_and_producers() {
+        let q: Arc<Bounded<u32>> = Arc::new(Bounded::new(1));
+        q.try_push(1).unwrap();
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                // Drain the item, then block on an empty queue.
+                assert_eq!(q.pop_wait(), Some(1));
+                q.pop_wait()
+            })
+        };
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || q.push_deadline(9, None))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        // The producer either got its item in before close (consumer pops
+        // it) or was woken with Closed; the consumer must return either
+        // way rather than hang.
+        let popped = consumer.join().unwrap();
+        match producer.join().unwrap() {
+            Ok(()) => assert!(popped == Some(9) || popped.is_none()),
+            Err(PushError::Closed(9)) => {}
+            Err(other) => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pop_before_times_out_on_empty_queue() {
+        let q: Bounded<u32> = Bounded::new(1);
+        let start = Instant::now();
+        assert_eq!(q.pop_before(start + Duration::from_millis(20)), None);
+        assert!(start.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_is_rejected() {
+        let _ = Bounded::<u32>::new(0);
+    }
+}

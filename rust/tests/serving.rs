@@ -1,16 +1,28 @@
-//! Serving integration: dynamic batcher under concurrent clients.
+//! Serving integration: the multi-worker dynamic batcher under concurrent
+//! clients.
 //!
 //! The native-engine tests run in every build (no artifacts needed) and
-//! cover correctness against per-sample forwards, partial batches, the
-//! `max_delay` straggler path, spawn-time validation, and the
-//! drop-while-handles-alive detach. The PJRT tests require
+//! cover correctness against per-sample forwards (single- and
+//! multi-worker pools), partial batches, the `max_delay` straggler path,
+//! spawn-time validation, drop/detach semantics under load, typed
+//! admission control (`Overloaded`), deadline expiry (expired requests
+//! provably never reach the engine — enforced with a runtime-registered
+//! "sleep" layer that wedges the worker deterministically), and the
+//! live-from-training shared-store path. The whole suite also runs under
+//! `--features race-check` in CI: the shared-store read path must satisfy
+//! the training policy's `SyncContract`. The PJRT tests require
 //! `make artifacts` and skip otherwise.
 
+use chaos_phi::chaos::{SharedParams, Trainer};
+use chaos_phi::config::{ArchSpec, LayerSpec};
 use chaos_phi::data::{generate_synthetic, SynthConfig};
-use chaos_phi::nn::Network;
-use chaos_phi::runtime::{artifacts_available, ForwardEngine, Manifest, Runtime};
-use chaos_phi::serve::{Engine, Server, ServerConfig};
-use std::time::Duration;
+use chaos_phi::nn::layer::{self, LayerCtx, LayerKind};
+use chaos_phi::nn::{Acts, LayerDims, LayerOp, Network, OpScratch, Shape};
+use chaos_phi::runtime::{artifacts_available, ForwardEngine, Manifest, NativeBatchEngine, Runtime};
+use chaos_phi::serve::{Engine, ServeError, Server, ServerConfig};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn tiny_server(batch: usize, max_delay: Duration, seed: u64) -> (Server, Network, Vec<f32>) {
     let net = Network::from_name("tiny").unwrap();
@@ -21,6 +33,18 @@ fn tiny_server(batch: usize, max_delay: Duration, seed: u64) -> (Server, Network
     )
     .unwrap();
     (server, net, params)
+}
+
+/// Poll `cond` (typically a metrics read) until true or `timeout`.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
 }
 
 #[test]
@@ -139,6 +163,392 @@ fn spawn_validation_rejects_degenerate_configs() {
         ServerConfig::default(),
     )
     .is_err());
+}
+
+#[test]
+fn multi_worker_pool_matches_per_sample_forward() {
+    // N ≥ 2 workers, each with its own engine/arenas, racing over one
+    // queue: every row must still be bit-identical to the per-sample
+    // reference, whichever worker served it.
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(9);
+    let server = Server::spawn(
+        Engine::Native { net: net.clone(), params: params.clone(), batch: 4 },
+        ServerConfig { max_delay: Duration::from_millis(1), workers: 3, ..Default::default() },
+    )
+    .unwrap();
+    let images = generate_synthetic(48, 8, &SynthConfig::default()).resize(13);
+    let mut scratch = net.scratch();
+    let expected: Vec<Vec<f32>> = (0..images.len())
+        .map(|i| net.forward(&params.as_slice(), images.image(i), &mut scratch, None).to_vec())
+        .collect();
+    std::thread::scope(|s| {
+        for c in 0..6usize {
+            let handle = server.handle();
+            let images = &images;
+            let expected = &expected;
+            s.spawn(move || {
+                let mut i = c;
+                while i < images.len() {
+                    let got = handle.predict(images.image(i)).unwrap();
+                    assert_eq!(got, expected[i], "pool served a wrong row for image {i}");
+                    i += 6;
+                }
+            });
+        }
+    });
+    let m = server.handle().metrics.snapshot();
+    assert_eq!(m.requests, 48);
+    assert_eq!(m.workers, 3);
+    assert!(m.batches >= 12, "cap 4 ⇒ at least 12 batches for 48 requests");
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic load tests: a runtime-registered "sleep" pass-through layer
+// wedges the worker for a known duration, so queue-full and deadline-expiry
+// scenarios need no timing luck.
+// ---------------------------------------------------------------------------
+
+/// How long one sleepnet forward wedges its worker.
+const SLEEP_MS: u64 = 250;
+
+struct SleepKind;
+
+#[derive(Debug)]
+struct SleepOp {
+    shape: Shape,
+}
+
+impl LayerKind for SleepKind {
+    fn name(&self) -> &'static str {
+        "sleep"
+    }
+
+    fn from_json(&self, _body: &chaos_phi::util::Json) -> anyhow::Result<LayerSpec> {
+        Ok(LayerSpec::custom("sleep", vec![]))
+    }
+
+    fn to_json(&self, _spec: &LayerSpec) -> chaos_phi::util::Json {
+        chaos_phi::util::Json::obj(vec![])
+    }
+
+    fn out_shape(
+        &self,
+        _spec: &LayerSpec,
+        input: Shape,
+        _ctx: &LayerCtx<'_>,
+    ) -> anyhow::Result<Shape> {
+        Ok(input)
+    }
+
+    fn compile(&self, _spec: &LayerSpec, dims: &LayerDims) -> anyhow::Result<Box<dyn LayerOp>> {
+        Ok(Box::new(SleepOp {
+            shape: Shape { maps: dims.out_maps, side: dims.out_side, flat: dims.flat },
+        }))
+    }
+}
+
+impl LayerOp for SleepOp {
+    fn kind(&self) -> &'static str {
+        "sleep"
+    }
+
+    fn in_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn out_shape(&self) -> Shape {
+        self.shape
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        0..0
+    }
+
+    fn forward(&self, _: &[f32], input: &[f32], out: &mut [f32], _: &mut OpScratch<'_>) {
+        std::thread::sleep(Duration::from_millis(SLEEP_MS));
+        out.copy_from_slice(input);
+    }
+
+    fn backward(
+        &self,
+        _: &[f32],
+        _acts: Acts<'_>,
+        delta_out: &mut [f32],
+        delta_in: &mut [f32],
+        _: &mut [f32],
+        _: &mut OpScratch<'_>,
+    ) {
+        if delta_in.is_empty() {
+            return;
+        }
+        delta_in.copy_from_slice(delta_out);
+    }
+}
+
+/// One worker, batch cap 1, on a network whose forward sleeps `SLEEP_MS`.
+fn sleepy_server(queue_depth: usize) -> Server {
+    // Ignore the duplicate error when the test binary registers twice.
+    let _ = layer::register(Arc::new(SleepKind));
+    let arch = ArchSpec {
+        name: "sleepnet".into(),
+        layers: vec![
+            LayerSpec::Input { side: 13 },
+            LayerSpec::custom("sleep", vec![]),
+            LayerSpec::fc(8),
+            LayerSpec::Output { classes: 10 },
+        ],
+        paper_epochs: 1,
+    };
+    let net = Network::compile(arch).unwrap();
+    let params = net.init_params(1);
+    Server::spawn(
+        Engine::Native { net, params, batch: 1 },
+        ServerConfig { max_delay: Duration::from_micros(1), queue_depth, workers: 1 },
+    )
+    .unwrap()
+}
+
+#[test]
+fn full_queue_yields_typed_overloaded_rejection() {
+    // queue_depth 1, one wedged worker: A executes (in-flight), B occupies
+    // the only queue slot, so C's try_predict must be rejected with the
+    // typed Overloaded — immediately, not by blocking.
+    let server = sleepy_server(1);
+    let image = vec![0.0f32; 13 * 13];
+    let h = server.handle();
+
+    let ha = server.handle();
+    let img_a = image.clone();
+    let ta = std::thread::spawn(move || ha.predict(&img_a));
+    // A is staged in the engine (in-flight gauge) ⇒ the queue is empty.
+    assert!(
+        wait_until(Duration::from_secs(10), || h.metrics.snapshot().in_flight >= 1),
+        "worker never staged the first request"
+    );
+
+    let hb = server.handle();
+    let img_b = image.clone();
+    let tb = std::thread::spawn(move || hb.predict(&img_b));
+    // B admitted ⇒ the queue is now full.
+    assert!(
+        wait_until(Duration::from_secs(10), || h.metrics.snapshot().queue_depth >= 1),
+        "second request never reached the queue"
+    );
+
+    let start = Instant::now();
+    let err = h.try_predict(&image).unwrap_err();
+    assert_eq!(err, ServeError::Overloaded);
+    assert!(
+        start.elapsed() < Duration::from_millis(SLEEP_MS),
+        "try_predict must reject immediately, not wait out the wedged worker"
+    );
+
+    assert_eq!(ta.join().unwrap().unwrap().len(), 10);
+    assert_eq!(tb.join().unwrap().unwrap().len(), 10);
+    let m = h.metrics.snapshot();
+    assert_eq!(m.overloaded, 1);
+    assert_eq!(m.requests, 2);
+}
+
+#[test]
+fn expired_requests_never_reach_the_engine() {
+    // A wedges the worker for SLEEP_MS; B and C carry deadlines that
+    // expire long before the worker frees up. Both clients must get the
+    // typed Expired, and the engine must run exactly one batch (cap 1 ⇒
+    // batches == executions): the expired requests were cancelled at the
+    // admit gate, never staged.
+    let server = sleepy_server(8);
+    let image = vec![0.0f32; 13 * 13];
+    let h = server.handle();
+
+    let ha = server.handle();
+    let img_a = image.clone();
+    let ta = std::thread::spawn(move || ha.predict(&img_a));
+    assert!(
+        wait_until(Duration::from_secs(10), || h.metrics.snapshot().in_flight >= 1),
+        "worker never staged the first request"
+    );
+
+    let deadline = Duration::from_millis(SLEEP_MS / 4);
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            let hx = server.handle();
+            let img = image.clone();
+            std::thread::spawn(move || hx.predict_deadline(&img, deadline))
+        })
+        .collect();
+    for c in clients {
+        assert_eq!(c.join().unwrap().unwrap_err(), ServeError::Expired);
+    }
+    assert_eq!(ta.join().unwrap().unwrap().len(), 10);
+
+    // The worker discovers (and counts) both expiries once it unwedges.
+    assert!(
+        wait_until(Duration::from_secs(10), || h.metrics.snapshot().expired == 2),
+        "worker must count both expired requests"
+    );
+    let m = h.metrics.snapshot();
+    assert_eq!(m.requests, 1, "only the deadline-free request was served");
+    assert_eq!(m.batches, 1, "cap 1 ⇒ one batch per execution; expired requests never ran");
+}
+
+#[test]
+fn worker_pool_shutdown_joins_all_workers() {
+    // A 4-worker pool with no external handles: drop must close the queue,
+    // wake every idle worker, and join all of them promptly.
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(2);
+    let server = Server::spawn(
+        Engine::Native { net, params, batch: 4 },
+        ServerConfig { max_delay: Duration::from_millis(1), workers: 4, ..Default::default() },
+    )
+    .unwrap();
+    // Touch the pool so workers are demonstrably alive before shutdown.
+    let images = generate_synthetic(8, 3, &SynthConfig::default()).resize(13);
+    for i in 0..images.len() {
+        assert_eq!(server.handle().predict(images.image(i)).unwrap().len(), 10);
+    }
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        drop(server);
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("Server::drop must join all 4 workers once no handles remain");
+}
+
+#[test]
+fn dropping_server_under_load_keeps_serving_surviving_handles() {
+    // Clients submit continuously while the Server drops mid-stream: the
+    // pool must detach (handles outlive it) and every in-flight and
+    // subsequent request must still be answered — no hang, no Stopped.
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(4);
+    let server = Server::spawn(
+        Engine::Native { net, params, batch: 4 },
+        ServerConfig { max_delay: Duration::from_micros(200), workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let images = generate_synthetic(30, 5, &SynthConfig::default()).resize(13);
+    let handles: Vec<_> = (0..3).map(|_| server.handle()).collect();
+    std::thread::scope(|s| {
+        for (c, handle) in handles.into_iter().enumerate() {
+            let images = &images;
+            s.spawn(move || {
+                let mut i = c;
+                while i < images.len() {
+                    let row = handle
+                        .predict(images.image(i))
+                        .expect("detached pool must keep serving live handles");
+                    assert_eq!(row.len(), 10);
+                    i += 3;
+                }
+            });
+        }
+        // Drop the server while the clients above are mid-stream.
+        std::thread::sleep(Duration::from_millis(2));
+        drop(server);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Shared-store (live-from-training) serving
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_store_server_tracks_published_updates() {
+    let net = Network::from_name("tiny").unwrap();
+    let params = net.init_params(7);
+    let store = Arc::new(SharedParams::new(&params, &net.dims));
+    let server = Server::spawn_shared(
+        net.clone(),
+        store.clone(),
+        4,
+        ServerConfig { max_delay: Duration::from_millis(1), workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let images = generate_synthetic(4, 6, &SynthConfig::default()).resize(13);
+
+    // Quiescent store ⇒ bit-identical to a frozen engine on the same
+    // weights.
+    let mut frozen = NativeBatchEngine::new(net.clone(), params, 1).unwrap();
+    let live = server.handle().predict(images.image(0)).unwrap();
+    assert_eq!(live, frozen.run(images.image(0), 1).unwrap()[0]);
+
+    // Publish an update; the next prediction's per-batch snapshot must see
+    // it.
+    let range = net.dims[1].params.clone();
+    store.publish_scaled(1, range.clone(), &vec![1.0; range.len()], 5.0);
+    let mut updated = NativeBatchEngine::new(net, store.snapshot(), 1).unwrap();
+    let live = server.handle().predict(images.image(0)).unwrap();
+    assert_eq!(live, updated.run(images.image(0), 1).unwrap()[0]);
+    assert_eq!(store.publication_count(), 1);
+}
+
+#[test]
+fn live_from_training_server_serves_correct_predictions_mid_epoch() {
+    // The capstone path, and the race-check gate: CHAOS trains while a
+    // 2-worker pool serves from the same store. Mid-epoch rows must be
+    // well-formed probabilities; once training stops publishing, the live
+    // engine must agree bit-for-bit with the run's final weights. Under
+    // `--features race-check` the trainer additionally asserts the store
+    // is defect-free at the end of the run — serving reads included.
+    let train_set = generate_synthetic(300, 1, &SynthConfig::default()).resize(13);
+    let test_set = generate_synthetic(50, 2, &SynthConfig::default()).resize(13);
+    let queries = generate_synthetic(16, 3, &SynthConfig::default()).resize(13);
+
+    let (store_tx, store_rx) = std::sync::mpsc::channel();
+    let trainer = Trainer::new()
+        .arch(ArchSpec::tiny())
+        .epochs(2)
+        .threads(3)
+        .eta(0.05, 0.95)
+        .seed(42)
+        .export_store(store_tx);
+    let training = std::thread::spawn(move || trainer.run(&train_set, &test_set));
+    let store = store_rx.recv().expect("parallel run must export its store");
+
+    let net = Network::from_name("tiny").unwrap();
+    let server = Server::spawn_shared(
+        net.clone(),
+        store,
+        4,
+        ServerConfig { max_delay: Duration::from_micros(200), workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let handle = server.handle();
+
+    // At least one full pass runs unconditionally (the store is live from
+    // before epoch 0); subsequent passes keep querying until training ends.
+    let mut served_live = 0usize;
+    loop {
+        let still_training = !training.is_finished();
+        for i in 0..queries.len() {
+            let row = handle.predict(queries.image(i)).unwrap();
+            assert_eq!(row.len(), 10);
+            let sum: f32 = row.iter().sum();
+            assert!(
+                row.iter().all(|p| p.is_finite() && *p >= 0.0) && (sum - 1.0).abs() < 1e-3,
+                "malformed probability row mid-training (sum {sum})"
+            );
+            served_live += 1;
+        }
+        if !still_training {
+            break;
+        }
+    }
+    let run = training.join().unwrap().unwrap();
+    assert!(run.publications > 0, "parallel training must publish");
+    assert!(served_live >= queries.len(), "live queries must be served against the store");
+
+    // Training stopped ⇒ live store == final weights, bit for bit.
+    let mut frozen = NativeBatchEngine::new(net, run.final_params.clone(), 1).unwrap();
+    for i in 0..queries.len() {
+        let live = handle.predict(queries.image(i)).unwrap();
+        assert_eq!(live, frozen.run(queries.image(i), 1).unwrap()[0], "query {i} diverged");
+    }
 }
 
 // ---------------------------------------------------------------------------
