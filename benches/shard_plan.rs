@@ -1,0 +1,53 @@
+//! Bench: the static shard pass — plan, verify and price across the
+//! paper architectures and shard counts. The pass runs on every
+//! `chaos analyze --shards` invocation and inside CI sweeps, so it
+//! should stay well under a millisecond even for the large net.
+
+use chaos_phi::bench::{Bench, Report};
+use chaos_phi::chaos::analysis::{plan_shards, verify_shards};
+use chaos_phi::nn::Network;
+use chaos_phi::perfmodel::{rank_plans, score_plan};
+
+fn main() {
+    let mut report = Report::new("shard_plan — plan/verify/score the static shard pass");
+
+    for arch in ["small", "medium", "large"] {
+        let net = Network::from_name(arch).unwrap();
+        for shards in [2, 4, 8] {
+            report.add(
+                Bench::new(format!("plan/{arch}/{shards}s"))
+                    .warmup(3)
+                    .iters(50)
+                    .run(|| plan_shards(&net, shards)),
+            );
+            let plan = plan_shards(&net, shards);
+            report.add(
+                Bench::new(format!("verify/{arch}/{shards}s"))
+                    .warmup(3)
+                    .iters(50)
+                    .run(|| verify_shards(&net, &plan)),
+            );
+            report.add(
+                Bench::new(format!("score/{arch}/{shards}s"))
+                    .warmup(3)
+                    .iters(50)
+                    .run(|| score_plan(&net, &plan)),
+            );
+        }
+    }
+
+    // Ranking summary: which uniform shard count the cost model prefers
+    // for the large net (shape check printed alongside the timings).
+    let net = Network::from_name("large").unwrap();
+    let plans: Vec<_> = [1, 2, 4, 8].iter().map(|&n| plan_shards(&net, n)).collect();
+    let ranked = rank_plans(&net, &plans);
+    let (best, score) = &ranked[0];
+    report.note(format!(
+        "large: best uniform plan = {} shard(s) — imbalance {:.3}, {:.3e} comm B/sample, proxy {:.3e} s/sample",
+        plans[*best].shards,
+        score.imbalance,
+        score.comm_bytes,
+        score.proxy_secs(),
+    ));
+    report.print();
+}

@@ -41,15 +41,41 @@
 //!    HogWild! loses an update, and proving the per-layer locks lose
 //!    none under any schedule.
 //!
-//! The three levels compose: the static verifier proves the *declared*
-//! layout is sound, the race checker proves runtime accesses respect the
-//! declarations, and the interleaver makes the nondeterministic part of
-//! that proof replayable.
+//! 4. **Static shard planning and verification** ([`shard`]): the
+//!    contract for hybrid-parallel training before any sharded runtime
+//!    exists. A [`shard::ShardPlan`] partitions the span table across N
+//!    (optionally weighted) shards — conv/pool/activation spans
+//!    replicated (the data-parallel class), fc spans split along the
+//!    output-unit axis declared by
+//!    [`LayerOp::split_points`](crate::nn::LayerOp::split_points) —
+//!    and [`shard::verify_shards`] proves any plan (planner-produced or
+//!    hand-written) in-bounds, disjoint, exact-cover, aligned to the
+//!    op-declared split points, and dataflow-clean: only activation
+//!    tensors, as audited by the [`crate::nn::audit`] dims chain, cross
+//!    shard boundaries. A comm cost model
+//!    ([`crate::perfmodel::score_plan`]) prices each plan's predicted
+//!    imbalance and cross-shard traffic. The race checker enforces the
+//!    plan at runtime: installing a [`race::ShardOwnership`] table turns
+//!    any publish outside the worker's declared shard into a
+//!    **cross-shard-publish** defect, replayable by the interleaver.
+//!
+//! The levels compose: the static verifier proves the *declared* layout
+//! is sound, the shard pass proves partitions of that layout are sound,
+//! the race checker proves runtime accesses respect both, and the
+//! interleaver makes the nondeterministic part of that proof replayable.
 
 pub mod interleave;
 pub mod race;
+pub mod shard;
 pub mod spans;
 
 pub use interleave::{yield_point, Interleaver, Schedule, Trace, TraceStep};
-pub use race::{RaceDefect, RaceRecorder, StoreEvent, SyncContract};
+pub use race::{
+    set_worker_shard, worker_shard, RaceDefect, RaceRecorder, ShardOwnership, StoreEvent,
+    SyncContract,
+};
+pub use shard::{
+    plan_shards, plan_shards_weighted, verify_shards, LayerAssignment, ShardDefect, ShardPlan,
+    ShardReport,
+};
 pub use spans::{verify_network, verify_spans, SpanDefect, SpanReport};

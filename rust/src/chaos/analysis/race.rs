@@ -19,20 +19,32 @@
 //! * **outside-span publish** — a write not contained in any single
 //!   layer's declared span (crossing a layer boundary or landing in
 //!   unowned territory);
-//! * **out-of-bounds publish** — a write past the end of the store.
+//! * **out-of-bounds publish** — a write past the end of the store;
+//! * **cross-shard publish** — when a [`ShardOwnership`] table is
+//!   installed (the contract side of [`super::shard`]), a publication
+//!   overlapping a parameter piece owned by a shard the publishing
+//!   worker did not declare via [`set_worker_shard`].
 //!
 //! The recorder is silent on clean runs: `defects()` stays empty and the
 //! trainer's end-of-run assertion passes. Temporal extent of a write is
 //! tracked with RAII [`WriteGuard`]s — an active write is one whose guard
 //! is still alive, which is exactly the store's element-update loop.
+//!
+//! The event log is capped ([`EVENT_CAP`] entries) so instrumentation
+//! cannot exhaust memory, and the cap is *loud*: events past it are
+//! counted in [`RaceRecorder::dropped_events`], surfaced in the
+//! recorder's `Debug` line and the trainer's end-of-run summary, so a
+//! truncated log can never masquerade as a short one.
 
 use crate::nn::LayerDims;
+use std::cell::Cell;
 use std::ops::Range;
 use std::sync::Mutex;
 
-/// Event-log capacity; beyond it events are counted but not stored, so a
+/// Event-log capacity; beyond it events are counted (never silently
+/// discarded — see [`RaceRecorder::dropped_events`]) but not stored, so a
 /// long training run cannot exhaust memory through instrumentation.
-const EVENT_CAP: usize = 16_384;
+pub const EVENT_CAP: usize = 16_384;
 
 /// The synchronization discipline an update policy promises to follow.
 /// Declared via
@@ -64,6 +76,60 @@ impl SyncContract {
     }
 }
 
+/// The shard side of the installed contract: which shard owns each split
+/// parameter piece of the flat vector. Built from a verified
+/// [`ShardPlan`](super::shard::ShardPlan) via
+/// [`ShardPlan::ownership`](super::shard::ShardPlan::ownership) and
+/// installed with [`RaceRecorder::set_shard_ownership`]. Ranges absent
+/// from the table are replicated (data-parallel) territory — any worker
+/// may publish there under the usual span/lock rules; listed pieces may
+/// be published only by workers that declared the owning shard through
+/// [`set_worker_shard`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardOwnership {
+    /// `(absolute parameter range, owning shard)`, sorted by start.
+    pieces: Vec<(Range<usize>, usize)>,
+}
+
+impl ShardOwnership {
+    /// Build from `(range, shard)` pairs; empty ranges are dropped and the
+    /// table is kept sorted by range start.
+    pub fn new(mut pieces: Vec<(Range<usize>, usize)>) -> ShardOwnership {
+        pieces.retain(|(r, _)| !r.is_empty());
+        pieces.sort_by_key(|(r, _)| (r.start, r.end));
+        ShardOwnership { pieces }
+    }
+
+    /// The owned pieces, sorted by range start.
+    pub fn pieces(&self) -> &[(Range<usize>, usize)] {
+        &self.pieces
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pieces.is_empty()
+    }
+}
+
+thread_local! {
+    /// The shard the current thread publishes for (`None` = not a sharded
+    /// worker). A per-thread declaration, not a recorder field, because
+    /// shard identity is a property of the worker, exactly like the CHAOS
+    /// worker id itself.
+    static WORKER_SHARD: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Declare which shard the current thread publishes for (`None` clears
+/// the declaration). Consulted by every recorder publish check once a
+/// [`ShardOwnership`] table is installed.
+pub fn set_worker_shard(shard: Option<usize>) {
+    WORKER_SHARD.with(|c| c.set(shard));
+}
+
+/// The current thread's declared shard, if any.
+pub fn worker_shard() -> Option<usize> {
+    WORKER_SHARD.with(|c| c.get())
+}
+
 /// One recorded store access.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StoreEvent {
@@ -88,6 +154,14 @@ pub enum RaceDefect {
     OutsideSpan { range: Range<usize> },
     /// A publication past the end of the store.
     OutOfBounds { range: Range<usize>, total: usize },
+    /// A publication overlapping a parameter piece owned by another shard
+    /// (the publishing worker declared `shard`, or never declared one).
+    CrossShardPublish {
+        range: Range<usize>,
+        piece: Range<usize>,
+        owner: usize,
+        shard: Option<usize>,
+    },
 }
 
 impl std::fmt::Display for RaceDefect {
@@ -113,6 +187,17 @@ impl std::fmt::Display for RaceDefect {
                 "publish of {}..{} exceeds store length {total}",
                 range.start, range.end
             ),
+            RaceDefect::CrossShardPublish { range, piece, owner, shard } => {
+                write!(
+                    f,
+                    "publish of {}..{} overlaps {}..{}, owned by shard {owner}, from a worker ",
+                    range.start, range.end, piece.start, piece.end
+                )?;
+                match shard {
+                    Some(s) => write!(f, "on shard {s}"),
+                    None => write!(f, "with no declared shard"),
+                }
+            }
         }
     }
 }
@@ -125,6 +210,7 @@ impl RaceDefect {
             RaceDefect::UnlockedOverlap { .. } => "unlocked-overlap",
             RaceDefect::OutsideSpan { .. } => "outside-span",
             RaceDefect::OutOfBounds { .. } => "out-of-bounds",
+            RaceDefect::CrossShardPublish { .. } => "cross-shard-publish",
         }
     }
 }
@@ -139,6 +225,7 @@ struct ActiveWrite {
 
 struct RecState {
     contract: SyncContract,
+    shards: Option<ShardOwnership>,
     next_id: u64,
     active: Vec<ActiveWrite>,
     events: Vec<StoreEvent>,
@@ -170,6 +257,7 @@ impl RaceRecorder {
             total,
             state: Mutex::new(RecState {
                 contract: SyncContract::Controlled,
+                shards: None,
                 next_id: 0,
                 active: Vec::new(),
                 events: Vec::new(),
@@ -205,6 +293,41 @@ impl RaceRecorder {
         self.lock().contract = contract;
     }
 
+    /// Install the shard side of the contract: from here on, a publish
+    /// overlapping an owned piece from a worker that has not declared the
+    /// owning shard (via [`set_worker_shard`]) is a
+    /// [`RaceDefect::CrossShardPublish`].
+    pub fn set_shard_ownership(&self, ownership: ShardOwnership) {
+        self.lock().shards = Some(ownership);
+    }
+
+    /// The installed shard-ownership table, if any.
+    pub fn shard_ownership(&self) -> Option<ShardOwnership> {
+        self.lock().shards.clone()
+    }
+
+    fn check_shard(st: &mut RecState, range: &Range<usize>) {
+        let Some(own) = st.shards.as_ref() else { return };
+        if range.is_empty() {
+            return;
+        }
+        let publisher = worker_shard();
+        let hits: Vec<(Range<usize>, usize)> = own
+            .pieces()
+            .iter()
+            .filter(|(piece, owner)| overlap(piece, range) && publisher != Some(*owner))
+            .cloned()
+            .collect();
+        for (piece, owner) in hits {
+            st.defects.push(RaceDefect::CrossShardPublish {
+                range: range.clone(),
+                piece,
+                owner,
+                shard: publisher,
+            });
+        }
+    }
+
     fn check_bounds_and_span(&self, st: &mut RecState, range: &Range<usize>) {
         if range.end > self.total || range.start > range.end {
             st.defects.push(RaceDefect::OutOfBounds { range: range.clone(), total: self.total });
@@ -227,6 +350,7 @@ impl RaceRecorder {
         Self::record(&mut st, StoreEvent::LockAcquired { layer });
         Self::record(&mut st, StoreEvent::PublishLocked { layer, range: range.clone() });
         self.check_bounds_and_span(&mut st, &range);
+        Self::check_shard(&mut st, &range);
         let span = self.spans.get(layer).cloned().unwrap_or(0..0);
         let owned = span.start <= range.start && range.end <= span.end;
         if !owned && !(range.is_empty() && span.is_empty()) {
@@ -255,6 +379,7 @@ impl RaceRecorder {
         let mut st = self.lock();
         Self::record(&mut st, StoreEvent::PublishUnlocked { range: range.clone() });
         self.check_bounds_and_span(&mut st, &range);
+        Self::check_shard(&mut st, &range);
         if st.contract == SyncContract::Controlled {
             let hits: Vec<Range<usize>> = st
                 .active
@@ -304,13 +429,16 @@ impl RaceRecorder {
     }
 
     /// The recorded event log (capped at [`EVENT_CAP`] entries; see
-    /// [`RaceRecorder::events_dropped`]).
+    /// [`RaceRecorder::dropped_events`]).
     pub fn events(&self) -> Vec<StoreEvent> {
         self.lock().events.clone()
     }
 
-    /// Number of events that arrived after the log filled.
-    pub fn events_dropped(&self) -> usize {
+    /// Number of events that arrived after the log filled. Nonzero means
+    /// [`RaceRecorder::events`] is a truncated view — defect *checking*
+    /// is unaffected (it never consults the log), but any analysis replay
+    /// of the event stream is incomplete and must say so.
+    pub fn dropped_events(&self) -> usize {
         self.lock().events_dropped
     }
 }
@@ -320,11 +448,12 @@ impl std::fmt::Debug for RaceRecorder {
         let st = self.lock();
         write!(
             f,
-            "RaceRecorder(layers={}, total={}, contract={}, events={}, defects={})",
+            "RaceRecorder(layers={}, total={}, contract={}, events={}, dropped={}, defects={})",
             self.spans.len(),
             self.total,
             st.contract.as_str(),
             st.events.len(),
+            st.events_dropped,
             st.defects.len()
         )
     }
@@ -488,10 +617,61 @@ mod tests {
             rec.record_load(spans[1].clone());
         }
         assert_eq!(rec.events().len(), EVENT_CAP);
-        assert_eq!(rec.events_dropped(), 10);
+        assert_eq!(rec.dropped_events(), 10);
+        // The truncation is visible, not silent: the recorder's Debug
+        // line (what the trainer summary prints) names the dropped count.
+        assert!(format!("{rec:?}").contains("dropped=10"), "{rec:?}");
         // Defects are still found after the log fills.
         let g = rec.locked_publish(1, spans[3].clone());
         drop(g);
         assert!(!rec.is_clean());
+        assert_eq!(rec.dropped_events(), 10 + 3); // publish = 3 more events
+    }
+
+    #[test]
+    fn cross_shard_publish_detected_only_with_ownership_installed() {
+        let (rec, spans) = recorder_for_tiny();
+        // Without an ownership table, shard identity is irrelevant.
+        set_worker_shard(Some(0));
+        drop(rec.unlocked_publish(spans[3].clone()));
+        assert!(rec.is_clean(), "{:?}", rec.defects());
+
+        // Split layer 3's span between shards 0 and 1; this thread is
+        // shard 0, so publishing shard 1's half is a defect.
+        let mid = (spans[3].start + spans[3].end) / 2;
+        rec.set_shard_ownership(ShardOwnership::new(vec![
+            (spans[3].start..mid, 0),
+            (mid..spans[3].end, 1),
+        ]));
+        drop(rec.unlocked_publish(spans[3].start..mid));
+        assert!(rec.is_clean(), "{:?}", rec.defects());
+        drop(rec.unlocked_publish(mid..spans[3].end));
+        let defects = rec.defects();
+        assert_eq!(classes(&defects), vec!["cross-shard-publish"], "{defects:?}");
+        match &defects[0] {
+            RaceDefect::CrossShardPublish { owner, shard, .. } => {
+                assert_eq!(*owner, 1);
+                assert_eq!(*shard, Some(0));
+            }
+            other => panic!("expected CrossShardPublish, got {other:?}"),
+        }
+        set_worker_shard(None);
+    }
+
+    #[test]
+    fn undeclared_worker_cannot_publish_owned_pieces() {
+        let (rec, spans) = recorder_for_tiny();
+        set_worker_shard(None);
+        rec.set_shard_ownership(ShardOwnership::new(vec![(spans[1].clone(), 0)]));
+        // Replicated territory (layer 3 is not in the table) stays open…
+        drop(rec.unlocked_publish(spans[3].clone()));
+        // …but the owned piece requires a declared shard.
+        drop(rec.unlocked_publish(spans[1].clone()));
+        let defects = rec.defects();
+        assert_eq!(classes(&defects), vec!["cross-shard-publish"], "{defects:?}");
+        match &defects[0] {
+            RaceDefect::CrossShardPublish { shard, .. } => assert_eq!(*shard, None),
+            other => panic!("expected CrossShardPublish, got {other:?}"),
+        }
     }
 }

@@ -1,0 +1,982 @@
+//! Static shard planning and verification — level 4 of the analysis
+//! subsystem, and the contract the hybrid-parallel runtime refactor
+//! builds against.
+//!
+//! The hybrid scheme (Krizhevsky, arXiv:1404.5997) runs the conv stage
+//! data-parallel — every shard holds a full copy of the conv/pool spans
+//! and processes its own slice of the batch — and the parameter-heavy
+//! fully-connected stage model-parallel: each fc span is cut along the
+//! output-unit axis declared by
+//! [`LayerOp::split_points`](crate::nn::LayerOp::split_points), so each
+//! shard owns a block of weight rows plus the matching bias elements and
+//! only *activations* cross shard boundaries. Heterogeneous workers get
+//! weighted shards (Marques et al., arXiv:1712.02546): the planner
+//! apportions both sample share (data-parallel stage) and output units
+//! (model-parallel stage) by per-shard weight factors.
+//!
+//! Three parts:
+//!
+//! * **Planner** — [`plan_shards`] / [`plan_shards_weighted`] partition a
+//!   compiled network's span table into a [`ShardPlan`];
+//! * **Verifier** — [`verify_shards`] proves a plan (planner-produced or
+//!   hand-written) in-bounds, disjoint, an exact cover of every split
+//!   span, aligned to the op-declared split points, and dataflow-clean
+//!   against the [`crate::nn::audit`] dims chain. Defects carry stable
+//!   class tags mirroring [`super::spans`];
+//! * **Cost model** — clean plans are priced by
+//!   [`crate::perfmodel::score_plan`]: per-shard FLOP/param totals from
+//!   [`LayerOp::cost`](crate::nn::LayerOp::cost), per-boundary activation
+//!   bytes, predicted imbalance and a proxy seconds-per-sample, so plans
+//!   rank *before* any sharded runtime exists.
+//!
+//! The CLI face is `chaos analyze --shards N [--weights a,b,..]`
+//! (schema `chaos.analyze.shard/v1`, nonzero exit on defects); the
+//! runtime face is [`ShardPlan::ownership`] → installed on the race
+//! checker, which turns any publish outside the worker's declared shard
+//! into a recorded [`CrossShardPublish`](super::race::RaceDefect) defect.
+
+use super::race::ShardOwnership;
+use crate::nn::audit::{self, DataflowDefect};
+use crate::nn::{Network, SplitSpec};
+use crate::perfmodel::{score_plan, ShardScore};
+use crate::util::Json;
+use std::ops::Range;
+
+/// How one layer's parameter span is laid out across the shards of a plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerAssignment {
+    /// Data-parallel class: every shard holds the full span (conv, pool,
+    /// dropout, input — and any kind that declares itself unsplittable).
+    Replicated,
+    /// A hand-written plan may spell the replicas out, one absolute range
+    /// per shard. The verifier requires each copy to equal the full span:
+    /// a partial copy means *parameters*, not activations, would have to
+    /// cross the shard boundary.
+    Copies(Vec<Range<usize>>),
+    /// Model-parallel class: `pieces[s]` is the list of absolute
+    /// parameter ranges shard `s` owns (for a planner-produced fc split,
+    /// one weight-row block plus one bias block per shard).
+    Split { pieces: Vec<Vec<Range<usize>>> },
+}
+
+impl LayerAssignment {
+    /// Stable class tag for reports.
+    pub fn class(&self) -> &'static str {
+        match self {
+            LayerAssignment::Replicated => "replicated",
+            LayerAssignment::Copies(_) => "copies",
+            LayerAssignment::Split { .. } => "split",
+        }
+    }
+}
+
+/// A partition of a compiled network's span table across `shards` shards.
+/// Produced by the planner or written by hand; proven sound (or not) by
+/// [`verify_shards`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    pub arch: String,
+    pub shards: usize,
+    /// Per-shard capacity share, normalized to sum 1 (uniform unless the
+    /// caller passed weight factors).
+    pub weights: Vec<f64>,
+    /// One assignment per layer, parallel to the network's layer table.
+    pub layers: Vec<LayerAssignment>,
+}
+
+impl ShardPlan {
+    /// The absolute parameter ranges shard `shard` owns in `layer`
+    /// (replicated layers: the whole span on every shard).
+    pub fn owned_ranges(&self, net: &Network, shard: usize, layer: usize) -> Vec<Range<usize>> {
+        let span = net.dims[layer].params.clone();
+        match &self.layers[layer] {
+            LayerAssignment::Replicated => {
+                if span.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![span]
+                }
+            }
+            LayerAssignment::Copies(copies) => match copies.get(shard) {
+                Some(c) if !c.is_empty() => vec![c.clone()],
+                _ => Vec::new(),
+            },
+            LayerAssignment::Split { pieces } => pieces.get(shard).cloned().unwrap_or_default(),
+        }
+    }
+
+    /// Parameters shard `shard` owns in `layer` (an element count).
+    pub fn owned_len(&self, net: &Network, shard: usize, layer: usize) -> usize {
+        self.owned_ranges(net, shard, layer).iter().map(|r| r.len()).sum()
+    }
+
+    /// The runtime face of the plan: every split piece with its owning
+    /// shard, ready for
+    /// [`RaceRecorder::set_shard_ownership`](super::race::RaceRecorder::set_shard_ownership)
+    /// (replicated spans are deliberately absent — any worker may publish
+    /// there under the usual span/lock rules).
+    pub fn ownership(&self) -> ShardOwnership {
+        let mut pieces = Vec::new();
+        for assignment in &self.layers {
+            if let LayerAssignment::Split { pieces: per_shard } = assignment {
+                for (shard, ranges) in per_shard.iter().enumerate() {
+                    for r in ranges {
+                        pieces.push((r.clone(), shard));
+                    }
+                }
+            }
+        }
+        ShardOwnership::new(pieces)
+    }
+}
+
+/// Partition `net` across `shards` equally-weighted shards.
+pub fn plan_shards(net: &Network, shards: usize) -> ShardPlan {
+    assert!(shards >= 1, "a shard plan needs at least one shard");
+    plan_shards_weighted(net, &vec![1.0; shards]).expect("uniform weights are always valid")
+}
+
+/// Partition `net` across `weights.len()` shards, apportioning both the
+/// data-parallel sample share and the model-parallel output units by the
+/// given per-shard weight factors (largest-remainder apportionment, so
+/// unit counts are exact and deterministic).
+pub fn plan_shards_weighted(net: &Network, weights: &[f64]) -> anyhow::Result<ShardPlan> {
+    anyhow::ensure!(!weights.is_empty(), "a shard plan needs at least one shard");
+    for &w in weights {
+        anyhow::ensure!(
+            w.is_finite() && w > 0.0,
+            "shard weight factors must be finite and positive, got {w}"
+        );
+    }
+    let total: f64 = weights.iter().sum();
+    let weights: Vec<f64> = weights.iter().map(|w| w / total).collect();
+    let shards = weights.len();
+
+    let mut layers = Vec::with_capacity(net.dims.len());
+    for (op, d) in net.ops.iter().zip(&net.dims) {
+        let span = d.params.clone();
+        let assignment = match op.split_points() {
+            SplitSpec::OutputUnits { units, weights_per_unit }
+                if shards > 1 && !span.is_empty() =>
+            {
+                let unit_ranges = apportion(units, &weights);
+                let pieces = unit_ranges
+                    .iter()
+                    .map(|u| unit_pieces(&span, units, weights_per_unit, u))
+                    .collect();
+                LayerAssignment::Split { pieces }
+            }
+            _ => LayerAssignment::Replicated,
+        };
+        layers.push(assignment);
+    }
+    Ok(ShardPlan { arch: net.arch.name.clone(), shards, weights, layers })
+}
+
+/// Contiguous unit ranges apportioning `units` output units to shards by
+/// normalized weight (floor each share, then hand the remainder out by
+/// largest fractional part; ties break toward the lower shard index).
+fn apportion(units: usize, weights: &[f64]) -> Vec<Range<usize>> {
+    let n = weights.len();
+    let mut counts = Vec::with_capacity(n);
+    let mut fracs = Vec::with_capacity(n);
+    for &w in weights {
+        let exact = units as f64 * w;
+        let floor = exact.floor();
+        counts.push(floor as usize);
+        fracs.push(exact - floor);
+    }
+    let assigned: usize = counts.iter().sum();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| fracs[b].total_cmp(&fracs[a]).then(a.cmp(&b)));
+    for i in 0..units.saturating_sub(assigned) {
+        counts[order[i % n]] += 1;
+    }
+    let mut start = 0;
+    counts
+        .into_iter()
+        .map(|c| {
+            let r = start..start + c;
+            start += c;
+            r
+        })
+        .collect()
+}
+
+/// Absolute parameter ranges for output units `u` of a span laid out
+/// weight-rows-then-biases: one weight-row block and one bias block
+/// (empty blocks omitted).
+fn unit_pieces(
+    span: &Range<usize>,
+    units: usize,
+    weights_per_unit: usize,
+    u: &Range<usize>,
+) -> Vec<Range<usize>> {
+    let mut out = Vec::with_capacity(2);
+    let w = span.start + u.start * weights_per_unit..span.start + u.end * weights_per_unit;
+    if !w.is_empty() {
+        out.push(w);
+    }
+    let bias0 = span.start + units * weights_per_unit;
+    let b = bias0 + u.start..bias0 + u.end;
+    if !b.is_empty() {
+        out.push(b);
+    }
+    out
+}
+
+/// One violation of the shard contract. Class tags are stable
+/// machine-readable strings (reports, tests, CI), mirroring
+/// [`SpanDefect`](super::spans::SpanDefect).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardDefect {
+    /// The plan has no shards at all.
+    EmptyPlan,
+    /// The plan's layer table and the network's disagree in length.
+    LayerCountMismatch { plan: usize, net: usize },
+    /// A layer's per-shard list is not sized to the plan's shard count.
+    ShardCountMismatch { layer: usize, got: usize, want: usize },
+    /// A split assignment on an op that declares no legal interior cut.
+    UnsplittableSplit { layer: usize, kind: String },
+    /// The op's declared split geometry does not add up to its span.
+    SplitSpecMismatch { layer: usize, declared: usize, span_len: usize },
+    /// A piece outside its layer's span (or inverted).
+    OutOfBounds { layer: usize, shard: usize, range: Range<usize>, span: Range<usize> },
+    /// Two owned pieces intersect (same shard or different shards).
+    Overlap { layer: usize, shard_a: usize, shard_b: usize, range: Range<usize> },
+    /// Parameters of a split span no shard owns.
+    Gap { layer: usize, range: Range<usize> },
+    /// An output unit whose weight row / bias element is owned by more
+    /// than one shard — a cut off the op-declared split points.
+    StraddledSplitPoint { layer: usize, unit: usize, owners: Vec<usize> },
+    /// Something other than a whole activation tensor would have to cross
+    /// a shard boundary (a partial replica, or a broken activation chain
+    /// at the boundary).
+    NonActivationCrossing { layer: usize, detail: String },
+}
+
+impl std::fmt::Display for ShardDefect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardDefect::EmptyPlan => write!(f, "plan declares zero shards"),
+            ShardDefect::LayerCountMismatch { plan, net } => {
+                write!(f, "plan covers {plan} layers but the network has {net}")
+            }
+            ShardDefect::ShardCountMismatch { layer, got, want } => {
+                write!(f, "layer {layer} assigns {got} shard entries, plan has {want} shards")
+            }
+            ShardDefect::UnsplittableSplit { layer, kind } => write!(
+                f,
+                "layer {layer} ({kind}) declares no legal interior cut but the plan splits it"
+            ),
+            ShardDefect::SplitSpecMismatch { layer, declared, span_len } => write!(
+                f,
+                "layer {layer} declares split geometry totalling {declared} params, span has {span_len}"
+            ),
+            ShardDefect::OutOfBounds { layer, shard, range, span } => write!(
+                f,
+                "layer {layer} shard {shard}: piece {}..{} outside span {}..{}",
+                range.start, range.end, span.start, span.end
+            ),
+            ShardDefect::Overlap { layer, shard_a, shard_b, range } => {
+                if shard_a == shard_b {
+                    write!(
+                        f,
+                        "layer {layer}: shard {shard_a} owns {}..{} twice",
+                        range.start, range.end
+                    )
+                } else {
+                    write!(
+                        f,
+                        "layer {layer}: piece {}..{} of shard {shard_b} overlaps shard {shard_a}",
+                        range.start, range.end
+                    )
+                }
+            }
+            ShardDefect::Gap { layer, range } => write!(
+                f,
+                "layer {layer}: params {}..{} of a split span are owned by no shard",
+                range.start, range.end
+            ),
+            ShardDefect::StraddledSplitPoint { layer, unit, owners } => write!(
+                f,
+                "layer {layer}: output unit {unit} is straddled by shards {owners:?} — cuts must fall on unit boundaries"
+            ),
+            ShardDefect::NonActivationCrossing { layer, detail } => {
+                write!(f, "layer {layer}: {detail}")
+            }
+        }
+    }
+}
+
+impl ShardDefect {
+    /// Stable machine-readable class name (reports, tests).
+    pub fn class(&self) -> &'static str {
+        match self {
+            ShardDefect::EmptyPlan => "empty-plan",
+            ShardDefect::LayerCountMismatch { .. } => "layer-count-mismatch",
+            ShardDefect::ShardCountMismatch { .. } => "shard-count-mismatch",
+            ShardDefect::UnsplittableSplit { .. } => "unsplittable-split",
+            ShardDefect::SplitSpecMismatch { .. } => "split-spec-mismatch",
+            ShardDefect::OutOfBounds { .. } => "out-of-bounds",
+            ShardDefect::Overlap { .. } => "overlap",
+            ShardDefect::Gap { .. } => "gap",
+            ShardDefect::StraddledSplitPoint { .. } => "straddled-split-point",
+            ShardDefect::NonActivationCrossing { .. } => "non-activation-crossing",
+        }
+    }
+}
+
+/// Per-layer summary row of a [`ShardReport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardLayerRow {
+    pub layer: usize,
+    pub kind: String,
+    /// `"replicated"` / `"copies"` / `"split"`.
+    pub class: &'static str,
+    /// Parameters each shard owns in this layer.
+    pub owned: Vec<usize>,
+}
+
+/// The result of verifying (and, when clean, pricing) one plan against
+/// one compiled network. Schema `chaos.analyze.shard/v1`.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub arch: String,
+    pub shards: usize,
+    pub weights: Vec<f64>,
+    pub layers: Vec<ShardLayerRow>,
+    pub defects: Vec<ShardDefect>,
+    /// Comm/imbalance pricing; present only for clean plans.
+    pub score: Option<ShardScore>,
+}
+
+impl ShardReport {
+    pub fn is_clean(&self) -> bool {
+        self.defects.is_empty()
+    }
+
+    /// Human-readable report (the CLI's default output).
+    pub fn to_text(&self) -> String {
+        let weights = self
+            .weights
+            .iter()
+            .map(|w| format!("{w:.3}"))
+            .collect::<Vec<_>>()
+            .join("/");
+        let mut out = format!(
+            "{}: shard plan over {} shard(s) (weights {weights}) — ",
+            self.arch, self.shards
+        );
+        if self.is_clean() {
+            out.push_str("in-bounds, disjoint, exact cover, unit-aligned: OK\n");
+        } else {
+            out.push_str(&format!("{} defect(s)\n", self.defects.len()));
+            for d in &self.defects {
+                out.push_str(&format!("  - {d}\n"));
+            }
+        }
+        out.push_str("  layer  kind      class       owned params/shard\n");
+        for row in &self.layers {
+            let owned =
+                row.owned.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("/");
+            out.push_str(&format!(
+                "  {:>5}  {:<8}  {:<10}  {owned}\n",
+                row.layer, row.kind, row.class
+            ));
+        }
+        if let Some(score) = &self.score {
+            for s in &score.shards {
+                out.push_str(&format!(
+                    "  shard {}: weight {:.3}, {} params, {:.3e} fwd + {:.3e} bwd flops/sample\n",
+                    s.shard, s.weight, s.params, s.fwd_flops, s.bwd_flops
+                ));
+            }
+            for b in score.boundaries.iter().filter(|b| b.fwd_bytes > 0.0) {
+                out.push_str(&format!(
+                    "  boundary →{}: {} acts, {} — {:.3e} B fwd + {:.3e} B bwd per sample\n",
+                    b.layer, b.act_elems, b.kind, b.fwd_bytes, b.bwd_bytes
+                ));
+            }
+            out.push_str(&format!(
+                "  predicted: imbalance {:.3}, {:.3e} comm B/sample, proxy {:.3e} s/sample\n",
+                score.imbalance,
+                score.comm_bytes,
+                score.proxy_secs()
+            ));
+        }
+        out
+    }
+
+    /// Structured JSON (the CLI's `--json` output).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("schema", Json::str("chaos.analyze.shard/v1")),
+            ("arch", Json::str(self.arch.clone())),
+            ("shards", Json::num(self.shards as f64)),
+            ("weights", Json::arr(self.weights.iter().map(|&w| Json::num(w)).collect())),
+            ("clean", Json::Bool(self.is_clean())),
+            (
+                "defects",
+                Json::arr(
+                    self.defects
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("class", Json::str(d.class())),
+                                ("detail", Json::str(d.to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "layers",
+                Json::arr(
+                    self.layers
+                        .iter()
+                        .map(|row| {
+                            Json::obj(vec![
+                                ("layer", Json::num(row.layer as f64)),
+                                ("kind", Json::str(row.kind.clone())),
+                                ("class", Json::str(row.class)),
+                                (
+                                    "owned",
+                                    Json::arr(
+                                        row.owned.iter().map(|&n| Json::num(n as f64)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        match &self.score {
+            None => fields.push(("totals", Json::Null)),
+            Some(score) => {
+                fields.push((
+                    "per_shard",
+                    Json::arr(
+                        score
+                            .shards
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("shard", Json::num(s.shard as f64)),
+                                    ("weight", Json::num(s.weight)),
+                                    ("params", Json::num(s.params as f64)),
+                                    ("fwd_flops", Json::num(s.fwd_flops)),
+                                    ("bwd_flops", Json::num(s.bwd_flops)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+                fields.push((
+                    "boundaries",
+                    Json::arr(
+                        score
+                            .boundaries
+                            .iter()
+                            .map(|b| {
+                                Json::obj(vec![
+                                    ("layer", Json::num(b.layer as f64)),
+                                    ("act_elems", Json::num(b.act_elems as f64)),
+                                    ("kind", Json::str(b.kind)),
+                                    ("fwd_bytes", Json::num(b.fwd_bytes)),
+                                    ("bwd_bytes", Json::num(b.bwd_bytes)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+                fields.push((
+                    "totals",
+                    Json::obj(vec![
+                        ("fwd_flops", Json::num(score.total_fwd_flops())),
+                        ("bwd_flops", Json::num(score.total_bwd_flops())),
+                        ("comm_bytes", Json::num(score.comm_bytes)),
+                        ("imbalance", Json::num(score.imbalance)),
+                        ("proxy_secs", Json::num(score.proxy_secs())),
+                    ]),
+                ));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Prove a plan sound against a compiled network: in-bounds, disjoint,
+/// exact cover of every split span, aligned to op-declared split points,
+/// and nothing but whole activation tensors crossing shard boundaries.
+/// Clean plans additionally carry a [`ShardScore`] from
+/// [`crate::perfmodel::score_plan`].
+pub fn verify_shards(net: &Network, plan: &ShardPlan) -> ShardReport {
+    let mut defects = Vec::new();
+    if plan.shards == 0 {
+        defects.push(ShardDefect::EmptyPlan);
+    }
+    if plan.weights.len() != plan.shards {
+        defects.push(ShardDefect::ShardCountMismatch {
+            layer: 0,
+            got: plan.weights.len(),
+            want: plan.shards,
+        });
+    }
+    if plan.layers.len() != net.dims.len() {
+        defects.push(ShardDefect::LayerCountMismatch {
+            plan: plan.layers.len(),
+            net: net.dims.len(),
+        });
+        // Nothing below can be indexed sensibly against the wrong table.
+        return report_for(net, plan, defects);
+    }
+
+    let mut any_split = false;
+    for (layer, (op, d)) in net.ops.iter().zip(&net.dims).enumerate() {
+        let span = d.params.clone();
+        match &plan.layers[layer] {
+            // Implicit replication is sound by construction: every shard
+            // holds exactly the declared span.
+            LayerAssignment::Replicated => {}
+            LayerAssignment::Copies(copies) => {
+                if copies.len() != plan.shards {
+                    defects.push(ShardDefect::ShardCountMismatch {
+                        layer,
+                        got: copies.len(),
+                        want: plan.shards,
+                    });
+                }
+                for (shard, copy) in copies.iter().enumerate() {
+                    if copy.start > copy.end
+                        || copy.start < span.start
+                        || copy.end > span.end
+                    {
+                        defects.push(ShardDefect::OutOfBounds {
+                            layer,
+                            shard,
+                            range: copy.clone(),
+                            span: span.clone(),
+                        });
+                    } else if *copy != span {
+                        defects.push(ShardDefect::NonActivationCrossing {
+                            layer,
+                            detail: format!(
+                                "shard {shard}'s replica covers {}..{} of span {}..{} — the missing parameters would have to cross the shard boundary",
+                                copy.start, copy.end, span.start, span.end
+                            ),
+                        });
+                    }
+                }
+            }
+            LayerAssignment::Split { pieces } => {
+                any_split = true;
+                let spec = op.split_points();
+                let SplitSpec::OutputUnits { units, weights_per_unit } = spec else {
+                    defects.push(ShardDefect::UnsplittableSplit {
+                        layer,
+                        kind: op.kind().to_string(),
+                    });
+                    continue;
+                };
+                if let Some(declared) = spec.declared_len() {
+                    if declared != span.len() {
+                        defects.push(ShardDefect::SplitSpecMismatch {
+                            layer,
+                            declared,
+                            span_len: span.len(),
+                        });
+                        continue;
+                    }
+                }
+                if pieces.len() != plan.shards {
+                    defects.push(ShardDefect::ShardCountMismatch {
+                        layer,
+                        got: pieces.len(),
+                        want: plan.shards,
+                    });
+                }
+                verify_split_layer(
+                    layer,
+                    &span,
+                    units,
+                    weights_per_unit,
+                    pieces,
+                    &mut defects,
+                );
+            }
+        }
+    }
+
+    // Dataflow cleanliness of the boundaries: the tensors crossing shard
+    // boundaries are exactly the audited activation chain, so a broken
+    // chain means the boundary traffic of a split plan is ill-defined.
+    if any_split {
+        for df in audit::verify_shape_rows(&audit::shape_rows(net)) {
+            let (layer, detail) = match &df {
+                DataflowDefect::BrokenChain { layer, got, expected } => (
+                    *layer,
+                    format!(
+                        "activation chain broken at the boundary (consumes {got}, upstream produces {expected}) — the crossing tensor is not a well-defined activation"
+                    ),
+                ),
+                DataflowDefect::OpShapeMismatch { layer, kind, side, op, dims } => (
+                    *layer,
+                    format!(
+                        "{kind} op/dims {side}-shape mismatch ({op} vs {dims}) at a shard boundary"
+                    ),
+                ),
+                // verify_shape_rows emits only the two variants above;
+                // anything else would come from the arena auditor.
+                _ => continue,
+            };
+            defects.push(ShardDefect::NonActivationCrossing { layer, detail });
+        }
+    }
+
+    report_for(net, plan, defects)
+}
+
+/// Ownership/coverage/alignment checks for one split layer, via a
+/// span-relative owner array (split spans are fc-sized — at most a few
+/// hundred thousand entries).
+fn verify_split_layer(
+    layer: usize,
+    span: &Range<usize>,
+    units: usize,
+    weights_per_unit: usize,
+    pieces: &[Vec<Range<usize>>],
+    defects: &mut Vec<ShardDefect>,
+) {
+    let mut owner: Vec<Option<u32>> = vec![None; span.len()];
+    for (shard, ranges) in pieces.iter().enumerate() {
+        for r in ranges {
+            if r.start > r.end || r.start < span.start || r.end > span.end {
+                defects.push(ShardDefect::OutOfBounds {
+                    layer,
+                    shard,
+                    range: r.clone(),
+                    span: span.clone(),
+                });
+                continue;
+            }
+            // One overlap defect per offending piece, against the first
+            // prior owner hit — per-element reporting would flood.
+            let mut clash: Option<usize> = None;
+            for p in r.clone() {
+                let slot = &mut owner[p - span.start];
+                match *slot {
+                    Some(prior) => {
+                        if clash.is_none() {
+                            clash = Some(prior as usize);
+                        }
+                    }
+                    None => *slot = Some(shard as u32),
+                }
+            }
+            if let Some(prior) = clash {
+                defects.push(ShardDefect::Overlap {
+                    layer,
+                    shard_a: prior,
+                    shard_b: shard,
+                    range: r.clone(),
+                });
+            }
+        }
+    }
+
+    // Exact cover: maximal unowned runs.
+    let mut i = 0;
+    while i < owner.len() {
+        if owner[i].is_none() {
+            let mut j = i;
+            while j < owner.len() && owner[j].is_none() {
+                j += 1;
+            }
+            defects.push(ShardDefect::Gap { layer, range: span.start + i..span.start + j });
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+
+    // Alignment: each output unit (weight row + bias element) must have a
+    // single owner — a second owner means a cut off the declared points.
+    for unit in 0..units {
+        let mut owners: Vec<usize> = Vec::new();
+        let row = unit * weights_per_unit..(unit + 1) * weights_per_unit;
+        let bias = units * weights_per_unit + unit;
+        for i in row.chain(bias..bias + 1) {
+            if let Some(s) = owner[i] {
+                if !owners.contains(&(s as usize)) {
+                    owners.push(s as usize);
+                }
+            }
+        }
+        if owners.len() > 1 {
+            defects.push(ShardDefect::StraddledSplitPoint { layer, unit, owners });
+        }
+    }
+}
+
+fn report_for(net: &Network, plan: &ShardPlan, defects: Vec<ShardDefect>) -> ShardReport {
+    let aligned = plan.layers.len() == net.dims.len() && plan.shards >= 1;
+    let layers = if aligned {
+        net.ops
+            .iter()
+            .enumerate()
+            .map(|(layer, op)| ShardLayerRow {
+                layer,
+                kind: op.kind().to_string(),
+                class: plan.layers[layer].class(),
+                owned: (0..plan.shards).map(|s| plan.owned_len(net, s, layer)).collect(),
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let score = if defects.is_empty() && aligned { Some(score_plan(net, plan)) } else { None };
+    ShardReport {
+        arch: plan.arch.clone(),
+        shards: plan.shards,
+        weights: plan.weights.clone(),
+        layers,
+        defects,
+        score,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(name: &str) -> Network {
+        Network::from_name(name).unwrap()
+    }
+
+    fn classes(report: &ShardReport) -> Vec<&'static str> {
+        report.defects.iter().map(|d| d.class()).collect()
+    }
+
+    fn split_layers(plan: &ShardPlan) -> Vec<usize> {
+        plan.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| matches!(a, LayerAssignment::Split { .. }))
+            .map(|(l, _)| l)
+            .collect()
+    }
+
+    #[test]
+    fn planner_splits_fc_replicates_conv() {
+        let net = net("small");
+        let plan = plan_shards(&net, 2);
+        let split = split_layers(&plan);
+        assert!(!split.is_empty(), "no fc layer was split");
+        for (layer, op) in net.ops.iter().enumerate() {
+            let is_fc = matches!(op.split_points(), SplitSpec::OutputUnits { .. });
+            assert_eq!(
+                split.contains(&layer),
+                is_fc && !net.dims[layer].params.is_empty(),
+                "layer {layer} ({})",
+                op.kind()
+            );
+        }
+        assert!(verify_shards(&net, &plan).is_clean());
+    }
+
+    #[test]
+    fn single_shard_plan_is_all_replicated() {
+        let net = net("small");
+        let plan = plan_shards(&net, 1);
+        assert!(split_layers(&plan).is_empty());
+        let report = verify_shards(&net, &plan);
+        assert!(report.is_clean(), "{:?}", report.defects);
+        let score = report.score.unwrap();
+        assert_eq!(score.comm_bytes, 0.0, "one shard, no boundary traffic");
+        assert!((score.imbalance - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_units_follow_weights() {
+        let net = net("small");
+        let plan = plan_shards_weighted(&net, &[3.0, 1.0]).unwrap();
+        let report = verify_shards(&net, &plan);
+        assert!(report.is_clean(), "{:?}", report.defects);
+        for layer in split_layers(&plan) {
+            let heavy = plan.owned_len(&net, 0, layer);
+            let light = plan.owned_len(&net, 1, layer);
+            assert!(heavy >= light, "layer {layer}: {heavy} vs {light}");
+        }
+    }
+
+    #[test]
+    fn weighted_planner_rejects_bad_weights() {
+        let net = net("small");
+        assert!(plan_shards_weighted(&net, &[]).is_err());
+        assert!(plan_shards_weighted(&net, &[1.0, 0.0]).is_err());
+        assert!(plan_shards_weighted(&net, &[1.0, f64::NAN]).is_err());
+        assert!(plan_shards_weighted(&net, &[1.0, -2.0]).is_err());
+    }
+
+    #[test]
+    fn more_shards_than_output_units_leaves_empty_shards_clean() {
+        let net = net("tiny");
+        // The output layer has 10 units; 12 shards leaves at least two
+        // with no units — legal, they still carry replicated work.
+        let plan = plan_shards(&net, 12);
+        let report = verify_shards(&net, &plan);
+        assert!(report.is_clean(), "{:?}", report.defects);
+    }
+
+    #[test]
+    fn ownership_lists_exactly_the_split_pieces() {
+        let net = net("small");
+        let plan = plan_shards(&net, 2);
+        let own = plan.ownership();
+        let expected: usize = split_layers(&plan)
+            .iter()
+            .map(|&l| {
+                (0..plan.shards)
+                    .map(|s| plan.owned_ranges(&net, s, l).len())
+                    .sum::<usize>()
+            })
+            .sum();
+        assert_eq!(own.pieces().len(), expected);
+        assert!(!own.is_empty());
+        // Owned pieces partition each split span: lengths add up.
+        for &l in &split_layers(&plan) {
+            let total: usize =
+                (0..plan.shards).map(|s| plan.owned_len(&net, s, l)).sum();
+            assert_eq!(total, net.dims[l].params.len());
+        }
+    }
+
+    #[test]
+    fn report_json_carries_schema_and_roundtrips() {
+        let net = net("tiny");
+        let report = verify_shards(&net, &plan_shards(&net, 2));
+        assert!(report.is_clean());
+        let text = report.to_json().pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(|s| s.as_str()),
+            Some("chaos.analyze.shard/v1")
+        );
+        assert_eq!(parsed.get("clean"), Some(&Json::Bool(true)));
+        assert!(report.to_text().contains("shard plan over 2 shard(s)"));
+    }
+
+    #[test]
+    fn seeded_straddle_is_detected() {
+        let net = net("small");
+        let mut plan = plan_shards(&net, 2);
+        let layer = split_layers(&plan)[0];
+        // Shift one param from shard 1's weight block into shard 0's —
+        // the cut no longer falls on a unit boundary.
+        if let LayerAssignment::Split { pieces } = &mut plan.layers[layer] {
+            pieces[0][0].end += 1;
+            pieces[1][0].start += 1;
+        }
+        let report = verify_shards(&net, &plan);
+        assert_eq!(classes(&report), vec!["straddled-split-point"], "{:?}", report.defects);
+        assert!(report.score.is_none());
+    }
+
+    #[test]
+    fn seeded_gap_and_overlap_are_detected() {
+        let net = net("small");
+        let layer = split_layers(&plan_shards(&net, 2))[0];
+
+        // Gap: shard 1 forgets its bias block.
+        let mut plan = plan_shards(&net, 2);
+        if let LayerAssignment::Split { pieces } = &mut plan.layers[layer] {
+            pieces[1].pop();
+        }
+        let report = verify_shards(&net, &plan);
+        assert!(classes(&report).contains(&"gap"), "{:?}", report.defects);
+
+        // Overlap within one shard: shard 0 lists a sub-range of its own
+        // weight block twice.
+        let mut plan = plan_shards(&net, 2);
+        if let LayerAssignment::Split { pieces } = &mut plan.layers[layer] {
+            let w = pieces[0][0].clone();
+            pieces[0].push(w.start..w.start + 1);
+        }
+        let report = verify_shards(&net, &plan);
+        let overlaps: Vec<_> = report
+            .defects
+            .iter()
+            .filter(|d| matches!(d, ShardDefect::Overlap { shard_a: 0, shard_b: 0, .. }))
+            .collect();
+        assert_eq!(overlaps.len(), 1, "{:?}", report.defects);
+    }
+
+    #[test]
+    fn seeded_partial_replica_is_non_activation_crossing() {
+        let net = net("small");
+        let mut plan = plan_shards(&net, 2);
+        // Find a parameterized replicated layer (conv) and hand-write
+        // truncated copies for it.
+        let layer = (0..net.dims.len())
+            .find(|&l| {
+                !net.dims[l].params.is_empty()
+                    && matches!(plan.layers[l], LayerAssignment::Replicated)
+            })
+            .unwrap();
+        let span = net.dims[layer].params.clone();
+        plan.layers[layer] =
+            LayerAssignment::Copies(vec![span.clone(), span.start..span.end - 1]);
+        let report = verify_shards(&net, &plan);
+        assert_eq!(
+            classes(&report),
+            vec!["non-activation-crossing"],
+            "{:?}",
+            report.defects
+        );
+    }
+
+    #[test]
+    fn seeded_unsplittable_split_and_shape_defects() {
+        let net = net("small");
+
+        // Splitting a conv span: conv declares no interior cut.
+        let mut plan = plan_shards(&net, 2);
+        let conv = net
+            .ops
+            .iter()
+            .position(|op| op.kind() == "conv")
+            .expect("small has conv layers");
+        let span = net.dims[conv].params.clone();
+        let mid = (span.start + span.end) / 2;
+        plan.layers[conv] = LayerAssignment::Split {
+            pieces: vec![vec![span.start..mid], vec![mid..span.end]],
+        };
+        let report = verify_shards(&net, &plan);
+        assert!(classes(&report).contains(&"unsplittable-split"), "{:?}", report.defects);
+
+        // Wrong layer count.
+        let mut plan = plan_shards(&net, 2);
+        plan.layers.pop();
+        assert!(classes(&verify_shards(&net, &plan)).contains(&"layer-count-mismatch"));
+
+        // Zero shards.
+        let mut plan = plan_shards(&net, 2);
+        plan.shards = 0;
+        assert!(classes(&verify_shards(&net, &plan)).contains(&"empty-plan"));
+    }
+
+    #[test]
+    fn seeded_out_of_bounds_piece_is_detected() {
+        let net = net("small");
+        let mut plan = plan_shards(&net, 2);
+        let layer = split_layers(&plan)[0];
+        if let LayerAssignment::Split { pieces } = &mut plan.layers[layer] {
+            let end = net.dims[layer].params.end;
+            pieces[1].push(end..end + 7);
+        }
+        let report = verify_shards(&net, &plan);
+        assert!(classes(&report).contains(&"out-of-bounds"), "{:?}", report.defects);
+    }
+}

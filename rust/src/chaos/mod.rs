@@ -35,7 +35,7 @@ mod shared;
 mod strategies;
 mod trainer;
 
-pub use analysis::SyncContract;
+pub use analysis::{ShardOwnership, ShardPlan, SyncContract};
 pub use checkpoint::Checkpoint;
 pub use observer::{
     observer_fn, CheckpointEvery, EarlyStop, EpochObserver, FnObserver, RunView, TrainControl,

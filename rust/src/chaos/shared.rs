@@ -27,7 +27,7 @@
 //! interleaver can replay adversarial orderings. Without the feature the
 //! instrumentation compiles out entirely.
 
-use super::analysis::SyncContract;
+use super::analysis::{ShardOwnership, SyncContract};
 #[cfg(feature = "race-check")]
 use super::analysis::{yield_point, RaceDefect, RaceRecorder, StoreEvent};
 use crate::nn::{LayerDims, ParamSource};
@@ -100,6 +100,19 @@ impl SharedParams {
         self.race.set_contract(contract);
         #[cfg(not(feature = "race-check"))]
         let _ = contract;
+    }
+
+    /// Install the shard side of the contract (a verified
+    /// [`ShardPlan::ownership`](super::analysis::shard::ShardPlan::ownership)
+    /// table): under `race-check`, a publish overlapping a split piece
+    /// from a worker that has not declared the owning shard (via
+    /// [`super::analysis::set_worker_shard`]) is recorded as a
+    /// cross-shard-publish defect. A no-op without the feature.
+    pub fn set_shard_ownership(&self, ownership: ShardOwnership) {
+        #[cfg(feature = "race-check")]
+        self.race.set_shard_ownership(ownership);
+        #[cfg(not(feature = "race-check"))]
+        let _ = ownership;
     }
 
     /// Copy a span into `buf` — the worker's on-demand read.
@@ -230,6 +243,14 @@ impl SharedParams {
     /// The recorded store-access event log.
     pub fn race_events(&self) -> Vec<StoreEvent> {
         self.race.events()
+    }
+
+    /// Events dropped past the recorder's log cap. Nonzero means
+    /// [`SharedParams::race_events`] is a truncated view (defect checking
+    /// is unaffected); the trainer's end-of-run summary names this count
+    /// so the truncation is never silent.
+    pub fn race_dropped_events(&self) -> usize {
+        self.race.dropped_events()
     }
 
     pub fn race_is_clean(&self) -> bool {

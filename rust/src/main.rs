@@ -48,12 +48,17 @@ USAGE: chaos <command> [flags]
             --deadline-us T   (per-request deadline; expired/overloaded
              requests are shed with typed errors instead of blocking)
             --artifacts DIR --weights FILE.ckpt   (pjrt needs `make artifacts`)
-  analyze   [NAME|FILE.json ...] [--cost] [--json]
+  analyze   [NAME|FILE.json ...] [--cost] [--shards N] [--weights a,b,..] [--json]
             (static analysis of each compiled network: span verification —
              in-bounds, disjoint, exact cover, op/dims agreement — plus the
              dataflow/aliasing audit over the shape chain and batch arenas;
              --cost adds the kernel-dispatch classifier and the static cost
              model's per-layer FLOPs/bytes/intensity roofline tables;
+             --shards N plans a hybrid-parallel partition over N shards
+             (fc spans split on output units, conv/pool replicated),
+             verifies it, and prices per-shard load + boundary traffic;
+             --weights gives heterogeneous shard capacity factors (implies
+             --shards weights.len() when --shards is omitted);
              defaults to every built-in arch and also prints each policy's
              sync contract; exits nonzero if any defect is found)
   arch      validate FILE.json...   (parse + structurally validate + compile)
@@ -416,7 +421,7 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
-    use chaos_phi::chaos::analysis::verify_network;
+    use chaos_phi::chaos::analysis::{shard, verify_network};
     use chaos_phi::nn::audit;
     use chaos_phi::util::json::Json;
 
@@ -424,7 +429,14 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
     // — same convention as `table`/`fig`.
     let split = raw.iter().position(|s| s.starts_with("--")).unwrap_or(raw.len());
     let (targets, flags) = raw.split_at(split);
-    let a = Args::parse(flags, &["json!", "cost!"])?;
+    let a = Args::parse(flags, &["json!", "cost!", "shards", "weights"])?;
+    let weight_list = a.get_f64_list("weights", &[])?;
+    let shards = a.get_usize("shards", weight_list.len())?;
+    anyhow::ensure!(
+        weight_list.is_empty() || weight_list.len() == shards,
+        "--weights lists {} factor(s) but --shards asks for {shards}",
+        weight_list.len()
+    );
     let default_targets: Vec<String>;
     let targets: &[String] = if targets.is_empty() {
         default_targets = chaos_phi::config::PAPER_ARCHS
@@ -443,6 +455,7 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
     let mut span_reports = Vec::new();
     let mut flow_reports = Vec::new();
     let mut cost_views = Vec::new();
+    let mut shard_reports = Vec::new();
     for t in targets {
         let arch = if t.ends_with(".json") {
             ArchSpec::from_file(t).map_err(|e| anyhow::anyhow!("{t}: {e:#}"))?
@@ -459,9 +472,19 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
         if a.has("cost") {
             cost_views.push((audit::audit_dispatch(&net), audit::audit_cost(&net, COST_BATCH)));
         }
+        if shards > 0 {
+            let plan = if weight_list.is_empty() {
+                shard::plan_shards(&net, shards)
+            } else {
+                shard::plan_shards_weighted(&net, &weight_list)
+                    .map_err(|e| anyhow::anyhow!("{t}: {e:#}"))?
+            };
+            shard_reports.push(shard::verify_shards(&net, &plan));
+        }
     }
     let span_defects: usize = span_reports.iter().map(|r| r.defects.len()).sum();
     let flow_defects: usize = flow_reports.iter().map(|r| r.defects.len()).sum();
+    let shard_defects: usize = shard_reports.iter().map(|r| r.defects.len()).sum();
 
     if a.has("json") {
         let mut items = Vec::new();
@@ -470,6 +493,9 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
             if let Some((k, c)) = cost_views.get(i) {
                 fields.push(("kernels", k.to_json()));
                 fields.push(("cost", c.to_json()));
+            }
+            if let Some(r) = shard_reports.get(i) {
+                fields.push(("shard", r.to_json()));
             }
             items.push(Json::obj(fields));
         }
@@ -482,6 +508,9 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
                 println!("{}", k.to_text());
                 println!("{}", c.to_text());
             }
+            if let Some(r) = shard_reports.get(i) {
+                println!("{}", r.to_text());
+            }
         }
         println!("\nupdate-policy sync contracts:");
         let mut names = policy::names();
@@ -493,6 +522,7 @@ fn cmd_analyze(raw: &[String]) -> anyhow::Result<()> {
     }
     anyhow::ensure!(span_defects == 0, "{span_defects} span defect(s) found");
     anyhow::ensure!(flow_defects == 0, "{flow_defects} dataflow defect(s) found");
+    anyhow::ensure!(shard_defects == 0, "{shard_defects} shard defect(s) found");
     Ok(())
 }
 

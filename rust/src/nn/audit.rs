@@ -137,6 +137,19 @@ pub fn shape_rows(net: &Network) -> Vec<ShapeRow> {
         .collect()
 }
 
+/// Activation element counts at each layer boundary, from the audited
+/// dims chain: entry `l` is the tensor a sample presents *to* layer `l`
+/// (so for `l ≥ 1` it is exactly what crosses the boundary between layer
+/// `l − 1` and layer `l`, and entry 0 is the network input). The shard
+/// verifier and comm cost model ([`crate::chaos::analysis::shard`],
+/// [`crate::perfmodel::score_plan`]) price cross-shard traffic in these
+/// units — the boundary tensor is the audited activation and nothing
+/// else, which is what makes "only activations cross shard boundaries"
+/// a checkable statement rather than a convention.
+pub fn boundary_act_elems(net: &Network) -> Vec<usize> {
+    net.dims.iter().map(|d| d.in_len()).collect()
+}
+
 /// Verify a shape chain: per-row op/dims agreement, and end-to-end
 /// coherence (each row consumes exactly what the previous row produced).
 pub fn verify_shape_rows(rows: &[ShapeRow]) -> Vec<DataflowDefect> {

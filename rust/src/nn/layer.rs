@@ -114,6 +114,40 @@ pub struct BatchActs<'a> {
     pub outputs: &'a [f32],
 }
 
+/// How an op's parameter span may be divided across model-parallel shards —
+/// the static contract behind [`crate::chaos::analysis::shard`]. A span is
+/// either an indivisible block (it must live whole on every shard that
+/// computes the layer) or a sequence of `units` equally-sized output units
+/// that may be cut *only* at unit boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitSpec {
+    /// No legal interior cut. The conservative truth for parameter-free
+    /// ops and the default for runtime-registered kinds — a kind that has
+    /// not declared its split geometry can never be silently model-split.
+    Unsplittable,
+    /// The span divides along `units` output units laid out unit-major:
+    /// unit `u` owns weight row `u * weights_per_unit ..
+    /// (u + 1) * weights_per_unit`, and bias element
+    /// `units * weights_per_unit + u`. Legal cuts fall on unit boundaries
+    /// only — a shard owning unit `u` owns both its weight row and its
+    /// bias element.
+    OutputUnits { units: usize, weights_per_unit: usize },
+}
+
+impl SplitSpec {
+    /// Total parameter count implied by the declared geometry (weights +
+    /// biases for [`SplitSpec::OutputUnits`]; `None` for unsplittable
+    /// spans, whose length is whatever [`LayerOp::param_range`] says).
+    pub fn declared_len(&self) -> Option<usize> {
+        match *self {
+            SplitSpec::Unsplittable => None,
+            SplitSpec::OutputUnits { units, weights_per_unit } => {
+                Some(units * weights_per_unit + units)
+            }
+        }
+    }
+}
+
 /// One compiled layer of one network. Implementations are stateless between
 /// calls — all mutable per-sample state lives in the worker's scratch, so a
 /// single op is shared by every CHAOS worker thread.
@@ -304,6 +338,16 @@ pub trait LayerOp: Send + Sync + std::fmt::Debug {
             self.out_shape().len(),
             self.param_range().len(),
         )
+    }
+
+    /// Legal model-parallel cuts of this op's parameter span, for the
+    /// static shard planner/verifier ([`crate::chaos::analysis::shard`]).
+    /// The conservative default declares the span unsplittable, so a
+    /// runtime-registered kind is replicated (data-parallel) until it
+    /// opts in; the built-in fully-connected ops override with their
+    /// output-unit geometry.
+    fn split_points(&self) -> SplitSpec {
+        SplitSpec::Unsplittable
     }
 }
 
@@ -558,6 +602,11 @@ impl LayerOp for InputOp {
     fn cost(&self) -> OpCost {
         OpCost::zero()
     }
+
+    fn split_points(&self) -> SplitSpec {
+        // Parameter-free: there is nothing to split.
+        SplitSpec::Unsplittable
+    }
 }
 
 // ----- conv ------------------------------------------------------------------
@@ -810,6 +859,15 @@ impl LayerOp for ConvOp {
             bwd_act_bytes: 8.0 * touched,
         }
     }
+
+    fn split_points(&self) -> SplitSpec {
+        // Conv is the data-parallel class of the hybrid scheme
+        // (Krizhevsky, arXiv:1404.5997): compute-heavy, parameter-light,
+        // so its span is replicated on every shard rather than cut.
+        // Declaring it unsplittable lets the verifier reject any plan
+        // that tries to model-parallelize the conv stage.
+        SplitSpec::Unsplittable
+    }
 }
 
 // ----- max pool --------------------------------------------------------------
@@ -980,6 +1038,11 @@ impl LayerOp for MaxPoolOp {
             bwd_act_bytes: 8.0 * touched,
         }
     }
+
+    fn split_points(&self) -> SplitSpec {
+        // Parameter-free: there is nothing to split.
+        SplitSpec::Unsplittable
+    }
 }
 
 // ----- avg pool --------------------------------------------------------------
@@ -1114,6 +1177,11 @@ impl LayerOp for AvgPoolOp {
             fwd_act_bytes: 4.0 * touched,
             bwd_act_bytes: 8.0 * touched,
         }
+    }
+
+    fn split_points(&self) -> SplitSpec {
+        // Parameter-free: there is nothing to split.
+        SplitSpec::Unsplittable
     }
 }
 
@@ -1387,6 +1455,18 @@ impl LayerOp for FcOp {
             bwd_act_bytes: 8.0 * touched,
         }
     }
+
+    fn split_points(&self) -> SplitSpec {
+        // The model-parallel class: weights are [neuron][input] row-major
+        // followed by [outputs] biases, so each output unit owns one
+        // weight row plus one bias element and the span cuts cleanly at
+        // unit boundaries. Serves both the hidden "fc" and softmax
+        // "output" kinds (FcOp compiles both).
+        SplitSpec::OutputUnits {
+            units: self.shape.outputs,
+            weights_per_unit: self.shape.inputs,
+        }
+    }
 }
 
 // ----- dropout ---------------------------------------------------------------
@@ -1580,6 +1660,11 @@ impl LayerOp for DropoutOp {
             fwd_act_bytes: 8.0 * n,
             bwd_act_bytes: 16.0 * n,
         }
+    }
+
+    fn split_points(&self) -> SplitSpec {
+        // Parameter-free: there is nothing to split.
+        SplitSpec::Unsplittable
     }
 }
 

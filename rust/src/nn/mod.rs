@@ -22,11 +22,11 @@ pub mod pool;
 pub mod simd;
 
 pub use audit::{
-    audit_cost, audit_dataflow, audit_dispatch, ArenaExtent, ArenaLayout, CostReport,
-    DataflowDefect, DataflowReport, Dispatch, KernelPath, KernelReport, OpCost,
+    audit_cost, audit_dataflow, audit_dispatch, boundary_act_elems, ArenaExtent, ArenaLayout,
+    CostReport, DataflowDefect, DataflowReport, Dispatch, KernelPath, KernelReport, OpCost,
 };
 pub use batch::{BatchPlan, BatchScratch};
 pub use dims::{compute_dims, total_params, LayerDims};
-pub use layer::{Acts, BatchActs, LayerCtx, LayerKind, LayerOp, OpScratch, Shape};
+pub use layer::{Acts, BatchActs, LayerCtx, LayerKind, LayerOp, OpScratch, Shape, SplitSpec};
 pub use network::{Network, ParamSource, Scratch};
 pub use simd::MathPolicy;

@@ -29,6 +29,7 @@
 mod contention;
 mod model;
 mod params;
+mod shard;
 
 pub use contention::{
     measured as contention_measured, paper_predicted, ContentionModel, MEASURED_THREADS,
@@ -38,4 +39,7 @@ pub use params::{
     arch_constants, cpi, cpi_for_threads_per_core, derived_ops, threads_per_core, ArchConstants,
     LayerCosts, CLOCK_HZ, CORE_I5_SPEED_VS_PHI1T, OPERATION_FACTOR, PHI_CORES,
     XEON_E5_SPEED_VS_PHI1T,
+};
+pub use shard::{
+    rank_plans, score_plan, BoundaryCost, ShardCost, ShardScore, SHARD_LINK_BYTES_PER_SEC,
 };

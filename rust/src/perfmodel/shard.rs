@@ -1,0 +1,276 @@
+//! Pricing shard plans before any sharded runtime exists: per-shard
+//! FLOP/param totals, per-boundary activation traffic, predicted
+//! imbalance, and a proxy seconds-per-sample that ranks candidate plans.
+//!
+//! The model deliberately reuses the same primitives as the rest of
+//! `perfmodel`: per-layer FLOPs come from the static kernel cost model
+//! ([`LayerOp::cost`](crate::nn::LayerOp::cost), the derived side of the
+//! paper's Table 3), the op rate is the calibrated
+//! [`CLOCK_HZ`](super::CLOCK_HZ)/[`OPERATION_FACTOR`](super::OPERATION_FACTOR)
+//! pair, and boundary tensors are the audited activation chain
+//! ([`crate::nn::audit::boundary_act_elems`]). Absolute seconds are a
+//! proxy — the point is *ranking*: two plans are compared under identical
+//! constants, so the ordering is insensitive to calibration error.
+//!
+//! ## The traffic model
+//!
+//! * A boundary where neither side is split is **local**: in pure data
+//!   parallelism each sample's activations stay on its home shard.
+//! * A boundary touching a split layer costs one allgather of the
+//!   boundary activation among the `n` participating shards —
+//!   `4·act·(n−1)` bytes forward (every non-home participant needs the
+//!   full input, or produces a slice every consumer needs), and the same
+//!   backward for the returning deltas.
+//!
+//! ## The balance model
+//!
+//! Shard `s` has capacity share `w_s` (the plan's normalized weights).
+//! Per global sample it performs `w_s`·flops on every replicated layer
+//! (it sees `w_s` of the samples) and `frac_s`·flops on every split
+//! layer (its owned fraction of the span, every sample). Predicted
+//! compute time is `max_s load_s / rate_s`; imbalance is that maximum
+//! over the perfectly-balanced time, so 1.0 is ideal and the planner's
+//! weighted apportionment should keep it close.
+
+use super::params::{CLOCK_HZ, OPERATION_FACTOR};
+use crate::chaos::analysis::shard::{LayerAssignment, ShardPlan};
+use crate::nn::{audit, Network};
+
+/// Planning constant for cross-shard activation traffic, a NUMA/QPI-class
+/// link (bytes/sec). All plans are priced under the same constant, so
+/// rankings do not depend on its exact value.
+pub const SHARD_LINK_BYTES_PER_SEC: f64 = 10.0e9;
+
+/// One shard's predicted totals, per global sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardCost {
+    pub shard: usize,
+    /// Normalized capacity share.
+    pub weight: f64,
+    /// Parameters resident on this shard (replicated spans count fully).
+    pub params: usize,
+    pub fwd_flops: f64,
+    pub bwd_flops: f64,
+}
+
+/// Predicted traffic across one layer boundary, per global sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoundaryCost {
+    /// Downstream layer index (the boundary sits between `layer - 1` and
+    /// `layer`).
+    pub layer: usize,
+    /// Elements of the activation tensor crossing here (from the audited
+    /// dims chain).
+    pub act_elems: usize,
+    /// `"local"` (no shard crossing) or `"allgather"`.
+    pub kind: &'static str,
+    pub fwd_bytes: f64,
+    pub bwd_bytes: f64,
+}
+
+/// The priced view of one clean plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardScore {
+    pub shards: Vec<ShardCost>,
+    pub boundaries: Vec<BoundaryCost>,
+    /// Total cross-shard bytes per global sample (forward + backward).
+    pub comm_bytes: f64,
+    /// Max over shards of normalized load over the perfectly-balanced
+    /// load; ≥ 1.0, with 1.0 meaning every shard finishes together.
+    pub imbalance: f64,
+    /// Predicted compute seconds per global sample (slowest shard).
+    pub compute_secs: f64,
+    /// Predicted communication seconds per global sample.
+    pub comm_secs: f64,
+}
+
+impl ShardScore {
+    /// Whole-fleet forward FLOPs per sample (sums to the unsharded
+    /// [`audit_cost`](crate::nn::audit::audit_cost) total — sharding moves
+    /// work, it does not create any).
+    pub fn total_fwd_flops(&self) -> f64 {
+        self.shards.iter().map(|s| s.fwd_flops).sum()
+    }
+
+    pub fn total_bwd_flops(&self) -> f64 {
+        self.shards.iter().map(|s| s.bwd_flops).sum()
+    }
+
+    /// The ranking key: predicted compute + communication seconds per
+    /// global sample.
+    pub fn proxy_secs(&self) -> f64 {
+        self.compute_secs + self.comm_secs
+    }
+}
+
+/// Number of shards actually computing a layer under `assignment`:
+/// replicated layers run on every shard (each over its own samples),
+/// split layers on the shards owning a non-empty piece.
+fn participants(plan: &ShardPlan, assignment: &LayerAssignment) -> usize {
+    match assignment {
+        LayerAssignment::Replicated | LayerAssignment::Copies(_) => plan.shards,
+        LayerAssignment::Split { pieces } => {
+            pieces.iter().filter(|rs| rs.iter().any(|r| !r.is_empty())).count()
+        }
+    }
+}
+
+/// Price a plan against its network. Assumes a structurally valid plan
+/// (same layer count, verified by
+/// [`verify_shards`](crate::chaos::analysis::shard::verify_shards), which
+/// calls this for clean plans).
+pub fn score_plan(net: &Network, plan: &ShardPlan) -> ShardScore {
+    let n = plan.shards;
+    let mut shards: Vec<ShardCost> = (0..n)
+        .map(|s| ShardCost {
+            shard: s,
+            weight: plan.weights.get(s).copied().unwrap_or(0.0),
+            params: 0,
+            fwd_flops: 0.0,
+            bwd_flops: 0.0,
+        })
+        .collect();
+
+    for (layer, (op, d)) in net.ops.iter().zip(&net.dims).enumerate() {
+        let cost = op.cost();
+        match &plan.layers[layer] {
+            LayerAssignment::Replicated | LayerAssignment::Copies(_) => {
+                for sc in shards.iter_mut() {
+                    sc.params += d.params.len();
+                    sc.fwd_flops += cost.fwd_flops * sc.weight;
+                    sc.bwd_flops += cost.bwd_flops * sc.weight;
+                }
+            }
+            LayerAssignment::Split { .. } => {
+                let span_len = d.params.len().max(1) as f64;
+                for sc in shards.iter_mut() {
+                    let owned = plan.owned_len(net, sc.shard, layer);
+                    let frac = owned as f64 / span_len;
+                    sc.params += owned;
+                    sc.fwd_flops += cost.fwd_flops * frac;
+                    sc.bwd_flops += cost.bwd_flops * frac;
+                }
+            }
+        }
+    }
+
+    let acts = audit::boundary_act_elems(net);
+    let mut boundaries = Vec::with_capacity(net.dims.len().saturating_sub(1));
+    let mut comm_bytes = 0.0;
+    for layer in 1..net.dims.len() {
+        let up = participants(plan, &plan.layers[layer - 1]);
+        let down = participants(plan, &plan.layers[layer]);
+        let split_side = |a: &LayerAssignment| matches!(a, LayerAssignment::Split { .. });
+        let crossing = usize::max(
+            if split_side(&plan.layers[layer - 1]) { up } else { 1 },
+            if split_side(&plan.layers[layer]) { down } else { 1 },
+        );
+        let (kind, bytes) = if crossing >= 2 {
+            ("allgather", 4.0 * acts[layer] as f64 * (crossing - 1) as f64)
+        } else {
+            ("local", 0.0)
+        };
+        comm_bytes += 2.0 * bytes; // forward activations + backward deltas
+        boundaries.push(BoundaryCost {
+            layer,
+            act_elems: acts[layer],
+            kind,
+            fwd_bytes: bytes,
+            bwd_bytes: bytes,
+        });
+    }
+
+    // rate_s = capacity share × fleet op rate; the fleet is n Phi-class
+    // units at the calibrated sustained op rate.
+    let fleet_rate = n as f64 * CLOCK_HZ / OPERATION_FACTOR;
+    let mut compute_secs = 0.0f64;
+    let mut total_load = 0.0f64;
+    for sc in &shards {
+        let load = sc.fwd_flops + sc.bwd_flops;
+        total_load += load;
+        let rate = (sc.weight * fleet_rate).max(f64::MIN_POSITIVE);
+        compute_secs = compute_secs.max(load / rate);
+    }
+    let ideal_secs = total_load / fleet_rate;
+    let imbalance = if ideal_secs > 0.0 { compute_secs / ideal_secs } else { 1.0 };
+    let comm_secs = comm_bytes / SHARD_LINK_BYTES_PER_SEC;
+
+    ShardScore { shards, boundaries, comm_bytes, imbalance, compute_secs, comm_secs }
+}
+
+/// Rank candidate plans for one network by predicted
+/// [`proxy_secs`](ShardScore::proxy_secs), ascending (stable on ties).
+/// Returns `(index into plans, score)` pairs.
+pub fn rank_plans(net: &Network, plans: &[ShardPlan]) -> Vec<(usize, ShardScore)> {
+    let mut ranked: Vec<(usize, ShardScore)> =
+        plans.iter().enumerate().map(|(i, p)| (i, score_plan(net, p))).collect();
+    ranked.sort_by(|a, b| a.1.proxy_secs().total_cmp(&b.1.proxy_secs()).then(a.0.cmp(&b.0)));
+    ranked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::analysis::shard::plan_shards;
+    use crate::nn::audit::audit_cost;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn per_shard_totals_cross_check_against_audit_cost() {
+        for arch in ["tiny", "small"] {
+            let net = Network::from_name(arch).unwrap();
+            let report = audit_cost(&net, 1);
+            for n in 1..=4 {
+                let score = score_plan(&net, &plan_shards(&net, n));
+                assert!(
+                    close(score.total_fwd_flops(), report.total_fwd_flops()),
+                    "{arch}/{n}: {} vs {}",
+                    score.total_fwd_flops(),
+                    report.total_fwd_flops()
+                );
+                assert!(
+                    close(score.total_bwd_flops(), report.total_bwd_flops()),
+                    "{arch}/{n}: {} vs {}",
+                    score.total_bwd_flops(),
+                    report.total_bwd_flops()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_boundaries_price_traffic_and_single_shard_is_free() {
+        let net = Network::from_name("tiny").unwrap();
+        let one = score_plan(&net, &plan_shards(&net, 1));
+        assert_eq!(one.comm_bytes, 0.0);
+        assert!(one.boundaries.iter().all(|b| b.kind == "local"));
+
+        let two = score_plan(&net, &plan_shards(&net, 2));
+        assert!(two.comm_bytes > 0.0);
+        let gathered: Vec<_> =
+            two.boundaries.iter().filter(|b| b.kind == "allgather").collect();
+        assert!(!gathered.is_empty());
+        for b in &gathered {
+            assert!(close(b.fwd_bytes, 4.0 * b.act_elems as f64));
+            assert!(close(b.bwd_bytes, b.fwd_bytes));
+        }
+        assert!(two.imbalance >= 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn rank_plans_orders_by_proxy_and_keeps_indices() {
+        let net = Network::from_name("small").unwrap();
+        let plans = [plan_shards(&net, 1), plan_shards(&net, 2), plan_shards(&net, 4)];
+        let ranked = rank_plans(&net, &plans);
+        assert_eq!(ranked.len(), 3);
+        for pair in ranked.windows(2) {
+            assert!(pair[0].1.proxy_secs() <= pair[1].1.proxy_secs());
+        }
+        let mut seen: Vec<usize> = ranked.iter().map(|(i, _)| *i).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+}

@@ -155,6 +155,21 @@ impl Args {
                 .collect(),
         }
     }
+
+    /// Comma-separated f64 list, e.g. `--weights 1.0,2,0.5`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError::BadValue(name.into(), v.into(), "f64 list"))
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +217,16 @@ mod tests {
         assert_eq!(a.get_usize_list("threads", &[]).unwrap(), vec![1, 15, 30]);
         let b = Args::parse(&raw(&[]), &["threads"]).unwrap();
         assert_eq!(b.get_usize_list("threads", &[2, 4]).unwrap(), vec![2, 4]);
+    }
+
+    #[test]
+    fn f64_list_flag() {
+        let a = Args::parse(&raw(&["--weights", "1.0, 2,0.5"]), &["weights"]).unwrap();
+        assert_eq!(a.get_f64_list("weights", &[]).unwrap(), vec![1.0, 2.0, 0.5]);
+        let b = Args::parse(&raw(&[]), &["weights"]).unwrap();
+        assert_eq!(b.get_f64_list("weights", &[1.0]).unwrap(), vec![1.0]);
+        let c = Args::parse(&raw(&["--weights", "1,abc"]), &["weights"]).unwrap();
+        assert!(c.get_f64_list("weights", &[]).is_err());
     }
 
     #[test]

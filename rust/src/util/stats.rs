@@ -64,13 +64,14 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Median (copies + sorts).
+/// Median (copies + sorts). NaN samples sort last (IEEE total order), so a
+/// poisoned timing stream degrades the answer instead of panicking mid-report.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -79,13 +80,14 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Percentile via linear interpolation, p in [0,100].
+/// Percentile via linear interpolation, p in [0,100]. NaN samples sort last,
+/// same as [`median`].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -148,6 +150,18 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 2.5);
         assert_eq!(median(&[5.0]), 5.0);
         assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_and_sort_last() {
+        // `partial_cmp(..).unwrap()` used to panic here; total_cmp puts NaN
+        // after every finite value instead.
+        let xs = [f64::NAN, 1.0, 3.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(median(&[f64::NAN]).is_nan());
     }
 
     #[test]

@@ -228,6 +228,51 @@ mod race_check {
         assert!(store.race_is_clean());
     }
 
+    /// Cross-shard enforcement, replayed deterministically: a verified
+    /// plan's ownership table is installed on the store, worker 0 declares
+    /// shard 0 but publishes shard 1's fc piece, worker 1 publishes the
+    /// same piece legally. Exactly the illegal publish is recorded —
+    /// locked, in-span, and still a defect, because the shard contract is
+    /// an ownership claim on top of the lock discipline.
+    #[test]
+    fn scripted_cross_shard_publish_is_recorded() {
+        use chaos_phi::chaos::analysis::{plan_shards, set_worker_shard, verify_shards};
+
+        let net = Network::from_name("tiny").unwrap();
+        let plan = plan_shards(&net, 2);
+        assert!(verify_shards(&net, &plan).is_clean());
+        let (store, _) = tiny_store();
+        store.set_shard_ownership(plan.ownership());
+
+        let fc = net.ops.iter().position(|op| op.kind() == "fc").unwrap();
+        // Shard 1's weight-row block of the fc span.
+        let piece = plan.owned_ranges(&net, 1, fc)[0].clone();
+        let grads = vec![1.0f32; piece.len()];
+        let worker = |shard: usize| {
+            let (store, piece, grads) = (&store, piece.clone(), &grads);
+            Box::new(move || {
+                set_worker_shard(Some(shard));
+                store.publish_scaled(fc, piece.clone(), grads, 1.0);
+                set_worker_shard(None);
+            }) as Box<dyn FnOnce() + Send>
+        };
+        Interleaver::run(Schedule::Script(vec![0, 1, 0, 1]), vec![worker(0), worker(1)]);
+
+        // Both publishes landed (the checker observes, it does not block)…
+        assert_eq!(store.get(piece.start), 2.0);
+        // …but only worker 0's is a defect, attributed to the right piece.
+        let defects = store.race_defects();
+        assert_eq!(defects.len(), 1, "{defects:?}");
+        match &defects[0] {
+            RaceDefect::CrossShardPublish { owner, shard, piece: p, .. } => {
+                assert_eq!(*owner, 1);
+                assert_eq!(*shard, Some(0));
+                assert_eq!(*p, piece);
+            }
+            other => panic!("expected CrossShardPublish, got {other:?}"),
+        }
+    }
+
     fn tiny_data(n: usize, seed: u64) -> Dataset {
         generate_synthetic(n, seed, &SynthConfig::default()).resize(13)
     }

@@ -1,0 +1,190 @@
+//! Integration coverage for the shard planner/verifier
+//! (`chaos::analysis::shard`) through the crate's public API: every
+//! planner-produced plan must verify clean across shard counts, paper
+//! architectures and the shipped example arch files; per-shard cost
+//! totals must cross-check the unsharded audit; and each seeded defect
+//! class — straddled split point, partial replica, in-shard overlap,
+//! gap — must be detected.
+
+use chaos_phi::chaos::analysis::{
+    plan_shards, plan_shards_weighted, verify_shards, LayerAssignment, ShardPlan,
+};
+use chaos_phi::config::ArchSpec;
+use chaos_phi::nn::audit::audit_cost;
+use chaos_phi::nn::Network;
+use chaos_phi::util::proptest::{run, Config};
+
+const PAPER_ARCHS: [&str; 4] = ["tiny", "small", "medium", "large"];
+
+fn split_layers(plan: &ShardPlan) -> Vec<usize> {
+    plan.layers
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| matches!(a, LayerAssignment::Split { .. }))
+        .map(|(l, _)| l)
+        .collect()
+}
+
+/// Clean plan + score invariants shared by every positive case below.
+fn assert_plan_sound(net: &Network, plan: &ShardPlan) -> Result<(), String> {
+    let report = verify_shards(net, plan);
+    if !report.is_clean() {
+        return Err(format!("{}: defects {:?}", plan.arch, report.defects));
+    }
+    let score = report.score.as_ref().ok_or("clean plan must carry a score")?;
+
+    // Sharding moves work, it does not create any: fleet totals equal the
+    // unsharded cost audit exactly.
+    let audit = audit_cost(net, 1);
+    for (got, want, what) in [
+        (score.total_fwd_flops(), audit.total_fwd_flops(), "fwd"),
+        (score.total_bwd_flops(), audit.total_bwd_flops(), "bwd"),
+    ] {
+        if (got - want).abs() > 1e-9 * want.max(1.0) {
+            return Err(format!("{}: {what} flops {got} vs audit {want}", plan.arch));
+        }
+    }
+    if score.imbalance < 1.0 - 1e-12 {
+        return Err(format!("imbalance {} < 1", score.imbalance));
+    }
+    // (The reverse is not an invariant: a heavily skewed weighted plan may
+    // hand one shard an entire fc span — one participant, no traffic.)
+    if plan.shards == 1 && score.comm_bytes != 0.0 {
+        return Err(format!("one shard but {} comm bytes", score.comm_bytes));
+    }
+
+    // Owned pieces partition each split span.
+    for l in split_layers(plan) {
+        let total: usize = (0..plan.shards).map(|s| plan.owned_len(net, s, l)).sum();
+        if total != net.dims[l].params.len() {
+            return Err(format!("layer {l}: owned {total} != span {}", net.dims[l].params.len()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn planner_plans_verify_clean_across_archs_and_shard_counts() {
+    for arch in PAPER_ARCHS {
+        let net = Network::from_name(arch).unwrap();
+        for n in 1..=8 {
+            let plan = plan_shards(&net, n);
+            assert_plan_sound(&net, &plan).unwrap_or_else(|e| panic!("{arch}/{n}: {e}"));
+            if n > 1 {
+                // Uniform plans split every fc span across all shards, so
+                // the boundary allgathers must price real traffic.
+                let score = verify_shards(&net, &plan).score.unwrap();
+                assert!(score.comm_bytes > 0.0, "{arch}/{n}: free multi-shard traffic");
+            }
+        }
+    }
+}
+
+#[test]
+fn example_arch_files_plan_clean() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir("examples/archs").unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let arch = ArchSpec::from_file(path.to_str().unwrap()).unwrap();
+        let net = Network::compile(arch).unwrap();
+        for n in [1, 2, 4, 8] {
+            let plan = plan_shards(&net, n);
+            assert_plan_sound(&net, &plan)
+                .unwrap_or_else(|e| panic!("{}/{n}: {e}", path.display()));
+        }
+    }
+    assert!(seen > 0, "no example arch files found (run tests from the repo root)");
+}
+
+/// Property: for random weight vectors over the paper archs, the weighted
+/// planner's plan verifies clean, and heavier shards never own fewer
+/// split parameters than lighter ones.
+#[test]
+fn weighted_plans_verify_clean_for_random_weights() {
+    run(
+        Config { cases: 48, max_size: 8, seed: 0x5AADD },
+        |rng, size| {
+            let arch = PAPER_ARCHS[rng.range(0, PAPER_ARCHS.len())];
+            let shards = 1 + rng.range(0, size.max(1));
+            let weights: Vec<f64> =
+                (0..shards).map(|_| rng.uniform(0.1, 4.0) as f64).collect();
+            (arch, weights)
+        },
+        |(arch, weights)| {
+            let net = Network::from_name(arch).map_err(|e| e.to_string())?;
+            let plan = plan_shards_weighted(&net, weights).map_err(|e| e.to_string())?;
+            assert_plan_sound(&net, &plan)?;
+            for l in split_layers(&plan) {
+                for a in 0..plan.shards {
+                    for b in 0..plan.shards {
+                        // Units are apportioned largest-remainder, so a
+                        // strictly heavier shard trails by at most one unit
+                        // of weights+bias; a dominant weight gap must show.
+                        if weights[a] >= 2.0 * weights[b]
+                            && plan.owned_len(&net, a, l) < plan.owned_len(&net, b, l)
+                        {
+                            return Err(format!(
+                                "layer {l}: shard {a} (w={}) owns less than shard {b} (w={})",
+                                weights[a], weights[b]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Each seeded defect class is caught through the public API (the unit
+/// tests pin exact defect fields; this proves the surface end-to-end).
+#[test]
+fn seeded_defects_are_detected_through_the_public_api() {
+    let net = Network::from_name("small").unwrap();
+    let fc = split_layers(&plan_shards(&net, 2))[0];
+    let classes = |plan: &ShardPlan| -> Vec<&'static str> {
+        verify_shards(&net, plan).defects.iter().map(|d| d.class()).collect()
+    };
+
+    // Straddled split point: shift the cut one param off the unit boundary.
+    let mut plan = plan_shards(&net, 2);
+    if let LayerAssignment::Split { pieces } = &mut plan.layers[fc] {
+        pieces[0][0].end += 1;
+        pieces[1][0].start += 1;
+    }
+    assert!(classes(&plan).contains(&"straddled-split-point"));
+
+    // Gap: a shard forgets its bias block.
+    let mut plan = plan_shards(&net, 2);
+    if let LayerAssignment::Split { pieces } = &mut plan.layers[fc] {
+        pieces[1].pop();
+    }
+    assert!(classes(&plan).contains(&"gap"));
+
+    // Overlap within one shard: a sub-range listed twice.
+    let mut plan = plan_shards(&net, 2);
+    if let LayerAssignment::Split { pieces } = &mut plan.layers[fc] {
+        let w = pieces[0][0].clone();
+        pieces[0].push(w.start..w.start + 1);
+    }
+    assert!(classes(&plan).contains(&"overlap"));
+
+    // Non-activation crossing: a truncated replica of a conv span.
+    let mut plan = plan_shards(&net, 2);
+    let conv = (0..net.dims.len())
+        .find(|&l| {
+            !net.dims[l].params.is_empty()
+                && matches!(plan.layers[l], LayerAssignment::Replicated)
+        })
+        .unwrap();
+    let span = net.dims[conv].params.clone();
+    plan.layers[conv] = LayerAssignment::Copies(vec![span.clone(), span.start..span.end - 1]);
+    assert!(classes(&plan).contains(&"non-activation-crossing"));
+
+    // A defective plan is never scored.
+    assert!(verify_shards(&net, &plan).score.is_none());
+}
